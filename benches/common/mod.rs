@@ -1,0 +1,82 @@
+//! Shared helpers for the figure-regeneration benches.
+//!
+//! Every bench prints (a) the paper's reported numbers for the figure it
+//! regenerates and (b) our measured rows, in the same units, so the
+//! *shape* comparison (who wins, by roughly what factor) is immediate.
+//! `DEAL_BENCH_SCALE` (default 1.0) multiplies the dataset scales for
+//! quicker smoke runs.
+
+use deal::coordinator::device::DeviceSim;
+use deal::coordinator::fleet::{build_devices, FleetConfig};
+use deal::coordinator::Scheme;
+use deal::data::Dataset;
+use deal::power::governor::Policy;
+
+/// Global scale knob for quick runs.
+pub fn bench_scale() -> f64 {
+    std::env::var("DEAL_BENCH_SCALE")
+        .ok()
+        .and_then(|s| s.parse().ok())
+        .unwrap_or(1.0)
+}
+
+/// Per-dataset scale that keeps a full bench run in seconds while
+/// preserving relative cardinalities (documented in EXPERIMENTS.md).
+pub fn dataset_scale(ds: Dataset) -> f64 {
+    let base = match ds {
+        Dataset::Movielens => 0.50,
+        Dataset::Jester => 0.05,
+        Dataset::Mushrooms => 0.40,
+        Dataset::Phishing => 0.30,
+        Dataset::Covtype => 0.02,
+        Dataset::Housing => 1.0,
+        Dataset::Cadata => 0.20,
+        Dataset::YearPredictionMSD => 0.01,
+        Dataset::Cifar10 => 0.01,
+    };
+    (base * bench_scale()).clamp(0.0005, 1.0)
+}
+
+/// Build one device carrying the full (scaled) dataset — the Fig. 3/6
+/// single-phone (Honor) setting.
+pub fn single_device(ds: Dataset, scheme: Scheme, step: Option<usize>, seed: u64) -> DeviceSim {
+    let cfg = FleetConfig {
+        n_devices: 1,
+        dataset: ds,
+        scale: dataset_scale(ds),
+        scheme,
+        policy: step.map(Policy::Fixed),
+        seed,
+        ..FleetConfig::default()
+    };
+    build_devices(&cfg).into_iter().next().unwrap()
+}
+
+/// Measure `rounds` rounds on a fresh device; returns (Σ compute_s,
+/// Σ energy_uah, Σ swaps).
+pub fn measure_rounds(
+    mut dev: DeviceSim,
+    scheme: Scheme,
+    rounds: usize,
+    arrivals: usize,
+    theta: f64,
+) -> (f64, f64, u64) {
+    let mut t = 0.0;
+    let mut e = 0.0;
+    let mut s = 0;
+    for _ in 0..rounds {
+        let out = dev.run_round(scheme, arrivals, theta);
+        t += out.compute_s;
+        e += out.energy_uah;
+        s += out.swaps;
+    }
+    (t, e, s)
+}
+
+/// Paper-style banner.
+pub fn banner(fig: &str, claim: &str) {
+    println!("\n================================================================");
+    println!("{fig}");
+    println!("paper: {claim}");
+    println!("================================================================");
+}

@@ -1,0 +1,88 @@
+//! Fig. 3 — training completion time of DEAL / NewFL / Original across
+//! the four model×dataset panels, under different CPU frequencies on the
+//! Honor profile.
+//!
+//! Paper shape: DEAL is 1–2 orders faster than NewFL and 2–4 orders
+//! faster than Original; the gap widens with dataset size (phishing,
+//! covtype, YearPredictionMSD).
+//!
+//!     cargo bench --bench fig3_training_time
+
+mod common;
+
+use common::{banner, dataset_scale, measure_rounds};
+use deal::coordinator::fleet::{build_devices, FleetConfig};
+use deal::coordinator::{ModelKind, Scheme};
+use deal::data::Dataset;
+use deal::power::governor::Policy;
+use deal::power::profile::honor;
+use deal::util::tables::{fmt_duration, Table};
+
+const PANELS: [(&str, Option<ModelKind>, &[Dataset]); 4] = [
+    ("(a) Personalized PageRank", None, &[Dataset::Movielens, Dataset::Jester]),
+    ("(b) kNN-LSH", None, &[Dataset::Mushrooms, Dataset::Phishing]),
+    (
+        "(c) Multinomial Naive Bayes",
+        Some(ModelKind::NaiveBayes),
+        &[Dataset::Mushrooms, Dataset::Phishing, Dataset::Covtype],
+    ),
+    (
+        "(d) Tikhonov Regularization",
+        None,
+        &[Dataset::Housing, Dataset::Cadata, Dataset::YearPredictionMSD],
+    ),
+];
+
+fn device(ds: Dataset, model: Option<ModelKind>, scheme: Scheme, step: usize) -> deal::coordinator::DeviceSim {
+    let cfg = FleetConfig {
+        n_devices: 1,
+        dataset: ds,
+        scale: dataset_scale(ds),
+        model,
+        scheme,
+        policy: Some(Policy::Fixed(step)),
+        seed: 5,
+        ..FleetConfig::default()
+    };
+    build_devices(&cfg).into_iter().next().unwrap()
+}
+
+fn main() {
+    banner(
+        "Fig. 3 — training completion time vs scheme vs CPU frequency (Honor)",
+        "DEAL 1–2 orders faster than NewFL, 2–4 orders faster than Original",
+    );
+    let profile = honor();
+    let steps = [0usize, profile.n_freq_steps() / 2, profile.n_freq_steps() - 1];
+    let rounds = 5;
+    let arrivals = 10;
+
+    for (panel, model, datasets) in PANELS {
+        let mut table = Table::new(
+            &format!("Fig. 3{panel}"),
+            &["dataset", "freq", "DEAL", "NewFL", "Original", "Orig/DEAL", "NewFL/DEAL"],
+        );
+        for &ds in datasets {
+            for &step in &steps {
+                let run = |scheme: Scheme, theta: f64| {
+                    measure_rounds(device(ds, model, scheme, step), scheme, rounds, arrivals, theta).0
+                };
+                let deal_t = run(Scheme::Deal, 0.3);
+                let newfl_t = run(Scheme::NewFl, 0.0);
+                let orig_t = run(Scheme::Original, 0.0);
+                table.row([
+                    ds.name().to_string(),
+                    format!("{:.2}GHz", profile.freqs_ghz[step]),
+                    fmt_duration(deal_t),
+                    fmt_duration(newfl_t),
+                    fmt_duration(orig_t),
+                    format!("{:.0}x", orig_t / deal_t.max(1e-12)),
+                    format!("{:.1}x", newfl_t / deal_t.max(1e-12)),
+                ]);
+            }
+        }
+        print!("{}", table.render());
+        println!();
+    }
+    println!("(dataset scales per EXPERIMENTS.md; shape target = ordering + order-of-magnitude gaps)");
+}

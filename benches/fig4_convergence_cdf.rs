@@ -1,0 +1,85 @@
+//! Fig. 4 — CDF of per-device convergence time, DEAL vs Original, on the
+//! PPR model (movielens + jester), default (interactive) governor,
+//! hundreds of simulated devices.
+//!
+//! Paper shape: DEAL's CDF sits orders of magnitude left of Original;
+//! ≈92% (movielens) / 85% (jester) of devices converge faster under
+//! DEAL; medians 158ms vs 94,988ms (movielens), 1ms vs 6,598ms (jester).
+//!
+//!     cargo bench --bench fig4_convergence_cdf
+
+mod common;
+
+use common::{banner, dataset_scale};
+use deal::coordinator::fleet::{self, FleetConfig};
+use deal::coordinator::Scheme;
+use deal::data::Dataset;
+use deal::power::governor::Policy;
+use deal::util::stats::Cdf;
+use deal::util::tables::{fmt_duration, Table};
+
+const N_DEVICES: usize = 200;
+const ROUNDS: usize = 60;
+
+fn convergence_times(ds: Dataset, scheme: Scheme) -> Vec<f64> {
+    let cfg = FleetConfig {
+        n_devices: N_DEVICES,
+        dataset: ds,
+        scale: dataset_scale(ds),
+        scheme,
+        policy: Some(Policy::Interactive), // the paper's default governor
+        m: N_DEVICES / 4,
+        seed: 404,
+        ..FleetConfig::default()
+    };
+    let mut fed = fleet::build(&cfg);
+    let stats = fed.run(ROUNDS);
+    // devices that never converged are charged their full busy time
+    // via the TTL horizon (right-censored at the experiment end)
+    let mut times = stats.convergence_times_s;
+    let horizon = fed.clock_s.max(1.0);
+    while times.len() < N_DEVICES {
+        times.push(horizon);
+    }
+    times
+}
+
+fn main() {
+    banner(
+        "Fig. 4 — CDF of convergence time (PPR, interactive governor, 200 devices)",
+        "DEAL medians orders of magnitude below Original; 85–92% of devices faster",
+    );
+    for ds in [Dataset::Movielens, Dataset::Jester] {
+        let deal_times = convergence_times(ds, Scheme::Deal);
+        let orig_times = convergence_times(ds, Scheme::Original);
+        let deal_cdf = Cdf::new(deal_times.clone());
+        let orig_cdf = Cdf::new(orig_times.clone());
+
+        let mut table = Table::new(
+            &format!("Fig. 4 ({}) — convergence-time CDF", ds.name()),
+            &["percentile", "DEAL", "Original"],
+        );
+        for q in [10.0, 25.0, 50.0, 75.0, 90.0, 99.0] {
+            table.row([
+                format!("p{q:.0}"),
+                fmt_duration(deal_cdf.quantile(q)),
+                fmt_duration(orig_cdf.quantile(q)),
+            ]);
+        }
+        print!("{}", table.render());
+        let faster = deal_times
+            .iter()
+            .zip(&orig_times)
+            .filter(|(d, o)| d < o)
+            .count() as f64
+            / N_DEVICES as f64;
+        println!(
+            "devices faster under DEAL: {:.0}%   median DEAL {} vs Original {} ({:.0}x)\n",
+            faster * 100.0,
+            fmt_duration(deal_cdf.median()),
+            fmt_duration(orig_cdf.median()),
+            orig_cdf.median() / deal_cdf.median().max(1e-9),
+        );
+    }
+    println!("(paper: 92%/85% faster, medians 158ms vs 94,988ms and 1ms vs 6,598ms)");
+}

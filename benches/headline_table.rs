@@ -1,0 +1,89 @@
+//! Headline claims table — aggregates the Fig. 3/6 grid into the
+//! abstract's numbers: "75.6%–82.4% less energy footprint in different
+//! datasets" and "2–4 orders of magnitude faster" model convergence,
+//! plus Table I for reference.
+//!
+//!     cargo bench --bench headline_table
+
+mod common;
+
+use common::{banner, dataset_scale, measure_rounds};
+use deal::coordinator::fleet::{build_devices, FleetConfig};
+use deal::coordinator::Scheme;
+use deal::data::{Dataset, ALL_DATASETS};
+use deal::power::profile::table1_profiles;
+use deal::util::stats::geomean;
+use deal::util::tables::Table;
+
+fn run(ds: Dataset, scheme: Scheme) -> (f64, f64) {
+    let cfg = FleetConfig {
+        n_devices: 1,
+        dataset: ds,
+        scale: dataset_scale(ds),
+        scheme,
+        seed: 99,
+        ..FleetConfig::default()
+    };
+    let dev = build_devices(&cfg).into_iter().next().unwrap();
+    let theta = if scheme == Scheme::Deal { 0.3 } else { 0.0 };
+    let (t, e, _) = measure_rounds(dev, scheme, 6, 10, theta);
+    (t, e)
+}
+
+fn main() {
+    banner(
+        "Headline table — abstract claims",
+        "75.6%–82.4% less energy; 2–4 orders of magnitude faster convergence",
+    );
+    // Table I reference
+    let mut t1 = Table::new(
+        "Table I — device profiles",
+        &["Device", "Android", "#Core", "Max Freq"],
+    );
+    for p in table1_profiles() {
+        t1.row([
+            p.name.to_string(),
+            p.android_version.to_string(),
+            p.cores.to_string(),
+            format!("{:.2}GHz", p.max_freq_ghz()),
+        ]);
+    }
+    print!("{}", t1.render());
+    println!();
+
+    let mut table = Table::new(
+        "headline — per dataset (paper default model, Honor, 6 rounds)",
+        &["dataset", "energy saved vs Orig", "train speedup vs Orig", "orders"],
+    );
+    let mut savings = Vec::new();
+    let mut speedups = Vec::new();
+    let bench_sets: Vec<Dataset> = ALL_DATASETS
+        .into_iter()
+        .filter(|d| *d != Dataset::Cifar10)
+        .collect();
+    for ds in bench_sets {
+        let (dt, de) = run(ds, Scheme::Deal);
+        let (ot, oe) = run(ds, Scheme::Original);
+        let saved = 1.0 - de / oe;
+        let speedup = ot / dt.max(1e-12);
+        savings.push(saved);
+        speedups.push(speedup);
+        table.row([
+            ds.name().to_string(),
+            format!("{:.1}%", saved * 100.0),
+            format!("{speedup:.0}x"),
+            format!("{:.1}", speedup.log10()),
+        ]);
+    }
+    print!("{}", table.render());
+    let min_s = savings.iter().cloned().fold(f64::INFINITY, f64::min);
+    let max_s = savings.iter().cloned().fold(0.0, f64::max);
+    println!(
+        "\nmeasured: {:.1}%–{:.1}% energy saved (paper: 75.6%–82.4%); \
+         geomean speedup {:.0}x = {:.1} orders (paper: 2–4 orders)",
+        min_s * 100.0,
+        max_s * 100.0,
+        geomean(&speedups),
+        geomean(&speedups).log10(),
+    );
+}

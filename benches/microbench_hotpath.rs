@@ -1,0 +1,125 @@
+//! Hot-path microbenchmarks — the §Perf targets (EXPERIMENTS.md).
+//!
+//! Times the operations that dominate every experiment: learner
+//! UPDATE/FORGET, QR rank-one update, bandit selection, θ-LRU access,
+//! broker round-trip, and (when artifacts are built) a PJRT artifact
+//! dispatch.
+//!
+//!     cargo bench --bench microbench_hotpath
+
+mod common;
+
+use deal::bandit::{SelectorConfig, SleepingBandit};
+use deal::learn::qr::QrFactor;
+use deal::learn::mat::Mat;
+use deal::learn::tikhonov::{Observation, Tikhonov};
+use deal::learn::{DecrementalModel, NullMiddleware, Ppr};
+use deal::memsim::{PageCache, Replacement};
+use deal::util::bench::from_env;
+use deal::util::rng::Rng;
+
+fn main() {
+    println!("== hot-path microbenches (set DEAL_BENCH_FAST=1 for quick runs) ==");
+    let b = from_env();
+    let mut rng = Rng::new(7);
+
+    // --- PPR update/forget at movielens scale (I=1682)
+    let items = 1682;
+    let mut histories: Vec<Vec<u32>> = (0..50)
+        .map(|_| {
+            let mut h: Vec<u32> = rng
+                .sample_indices(items, 40)
+                .into_iter()
+                .map(|i| i as u32)
+                .collect();
+            h.sort_unstable();
+            h
+        })
+        .collect();
+    let mut ppr = Ppr::fit(items, 10, &histories);
+    let mut mw = NullMiddleware;
+    let extra = histories.pop().unwrap();
+    b.run("ppr_update_forget_roundtrip(I=1682,h=40)", || {
+        ppr.update(&extra, &mut mw);
+        ppr.forget(&extra, &mut mw);
+    });
+    b.run("ppr_predict_top10(I=1682)", || ppr.predict(&extra, 10));
+
+    // --- QR rank-one at d=32 (the paper's 26d² op)
+    let mut g = Mat::zeros(32, 32);
+    for i in 0..32 {
+        g[(i, i)] = 32.0;
+    }
+    let mut qr = QrFactor::decompose(&g);
+    let u: Vec<f64> = (0..32).map(|_| rng.normal()).collect();
+    let neg: Vec<f64> = u.iter().map(|x| -x).collect();
+    b.run("qr_rank1_update+downdate(d=32)", || {
+        qr.rank1_update(&u, &u);
+        qr.rank1_update(&neg, &u);
+    });
+
+    // --- Tikhonov full step (z axpy + QR + solve)
+    let mut tik = Tikhonov::new(32, 1.0);
+    let obs = Observation { m: (0..32).map(|_| rng.normal()).collect(), r: 0.5 };
+    b.run("tikhonov_update+forget(d=32)", || {
+        tik.update(&obs, &mut mw);
+        tik.forget(&obs, &mut mw);
+    });
+
+    // --- bandit selection at fleet scale
+    let mut bandit = SleepingBandit::new(
+        500,
+        SelectorConfig { m: 50, min_fraction: 0.01, gamma: 20.0 },
+    );
+    let avail: Vec<usize> = (0..500).step_by(2).collect();
+    b.run("bandit_select(n=500,m=50)", || bandit.select(&avail));
+
+    // --- θ-LRU access stream
+    let mut cache = PageCache::new(1500, Replacement::ThetaLru { theta: 0.3 });
+    cache.begin_round();
+    let pages: Vec<u64> = (0..4096).map(|_| rng.below(4000) as u64).collect();
+    let mut i = 0;
+    b.run("theta_lru_access(cap=1500)", || {
+        let p = pages[i & 4095];
+        i += 1;
+        cache.access(p)
+    });
+
+    // --- broker round-trip (threaded PUB/SUB)
+    {
+        use deal::coordinator::fleet::{build_devices, FleetConfig};
+        use deal::coordinator::pubsub::{Broker, PubMsg};
+        use deal::coordinator::Scheme;
+        let cfg = FleetConfig {
+            n_devices: 4,
+            dataset: deal::data::Dataset::Housing,
+            scale: 0.3,
+            seed: 3,
+            ..FleetConfig::default()
+        };
+        let broker = Broker::spawn(build_devices(&cfg));
+        let mut round = 0u64;
+        b.run("broker_round_trip(4 workers)", || {
+            round += 1;
+            broker.publish_round(
+                &[0, 1, 2, 3],
+                PubMsg { round, scheme: Scheme::NewFl, arrivals: 0, theta: 0.0 },
+            )
+        });
+        broker.shutdown();
+    }
+
+    // --- PJRT artifact dispatch (skipped without artifacts)
+    if let Ok(reg) = deal::runtime::Registry::load("artifacts") {
+        use deal::runtime::{Engine, Tensor};
+        let mut engine = Engine::new(reg).unwrap();
+        engine.prepare("tikhonov_predict").unwrap();
+        let h = Tensor::vec(vec![1.0; 32]);
+        let x = Tensor::matrix(8, 32, vec![0.5; 256]);
+        b.run("pjrt_dispatch(tikhonov_predict)", || {
+            engine.call("tikhonov_predict", &[h.clone(), x.clone()]).unwrap()
+        });
+    } else {
+        println!("pjrt_dispatch: skipped (run `make artifacts`)");
+    }
+}

@@ -1,0 +1,65 @@
+//! DVFS frequency sweep: energy and completion time for one local
+//! training round at every ladder step of the Honor profile — the device-
+//! level view behind Figs. 3/6 ("under different CPU frequencies").
+//!
+//!     cargo run --release --example energy_sweep
+
+use deal::coordinator::device::DeviceSim;
+use deal::coordinator::fleet::{build_devices, FleetConfig};
+use deal::coordinator::Scheme;
+use deal::data::Dataset;
+use deal::memsim::Replacement;
+use deal::power::governor::Policy;
+use deal::power::profile::honor;
+use deal::util::tables::{fmt_uah, Table};
+
+fn device_at(step: usize, scheme: Scheme, seed: u64) -> DeviceSim {
+    let cfg = FleetConfig {
+        n_devices: 1,
+        dataset: Dataset::YearPredictionMSD,
+        scale: 0.02,
+        scheme,
+        policy: Some(Policy::Fixed(step)),
+        seed,
+        ..FleetConfig::default()
+    };
+    build_devices(&cfg).into_iter().next().unwrap()
+}
+
+fn main() {
+    let profile = honor();
+    println!(
+        "Honor profile: {} cores, ladder {:?} GHz\n",
+        profile.cores,
+        profile
+            .freqs_ghz
+            .iter()
+            .map(|f| (f * 100.0).round() / 100.0)
+            .collect::<Vec<_>>()
+    );
+
+    let mut table = Table::new(
+        "One Tikhonov training round on YearPredictionMSD (scale 2%), per CPU frequency",
+        &["freq (GHz)", "DEAL time", "DEAL energy", "Original time", "Original energy"],
+    );
+    for step in 0..profile.n_freq_steps() {
+        let mut deal_dev = device_at(step, Scheme::Deal, 3);
+        let mut orig_dev = device_at(step, Scheme::Original, 3);
+        // warm both up with the same history, then measure one round
+        for _ in 0..3 {
+            deal_dev.run_round(Scheme::Deal, 10, 0.3);
+            orig_dev.run_round(Scheme::Original, 10, 0.0);
+        }
+        let d = deal_dev.run_round(Scheme::Deal, 10, 0.3);
+        let o = orig_dev.run_round(Scheme::Original, 10, 0.0);
+        table.row([
+            format!("{:.2}", profile.freqs_ghz[step]),
+            format!("{:.4}s", d.time_s),
+            fmt_uah(d.energy_uah),
+            format!("{:.4}s", o.time_s),
+            fmt_uah(o.energy_uah),
+        ]);
+    }
+    print!("{}", table.render());
+    println!("\n(Original retrains everything each round; DEAL updates deltas and forgets θ=30%.)");
+}

@@ -1,0 +1,55 @@
+//! Federated Personalized PageRank: DEAL vs Original vs NewFL on the
+//! MovieLens-shaped workload (the paper's headline scenario, Figs. 3a/6a).
+//!
+//!     cargo run --release --example federated_ppr
+//!
+//! Runs the same fleet/seed under all three schemes and prints the
+//! training-time / energy / accuracy comparison.
+
+use deal::coordinator::fleet::{self, FleetConfig};
+use deal::coordinator::scheme::ALL_SCHEMES;
+use deal::data::Dataset;
+use deal::util::tables::{fmt_speedup, fmt_uah, Table};
+
+fn main() {
+    let rounds = 12;
+    let mut table = Table::new(
+        "Federated PPR on movielens (12 devices, 12 rounds)",
+        &["scheme", "virtual time", "energy", "final accuracy", "time vs DEAL"],
+    );
+    let mut results = Vec::new();
+    for scheme in ALL_SCHEMES {
+        let cfg = FleetConfig {
+            n_devices: 12,
+            dataset: Dataset::Movielens,
+            scale: 0.05,
+            scheme,
+            theta: 0.3,
+            m: 4,
+            seed: 7,
+            ..FleetConfig::default()
+        };
+        let mut fed = fleet::build(&cfg);
+        let stats = fed.run(rounds);
+        results.push((scheme, stats));
+    }
+    let deal_time = results[0].1.total_time_s;
+    for (scheme, s) in &results {
+        table.row([
+            scheme.name().to_string(),
+            format!("{:.3}s", s.total_time_s),
+            fmt_uah(s.total_energy_uah),
+            format!("{:.3}", s.final_accuracy),
+            fmt_speedup(s.total_time_s / deal_time),
+        ]);
+    }
+    print!("{}", table.render());
+
+    let orig = &results[1].1;
+    let deal = &results[0].1;
+    println!(
+        "\nDEAL saves {:.1}% energy vs Original and finishes {} faster.",
+        100.0 * (1.0 - deal.total_energy_uah / orig.total_energy_uah),
+        fmt_speedup(orig.total_time_s / deal.total_time_s),
+    );
+}

@@ -1,0 +1,69 @@
+"""AOT driver: lower every L2 graph to HLO text for the rust runtime.
+
+HLO *text* (not serialized HloModuleProto) is the interchange format:
+jax >= 0.5 emits protos with 64-bit instruction ids which the rust side's
+xla_extension 0.5.1 rejects (`proto.id() <= INT_MAX`); the text parser
+reassigns ids and round-trips cleanly (see /opt/xla-example/README.md).
+
+Usage: cd python && python -m compile.aot [--out-dir ../artifacts]
+
+Also writes `manifest.json` describing each artifact's inputs/outputs so
+rust/src/runtime/artifacts.rs can validate shapes at load time.
+"""
+
+import argparse
+import json
+import os
+
+import jax
+from jax._src.lib import xla_client as xc
+
+from .model import artifact_registry
+
+
+def to_hlo_text(lowered) -> str:
+    """stablehlo → XlaComputation → HLO text (id-safe interchange)."""
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def _spec_json(s):
+    return {"shape": list(s.shape), "dtype": str(s.dtype)}
+
+
+def lower_all(out_dir: str) -> dict:
+    os.makedirs(out_dir, exist_ok=True)
+    manifest = {}
+    for name, (fn, specs) in sorted(artifact_registry().items()):
+        lowered = jax.jit(fn).lower(*specs)
+        text = to_hlo_text(lowered)
+        path = os.path.join(out_dir, f"{name}.hlo.txt")
+        with open(path, "w") as f:
+            f.write(text)
+        out_specs = jax.eval_shape(fn, *specs)
+        flat, _ = jax.tree_util.tree_flatten(out_specs)
+        manifest[name] = {
+            "file": f"{name}.hlo.txt",
+            "inputs": [_spec_json(s) for s in specs],
+            "outputs": [_spec_json(s) for s in flat],
+        }
+        print(f"  {name}: {len(text)} chars, {len(specs)} in / {len(flat)} out")
+    with open(os.path.join(out_dir, "manifest.json"), "w") as f:
+        json.dump(manifest, f, indent=2, sort_keys=True)
+    return manifest
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--out-dir", default="../artifacts")
+    args = ap.parse_args()
+    print(f"lowering DEAL artifacts to {args.out_dir}")
+    manifest = lower_all(args.out_dir)
+    print(f"wrote {len(manifest)} artifacts + manifest.json")
+
+
+if __name__ == "__main__":
+    main()

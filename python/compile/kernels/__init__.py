@@ -1,0 +1,13 @@
+"""L1: Pallas kernels for DEAL's compute hot-spots (build-time only).
+
+All kernels run with interpret=True (the CPU PJRT plugin cannot execute
+Mosaic custom-calls) and are validated against the pure-jnp oracles in
+ref.py by python/tests/test_kernels.py.
+"""
+
+from .gram import gram_rank1
+from .jaccard import jaccard_similarity
+from .knn import knn_sqdist
+from .nb import nb_loglik
+
+__all__ = ["gram_rank1", "jaccard_similarity", "knn_sqdist", "nb_loglik"]

@@ -1,0 +1,43 @@
+"""Pallas kernel: rank-one gram-system update (DEAL Tikhonov hot spot).
+
+Paper Alg. 2 maintains z = Mᵀr and a factorization of G = MᵀM + λI and
+applies a ±rank-one modification per touched user. The L1 kernel is the
+fused outer-product update of (G, z); d is small (tens of features) so a
+single VMEM-resident block suffices — the win is fusing the outer product,
+the z axpy, and the sign select into one pass over G.
+"""
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _gram_rank1_kernel(g_ref, z_ref, m_ref, r_ref, sign_ref, g_out, z_out):
+    m = m_ref[...]
+    sign = sign_ref[0]
+    g_out[...] = g_ref[...] + sign * m[:, None] * m[None, :]
+    z_out[...] = z_ref[...] + sign * m * r_ref[0]
+
+
+@jax.jit
+def gram_rank1(gram, z, m, r, sign):
+    """(G, z) ± rank-one contribution of observation (m, r).
+
+    Args:
+      gram: [d, d] f32; z: [d] f32; m: [d] f32; r, sign: [1] f32
+      (sign=+1 UPDATE, -1 FORGET).
+    Returns:
+      (G', z').
+    """
+    d = gram.shape[0]
+    assert gram.shape == (d, d) and z.shape == (d,) and m.shape == (d,)
+    r = jnp.asarray(r, jnp.float32).reshape((1,))
+    sign = jnp.asarray(sign, jnp.float32).reshape((1,))
+    return pl.pallas_call(
+        _gram_rank1_kernel,
+        out_shape=[
+            jax.ShapeDtypeStruct((d, d), jnp.float32),
+            jax.ShapeDtypeStruct((d,), jnp.float32),
+        ],
+        interpret=True,
+    )(gram, z, m, r, sign)

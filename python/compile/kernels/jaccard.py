@@ -1,0 +1,64 @@
+"""Pallas kernel: tiled Jaccard similarity recompute (DEAL PPR hot spot).
+
+The paper's Alg. 1 renews similarity rows L_i after every UPDATE/FORGET.
+The batch form (full or multi-row recompute) is the L1 hot spot: an
+elementwise map over the co-occurrence matrix with two broadcast count
+vectors. On TPU this is VPU-bound; the tiling below streams row-tiles of C
+HBM→VMEM while both count vectors stay VMEM-resident (they are O(I), tiny
+next to the O(I·T) tile).
+
+interpret=True always: the CPU PJRT client cannot execute Mosaic
+custom-calls (see DESIGN.md §5); correctness is validated against ref.py.
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+# Row-tile height. 8 f32 sublanes × 128 lanes is the native TPU vreg tile;
+# multiples keep the VPU fully occupied. Perf pass (EXPERIMENTS.md §Perf)
+# settled on 64 rows/tile: at I=1024 that is 64·1024·4 B = 256 KiB of C in
+# flight + two resident count vectors — comfortably double-bufferable in
+# 16 MiB VMEM.
+DEFAULT_TILE = 64
+
+
+def _jaccard_kernel(c_ref, vrow_ref, vcol_ref, out_ref):
+    """One row-tile: L = C / (v_row ⊕ v_col − C), 0 where undefined."""
+    c = c_ref[...]
+    denom = vrow_ref[...][:, None] + vcol_ref[...][None, :] - c
+    safe = jnp.where(denom > 0, denom, 1.0)
+    out_ref[...] = jnp.where(denom > 0, c / safe, 0.0)
+
+
+@functools.partial(jax.jit, static_argnames=("tile",))
+def jaccard_similarity(co, counts, *, tile=DEFAULT_TILE):
+    """Similarity matrix L from co-occurrence C and item counts v.
+
+    Args:
+      co:     [I, I] f32 co-occurrence matrix.
+      counts: [I]    f32 per-item interaction counts.
+      tile:   row-tile height; must divide I.
+    Returns:
+      [I, I] f32 Jaccard similarity matrix (diagonal is 1 for active items).
+    """
+    n_items = co.shape[0]
+    assert co.shape == (n_items, n_items), co.shape
+    assert counts.shape == (n_items,), counts.shape
+    t = min(tile, n_items)
+    assert n_items % t == 0, f"tile {t} must divide item count {n_items}"
+    grid = (n_items // t,)
+    return pl.pallas_call(
+        _jaccard_kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((t, n_items), lambda i: (i, 0)),   # C row-tile
+            pl.BlockSpec((t,), lambda i: (i,)),             # v rows of tile
+            pl.BlockSpec((n_items,), lambda i: (0,)),       # v all columns
+        ],
+        out_specs=pl.BlockSpec((t, n_items), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((n_items, n_items), jnp.float32),
+        interpret=True,
+    )(co, counts, counts)

@@ -1,0 +1,29 @@
+"""Pallas kernel: Multinomial Naive Bayes log-posterior scoring.
+
+score[b, c] = log_prior[c] + x[b, :] · log_lik[c, :] — a matmul against
+the transposed likelihood table plus a broadcast bias; MXU-shaped.
+"""
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _nb_kernel(x_ref, w_ref, prior_ref, out_ref):
+    scores = jnp.dot(
+        x_ref[...], w_ref[...].T, preferred_element_type=jnp.float32
+    )
+    out_ref[...] = scores + prior_ref[...][None, :]
+
+
+@jax.jit
+def nb_loglik(x, log_lik, log_prior):
+    """Unnormalized log posterior [b, c] for count features x [b, f]."""
+    b, f = x.shape
+    c, f2 = log_lik.shape
+    assert f == f2 and log_prior.shape == (c,)
+    return pl.pallas_call(
+        _nb_kernel,
+        out_shape=jax.ShapeDtypeStruct((b, c), jnp.float32),
+        interpret=True,
+    )(x, log_lik, log_prior)

@@ -1,0 +1,76 @@
+"""Pure-jnp oracles for the Pallas kernels (correctness ground truth).
+
+Every kernel in this package has a reference implementation here written
+in the most obvious vectorized jnp form. pytest (python/tests/) asserts
+allclose between kernel and oracle across hypothesis-driven shape/value
+sweeps; the oracle itself is unit-tested against hand-computed examples.
+"""
+
+import jax.numpy as jnp
+
+
+def jaccard_similarity(co, counts):
+    """Jaccard similarity matrix from co-occurrence counts (paper §III-D).
+
+    L[i,j] = C[i,j] / (v[i] + v[j] - C[i,j]); entries with a zero
+    denominator (items never interacted with) are defined as 0.
+
+    Args:
+      co:     [I, I] f32 co-occurrence matrix C = Yᵀ Y.
+      counts: [I]    f32 per-item interaction counts v = Σ_u Y_u.
+    Returns:
+      [I, I] f32 similarity matrix.
+    """
+    denom = counts[:, None] + counts[None, :] - co
+    return jnp.where(denom > 0, co / jnp.where(denom > 0, denom, 1.0), 0.0)
+
+
+def gram_rank1(gram, z, m, r, sign):
+    """Rank-one update of the regularized gram system (paper Alg. 2).
+
+    UPDATE (sign=+1): G' = G + m mᵀ,  z' = z + m·r
+    FORGET (sign=-1): G' = G - m mᵀ,  z' = z - m·r
+
+    Args:
+      gram: [d, d] f32 gram matrix MᵀM + λI.
+      z:    [d]    f32 intermediate z = Mᵀr.
+      m:    [d]    f32 the touched user's observation row M_u.
+      r:    []     f32 the touched user's target r_u.
+      sign: []     f32 +1 (incremental) or -1 (decremental).
+    Returns:
+      (G', z') tuple.
+    """
+    return gram + sign * jnp.outer(m, m), z + sign * m * r
+
+
+def knn_sqdist(queries, data):
+    """Pairwise squared euclidean distances (kNN scoring, paper §IV models).
+
+    D[q, i] = ||Q_q - X_i||² computed in the MXU-friendly
+    ||x||² + ||y||² - 2 x·y form.
+
+    Args:
+      queries: [q, d] f32.
+      data:    [n, d] f32.
+    Returns:
+      [q, n] f32 squared distances (clamped at 0 against fp cancellation).
+    """
+    qn = jnp.sum(queries * queries, axis=1)
+    xn = jnp.sum(data * data, axis=1)
+    d2 = qn[:, None] + xn[None, :] - 2.0 * queries @ data.T
+    return jnp.maximum(d2, 0.0)
+
+
+def nb_loglik(x, log_lik, log_prior):
+    """Multinomial Naive Bayes class scores.
+
+    score[b, c] = log_prior[c] + Σ_f x[b,f] · log_lik[c,f]
+
+    Args:
+      x:         [b, f] f32 feature counts.
+      log_lik:   [c, f] f32 log class-conditional likelihoods.
+      log_prior: [c]    f32 log class priors.
+    Returns:
+      [b, c] f32 unnormalized log posterior scores.
+    """
+    return x @ log_lik.T + log_prior[None, :]

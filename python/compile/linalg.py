@@ -1,0 +1,102 @@
+"""Custom-call-free linear algebra for the AOT path (L2 substrate).
+
+jnp.linalg.{cholesky,solve,qr} lower to LAPACK FFI custom-calls on CPU,
+which the rust-side xla_extension 0.5.1 runtime cannot resolve. The AOT
+artifacts therefore use these pure-HLO (fori_loop + dynamic slice)
+implementations instead. d is small (≤ 64) in every DEAL model, so the
+sequential loops are cheap; XLA unrolls nothing but the op count is O(d³)
+with tiny constants.
+
+Validated against numpy/jnp.linalg oracles in python/tests/test_linalg.py.
+"""
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+
+def cholesky(a):
+    """Lower-triangular L with L Lᵀ = A for SPD A (right-looking, masked).
+
+    Pure-HLO outer-product Cholesky: iteration k extracts column k,
+    normalizes by the pivot, and subtracts the masked outer product from
+    the trailing submatrix. All shapes static; lowers to a single While.
+    """
+    d = a.shape[0]
+    idx = jnp.arange(d)
+
+    def body(k, carry):
+        a_k, l_acc = carry
+        pivot = jnp.sqrt(a_k[k, k])
+        col = a_k[:, k] / pivot
+        col = jnp.where(idx >= k, col, 0.0)
+        col = col.at[k].set(pivot)
+        # trailing update uses only entries strictly below the pivot
+        tail = jnp.where(idx > k, col, 0.0)
+        a_next = a_k - tail[:, None] * tail[None, :]
+        return a_next, l_acc.at[:, k].set(col)
+
+    _, l = lax.fori_loop(0, d, body, (a, jnp.zeros_like(a)))
+    return l
+
+
+def solve_lower(l, b):
+    """Forward substitution: y with L y = b (L lower-triangular)."""
+    d = l.shape[0]
+
+    def body(i, y):
+        yi = (b[i] - jnp.dot(l[i, :], y)) / l[i, i]
+        return y.at[i].set(yi)
+
+    return lax.fori_loop(0, d, body, jnp.zeros_like(b))
+
+
+def solve_upper(u, b):
+    """Back substitution: x with U x = b (U upper-triangular)."""
+    d = u.shape[0]
+
+    def body(j, x):
+        i = d - 1 - j
+        xi = (b[i] - jnp.dot(u[i, :], x)) / u[i, i]
+        return x.at[i].set(xi)
+
+    return lax.fori_loop(0, d, body, jnp.zeros_like(b))
+
+
+def spd_solve(a, b):
+    """x = A⁻¹ b for SPD A via Cholesky + two triangular solves."""
+    l = cholesky(a)
+    return solve_upper(l.T, solve_lower(l, b))
+
+
+def topk(values, k):
+    """(top-k values, indices) per row, descending — pure-HLO.
+
+    jax.lax.top_k lowers to a sort custom-call chain that round-trips fine
+    through HLO text, but we keep an explicit iota-argmax loop variant for
+    tiny k (DEAL retains top-k of each similarity row, k ≤ 16): k
+    sequential argmax+mask passes, each a reduce — no sort needed.
+    """
+    neg_inf = jnp.finfo(values.dtype).min
+
+    def body(j, carry):
+        vals, out_v, out_i = carry
+        i = jnp.argmax(vals, axis=-1)
+        v = jnp.take_along_axis(vals, i[..., None], axis=-1)[..., 0]
+        vals = jnp.where(
+            jax.nn.one_hot(i, vals.shape[-1], dtype=bool), neg_inf, vals
+        )
+        out_v = lax.dynamic_update_index_in_dim(out_v, v, j, axis=-1)
+        out_i = lax.dynamic_update_index_in_dim(
+            out_i, i.astype(jnp.int32), j, axis=-1
+        )
+        return vals, out_v, out_i
+
+    batch = values.shape[:-1]
+    init = (
+        values,
+        jnp.zeros(batch + (k,), values.dtype),
+        jnp.zeros(batch + (k,), jnp.int32),
+    )
+    _, out_v, out_i = lax.fori_loop(0, k, body, init)
+    return out_v, out_i

@@ -1,0 +1,185 @@
+"""L2: DEAL's batch compute graphs in JAX, calling the L1 Pallas kernels.
+
+Each public function here is one AOT artifact: `aot.py` lowers it at the
+canonical shapes in `ARTIFACTS` and dumps HLO text that the rust runtime
+(rust/src/runtime/) loads via PJRT. The per-event sparse updates live in
+rust (learn::*); these graphs serve the batch paths — initial model
+construction, periodic full recompute, and batched prediction.
+
+Everything must stay custom-call-free (see linalg.py) so xla_extension
+0.5.1 can compile the HLO text.
+"""
+
+import jax
+import jax.numpy as jnp
+
+from . import linalg
+from .kernels import gram_rank1, jaccard_similarity, knn_sqdist, nb_loglik
+
+# ---------------------------------------------------------------------------
+# Personalized PageRank (paper Alg. 1)
+# ---------------------------------------------------------------------------
+
+
+def ppr_build(history):
+    """Construct the full PPR model from a binary history matrix.
+
+    Args:
+      history: [U, I] f32 in {0,1} — device/user × item interactions Y.
+    Returns:
+      (C, v, L): co-occurrence [I, I], item counts [I], similarity [I, I].
+    """
+    co = history.T @ history
+    counts = jnp.sum(history, axis=0)
+    sim = jaccard_similarity(co, counts)
+    return co, counts, sim
+
+
+def ppr_delta(co, counts, user_row, sign):
+    """Apply one user's history incrementally (sign=+1) / decrementally (-1).
+
+    Mirrors Alg. 1 UPDATE/FORGET in batch form: C ± y yᵀ, v ± y, then the
+    similarity recompute through the L1 kernel.
+    """
+    sign = jnp.asarray(sign, jnp.float32)
+    co2 = co + sign * jnp.outer(user_row, user_row)
+    counts2 = counts + sign * user_row
+    return co2, counts2, jaccard_similarity(co2, counts2)
+
+
+def ppr_recommend(sim, user_row, k):
+    """Top-k item recommendations for one user (Alg. 1 PREDICT).
+
+    Preference estimate per item = similarity-weighted sum of the user's
+    history; already-interacted items are masked out.
+    """
+    scores = sim @ user_row
+    scores = jnp.where(user_row > 0, jnp.finfo(jnp.float32).min, scores)
+    return linalg.topk(scores, k)
+
+
+# ---------------------------------------------------------------------------
+# Tikhonov regularization (paper Alg. 2)
+# ---------------------------------------------------------------------------
+
+
+def tikhonov_fit(m, r, lam):
+    """Full fit: h = (MᵀM + λI)⁻¹ Mᵀ r, plus the retained intermediates.
+
+    Returns (G, z, h) — the gram system G, z that the incremental /
+    decremental path (rust + `tikhonov_step`) keeps updating.
+    """
+    d = m.shape[1]
+    gram = m.T @ m + lam * jnp.eye(d, dtype=jnp.float32)
+    z = m.T @ r
+    h = linalg.spd_solve(gram, z)
+    return gram, z, h
+
+
+def tikhonov_step(gram, z, m_u, r_u, sign):
+    """One UPDATE (+1) / FORGET (−1) step: rank-one kernel + re-solve.
+
+    Returns (G', z', h').
+    """
+    gram2, z2 = gram_rank1(gram, z, m_u, r_u, sign)
+    return gram2, z2, linalg.spd_solve(gram2, z2)
+
+
+def tikhonov_predict(h, batch):
+    """r̂ = X h for a batch of observations (Alg. 2 PREDICT)."""
+    return batch @ h
+
+
+# ---------------------------------------------------------------------------
+# kNN scoring and Multinomial Naive Bayes
+# ---------------------------------------------------------------------------
+
+
+def knn_topk(queries, data, k):
+    """k nearest data rows per query: (sqdists, indices), ascending."""
+    d2 = knn_sqdist(queries, data)
+    vals, idx = linalg.topk(-d2, k)
+    return -vals, idx
+
+
+def nb_fit(x, one_hot_labels, alpha):
+    """Multinomial NB tables from count features and one-hot labels.
+
+    Returns (log_prior [c], log_lik [c, f]) with Laplace smoothing alpha.
+    """
+    class_counts = jnp.sum(one_hot_labels, axis=0)                 # [c]
+    feat_counts = one_hot_labels.T @ x                             # [c, f]
+    log_prior = jnp.log(class_counts + alpha) - jnp.log(
+        jnp.sum(class_counts) + alpha * class_counts.shape[0]
+    )
+    denom = jnp.sum(feat_counts, axis=1, keepdims=True)
+    log_lik = jnp.log(feat_counts + alpha) - jnp.log(
+        denom + alpha * x.shape[1]
+    )
+    return log_prior, log_lik
+
+
+def nb_predict(x, log_lik, log_prior):
+    """argmax class + scores for count features x (via the L1 kernel)."""
+    scores = nb_loglik(x, log_lik, log_prior)
+    return jnp.argmax(scores, axis=1).astype(jnp.int32), scores
+
+
+# ---------------------------------------------------------------------------
+# AOT artifact registry: name -> (fn, example args)
+# ---------------------------------------------------------------------------
+
+# Canonical shapes (DESIGN.md §1): chosen so every rust-side runtime bench
+# and the e2e example can share one compiled executable per graph.
+PPR_ITEMS = 256
+TIK_ROWS, TIK_DIM = 256, 32
+KNN_ROWS, KNN_DIM, KNN_Q = 256, 32, 8
+NB_CLASSES, NB_FEATS, NB_BATCH = 16, 64, 32
+TOP_K = 10
+
+
+def _f32(*shape):
+    return jax.ShapeDtypeStruct(shape, jnp.float32)
+
+
+def artifact_registry():
+    """name -> (callable, example ShapeDtypeStructs). Single source of truth
+    for aot.py and the manifest consumed by rust/src/runtime/artifacts.rs."""
+    return {
+        "ppr_build": (
+            lambda y: ppr_build(y),
+            (_f32(64, PPR_ITEMS),),
+        ),
+        "ppr_delta": (
+            lambda c, v, y, s: ppr_delta(c, v, y, s),
+            (_f32(PPR_ITEMS, PPR_ITEMS), _f32(PPR_ITEMS), _f32(PPR_ITEMS), _f32()),
+        ),
+        "ppr_recommend": (
+            lambda l, y: ppr_recommend(l, y, TOP_K),
+            (_f32(PPR_ITEMS, PPR_ITEMS), _f32(PPR_ITEMS)),
+        ),
+        "tikhonov_fit": (
+            lambda m, r, lam: tikhonov_fit(m, r, lam),
+            (_f32(TIK_ROWS, TIK_DIM), _f32(TIK_ROWS), _f32()),
+        ),
+        "tikhonov_step": (
+            lambda g, z, m, r, s: tikhonov_step(g, z, m, r, s),
+            (_f32(TIK_DIM, TIK_DIM), _f32(TIK_DIM), _f32(TIK_DIM), _f32(), _f32()),
+        ),
+        "tikhonov_predict": (
+            lambda h, x: (tikhonov_predict(h, x),),
+            (_f32(TIK_DIM), _f32(KNN_Q, TIK_DIM)),
+        ),
+        "knn_topk": (
+            lambda q, x: knn_topk(q, x, TOP_K),
+            (_f32(KNN_Q, KNN_DIM), _f32(KNN_ROWS, KNN_DIM)),
+        ),
+        "nb_fit": (
+            lambda x, y, a: nb_fit(x, y, a),
+            (_f32(NB_BATCH, NB_FEATS), _f32(NB_BATCH, NB_CLASSES), _f32()),
+        ),
+        "nb_predict": (
+            lambda x, w, p: nb_predict(x, w, p),
+            (_f32(NB_BATCH, NB_FEATS), _f32(NB_CLASSES, NB_FEATS), _f32(NB_CLASSES)),
+        ),
+    }

@@ -1,0 +1,204 @@
+"""Kernel-vs-oracle correctness: the CORE L1 signal.
+
+Each Pallas kernel (interpret=True) must match its pure-jnp oracle in
+kernels/ref.py to fp32 tolerance across hypothesis-driven shape and value
+sweeps, plus hand-computed fixed cases.
+"""
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings
+from hypothesis import strategies as st
+from hypothesis.extra import numpy as hnp
+
+from compile.kernels import (
+    gram_rank1,
+    jaccard_similarity,
+    knn_sqdist,
+    nb_loglik,
+    ref,
+)
+
+SETTINGS = dict(max_examples=25, deadline=None)
+
+
+def finite_f32(shape, lo=-10.0, hi=10.0):
+    return hnp.arrays(
+        np.float32,
+        shape,
+        elements=st.floats(
+            lo, hi, allow_nan=False, allow_infinity=False, width=32
+        ),
+    )
+
+
+# ---------------------------------------------------------------------------
+# jaccard_similarity
+# ---------------------------------------------------------------------------
+
+
+class TestJaccard:
+    def test_hand_example(self):
+        # 3 users × 2 items: Y = [[1,1],[1,0],[0,1]]
+        y = jnp.array([[1, 1], [1, 0], [0, 1]], jnp.float32)
+        co = y.T @ y  # [[2,1],[1,2]]
+        v = jnp.sum(y, axis=0)  # [2,2]
+        sim = jaccard_similarity(co, v, tile=2)
+        # L01 = 1 / (2+2-1) = 1/3; diag = 2/(2+2-2) = 1
+        np.testing.assert_allclose(
+            np.asarray(sim), [[1.0, 1 / 3], [1 / 3, 1.0]], rtol=1e-6
+        )
+
+    def test_zero_denominator_is_zero(self):
+        co = jnp.zeros((8, 8), jnp.float32)
+        v = jnp.zeros((8,), jnp.float32)
+        sim = jaccard_similarity(co, v, tile=8)
+        assert np.all(np.asarray(sim) == 0.0)
+
+    @pytest.mark.parametrize("items,tile", [(8, 8), (16, 8), (64, 64), (128, 64)])
+    def test_matches_ref_random(self, items, tile):
+        rng = np.random.default_rng(items)
+        y = (rng.random((40, items)) < 0.2).astype(np.float32)
+        co = y.T @ y
+        v = y.sum(axis=0)
+        got = jaccard_similarity(jnp.asarray(co), jnp.asarray(v), tile=tile)
+        want = ref.jaccard_similarity(jnp.asarray(co), jnp.asarray(v))
+        np.testing.assert_allclose(np.asarray(got), np.asarray(want), rtol=1e-6)
+
+    @settings(**SETTINGS)
+    @given(
+        users=st.integers(1, 30),
+        items_pow=st.integers(2, 6),
+        density=st.floats(0.05, 0.9),
+        seed=st.integers(0, 2**31 - 1),
+    )
+    def test_property_sweep(self, users, items_pow, density, seed):
+        items = 2**items_pow
+        rng = np.random.default_rng(seed)
+        y = (rng.random((users, items)) < density).astype(np.float32)
+        co, v = y.T @ y, y.sum(axis=0)
+        got = np.asarray(jaccard_similarity(jnp.asarray(co), jnp.asarray(v), tile=4))
+        want = np.asarray(ref.jaccard_similarity(jnp.asarray(co), jnp.asarray(v)))
+        np.testing.assert_allclose(got, want, rtol=1e-5, atol=1e-7)
+        # invariants: symmetric, in [0, 1], diag 1 on active items
+        np.testing.assert_allclose(got, got.T, rtol=1e-5)
+        assert got.min() >= 0.0 and got.max() <= 1.0 + 1e-6
+        active = v > 0
+        np.testing.assert_allclose(np.diag(got)[active], 1.0, rtol=1e-6)
+
+
+# ---------------------------------------------------------------------------
+# gram_rank1
+# ---------------------------------------------------------------------------
+
+
+class TestGramRank1:
+    def test_hand_example(self):
+        g = jnp.eye(2, dtype=jnp.float32)
+        z = jnp.zeros(2, jnp.float32)
+        m = jnp.array([1.0, 2.0], jnp.float32)
+        g2, z2 = gram_rank1(g, z, m, 3.0, 1.0)
+        np.testing.assert_allclose(np.asarray(g2), [[2, 2], [2, 5]])
+        np.testing.assert_allclose(np.asarray(z2), [3, 6])
+
+    def test_update_then_forget_roundtrip(self):
+        rng = np.random.default_rng(0)
+        g = np.eye(8, dtype=np.float32) * 2
+        z = rng.normal(size=8).astype(np.float32)
+        m = rng.normal(size=8).astype(np.float32)
+        g1, z1 = gram_rank1(jnp.asarray(g), jnp.asarray(z), jnp.asarray(m), 1.5, 1.0)
+        g2, z2 = gram_rank1(g1, z1, jnp.asarray(m), 1.5, -1.0)
+        np.testing.assert_allclose(np.asarray(g2), g, rtol=1e-5, atol=1e-6)
+        np.testing.assert_allclose(np.asarray(z2), z, rtol=1e-5, atol=1e-6)
+
+    @settings(**SETTINGS)
+    @given(
+        d=st.integers(1, 48),
+        sign=st.sampled_from([1.0, -1.0]),
+        seed=st.integers(0, 2**31 - 1),
+    )
+    def test_property_matches_ref(self, d, sign, seed):
+        rng = np.random.default_rng(seed)
+        g = rng.normal(size=(d, d)).astype(np.float32)
+        z = rng.normal(size=d).astype(np.float32)
+        m = rng.normal(size=d).astype(np.float32)
+        r = np.float32(rng.normal())
+        got_g, got_z = gram_rank1(
+            jnp.asarray(g), jnp.asarray(z), jnp.asarray(m), r, sign
+        )
+        want_g, want_z = ref.gram_rank1(
+            jnp.asarray(g), jnp.asarray(z), jnp.asarray(m), r, sign
+        )
+        np.testing.assert_allclose(
+            np.asarray(got_g), np.asarray(want_g), rtol=1e-5, atol=1e-5
+        )
+        np.testing.assert_allclose(
+            np.asarray(got_z), np.asarray(want_z), rtol=1e-5, atol=1e-5
+        )
+
+
+# ---------------------------------------------------------------------------
+# knn_sqdist
+# ---------------------------------------------------------------------------
+
+
+class TestKnnSqdist:
+    def test_hand_example(self):
+        q = jnp.array([[0.0, 0.0]], jnp.float32)
+        x = jnp.array([[3.0, 4.0], [1.0, 0.0]], jnp.float32)
+        d2 = knn_sqdist(q, x, tile=2)
+        np.testing.assert_allclose(np.asarray(d2), [[25.0, 1.0]], rtol=1e-6)
+
+    def test_self_distance_zero(self):
+        rng = np.random.default_rng(1)
+        x = rng.normal(size=(16, 8)).astype(np.float32)
+        d2 = np.asarray(knn_sqdist(jnp.asarray(x), jnp.asarray(x), tile=16))
+        np.testing.assert_allclose(np.diag(d2), 0.0, atol=1e-4)
+
+    @settings(**SETTINGS)
+    @given(
+        q=st.integers(1, 8),
+        n_pow=st.integers(2, 7),
+        d=st.integers(1, 32),
+        seed=st.integers(0, 2**31 - 1),
+    )
+    def test_property_matches_ref(self, q, n_pow, d, seed):
+        n = 2**n_pow
+        rng = np.random.default_rng(seed)
+        queries = rng.normal(size=(q, d)).astype(np.float32)
+        data = rng.normal(size=(n, d)).astype(np.float32)
+        got = np.asarray(knn_sqdist(jnp.asarray(queries), jnp.asarray(data), tile=4))
+        want = np.asarray(ref.knn_sqdist(jnp.asarray(queries), jnp.asarray(data)))
+        np.testing.assert_allclose(got, want, rtol=1e-4, atol=1e-4)
+        assert got.min() >= 0.0  # clamped
+
+
+# ---------------------------------------------------------------------------
+# nb_loglik
+# ---------------------------------------------------------------------------
+
+
+class TestNbLoglik:
+    def test_hand_example(self):
+        x = jnp.array([[1.0, 0.0]], jnp.float32)
+        w = jnp.array([[-1.0, -2.0], [-3.0, -0.5]], jnp.float32)
+        p = jnp.array([-0.7, -0.6], jnp.float32)
+        s = nb_loglik(x, w, p)
+        np.testing.assert_allclose(np.asarray(s), [[-1.7, -3.6]], rtol=1e-6)
+
+    @settings(**SETTINGS)
+    @given(
+        b=st.integers(1, 16),
+        c=st.integers(2, 12),
+        f=st.integers(1, 40),
+        seed=st.integers(0, 2**31 - 1),
+    )
+    def test_property_matches_ref(self, b, c, f, seed):
+        rng = np.random.default_rng(seed)
+        x = rng.poisson(2.0, size=(b, f)).astype(np.float32)
+        w = -np.abs(rng.normal(size=(c, f))).astype(np.float32)
+        p = -np.abs(rng.normal(size=c)).astype(np.float32)
+        got = np.asarray(nb_loglik(jnp.asarray(x), jnp.asarray(w), jnp.asarray(p)))
+        want = np.asarray(ref.nb_loglik(jnp.asarray(x), jnp.asarray(w), jnp.asarray(p)))
+        np.testing.assert_allclose(got, want, rtol=1e-4, atol=1e-4)

@@ -1,0 +1,98 @@
+"""Custom-call-free linalg vs numpy/jnp.linalg oracles."""
+
+import jax.numpy as jnp
+import numpy as np
+from hypothesis import given, settings
+from hypothesis import strategies as st
+
+from compile import linalg
+
+SETTINGS = dict(max_examples=25, deadline=None)
+
+
+def random_spd(d, seed):
+    rng = np.random.default_rng(seed)
+    a = rng.normal(size=(d, d)).astype(np.float32)
+    return a @ a.T + d * np.eye(d, dtype=np.float32)
+
+
+class TestCholesky:
+    def test_identity(self):
+        l = linalg.cholesky(jnp.eye(4, dtype=jnp.float32))
+        np.testing.assert_allclose(np.asarray(l), np.eye(4), atol=1e-6)
+
+    def test_hand_example(self):
+        a = jnp.array([[4.0, 2.0], [2.0, 5.0]], jnp.float32)
+        l = np.asarray(linalg.cholesky(a))
+        np.testing.assert_allclose(l, [[2.0, 0.0], [1.0, 2.0]], rtol=1e-6)
+
+    @settings(**SETTINGS)
+    @given(d=st.integers(1, 48), seed=st.integers(0, 2**31 - 1))
+    def test_property_matches_numpy(self, d, seed):
+        a = random_spd(d, seed)
+        got = np.asarray(linalg.cholesky(jnp.asarray(a)))
+        want = np.linalg.cholesky(a.astype(np.float64)).astype(np.float32)
+        np.testing.assert_allclose(got, want, rtol=2e-3, atol=2e-3)
+        # strictly lower-triangular output
+        assert np.allclose(got, np.tril(got))
+
+
+class TestTriangularSolves:
+    @settings(**SETTINGS)
+    @given(d=st.integers(1, 40), seed=st.integers(0, 2**31 - 1))
+    def test_lower(self, d, seed):
+        rng = np.random.default_rng(seed)
+        l = np.tril(rng.normal(size=(d, d))).astype(np.float32)
+        np.fill_diagonal(l, np.abs(np.diag(l)) + 1.0)
+        b = rng.normal(size=d).astype(np.float32)
+        y = np.asarray(linalg.solve_lower(jnp.asarray(l), jnp.asarray(b)))
+        np.testing.assert_allclose(l @ y, b, rtol=1e-3, atol=1e-3)
+
+    @settings(**SETTINGS)
+    @given(d=st.integers(1, 40), seed=st.integers(0, 2**31 - 1))
+    def test_upper(self, d, seed):
+        rng = np.random.default_rng(seed)
+        u = np.triu(rng.normal(size=(d, d))).astype(np.float32)
+        np.fill_diagonal(u, np.abs(np.diag(u)) + 1.0)
+        b = rng.normal(size=d).astype(np.float32)
+        x = np.asarray(linalg.solve_upper(jnp.asarray(u), jnp.asarray(b)))
+        np.testing.assert_allclose(u @ x, b, rtol=1e-3, atol=1e-3)
+
+
+class TestSpdSolve:
+    @settings(**SETTINGS)
+    @given(d=st.integers(1, 40), seed=st.integers(0, 2**31 - 1))
+    def test_property_solves(self, d, seed):
+        a = random_spd(d, seed)
+        rng = np.random.default_rng(seed + 1)
+        b = rng.normal(size=d).astype(np.float32)
+        x = np.asarray(linalg.spd_solve(jnp.asarray(a), jnp.asarray(b)))
+        want = np.linalg.solve(a.astype(np.float64), b.astype(np.float64))
+        np.testing.assert_allclose(x, want, rtol=5e-3, atol=5e-3)
+
+
+class TestTopK:
+    def test_hand_example(self):
+        v = jnp.array([3.0, 1.0, 4.0, 1.5], jnp.float32)
+        vals, idx = linalg.topk(v, 2)
+        np.testing.assert_allclose(np.asarray(vals), [4.0, 3.0])
+        np.testing.assert_array_equal(np.asarray(idx), [2, 0])
+
+    @settings(**SETTINGS)
+    @given(
+        n=st.integers(2, 64),
+        k=st.integers(1, 8),
+        batch=st.integers(1, 4),
+        seed=st.integers(0, 2**31 - 1),
+    )
+    def test_property_matches_sort(self, n, k, batch, seed):
+        k = min(k, n)
+        rng = np.random.default_rng(seed)
+        # unique values so argsort order is unambiguous
+        v = rng.permutation(n * batch).reshape(batch, n).astype(np.float32)
+        vals, idx = linalg.topk(jnp.asarray(v), k)
+        want_idx = np.argsort(-v, axis=-1)[:, :k]
+        np.testing.assert_array_equal(np.asarray(idx), want_idx)
+        np.testing.assert_allclose(
+            np.asarray(vals), np.take_along_axis(v, want_idx, axis=-1)
+        )

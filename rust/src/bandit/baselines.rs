@@ -1,0 +1,184 @@
+//! Selection baselines for the ablation bench (DESIGN.md Ablation A):
+//! random-m, round-robin, oracle (knows the true means), and
+//! select-all (the `Original` FL behavior — every available device
+//! participates every round).
+
+use crate::util::rng::Rng;
+
+/// A worker-selection policy (the interface `SleepingBandit::select`
+/// also satisfies via [`super::SleepingBandit`]).
+pub trait Selector {
+    fn select(&mut self, available: &[usize]) -> Vec<usize>;
+    fn observe(&mut self, _arm: usize, _reward: f64) {}
+    fn name(&self) -> &'static str;
+}
+
+/// Uniformly random subset of size ≤ m.
+pub struct RandomSelector {
+    pub m: usize,
+    rng: Rng,
+}
+
+impl RandomSelector {
+    pub fn new(m: usize, seed: u64) -> Self {
+        RandomSelector { m, rng: Rng::new(seed) }
+    }
+}
+
+impl Selector for RandomSelector {
+    fn select(&mut self, available: &[usize]) -> Vec<usize> {
+        let k = self.m.min(available.len());
+        self.rng
+            .sample_indices(available.len(), k)
+            .into_iter()
+            .map(|i| available[i])
+            .collect()
+    }
+    fn name(&self) -> &'static str {
+        "random"
+    }
+}
+
+/// Cycle deterministically through the device population.
+pub struct RoundRobinSelector {
+    pub m: usize,
+    cursor: usize,
+}
+
+impl RoundRobinSelector {
+    pub fn new(m: usize) -> Self {
+        RoundRobinSelector { m, cursor: 0 }
+    }
+}
+
+impl Selector for RoundRobinSelector {
+    fn select(&mut self, available: &[usize]) -> Vec<usize> {
+        if available.is_empty() {
+            return Vec::new();
+        }
+        let k = self.m.min(available.len());
+        let start = self.cursor % available.len();
+        self.cursor = self.cursor.wrapping_add(k);
+        (0..k).map(|j| available[(start + j) % available.len()]).collect()
+    }
+    fn name(&self) -> &'static str {
+        "round-robin"
+    }
+}
+
+/// Knows the true means (regret lower bound for the ablation).
+pub struct OracleSelector {
+    pub m: usize,
+    true_mu: Vec<f64>,
+}
+
+impl OracleSelector {
+    pub fn new(m: usize, true_mu: Vec<f64>) -> Self {
+        OracleSelector { m, true_mu }
+    }
+}
+
+impl Selector for OracleSelector {
+    fn select(&mut self, available: &[usize]) -> Vec<usize> {
+        let mut v: Vec<usize> = available.to_vec();
+        v.sort_by(|&a, &b| self.true_mu[b].partial_cmp(&self.true_mu[a]).unwrap());
+        v.truncate(self.m);
+        v
+    }
+    fn name(&self) -> &'static str {
+        "oracle"
+    }
+}
+
+/// Every available device participates (`Original` federated learning).
+pub struct SelectAll;
+
+impl Selector for SelectAll {
+    fn select(&mut self, available: &[usize]) -> Vec<usize> {
+        available.to_vec()
+    }
+    fn name(&self) -> &'static str {
+        "select-all"
+    }
+}
+
+impl Selector for super::SleepingBandit {
+    // Fully-qualified paths resolve to the *inherent* methods (inherent
+    // impls shadow trait items in path resolution), so these delegate
+    // rather than recurse.
+    fn select(&mut self, available: &[usize]) -> Vec<usize> {
+        super::SleepingBandit::select(self, available)
+    }
+    fn observe(&mut self, arm: usize, reward: f64) {
+        super::SleepingBandit::observe(self, arm, reward)
+    }
+    fn name(&self) -> &'static str {
+        "deal-mab"
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn random_respects_m_and_membership() {
+        let mut s = RandomSelector::new(3, 1);
+        let avail = [2usize, 5, 8, 11, 14];
+        for _ in 0..50 {
+            let c = s.select(&avail);
+            assert_eq!(c.len(), 3);
+            let mut u = c.clone();
+            u.sort_unstable();
+            u.dedup();
+            assert_eq!(u.len(), 3, "duplicates");
+            assert!(c.iter().all(|x| avail.contains(x)));
+        }
+    }
+
+    #[test]
+    fn round_robin_covers_everyone() {
+        let mut s = RoundRobinSelector::new(2);
+        let avail: Vec<usize> = (0..6).collect();
+        let mut seen = vec![0usize; 6];
+        for _ in 0..9 {
+            for c in s.select(&avail) {
+                seen[c] += 1;
+            }
+        }
+        assert!(seen.iter().all(|&n| n == 3), "{seen:?}");
+    }
+
+    #[test]
+    fn oracle_picks_best() {
+        let mut s = OracleSelector::new(2, vec![0.1, 0.9, 0.5, 0.8]);
+        let c = s.select(&[0, 1, 2, 3]);
+        assert_eq!(c, vec![1, 3]);
+    }
+
+    #[test]
+    fn oracle_with_partial_availability() {
+        let mut s = OracleSelector::new(2, vec![0.1, 0.9, 0.5, 0.8]);
+        let c = s.select(&[0, 2]);
+        assert_eq!(c, vec![2, 0]);
+    }
+
+    #[test]
+    fn select_all_takes_everything() {
+        let mut s = SelectAll;
+        assert_eq!(s.select(&[3, 1, 4]), vec![3, 1, 4]);
+    }
+
+    #[test]
+    fn bandit_implements_selector_trait() {
+        use crate::bandit::{SelectorConfig, SleepingBandit};
+        let mut b: Box<dyn Selector> = Box::new(SleepingBandit::new(
+            4,
+            SelectorConfig { m: 2, min_fraction: 0.0, gamma: 1.0 },
+        ));
+        let c = b.select(&[0, 1, 2, 3]);
+        assert_eq!(c.len(), 2);
+        b.observe(c[0], 0.7);
+        assert_eq!(b.name(), "deal-mab");
+    }
+}

@@ -1,0 +1,12 @@
+//! Global selection optimization — the paper's §III-C multi-armed-bandit
+//! layer: Eq. 5 UCB estimates ([`ucb`]), the combinatorial sleeping
+//! bandit with Eq. 4 fairness constraints ([`sleeping`]), and the
+//! ablation baselines ([`baselines`]).
+
+pub mod baselines;
+pub mod sleeping;
+pub mod ucb;
+
+pub use baselines::{OracleSelector, RandomSelector, RoundRobinSelector, SelectAll, Selector};
+pub use sleeping::{SelectorConfig, SleepingBandit};
+pub use ucb::ArmEstimate;

@@ -1,0 +1,319 @@
+//! Combinatorial sleeping bandit with fairness constraints — the paper's
+//! global selection layer (§III-C, Eq. 4), following its refs [18]
+//! (Li et al., CSB-F) and [20].
+//!
+//! Each round k the server observes the available set G(k) (devices
+//! sleep when dropped/drained), and must pick S(k) ⊆ G(k), |S(k)| ≤ m,
+//! maximizing the long-run weighted reward Σ gᵢ μᵢ subject to per-device
+//! minimum selection fractions rᵢ (Eq. 4's constraint — fairness keeps
+//! worker models from going stale).
+//!
+//! CSB-F resolution: maintain a virtual queue Qᵢ(k+1) = max(Qᵢ(k) + rᵢ −
+//! bᵢ(k), 0) per device; each round select the (≤ m) available devices
+//! with the largest weight wᵢ = Qᵢ + γ·gᵢ·μ̄ᵢ(k) where μ̄ is the Eq. 5
+//! UCB estimate. The queue term forces eventual selection of starved
+//! devices; γ trades fairness responsiveness vs reward.
+
+use super::ucb::ArmEstimate;
+
+/// Configuration for the selection layer.
+#[derive(Debug, Clone)]
+pub struct SelectorConfig {
+    /// Max selected per round (paper's m).
+    pub m: usize,
+    /// Per-device minimum selection fraction rᵢ (uniform here; Eq. 4
+    /// allows per-device values — use `with_fractions`).
+    pub min_fraction: f64,
+    /// Fairness/reward tradeoff γ.
+    pub gamma: f64,
+}
+
+impl Default for SelectorConfig {
+    fn default() -> Self {
+        SelectorConfig { m: 10, min_fraction: 0.05, gamma: 20.0 }
+    }
+}
+
+/// The CSB-F selector.
+#[derive(Debug, Clone)]
+pub struct SleepingBandit {
+    cfg: SelectorConfig,
+    arms: Vec<ArmEstimate>,
+    /// per-device gradient weight gᵢ (paper: known positive constants)
+    gains: Vec<f64>,
+    /// fairness virtual queues Qᵢ
+    queues: Vec<f64>,
+    /// per-device min fractions rᵢ
+    fractions: Vec<f64>,
+    /// cᵢ(k): total selections (exposed for diagnostics/benches)
+    selections: Vec<u64>,
+    round: u64,
+}
+
+impl SleepingBandit {
+    pub fn new(n: usize, cfg: SelectorConfig) -> Self {
+        let f = cfg.min_fraction;
+        SleepingBandit {
+            cfg,
+            arms: vec![ArmEstimate::default(); n],
+            gains: vec![1.0; n],
+            queues: vec![0.0; n],
+            fractions: vec![f; n],
+            selections: vec![0; n],
+            round: 0,
+        }
+    }
+
+    /// Set per-device gradient gains gᵢ.
+    pub fn with_gains(mut self, gains: Vec<f64>) -> Self {
+        assert_eq!(gains.len(), self.arms.len());
+        assert!(gains.iter().all(|&g| g > 0.0));
+        self.gains = gains;
+        self
+    }
+
+    /// Set per-device minimum selection fractions rᵢ. Feasibility needs
+    /// Σ rᵢ ≤ m (Eq. 4); asserted here.
+    pub fn with_fractions(mut self, fractions: Vec<f64>) -> Self {
+        assert_eq!(fractions.len(), self.arms.len());
+        let total: f64 = fractions.iter().sum();
+        assert!(
+            total <= self.cfg.m as f64 + 1e-9,
+            "infeasible fairness constraint: Σr = {total} > m = {}",
+            self.cfg.m
+        );
+        self.fractions = fractions;
+        self
+    }
+
+    pub fn n_arms(&self) -> usize {
+        self.arms.len()
+    }
+
+    pub fn round(&self) -> u64 {
+        self.round
+    }
+
+    pub fn selection_counts(&self) -> &[u64] {
+        &self.selections
+    }
+
+    /// Empirical selection fraction of a device so far.
+    pub fn selection_fraction(&self, i: usize) -> f64 {
+        if self.round == 0 {
+            0.0
+        } else {
+            self.selections[i] as f64 / self.round as f64
+        }
+    }
+
+    /// UCB estimate for diagnostics.
+    pub fn estimate(&self, i: usize) -> f64 {
+        self.arms[i].ucb(self.round.max(1))
+    }
+
+    /// Select S(k) ⊆ `available`, |S| ≤ m, and advance the round state.
+    /// Queues update for *all* devices (sleeping ones accumulate credit,
+    /// so they are prioritized when they wake — the sleeping-bandit
+    /// fairness semantics).
+    pub fn select(&mut self, available: &[usize]) -> Vec<usize> {
+        self.round += 1;
+        let k = self.round;
+        let mut weighted: Vec<(f64, usize)> = available
+            .iter()
+            .map(|&i| {
+                let w = self.queues[i] + self.cfg.gamma * self.gains[i] * self.arms[i].ucb(k);
+                (w, i)
+            })
+            .collect();
+        // perf (EXPERIMENTS.md §Perf): partial selection of the top-m
+        // instead of a full sort — selection is O(n), sort only the m
+        let cmp = |a: &(f64, usize), b: &(f64, usize)| {
+            b.0.partial_cmp(&a.0).unwrap().then(a.1.cmp(&b.1))
+        };
+        let m = self.cfg.m.min(weighted.len());
+        if m > 0 && m < weighted.len() {
+            weighted.select_nth_unstable_by(m - 1, cmp);
+            weighted.truncate(m);
+        }
+        weighted.sort_by(cmp);
+        let chosen: Vec<usize> = weighted.into_iter().map(|(_, i)| i).collect();
+        // queue dynamics over all devices
+        for i in 0..self.queues.len() {
+            let served = chosen.contains(&i) as u64 as f64;
+            self.queues[i] = (self.queues[i] + self.fractions[i] - served).max(0.0);
+        }
+        for &i in &chosen {
+            self.selections[i] += 1;
+        }
+        chosen
+    }
+
+    /// Feed back the observed reward Xᵢ(k) for a selected device.
+    pub fn observe(&mut self, i: usize, reward: f64) {
+        self.arms[i].observe(reward);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Rng;
+
+    fn run_rounds(
+        bandit: &mut SleepingBandit,
+        true_mu: &[f64],
+        rounds: usize,
+        avail_prob: f64,
+        seed: u64,
+    ) -> f64 {
+        let mut rng = Rng::new(seed);
+        let n = true_mu.len();
+        let mut total = 0.0;
+        for _ in 0..rounds {
+            let available: Vec<usize> =
+                (0..n).filter(|_| rng.chance(avail_prob)).collect();
+            let chosen = bandit.select(&available);
+            for &i in &chosen {
+                let r = (true_mu[i] + rng.normal_ms(0.0, 0.05)).clamp(0.0, 1.0);
+                total += r;
+                bandit.observe(i, r);
+            }
+        }
+        total
+    }
+
+    #[test]
+    fn respects_m_and_availability() {
+        let mut b = SleepingBandit::new(
+            10,
+            SelectorConfig { m: 3, min_fraction: 0.0, gamma: 1.0 },
+        );
+        let chosen = b.select(&[1, 4, 7, 9]);
+        assert!(chosen.len() <= 3);
+        for c in &chosen {
+            assert!([1, 4, 7, 9].contains(c));
+        }
+        let none = b.select(&[]);
+        assert!(none.is_empty());
+    }
+
+    #[test]
+    fn converges_to_best_arms() {
+        // 2 good arms (0.9), 8 poor (0.1); with m=2 the good pair should
+        // dominate selections after exploration
+        let mut mu = vec![0.1; 10];
+        mu[2] = 0.9;
+        mu[7] = 0.9;
+        let mut b = SleepingBandit::new(
+            10,
+            SelectorConfig { m: 2, min_fraction: 0.0, gamma: 1.0 },
+        );
+        run_rounds(&mut b, &mu, 2000, 1.0, 1);
+        let counts = b.selection_counts();
+        assert!(counts[2] > 1200, "good arm under-selected: {counts:?}");
+        assert!(counts[7] > 1200, "good arm under-selected: {counts:?}");
+    }
+
+    #[test]
+    fn beats_uniform_selection_reward() {
+        let mu: Vec<f64> = (0..12).map(|i| 0.1 + 0.07 * i as f64).collect();
+        let mut b = SleepingBandit::new(
+            12,
+            SelectorConfig { m: 3, min_fraction: 0.0, gamma: 1.0 },
+        );
+        let got = run_rounds(&mut b, &mu, 1500, 1.0, 2);
+        // uniform random baseline expectation: mean(mu) * 3 per round
+        let uniform = mu.iter().sum::<f64>() / 12.0 * 3.0 * 1500.0;
+        assert!(got > uniform * 1.2, "bandit {got} vs uniform {uniform}");
+    }
+
+    #[test]
+    fn fairness_queues_force_minimum_fractions() {
+        // arm 0 is terrible but must still get ≥ 20% of rounds
+        let mut mu = vec![0.9; 5];
+        mu[0] = 0.01;
+        let cfg = SelectorConfig { m: 2, min_fraction: 0.2, gamma: 5.0 };
+        let mut b = SleepingBandit::new(5, cfg);
+        run_rounds(&mut b, &mu, 3000, 1.0, 3);
+        let frac = b.selection_fraction(0);
+        assert!(frac >= 0.18, "fairness violated: {frac}");
+    }
+
+    #[test]
+    fn no_fairness_starves_bad_arm() {
+        let mut mu = vec![0.9; 5];
+        mu[0] = 0.01;
+        let cfg = SelectorConfig { m: 2, min_fraction: 0.0, gamma: 1.0 };
+        let mut b = SleepingBandit::new(5, cfg);
+        run_rounds(&mut b, &mu, 3000, 1.0, 4);
+        assert!(b.selection_fraction(0) < 0.05);
+    }
+
+    #[test]
+    fn sleeping_devices_accumulate_priority() {
+        // device 0 sleeps for 100 rounds then wakes; queue credit should
+        // make it selected promptly
+        let cfg = SelectorConfig { m: 1, min_fraction: 0.3, gamma: 1.0 };
+        let mut b = SleepingBandit::new(3, cfg);
+        for _ in 0..100 {
+            let chosen = b.select(&[1, 2]);
+            for &i in &chosen {
+                b.observe(i, 0.9);
+            }
+        }
+        let chosen = b.select(&[0, 1, 2]);
+        assert_eq!(chosen, vec![0], "woken device with credit must win");
+    }
+
+    #[test]
+    #[should_panic(expected = "infeasible")]
+    fn infeasible_fractions_rejected() {
+        let cfg = SelectorConfig { m: 1, min_fraction: 0.0, gamma: 1.0 };
+        let _ = SleepingBandit::new(3, cfg).with_fractions(vec![0.5, 0.5, 0.5]);
+    }
+
+    #[test]
+    fn gains_bias_selection() {
+        let cfg = SelectorConfig { m: 1, min_fraction: 0.0, gamma: 1.0 };
+        let mut b = SleepingBandit::new(2, cfg).with_gains(vec![1.0, 3.0]);
+        // identical rewards; higher gain should win overwhelmingly
+        let mut wins = [0usize; 2];
+        for _ in 0..200 {
+            let c = b.select(&[0, 1]);
+            wins[c[0]] += 1;
+            b.observe(c[0], 0.5);
+        }
+        assert!(wins[1] > 150, "{wins:?}");
+    }
+
+    #[test]
+    fn property_selection_is_valid_subset() {
+        crate::util::prop::check(0x5B, 25, |g| {
+            let n = g.usize_in(1, 20);
+            let m = g.usize_in(1, n);
+            let cfg = SelectorConfig {
+                m,
+                min_fraction: g.f64_in(0.0, 0.5 / n as f64),
+                gamma: g.f64_in(0.1, 50.0),
+            };
+            let mut b = SleepingBandit::new(n, cfg);
+            for _ in 0..30 {
+                let avail: Vec<usize> = (0..n).filter(|_| g.bool()).collect();
+                let chosen = b.select(&avail);
+                crate::prop_assert!(chosen.len() <= m, "|S| > m");
+                let mut uniq = chosen.clone();
+                uniq.sort_unstable();
+                uniq.dedup();
+                crate::prop_assert!(uniq.len() == chosen.len(), "duplicate selection");
+                for &c in &chosen {
+                    crate::prop_assert!(avail.contains(&c), "selected unavailable");
+                }
+                for &c in &chosen {
+                    b.observe(c, g.f64_in(0.0, 1.0));
+                }
+            }
+            Ok(())
+        });
+    }
+}

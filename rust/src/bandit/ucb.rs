@@ -1,0 +1,101 @@
+//! Per-arm UCB estimation — paper Eq. 5.
+//!
+//! μ̄ᵢ(k) = min{ μ̂ᵢ(k−1) + √(3 ln k / 2 cᵢ(k−1)), 1 }, with μ̄ᵢ = 1 while
+//! the arm is unplayed (optimistic initialization; the paper sets
+//! μ̂ᵢ(k) = 1 when cᵢ(k) = 0).
+
+/// UCB state for one worker/arm.
+#[derive(Debug, Clone, Default)]
+pub struct ArmEstimate {
+    reward_sum: f64,
+    plays: u64,
+}
+
+impl ArmEstimate {
+    /// Record an observed reward Xᵢ(k) ∈ [0,1].
+    pub fn observe(&mut self, reward: f64) {
+        debug_assert!((0.0..=1.0).contains(&reward), "reward {reward} out of [0,1]");
+        self.reward_sum += reward.clamp(0.0, 1.0);
+        self.plays += 1;
+    }
+
+    pub fn plays(&self) -> u64 {
+        self.plays
+    }
+
+    /// Empirical mean μ̂ᵢ (1 when unplayed, per the paper).
+    pub fn mean(&self) -> f64 {
+        if self.plays == 0 {
+            1.0
+        } else {
+            self.reward_sum / self.plays as f64
+        }
+    }
+
+    /// Eq. 5 truncated UCB estimate at round k.
+    pub fn ucb(&self, round: u64) -> f64 {
+        if self.plays == 0 {
+            return 1.0;
+        }
+        let k = round.max(2) as f64;
+        let bonus = (3.0 * k.ln() / (2.0 * self.plays as f64)).sqrt();
+        (self.mean() + bonus).min(1.0)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn unplayed_arm_is_optimistic() {
+        let a = ArmEstimate::default();
+        assert_eq!(a.mean(), 1.0);
+        assert_eq!(a.ucb(10), 1.0);
+    }
+
+    #[test]
+    fn mean_tracks_observations() {
+        let mut a = ArmEstimate::default();
+        a.observe(0.2);
+        a.observe(0.6);
+        assert!((a.mean() - 0.4).abs() < 1e-12);
+        assert_eq!(a.plays(), 2);
+    }
+
+    #[test]
+    fn ucb_truncated_at_one() {
+        let mut a = ArmEstimate::default();
+        a.observe(0.95);
+        assert_eq!(a.ucb(100), 1.0);
+    }
+
+    #[test]
+    fn bonus_shrinks_with_plays() {
+        let mut few = ArmEstimate::default();
+        let mut many = ArmEstimate::default();
+        few.observe(0.5);
+        for _ in 0..200 {
+            many.observe(0.5);
+        }
+        assert!(few.ucb(300) > many.ucb(300));
+        assert!(many.ucb(300) > 0.5, "bonus stays positive");
+    }
+
+    #[test]
+    fn bonus_grows_with_round() {
+        let mut a = ArmEstimate::default();
+        for _ in 0..50 {
+            a.observe(0.3);
+        }
+        assert!(a.ucb(10_000) > a.ucb(100));
+    }
+
+    #[test]
+    fn rewards_clamped() {
+        let mut a = ArmEstimate::default();
+        a.observe(0.5);
+        // mean stays in [0,1] whatever happens
+        assert!((0.0..=1.0).contains(&a.mean()));
+    }
+}

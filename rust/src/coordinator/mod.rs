@@ -1,0 +1,22 @@
+//! The DEAL coordinator — the paper's system contribution at L3.
+//!
+//! - [`scheme`] — DEAL / Original / NewFL semantics (§IV-A baselines)
+//! - [`workload`] — a device's model + shard (dispatch over the 4 models)
+//! - [`device`] — one simulated worker: governor + meter + battery +
+//!   θ-LRU cache + decremental learner (§III-D local layer)
+//! - [`server`] — round loop, majority/TTL aggregation, rewards (§III-A)
+//! - [`fleet`] — experiment builder used by benches and examples
+//! - [`pubsub`] — threaded PUB/SUB deployment topology
+
+pub mod device;
+pub mod fleet;
+pub mod pubsub;
+pub mod scheme;
+pub mod server;
+pub mod workload;
+
+pub use device::{DeviceSim, LocalOutcome};
+pub use fleet::FleetConfig;
+pub use scheme::Scheme;
+pub use server::{Federation, FederationConfig, FederationStats};
+pub use workload::{ModelKind, Workload};

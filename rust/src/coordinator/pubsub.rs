@@ -1,0 +1,228 @@
+//! In-process PUB/SUB broker over OS threads + channels (paper §III-A:
+//! "DEAL initializes the federated learning setup in a PUB/SUB model").
+//!
+//! The figure benches drive [`super::server::Federation`] synchronously
+//! for determinism; this broker is the *deployment* topology used by the
+//! `deal` binary and the e2e example: the server PUBlishes a round job to
+//! each selected worker's channel, worker threads train their device
+//! simulator and SUB back the outcome. Virtual (simulated) time rides in
+//! the messages, so wall-clock thread scheduling never changes results.
+
+use std::sync::mpsc::{channel, Receiver, Sender};
+use std::thread::JoinHandle;
+
+use super::device::{DeviceSim, LocalOutcome};
+use super::scheme::Scheme;
+
+/// Job published to a worker for one round.
+#[derive(Debug, Clone, Copy)]
+pub struct PubMsg {
+    pub round: u64,
+    pub scheme: Scheme,
+    pub arrivals: usize,
+    pub theta: f64,
+}
+
+/// Control + SUB reply from a worker.
+#[derive(Debug)]
+pub enum SubMsg {
+    /// Round result.
+    Reply { worker: usize, round: u64, outcome: LocalOutcome, online: bool },
+    /// Worker exited (channel closed / shutdown).
+    Bye { worker: usize },
+}
+
+enum Ctl {
+    Job(PubMsg),
+    /// Availability probe for G(k).
+    Probe,
+    Stop,
+}
+
+/// One worker endpoint held by the broker.
+struct Endpoint {
+    tx: Sender<Ctl>,
+    handle: Option<JoinHandle<()>>,
+}
+
+/// The broker: owns worker threads and the shared SUB inbox.
+pub struct Broker {
+    endpoints: Vec<Endpoint>,
+    inbox: Receiver<SubMsg>,
+    inbox_tx: Sender<SubMsg>,
+}
+
+impl Broker {
+    /// Spawn one thread per device simulator.
+    pub fn spawn(devices: Vec<DeviceSim>) -> Self {
+        let (inbox_tx, inbox) = channel::<SubMsg>();
+        let endpoints = devices
+            .into_iter()
+            .map(|mut dev| {
+                let (tx, rx) = channel::<Ctl>();
+                let out = inbox_tx.clone();
+                let worker = dev.id;
+                let handle = std::thread::Builder::new()
+                    .name(format!("deal-worker-{worker}"))
+                    .spawn(move || loop {
+                        match rx.recv() {
+                            Ok(Ctl::Job(job)) => {
+                                let outcome =
+                                    dev.run_round(job.scheme, job.arrivals, job.theta);
+                                let _ = out.send(SubMsg::Reply {
+                                    worker,
+                                    round: job.round,
+                                    outcome,
+                                    online: true,
+                                });
+                            }
+                            Ok(Ctl::Probe) => {
+                                let online = dev.step_availability();
+                                let _ = out.send(SubMsg::Reply {
+                                    worker,
+                                    round: 0,
+                                    outcome: LocalOutcome::default(),
+                                    online,
+                                });
+                            }
+                            Ok(Ctl::Stop) | Err(_) => {
+                                let _ = out.send(SubMsg::Bye { worker });
+                                break;
+                            }
+                        }
+                    })
+                    .expect("spawn worker thread");
+                Endpoint { tx, handle: Some(handle) }
+            })
+            .collect();
+        Broker { endpoints, inbox, inbox_tx }
+    }
+
+    pub fn n_workers(&self) -> usize {
+        self.endpoints.len()
+    }
+
+    /// Probe availability of all workers (G(k)).
+    pub fn probe_availability(&self) -> Vec<usize> {
+        for ep in &self.endpoints {
+            let _ = ep.tx.send(Ctl::Probe);
+        }
+        let mut online = Vec::new();
+        for _ in 0..self.endpoints.len() {
+            if let Ok(SubMsg::Reply { worker, online: o, .. }) = self.inbox.recv() {
+                if o {
+                    online.push(worker);
+                }
+            }
+        }
+        online.sort_unstable();
+        online
+    }
+
+    /// PUB a round job to the selected workers and collect all SUB
+    /// replies (deterministic: every selected worker replies; the caller
+    /// applies majority/TTL semantics on the *virtual* times).
+    pub fn publish_round(&self, selected: &[usize], job: PubMsg) -> Vec<(usize, LocalOutcome)> {
+        for &w in selected {
+            let _ = self.endpoints[w].tx.send(Ctl::Job(job));
+        }
+        let mut replies = Vec::with_capacity(selected.len());
+        for _ in 0..selected.len() {
+            match self.inbox.recv() {
+                Ok(SubMsg::Reply { worker, outcome, .. }) => {
+                    replies.push((worker, outcome));
+                }
+                Ok(SubMsg::Bye { .. }) | Err(_) => break,
+            }
+        }
+        replies.sort_by(|a, b| a.1.time_s.partial_cmp(&b.1.time_s).unwrap());
+        replies
+    }
+
+    /// Stop all workers and join their threads.
+    pub fn shutdown(mut self) {
+        for ep in &self.endpoints {
+            let _ = ep.tx.send(Ctl::Stop);
+        }
+        for ep in &mut self.endpoints {
+            if let Some(h) = ep.handle.take() {
+                let _ = h.join();
+            }
+        }
+    }
+
+    /// Clone of the inbox sender (tests / external producers).
+    pub fn inbox_sender(&self) -> Sender<SubMsg> {
+        self.inbox_tx.clone()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coordinator::fleet::{build_devices, FleetConfig};
+    use crate::data::Dataset;
+
+    fn broker(n: usize) -> Broker {
+        let cfg = FleetConfig {
+            n_devices: n,
+            dataset: Dataset::Housing,
+            scale: 0.3,
+            seed: 5,
+            ..Default::default()
+        };
+        Broker::spawn(build_devices(&cfg))
+    }
+
+    #[test]
+    fn spawn_and_shutdown() {
+        let b = broker(4);
+        assert_eq!(b.n_workers(), 4);
+        b.shutdown();
+    }
+
+    #[test]
+    fn publish_collects_all_selected() {
+        let b = broker(6);
+        let job = PubMsg { round: 1, scheme: Scheme::Deal, arrivals: 5, theta: 0.3 };
+        let replies = b.publish_round(&[0, 2, 4], job);
+        assert_eq!(replies.len(), 3);
+        let ids: Vec<usize> = replies.iter().map(|r| r.0).collect();
+        for w in [0, 2, 4] {
+            assert!(ids.contains(&w));
+        }
+        // sorted by virtual time
+        for w in replies.windows(2) {
+            assert!(w[0].1.time_s <= w[1].1.time_s);
+        }
+        b.shutdown();
+    }
+
+    #[test]
+    fn probe_availability_subset() {
+        let b = broker(5);
+        let online = b.probe_availability();
+        assert!(online.len() <= 5);
+        for &w in &online {
+            assert!(w < 5);
+        }
+        b.shutdown();
+    }
+
+    #[test]
+    fn rounds_accumulate_state_across_publishes() {
+        let b = broker(3);
+        let job = PubMsg { round: 1, scheme: Scheme::NewFl, arrivals: 4, theta: 0.0 };
+        let r1 = b.publish_round(&[0], job);
+        let job2 = PubMsg { round: 2, ..job };
+        let r2 = b.publish_round(&[0], job2);
+        assert_eq!(r1[0].1.new_items, 4);
+        assert_eq!(r2[0].1.new_items, 4);
+        assert_eq!(
+            r2[0].1.retained_items,
+            r1[0].1.retained_items + 4,
+            "worker state persists across publishes"
+        );
+        b.shutdown();
+    }
+}

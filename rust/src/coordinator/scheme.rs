@@ -1,0 +1,67 @@
+//! Training schemes compared throughout the paper's evaluation (§IV-A).
+
+/// Which end-to-end scheme a federation runs.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum Scheme {
+    /// DEAL: MAB selection + decremental learning + DVFS coupling +
+    /// majority/TTL aggregation.
+    Deal,
+    /// `Original`: classic FL — every round retrains the full local data,
+    /// all available devices participate, server waits for everyone.
+    Original,
+    /// `NewFL`: DL4J-style modification that trains only newly arrived
+    /// data (incremental, never forgets, no selection optimization).
+    NewFl,
+}
+
+pub const ALL_SCHEMES: [Scheme; 3] = [Scheme::Deal, Scheme::Original, Scheme::NewFl];
+
+impl Scheme {
+    pub fn name(&self) -> &'static str {
+        match self {
+            Scheme::Deal => "DEAL",
+            Scheme::Original => "Original",
+            Scheme::NewFl => "NewFL",
+        }
+    }
+
+    pub fn from_name(s: &str) -> Option<Scheme> {
+        match s.to_ascii_lowercase().as_str() {
+            "deal" => Some(Scheme::Deal),
+            "original" => Some(Scheme::Original),
+            "newfl" | "new-fl" => Some(Scheme::NewFl),
+            _ => None,
+        }
+    }
+
+    /// Does the server cut the round at a majority of replies (vs all)?
+    pub fn majority_aggregation(&self) -> bool {
+        matches!(self, Scheme::Deal)
+    }
+
+    /// Does the scheme use MAB worker selection (vs select-all)?
+    pub fn uses_selection(&self) -> bool {
+        matches!(self, Scheme::Deal)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn names_roundtrip() {
+        for s in ALL_SCHEMES {
+            assert_eq!(Scheme::from_name(s.name()), Some(s));
+        }
+        assert_eq!(Scheme::from_name("bogus"), None);
+    }
+
+    #[test]
+    fn semantics_flags() {
+        assert!(Scheme::Deal.majority_aggregation());
+        assert!(!Scheme::Original.majority_aggregation());
+        assert!(Scheme::Deal.uses_selection());
+        assert!(!Scheme::NewFl.uses_selection());
+    }
+}

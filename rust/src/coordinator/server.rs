@@ -1,0 +1,378 @@
+//! The federation server: round loop, PUB/SUB aggregation semantics,
+//! reward computation, and convergence tracking (paper §III-A/B).
+//!
+//! Per round k: observe availability G(k) → select S(k) (MAB for DEAL,
+//! select-all otherwise) → PUB the job → each worker trains locally →
+//! SUB replies carry (virtual time, energy, gradients-proxy) → the round
+//! closes at the **majority** reply or the TTL (DEAL), or waits for all
+//! (Original/NewFL). Rewards Xᵢ(k) ∈ [0,1] blend latency, energy and
+//! data volume and feed the bandit.
+
+use super::device::{DeviceSim, LocalOutcome};
+use super::scheme::Scheme;
+use crate::bandit::Selector;
+use crate::util::stats::Summary;
+
+/// Federation configuration.
+#[derive(Debug, Clone)]
+pub struct FederationConfig {
+    pub scheme: Scheme,
+    /// Round TTL T̈ (virtual seconds).
+    pub ttl_s: f64,
+    /// Items arriving per device per round.
+    pub arrivals_per_round: usize,
+    /// DEAL forget degree θ.
+    pub theta: f64,
+    /// Convergence: model_delta below this for `streak` rounds.
+    pub convergence_eps: f64,
+    pub convergence_streak: usize,
+}
+
+impl Default for FederationConfig {
+    fn default() -> Self {
+        FederationConfig {
+            scheme: Scheme::Deal,
+            ttl_s: 30.0,
+            arrivals_per_round: 10,
+            theta: 0.3,
+            convergence_eps: 0.05,
+            convergence_streak: 2,
+        }
+    }
+}
+
+/// Per-round record kept by the server.
+#[derive(Debug, Clone)]
+pub struct RoundRecord {
+    pub round: u64,
+    pub available: usize,
+    pub selected: usize,
+    /// Virtual time at which the server closed the round.
+    pub round_time_s: f64,
+    /// Total energy across participants (µAh).
+    pub energy_uah: f64,
+    /// Mean holdout accuracy across participants.
+    pub mean_accuracy: f64,
+    /// Reward Q(k) = Σ gᵢXᵢ over the selected set.
+    pub reward: f64,
+    /// Replies that beat the TTL.
+    pub in_time: usize,
+}
+
+/// The federation server driving a fleet of device simulators.
+pub struct Federation {
+    cfg: FederationConfig,
+    devices: Vec<DeviceSim>,
+    selector: Box<dyn Selector>,
+    round: u64,
+    /// cumulative virtual time (server clock)
+    pub clock_s: f64,
+    /// per-device: consecutive small-delta rounds
+    conv_streak: Vec<usize>,
+    /// per-device convergence time (virtual s), once reached
+    pub convergence_time_s: Vec<Option<f64>>,
+    /// per-device cumulative busy time
+    device_busy_s: Vec<f64>,
+    /// per-device cumulative energy
+    pub device_energy_uah: Vec<f64>,
+    pub rounds: Vec<RoundRecord>,
+}
+
+impl Federation {
+    pub fn new(
+        devices: Vec<DeviceSim>,
+        selector: Box<dyn Selector>,
+        cfg: FederationConfig,
+    ) -> Self {
+        let n = devices.len();
+        Federation {
+            cfg,
+            devices,
+            selector,
+            round: 0,
+            clock_s: 0.0,
+            conv_streak: vec![0; n],
+            convergence_time_s: vec![None; n],
+            device_busy_s: vec![0.0; n],
+            device_energy_uah: vec![0.0; n],
+            rounds: Vec::new(),
+        }
+    }
+
+    pub fn n_devices(&self) -> usize {
+        self.devices.len()
+    }
+
+    pub fn config(&self) -> &FederationConfig {
+        &self.cfg
+    }
+
+    pub fn devices(&self) -> &[DeviceSim] {
+        &self.devices
+    }
+
+    /// Run one federated round; returns its record.
+    pub fn run_round(&mut self) -> RoundRecord {
+        self.round += 1;
+        // 1. availability G(k)
+        let available: Vec<usize> = (0..self.devices.len())
+            .filter(|&i| self.devices[i].step_availability())
+            .collect();
+        // 2. selection S(k)
+        let selected: Vec<usize> = if self.cfg.scheme.uses_selection() {
+            self.selector.select(&available)
+        } else {
+            available.clone()
+        };
+        // 3. PUB → local training → SUB
+        let mut outcomes: Vec<(usize, LocalOutcome)> = selected
+            .iter()
+            .map(|&i| {
+                let out =
+                    self.devices[i].run_round(self.cfg.scheme, self.cfg.arrivals_per_round, self.cfg.theta);
+                (i, out)
+            })
+            .collect();
+        // 4. aggregation: sort replies by virtual arrival
+        outcomes.sort_by(|a, b| a.1.time_s.partial_cmp(&b.1.time_s).unwrap());
+        let round_time = if outcomes.is_empty() {
+            0.0
+        } else if self.cfg.scheme.majority_aggregation() {
+            // close at the ⌈(n+1)/2⌉-th reply or the TTL, whichever first
+            let majority_idx = outcomes.len() / 2;
+            outcomes[majority_idx].1.time_s.min(self.cfg.ttl_s)
+        } else {
+            // wait for everyone (stragglers included)
+            outcomes.last().unwrap().1.time_s
+        };
+        // 5. rewards + bandit feedback + convergence probes
+        let mut acc = Summary::new();
+        let mut energy = 0.0;
+        let mut reward_q = 0.0;
+        let mut in_time = 0;
+        for (i, out) in &outcomes {
+            if out.time_s <= self.cfg.ttl_s {
+                in_time += 1;
+            }
+            energy += out.energy_uah;
+            if out.accuracy > 0.0 {
+                acc.add(out.accuracy);
+            }
+            let x = self.reward(out);
+            reward_q += x;
+            self.selector.observe(*i, x);
+            // convergence clock: training-compute time (the paper's
+            // completion-time axis excludes the PUB/SUB radio window)
+            self.device_busy_s[*i] += out.compute_s;
+            self.device_energy_uah[*i] += out.energy_uah;
+            // convergence tracking on the device's own busy-time axis
+            if self.convergence_time_s[*i].is_none() {
+                if out.model_delta < self.cfg.convergence_eps {
+                    self.conv_streak[*i] += 1;
+                    if self.conv_streak[*i] >= self.cfg.convergence_streak {
+                        self.convergence_time_s[*i] = Some(self.device_busy_s[*i]);
+                    }
+                } else {
+                    self.conv_streak[*i] = 0;
+                }
+            }
+        }
+        self.clock_s += round_time;
+        let rec = RoundRecord {
+            round: self.round,
+            available: available.len(),
+            selected: selected.len(),
+            round_time_s: round_time,
+            energy_uah: energy,
+            mean_accuracy: if acc.count() == 0 { 0.0 } else { acc.mean() },
+            reward: reward_q,
+            in_time,
+        };
+        self.rounds.push(rec.clone());
+        rec
+    }
+
+    /// Run `n` rounds; returns aggregate statistics.
+    pub fn run(&mut self, n: usize) -> FederationStats {
+        for _ in 0..n {
+            self.run_round();
+        }
+        self.stats()
+    }
+
+    /// Reward Xᵢ(k) ∈ [0,1]: the paper's objective blend — latency
+    /// (1 − T/TTL), energy frugality, and contributed data volume.
+    fn reward(&self, out: &LocalOutcome) -> f64 {
+        let lat = (1.0 - out.time_s / self.cfg.ttl_s).clamp(0.0, 1.0);
+        // energy yardstick: round energy vs a 1%-battery budget
+        let budget = 0.01 * 3_000_000.0;
+        let frugal = (1.0 - out.energy_uah / budget).clamp(0.0, 1.0);
+        let volume = if self.cfg.arrivals_per_round == 0 {
+            0.0
+        } else {
+            (out.new_items as f64 / self.cfg.arrivals_per_round as f64).clamp(0.0, 1.0)
+        };
+        (0.4 * lat + 0.4 * frugal + 0.2 * volume).clamp(0.0, 1.0)
+    }
+
+    /// Aggregates over all completed rounds.
+    pub fn stats(&self) -> FederationStats {
+        let total_energy: f64 = self.rounds.iter().map(|r| r.energy_uah).sum();
+        let total_time: f64 = self.rounds.iter().map(|r| r.round_time_s).sum();
+        let last_acc = self
+            .rounds
+            .iter()
+            .rev()
+            .find(|r| r.mean_accuracy > 0.0)
+            .map_or(0.0, |r| r.mean_accuracy);
+        let conv: Vec<f64> = self
+            .convergence_time_s
+            .iter()
+            .filter_map(|c| *c)
+            .collect();
+        FederationStats {
+            rounds: self.rounds.len(),
+            total_time_s: total_time,
+            total_energy_uah: total_energy,
+            final_accuracy: last_acc,
+            converged_devices: conv.len(),
+            convergence_times_s: conv,
+        }
+    }
+}
+
+/// Aggregate result of a federation run.
+#[derive(Debug, Clone)]
+pub struct FederationStats {
+    pub rounds: usize,
+    pub total_time_s: f64,
+    pub total_energy_uah: f64,
+    pub final_accuracy: f64,
+    pub converged_devices: usize,
+    pub convergence_times_s: Vec<f64>,
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::bandit::{SelectAll, SelectorConfig, SleepingBandit};
+    use crate::coordinator::fleet;
+    use crate::data::Dataset;
+
+    fn small_federation(scheme: Scheme) -> Federation {
+        let cfg = fleet::FleetConfig {
+            n_devices: 8,
+            dataset: Dataset::Movielens,
+            scale: 0.05,
+            scheme,
+            seed: 42,
+            ..fleet::FleetConfig::default()
+        };
+        fleet::build(&cfg)
+    }
+
+    #[test]
+    fn rounds_progress_and_record() {
+        let mut f = small_federation(Scheme::Deal);
+        let stats = f.run(5);
+        assert_eq!(stats.rounds, 5);
+        assert!(stats.total_time_s > 0.0);
+        assert!(stats.total_energy_uah > 0.0);
+        assert_eq!(f.rounds.len(), 5);
+        for r in &f.rounds {
+            assert!(r.selected <= r.available.max(1));
+        }
+    }
+
+    #[test]
+    fn deal_selects_bounded_subset() {
+        let mut f = small_federation(Scheme::Deal);
+        f.run(4);
+        for r in &f.rounds {
+            assert!(r.selected <= 4, "m=4 violated: {}", r.selected);
+        }
+    }
+
+    #[test]
+    fn original_selects_all_available() {
+        let mut f = small_federation(Scheme::Original);
+        f.run(4);
+        for r in &f.rounds {
+            assert_eq!(r.selected, r.available);
+        }
+    }
+
+    #[test]
+    fn original_uses_more_energy_than_deal() {
+        let mut deal = small_federation(Scheme::Deal);
+        let mut orig = small_federation(Scheme::Original);
+        let sd = deal.run(8);
+        let so = orig.run(8);
+        assert!(
+            so.total_energy_uah > sd.total_energy_uah,
+            "orig {} ≤ deal {}",
+            so.total_energy_uah,
+            sd.total_energy_uah
+        );
+    }
+
+    #[test]
+    fn devices_converge_eventually() {
+        let mut f = small_federation(Scheme::NewFl);
+        let stats = f.run(40);
+        assert!(
+            stats.converged_devices > 0,
+            "no device converged in 40 rounds"
+        );
+        for t in &stats.convergence_times_s {
+            assert!(*t > 0.0);
+        }
+    }
+
+    #[test]
+    fn rewards_feed_bandit_and_stay_bounded() {
+        let mut f = small_federation(Scheme::Deal);
+        f.run(10);
+        for r in &f.rounds {
+            assert!(r.reward >= 0.0);
+            assert!(r.reward <= r.selected as f64 + 1e-9);
+        }
+    }
+
+    #[test]
+    fn majority_cut_bounds_round_time_by_ttl() {
+        let mut f = small_federation(Scheme::Deal);
+        f.run(6);
+        for r in &f.rounds {
+            assert!(r.round_time_s <= f.cfg.ttl_s + 1e-9);
+        }
+    }
+
+    #[test]
+    fn custom_selector_wiring() {
+        // build a federation manually with select-all vs bandit
+        let cfg = fleet::FleetConfig {
+            n_devices: 6,
+            dataset: Dataset::Housing,
+            scale: 0.5,
+            scheme: Scheme::Deal,
+            seed: 7,
+            ..fleet::FleetConfig::default()
+        };
+        let devices = fleet::build_devices(&cfg);
+        let f_cfg = FederationConfig { scheme: Scheme::Deal, ..Default::default() };
+        let mut with_all =
+            Federation::new(devices, Box::new(SelectAll), f_cfg.clone());
+        with_all.run(3);
+        let devices2 = fleet::build_devices(&cfg);
+        let bandit = SleepingBandit::new(
+            6,
+            SelectorConfig { m: 2, min_fraction: 0.05, gamma: 10.0 },
+        );
+        let mut with_mab = Federation::new(devices2, Box::new(bandit), f_cfg);
+        with_mab.run(3);
+        for r in &with_mab.rounds {
+            assert!(r.selected <= 2);
+        }
+    }
+}

@@ -1,0 +1,349 @@
+//! Per-device training workload: one of the paper's four models bound to
+//! a local data shard with a train/holdout split and an arrival order.
+//!
+//! The enum (rather than generics) keeps the federation server, fleet and
+//! benches monomorphic — model dispatch happens once per operation, far
+//! off the hot path.
+
+use crate::data::synth::{ClassificationData, RankingData, RegressionData};
+use crate::learn::knn_lsh::Example;
+use crate::learn::naive_bayes::Labeled;
+use crate::learn::tikhonov::Observation;
+use crate::learn::traits::{DecrementalModel, Middleware, OpCost};
+use crate::learn::{KnnLsh, NaiveBayes, Ppr, Tikhonov};
+
+/// Which of the paper's models a device trains.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum ModelKind {
+    Ppr,
+    KnnLsh,
+    NaiveBayes,
+    Tikhonov,
+}
+
+impl ModelKind {
+    pub fn name(&self) -> &'static str {
+        match self {
+            ModelKind::Ppr => "ppr",
+            ModelKind::KnnLsh => "knn-lsh",
+            ModelKind::NaiveBayes => "naive-bayes",
+            ModelKind::Tikhonov => "tikhonov",
+        }
+    }
+
+    pub fn from_name(s: &str) -> Option<Self> {
+        match s.to_ascii_lowercase().as_str() {
+            "ppr" => Some(ModelKind::Ppr),
+            "knn" | "knn-lsh" => Some(ModelKind::KnnLsh),
+            "nb" | "naive-bayes" => Some(ModelKind::NaiveBayes),
+            "tik" | "tikhonov" => Some(ModelKind::Tikhonov),
+            _ => None,
+        }
+    }
+}
+
+/// A model + its local data shard.
+pub enum Workload {
+    Ppr { model: Ppr, train: Vec<Vec<u32>>, holdout: Vec<Vec<u32>> },
+    Knn { model: KnnLsh, train: Vec<Example>, holdout: Vec<Example>, k: usize },
+    Nb { model: NaiveBayes, train: Vec<Labeled>, holdout: Vec<Labeled> },
+    Tik { model: Tikhonov, train: Vec<Observation>, holdout: Vec<Observation> },
+}
+
+/// Fraction of a shard reserved as holdout for accuracy probes.
+const HOLDOUT_FRAC: f64 = 0.2;
+
+fn split_at_frac<T>(mut items: Vec<T>) -> (Vec<T>, Vec<T>) {
+    let n_hold = ((items.len() as f64 * HOLDOUT_FRAC) as usize).max(1).min(items.len() / 2);
+    let hold = items.split_off(items.len() - n_hold);
+    (items, hold)
+}
+
+impl Workload {
+    /// PPR over a slice of user histories.
+    pub fn ppr(items: usize, top_k: usize, histories: Vec<Vec<u32>>) -> Self {
+        let (train, holdout) = split_at_frac(histories);
+        Workload::Ppr { model: Ppr::new(items, top_k), train, holdout }
+    }
+
+    pub fn ppr_from(data: &RankingData, idx: &[usize], top_k: usize) -> Self {
+        let hs: Vec<Vec<u32>> = idx.iter().map(|&i| data.history[i].clone()).collect();
+        Workload::ppr(data.items, top_k, hs)
+    }
+
+    pub fn knn(dim: usize, examples: Vec<Example>, k: usize, seed: u64) -> Self {
+        let (train, holdout) = split_at_frac(examples);
+        Workload::Knn { model: KnnLsh::new(dim, 10, 6, seed), train, holdout, k }
+    }
+
+    pub fn knn_from(data: &ClassificationData, idx: &[usize], k: usize, seed: u64) -> Self {
+        let ex: Vec<Example> = idx
+            .iter()
+            .map(|&i| Example { id: i as u64, x: data.x[i].clone(), y: data.y[i] })
+            .collect();
+        Workload::knn(data.features(), ex, k, seed)
+    }
+
+    pub fn nb(classes: usize, features: usize, rows: Vec<Labeled>) -> Self {
+        let (train, holdout) = split_at_frac(rows);
+        Workload::Nb { model: NaiveBayes::new(classes, features, 1.0), train, holdout }
+    }
+
+    pub fn nb_from(data: &ClassificationData, idx: &[usize]) -> Self {
+        let rows: Vec<Labeled> = idx
+            .iter()
+            .map(|&i| Labeled { x: data.x[i].clone(), y: data.y[i] })
+            .collect();
+        Workload::nb(data.classes, data.features(), rows)
+    }
+
+    pub fn tikhonov(d: usize, lambda: f64, obs: Vec<Observation>) -> Self {
+        let (train, holdout) = split_at_frac(obs);
+        Workload::Tik { model: Tikhonov::new(d, lambda), train, holdout }
+    }
+
+    pub fn tikhonov_from(data: &RegressionData, idx: &[usize], lambda: f64) -> Self {
+        let obs: Vec<Observation> = idx
+            .iter()
+            .map(|&i| Observation {
+                m: data.x[i].iter().map(|&v| v as f64).collect(),
+                r: data.y[i] as f64,
+            })
+            .collect();
+        Workload::tikhonov(data.dims(), lambda, obs)
+    }
+
+    pub fn kind(&self) -> ModelKind {
+        match self {
+            Workload::Ppr { .. } => ModelKind::Ppr,
+            Workload::Knn { .. } => ModelKind::KnnLsh,
+            Workload::Nb { .. } => ModelKind::NaiveBayes,
+            Workload::Tik { .. } => ModelKind::Tikhonov,
+        }
+    }
+
+    /// Total training items in the shard.
+    pub fn len(&self) -> usize {
+        match self {
+            Workload::Ppr { train, .. } => train.len(),
+            Workload::Knn { train, .. } => train.len(),
+            Workload::Nb { train, .. } => train.len(),
+            Workload::Tik { train, .. } => train.len(),
+        }
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    /// Incrementally absorb training item `i` (UPDATE).
+    pub fn update_at(&mut self, i: usize, mw: &mut dyn Middleware) -> OpCost {
+        match self {
+            Workload::Ppr { model, train, .. } => model.update(&train[i], mw),
+            Workload::Knn { model, train, .. } => model.update(&train[i], mw),
+            Workload::Nb { model, train, .. } => model.update(&train[i], mw),
+            Workload::Tik { model, train, .. } => model.update(&train[i], mw),
+        }
+    }
+
+    /// Decrementally remove training item `i` (FORGET).
+    pub fn forget_at(&mut self, i: usize, mw: &mut dyn Middleware) -> OpCost {
+        match self {
+            Workload::Ppr { model, train, .. } => model.forget(&train[i], mw),
+            Workload::Knn { model, train, .. } => model.forget(&train[i], mw),
+            Workload::Nb { model, train, .. } => model.forget(&train[i], mw),
+            Workload::Tik { model, train, .. } => model.forget(&train[i], mw),
+        }
+    }
+
+    /// Cost of a full retrain over `n` items (`Original` billing).
+    pub fn retrain_cost(&self, n: usize) -> OpCost {
+        match self {
+            Workload::Ppr { model, .. } => model.retrain_cost(n),
+            Workload::Knn { model, .. } => model.retrain_cost(n),
+            Workload::Nb { model, .. } => model.retrain_cost(n),
+            Workload::Tik { model, .. } => model.retrain_cost(n),
+        }
+    }
+
+    /// Model-state pages (θ-LRU capacity sizing).
+    pub fn state_pages(&self) -> u64 {
+        match self {
+            Workload::Ppr { model, .. } => model.state_pages(),
+            Workload::Knn { model, .. } => model.state_pages(),
+            Workload::Nb { model, .. } => model.state_pages(),
+            Workload::Tik { model, .. } => model.state_pages(),
+        }
+    }
+
+    /// A low-dimensional fingerprint of the model state; round-over-round
+    /// L2 delta of this drives convergence detection.
+    pub fn signature(&self) -> Vec<f64> {
+        match self {
+            Workload::Ppr { model, .. } => {
+                // top similarity score of the first 32 rows
+                (0..model.items().min(32))
+                    .map(|i| model.sim_row(i).first().map_or(0.0, |&(_, s)| s as f64))
+                    .collect()
+            }
+            Workload::Knn { model, holdout, k, .. } => {
+                // predicted label pattern over (≤16) holdout points
+                holdout
+                    .iter()
+                    .take(16)
+                    .map(|e| model.predict(&e.x, *k).map_or(-1.0, |y| y as f64))
+                    .collect()
+            }
+            Workload::Nb { model, holdout, .. } => holdout
+                .iter()
+                .take(16)
+                .map(|d| model.predict(&d.x).map_or(-1.0, |y| y as f64))
+                .collect(),
+            Workload::Tik { model, .. } => model.weights().to_vec(),
+        }
+    }
+
+    /// Holdout quality in [0,1]: accuracy for classifiers, clipped R² for
+    /// regression, mean top-1 hit-rate for PPR recommendations.
+    pub fn accuracy(&self) -> f64 {
+        match self {
+            Workload::Ppr { model, holdout, .. } => {
+                if holdout.is_empty() {
+                    return 0.0;
+                }
+                // leave-one-out style: does predicting from all-but-one of
+                // a held-out user's items rank the missing item top-10?
+                // (hold out the head item — item ids are sorted and Zipf
+                // popularity is head-heavy, so h[0] carries signal; the
+                // tail item would be a near-singleton and unpredictable)
+                let mut hits = 0usize;
+                let mut total = 0usize;
+                for h in holdout.iter().take(32) {
+                    if h.len() < 2 {
+                        continue;
+                    }
+                    let (probe, rest) = (h[0], &h[1..]);
+                    let recs = model.predict(rest, 10);
+                    total += 1;
+                    if recs.iter().any(|&(it, _)| it == probe) {
+                        hits += 1;
+                    }
+                }
+                if total == 0 { 0.0 } else { hits as f64 / total as f64 }
+            }
+            Workload::Knn { model, holdout, k, .. } => model.accuracy(holdout, *k),
+            Workload::Nb { model, holdout, .. } => model.accuracy(holdout),
+            Workload::Tik { model, holdout, .. } => {
+                model.r_squared(holdout).clamp(0.0, 1.0)
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::synth::{self, Dataset};
+    use crate::learn::NullMiddleware;
+
+    fn ranking() -> RankingData {
+        match synth::generate(Dataset::Movielens, 3, 0.05) {
+            crate::data::Data::Ranking(d) => d,
+            _ => unreachable!(),
+        }
+    }
+
+    #[test]
+    fn ppr_workload_trains_and_scores() {
+        // jester is dense (100 items), giving the leave-one-out hit-rate
+        // probe a real signal even on a small shard
+        let data = match synth::generate(Dataset::Jester, 3, 0.01) {
+            crate::data::Data::Ranking(d) => d,
+            _ => unreachable!(),
+        };
+        let idx: Vec<usize> = (0..data.users()).collect();
+        let mut w = Workload::ppr_from(&data, &idx, 10);
+        let mut mw = NullMiddleware;
+        for i in 0..w.len() {
+            w.update_at(i, &mut mw);
+        }
+        assert_eq!(w.kind(), ModelKind::Ppr);
+        let acc = w.accuracy();
+        assert!(acc > 0.2, "PPR hit-rate {acc} after training");
+        assert!(!w.signature().is_empty());
+    }
+
+    #[test]
+    fn tik_workload_converges_signature() {
+        let data = match synth::generate(Dataset::Housing, 4, 1.0) {
+            crate::data::Data::Regression(d) => d,
+            _ => unreachable!(),
+        };
+        let idx: Vec<usize> = (0..200).collect();
+        let mut w = Workload::tikhonov_from(&data, &idx, 1.0);
+        let mut mw = NullMiddleware;
+        for i in 0..w.len() {
+            w.update_at(i, &mut mw);
+        }
+        let s1 = w.signature();
+        // more of the same data should barely move the weights
+        let before = w.accuracy();
+        assert!(before > 0.6, "R² {before}");
+        assert_eq!(s1.len(), 13);
+    }
+
+    #[test]
+    fn nb_and_knn_workloads_classify() {
+        let data = match synth::generate(Dataset::Mushrooms, 5, 0.05) {
+            crate::data::Data::Classification(d) => d,
+            _ => unreachable!(),
+        };
+        let idx: Vec<usize> = (0..data.rows()).collect();
+        let mut mw = NullMiddleware;
+
+        let mut nb = Workload::nb_from(&data, &idx);
+        for i in 0..nb.len() {
+            nb.update_at(i, &mut mw);
+        }
+        assert!(nb.accuracy() > 0.8, "NB acc {}", nb.accuracy());
+
+        let mut knn = Workload::knn_from(&data, &idx, 5, 7);
+        for i in 0..knn.len() {
+            knn.update_at(i, &mut mw);
+        }
+        assert!(knn.accuracy() > 0.7, "kNN acc {}", knn.accuracy());
+    }
+
+    #[test]
+    fn forget_reverses_update_via_workload() {
+        let data = ranking();
+        let idx: Vec<usize> = (0..40).collect();
+        let mut w = Workload::ppr_from(&data, &idx, 10);
+        let mut mw = NullMiddleware;
+        for i in 0..w.len() {
+            w.update_at(i, &mut mw);
+        }
+        let sig = w.signature();
+        w.update_at(0, &mut mw);
+        w.forget_at(0, &mut mw);
+        assert_eq!(w.signature(), sig);
+    }
+
+    #[test]
+    fn model_kind_names_roundtrip() {
+        for k in [ModelKind::Ppr, ModelKind::KnnLsh, ModelKind::NaiveBayes, ModelKind::Tikhonov] {
+            assert_eq!(ModelKind::from_name(k.name()), Some(k));
+        }
+    }
+
+    #[test]
+    fn retrain_cost_exceeds_update_cost() {
+        let data = ranking();
+        let idx: Vec<usize> = (0..40).collect();
+        let mut w = Workload::ppr_from(&data, &idx, 10);
+        let mut mw = NullMiddleware;
+        let up = w.update_at(0, &mut mw);
+        let re = w.retrain_cost(1000);
+        assert!(re.giga_ops > up.giga_ops);
+    }
+}

@@ -1,0 +1,8 @@
+//! Synthetic data substrates: the paper's benchmark datasets regenerated
+//! at matched shape (synth) and the Retailrocket-style event stream for
+//! the Fig. 1 privacy-leak demonstration (events).
+
+pub mod events;
+pub mod synth;
+
+pub use synth::{generate, Data, Dataset, ALL_DATASETS};

@@ -1,0 +1,461 @@
+//! Synthetic dataset generators matched to the paper's eight benchmark
+//! datasets (plus Cifar-10), per the DESIGN.md §2 substitution rule.
+//!
+//! The paper's datasets are not redistributable/downloadable offline, so
+//! each generator reproduces the *published shape* of its dataset —
+//! cardinality, dimensionality, sparsity/density, class balance — which
+//! is what drives every scheme-vs-scheme comparison in the evaluation
+//! (training work scales with rows·dims; PPR cost with interactions²).
+//! A `scale` parameter shrinks row counts proportionally for quick runs;
+//! all benches print the scale they used.
+
+use crate::util::rng::{Rng, Zipf};
+
+/// The paper's benchmark datasets (§IV-A "Models and Datasets").
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum Dataset {
+    /// MovieLens-100K ratings (PPR): 943 users × 1682 items, 100k events.
+    Movielens,
+    /// Jester joke ratings (PPR): dense; 24.9k users × 100 items (scaled).
+    Jester,
+    /// UCI mushrooms (kNN/MNB): 8124 × 112 binary, 2 classes.
+    Mushrooms,
+    /// UCI phishing websites (kNN/MNB): 11055 × 68, 2 classes.
+    Phishing,
+    /// UCI covtype (MNB): 581012 × 54, 7 classes.
+    Covtype,
+    /// Boston housing (Tikhonov): 506 × 13.
+    Housing,
+    /// California housing / cadata (Tikhonov): 20640 × 8.
+    Cadata,
+    /// YearPredictionMSD (Tikhonov): 515345 × 90.
+    YearPredictionMSD,
+    /// Cifar-10 (image classification; NewFL freshness study): 60000 × 3072.
+    Cifar10,
+}
+
+pub const ALL_DATASETS: [Dataset; 9] = [
+    Dataset::Movielens,
+    Dataset::Jester,
+    Dataset::Mushrooms,
+    Dataset::Phishing,
+    Dataset::Covtype,
+    Dataset::Housing,
+    Dataset::Cadata,
+    Dataset::YearPredictionMSD,
+    Dataset::Cifar10,
+];
+
+/// Task family a dataset belongs to (which paper model trains on it).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Task {
+    Ranking,
+    Classification,
+    Regression,
+}
+
+/// Published shape of a dataset.
+#[derive(Debug, Clone, Copy)]
+pub struct Shape {
+    pub rows: usize,
+    /// items (ranking) or features (classification/regression)
+    pub dims: usize,
+    pub classes: usize,
+    /// interaction density for ranking sets
+    pub density: f64,
+    pub task: Task,
+}
+
+impl Dataset {
+    pub fn name(&self) -> &'static str {
+        match self {
+            Dataset::Movielens => "movielens",
+            Dataset::Jester => "jester",
+            Dataset::Mushrooms => "mushrooms",
+            Dataset::Phishing => "phishing",
+            Dataset::Covtype => "covtype",
+            Dataset::Housing => "housing",
+            Dataset::Cadata => "cadata",
+            Dataset::YearPredictionMSD => "YearPredictionMSD",
+            Dataset::Cifar10 => "cifar10",
+        }
+    }
+
+    pub fn from_name(name: &str) -> Option<Dataset> {
+        ALL_DATASETS
+            .into_iter()
+            .find(|d| d.name().eq_ignore_ascii_case(name))
+    }
+
+    /// Published shape (see enum docs for sources).
+    pub fn shape(&self) -> Shape {
+        use Task::*;
+        match self {
+            Dataset::Movielens => Shape { rows: 943, dims: 1682, classes: 0, density: 0.063, task: Ranking },
+            Dataset::Jester => Shape { rows: 24_983, dims: 100, classes: 0, density: 0.56, task: Ranking },
+            Dataset::Mushrooms => Shape { rows: 8_124, dims: 112, classes: 2, density: 0.0, task: Classification },
+            Dataset::Phishing => Shape { rows: 11_055, dims: 68, classes: 2, density: 0.0, task: Classification },
+            Dataset::Covtype => Shape { rows: 581_012, dims: 54, classes: 7, density: 0.0, task: Classification },
+            Dataset::Housing => Shape { rows: 506, dims: 13, classes: 0, density: 0.0, task: Regression },
+            Dataset::Cadata => Shape { rows: 20_640, dims: 8, classes: 0, density: 0.0, task: Regression },
+            Dataset::YearPredictionMSD => Shape { rows: 515_345, dims: 90, classes: 0, density: 0.0, task: Regression },
+            Dataset::Cifar10 => Shape { rows: 60_000, dims: 3_072, classes: 10, density: 0.0, task: Classification },
+        }
+    }
+}
+
+/// User-item interaction data (ranking task: movielens/jester).
+#[derive(Debug, Clone)]
+pub struct RankingData {
+    pub items: usize,
+    /// Per user: sorted, deduped item ids.
+    pub history: Vec<Vec<u32>>,
+}
+
+impl RankingData {
+    pub fn users(&self) -> usize {
+        self.history.len()
+    }
+
+    pub fn interactions(&self) -> usize {
+        self.history.iter().map(|h| h.len()).sum()
+    }
+}
+
+/// Feature/label data (classification task).
+#[derive(Debug, Clone)]
+pub struct ClassificationData {
+    pub x: Vec<Vec<f32>>,
+    pub y: Vec<u32>,
+    pub classes: usize,
+}
+
+impl ClassificationData {
+    pub fn rows(&self) -> usize {
+        self.x.len()
+    }
+
+    pub fn features(&self) -> usize {
+        self.x.first().map_or(0, |r| r.len())
+    }
+}
+
+/// Observation/target data (regression task).
+#[derive(Debug, Clone)]
+pub struct RegressionData {
+    pub x: Vec<Vec<f32>>,
+    pub y: Vec<f32>,
+    /// Ground-truth weights used by the generator (for accuracy oracles).
+    pub true_w: Vec<f32>,
+    pub noise_std: f32,
+}
+
+impl RegressionData {
+    pub fn rows(&self) -> usize {
+        self.x.len()
+    }
+
+    pub fn dims(&self) -> usize {
+        self.true_w.len()
+    }
+}
+
+/// Any generated dataset.
+#[derive(Debug, Clone)]
+pub enum Data {
+    Ranking(RankingData),
+    Classification(ClassificationData),
+    Regression(RegressionData),
+}
+
+impl Data {
+    pub fn rows(&self) -> usize {
+        match self {
+            Data::Ranking(d) => d.users(),
+            Data::Classification(d) => d.rows(),
+            Data::Regression(d) => d.rows(),
+        }
+    }
+}
+
+/// Generate a dataset at `scale` ∈ (0, 1] of its published row count.
+pub fn generate(ds: Dataset, seed: u64, scale: f64) -> Data {
+    let shape = ds.shape();
+    let rows = ((shape.rows as f64 * scale).round() as usize).max(8);
+    let mut rng = Rng::new(seed ^ (ds.name().len() as u64) << 32);
+    match shape.task {
+        Task::Ranking => Data::Ranking(gen_ranking(&mut rng, rows, shape.dims, shape.density)),
+        Task::Classification => {
+            Data::Classification(gen_classification(&mut rng, rows, shape.dims, shape.classes))
+        }
+        Task::Regression => Data::Regression(gen_regression(&mut rng, rows, shape.dims)),
+    }
+}
+
+/// Zipf-popular items, log-normal-ish user activity — the empirical shape
+/// of both MovieLens and Retailrocket event logs.
+pub fn gen_ranking(rng: &mut Rng, users: usize, items: usize, density: f64) -> RankingData {
+    let zipf = Zipf::new(items, 0.9);
+    let mean_per_user = (density * items as f64).max(1.0);
+    let mut history = Vec::with_capacity(users);
+    for _ in 0..users {
+        // heavy-tailed per-user activity around the target density
+        let n = (rng.exponential(1.0 / mean_per_user).round() as usize)
+            .clamp(1, items);
+        let mut h: Vec<u32> = (0..n * 2)
+            .map(|_| zipf.sample(rng) as u32)
+            .collect();
+        h.sort_unstable();
+        h.dedup();
+        h.truncate(n);
+        history.push(h);
+    }
+    RankingData { items, history }
+}
+
+/// Per-class Poisson count profiles (multinomial-NB-realistic), which also
+/// separate well under kNN: class c concentrates mass on a class-specific
+/// feature band.
+pub fn gen_classification(
+    rng: &mut Rng,
+    rows: usize,
+    features: usize,
+    classes: usize,
+) -> ClassificationData {
+    // class profiles: smooth random intensity + a boosted band
+    let mut profiles = Vec::with_capacity(classes);
+    for c in 0..classes {
+        let band = features * c / classes..features * (c + 1) / classes;
+        let profile: Vec<f64> = (0..features)
+            .map(|f| {
+                let base = 0.3 + 0.4 * rng.f64();
+                if band.contains(&f) {
+                    base + 3.0
+                } else {
+                    base
+                }
+            })
+            .collect();
+        profiles.push(profile);
+    }
+    let mut x = Vec::with_capacity(rows);
+    let mut y = Vec::with_capacity(rows);
+    for _ in 0..rows {
+        let c = rng.below(classes);
+        let row: Vec<f32> = profiles[c]
+            .iter()
+            .map(|&lam| rng.poisson(lam) as f32)
+            .collect();
+        x.push(row);
+        y.push(c as u32);
+    }
+    ClassificationData { x, y, classes }
+}
+
+/// Linear model with Gaussian noise (R² ≈ 0.9 at the default SNR), feature
+/// scales varied per column like real tabular data.
+pub fn gen_regression(rng: &mut Rng, rows: usize, dims: usize) -> RegressionData {
+    let true_w: Vec<f32> = (0..dims).map(|_| rng.normal_ms(0.0, 1.0) as f32).collect();
+    let col_scale: Vec<f64> = (0..dims).map(|_| 0.5 + 2.0 * rng.f64()).collect();
+    let signal_var: f64 = true_w
+        .iter()
+        .zip(&col_scale)
+        .map(|(w, s)| (*w as f64 * s).powi(2))
+        .sum();
+    let noise_std = (signal_var / 9.0).sqrt() as f32; // SNR 9 → R² ≈ 0.9
+    let mut x = Vec::with_capacity(rows);
+    let mut y = Vec::with_capacity(rows);
+    for _ in 0..rows {
+        let row: Vec<f32> = col_scale
+            .iter()
+            .map(|&s| rng.normal_ms(0.0, s) as f32)
+            .collect();
+        let target: f32 = row
+            .iter()
+            .zip(&true_w)
+            .map(|(a, b)| a * b)
+            .sum::<f32>()
+            + rng.normal_ms(0.0, noise_std as f64) as f32;
+        x.push(row);
+        y.push(target);
+    }
+    RegressionData { x, y, true_w, noise_std }
+}
+
+/// Split rows round-robin into `n` non-overlapping device shards
+/// (non-IID by construction for ranking data since users differ).
+pub fn shard_indices(rows: usize, n: usize) -> Vec<Vec<usize>> {
+    let mut shards = vec![Vec::new(); n];
+    for i in 0..rows {
+        shards[i % n].push(i);
+    }
+    shards
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn shapes_match_published_cardinalities() {
+        assert_eq!(Dataset::Movielens.shape().rows, 943);
+        assert_eq!(Dataset::Movielens.shape().dims, 1682);
+        assert_eq!(Dataset::Covtype.shape().classes, 7);
+        assert_eq!(Dataset::Housing.shape().dims, 13);
+        assert_eq!(Dataset::YearPredictionMSD.shape().dims, 90);
+    }
+
+    #[test]
+    fn name_roundtrip() {
+        for d in ALL_DATASETS {
+            assert_eq!(Dataset::from_name(d.name()), Some(d));
+        }
+        assert_eq!(Dataset::from_name("nope"), None);
+    }
+
+    #[test]
+    fn generate_is_deterministic() {
+        let a = generate(Dataset::Housing, 7, 1.0);
+        let b = generate(Dataset::Housing, 7, 1.0);
+        match (a, b) {
+            (Data::Regression(x), Data::Regression(y)) => {
+                assert_eq!(x.x, y.x);
+                assert_eq!(x.y, y.y);
+            }
+            _ => panic!("wrong task"),
+        }
+    }
+
+    #[test]
+    fn seeds_differ() {
+        let a = generate(Dataset::Housing, 1, 1.0);
+        let b = generate(Dataset::Housing, 2, 1.0);
+        match (a, b) {
+            (Data::Regression(x), Data::Regression(y)) => assert_ne!(x.x, y.x),
+            _ => panic!(),
+        }
+    }
+
+    #[test]
+    fn scale_shrinks_rows() {
+        let d = generate(Dataset::Cadata, 3, 0.1);
+        assert_eq!(d.rows(), 2064);
+    }
+
+    #[test]
+    fn ranking_history_sorted_dedup_in_range() {
+        let d = match generate(Dataset::Movielens, 5, 0.2) {
+            Data::Ranking(d) => d,
+            _ => panic!(),
+        };
+        assert!(d.interactions() > 0);
+        for h in &d.history {
+            assert!(!h.is_empty());
+            for w in h.windows(2) {
+                assert!(w[0] < w[1], "sorted+dedup violated");
+            }
+            assert!(*h.last().unwrap() < d.items as u32);
+        }
+    }
+
+    #[test]
+    fn ranking_popularity_is_head_heavy() {
+        let d = match generate(Dataset::Movielens, 5, 0.5) {
+            Data::Ranking(d) => d,
+            _ => panic!(),
+        };
+        let mut counts = vec![0usize; d.items];
+        for h in &d.history {
+            for &i in h {
+                counts[i as usize] += 1;
+            }
+        }
+        let head: usize = counts[..d.items / 10].iter().sum();
+        let tail: usize = counts[d.items * 9 / 10..].iter().sum();
+        assert!(head > tail * 3, "head={head} tail={tail}");
+    }
+
+    #[test]
+    fn classification_labels_in_range_and_balanced() {
+        let d = match generate(Dataset::Mushrooms, 11, 0.5) {
+            Data::Classification(d) => d,
+            _ => panic!(),
+        };
+        let mut counts = vec![0usize; d.classes];
+        for &y in &d.y {
+            counts[y as usize] += 1;
+        }
+        for &c in &counts {
+            assert!(c > d.rows() / (d.classes * 4), "unbalanced: {counts:?}");
+        }
+        assert!(d.x.iter().all(|r| r.iter().all(|&v| v >= 0.0)));
+    }
+
+    #[test]
+    fn classification_classes_are_separable() {
+        // nearest-centroid accuracy must be high given the band profiles
+        let d = match generate(Dataset::Phishing, 13, 0.05) {
+            Data::Classification(d) => d,
+            _ => panic!(),
+        };
+        let f = d.features();
+        let mut centroids = vec![vec![0f64; f]; d.classes];
+        let mut n = vec![0f64; d.classes];
+        for (row, &y) in d.x.iter().zip(&d.y) {
+            n[y as usize] += 1.0;
+            for (j, &v) in row.iter().enumerate() {
+                centroids[y as usize][j] += v as f64;
+            }
+        }
+        for (c, cnt) in centroids.iter_mut().zip(&n) {
+            for v in c {
+                *v /= cnt.max(1.0);
+            }
+        }
+        let correct = d
+            .x
+            .iter()
+            .zip(&d.y)
+            .filter(|(row, &y)| {
+                let best = (0..d.classes)
+                    .min_by(|&a, &b| {
+                        let da: f64 = row.iter().zip(&centroids[a]).map(|(&v, &c)| (v as f64 - c).powi(2)).sum();
+                        let db: f64 = row.iter().zip(&centroids[b]).map(|(&v, &c)| (v as f64 - c).powi(2)).sum();
+                        da.partial_cmp(&db).unwrap()
+                    })
+                    .unwrap();
+                best == y as usize
+            })
+            .count();
+        let acc = correct as f64 / d.rows() as f64;
+        assert!(acc > 0.9, "nearest-centroid acc {acc}");
+    }
+
+    #[test]
+    fn regression_snr_gives_good_linear_fit() {
+        let d = match generate(Dataset::Cadata, 17, 0.02) {
+            Data::Regression(d) => d,
+            _ => panic!(),
+        };
+        // residual vs true weights should be ~noise-level
+        let mut sse = 0.0f64;
+        let mut sst = 0.0f64;
+        let mean = d.y.iter().map(|&v| v as f64).sum::<f64>() / d.rows() as f64;
+        for (row, &y) in d.x.iter().zip(&d.y) {
+            let pred: f32 = row.iter().zip(&d.true_w).map(|(a, b)| a * b).sum();
+            sse += (y as f64 - pred as f64).powi(2);
+            sst += (y as f64 - mean).powi(2);
+        }
+        let r2 = 1.0 - sse / sst;
+        assert!(r2 > 0.8, "R² = {r2}");
+    }
+
+    #[test]
+    fn shard_indices_partition() {
+        let shards = shard_indices(10, 3);
+        assert_eq!(shards.len(), 3);
+        let mut all: Vec<usize> = shards.concat();
+        all.sort_unstable();
+        assert_eq!(all, (0..10).collect::<Vec<_>>());
+    }
+}

@@ -1,0 +1,315 @@
+//! k-Nearest-Neighbors with Locality-Sensitive Hashing — the paper's
+//! Fig. 3(b)/6(b) classifier ("k-Nearest Neighbor algorithm with Locality
+//! Sensitive Hashing" on mushrooms/phishing).
+//!
+//! Random-hyperplane LSH: each of `tables` hash tables signs the data
+//! point against `bits` random hyperplanes to form a bucket key; queries
+//! probe their bucket in every table, gather candidates, and rank the
+//! union by exact distance. Insert/remove are O(tables) bucket edits —
+//! naturally incremental *and* decremental, which is why the paper uses
+//! it as a DEAL case.
+
+use std::collections::HashMap;
+
+use super::traits::{DecrementalModel, Middleware, OpCost};
+use crate::util::rng::Rng;
+
+/// One stored, labeled example.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Example {
+    pub id: u64,
+    pub x: Vec<f32>,
+    pub y: u32,
+}
+
+/// The kNN-LSH index.
+#[derive(Debug, Clone)]
+pub struct KnnLsh {
+    dim: usize,
+    bits: usize,
+    /// per table: hyperplanes (bits × dim) and buckets (key -> ids)
+    tables: Vec<LshTable>,
+    store: HashMap<u64, (Vec<f32>, u32)>,
+}
+
+#[derive(Debug, Clone)]
+struct LshTable {
+    planes: Vec<Vec<f32>>,
+    buckets: HashMap<u64, Vec<u64>>,
+}
+
+impl LshTable {
+    fn key(&self, x: &[f32]) -> u64 {
+        let mut k = 0u64;
+        for (b, plane) in self.planes.iter().enumerate() {
+            let dot: f32 = plane.iter().zip(x).map(|(p, v)| p * v).sum();
+            if dot >= 0.0 {
+                k |= 1 << b;
+            }
+        }
+        k
+    }
+}
+
+impl KnnLsh {
+    pub fn new(dim: usize, bits: usize, n_tables: usize, seed: u64) -> Self {
+        assert!(bits <= 63);
+        let mut rng = Rng::new(seed);
+        let tables = (0..n_tables)
+            .map(|_| LshTable {
+                planes: (0..bits)
+                    .map(|_| (0..dim).map(|_| rng.normal() as f32).collect())
+                    .collect(),
+                buckets: HashMap::new(),
+            })
+            .collect();
+        KnnLsh { dim, bits, tables, store: HashMap::new() }
+    }
+
+    pub fn len(&self) -> usize {
+        self.store.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.store.is_empty()
+    }
+
+    pub fn dim(&self) -> usize {
+        self.dim
+    }
+
+    /// Candidate ids across all tables for a query (deduped).
+    fn candidates(&self, x: &[f32]) -> Vec<u64> {
+        let mut out = Vec::new();
+        for t in &self.tables {
+            if let Some(ids) = t.buckets.get(&t.key(x)) {
+                out.extend_from_slice(ids);
+            }
+        }
+        out.sort_unstable();
+        out.dedup();
+        out
+    }
+
+    /// k nearest stored examples (id, sqdist), exact-ranked over the LSH
+    /// candidate set; falls back to a linear scan when the buckets are
+    /// empty (tiny stores).
+    pub fn query(&self, x: &[f32], k: usize) -> Vec<(u64, f32)> {
+        assert_eq!(x.len(), self.dim);
+        let mut cands = self.candidates(x);
+        if cands.len() < k {
+            cands = self.store.keys().copied().collect();
+        }
+        let mut scored: Vec<(u64, f32)> = cands
+            .into_iter()
+            .filter_map(|id| {
+                self.store.get(&id).map(|(sx, _)| {
+                    let d2: f32 = sx.iter().zip(x).map(|(a, b)| (a - b) * (a - b)).sum();
+                    (id, d2)
+                })
+            })
+            .collect();
+        scored.sort_by(|a, b| a.1.partial_cmp(&b.1).unwrap());
+        scored.truncate(k);
+        scored
+    }
+
+    /// Majority-vote classification over the k nearest.
+    pub fn predict(&self, x: &[f32], k: usize) -> Option<u32> {
+        let nn = self.query(x, k);
+        if nn.is_empty() {
+            return None;
+        }
+        let mut votes: HashMap<u32, usize> = HashMap::new();
+        for (id, _) in nn {
+            let y = self.store[&id].1;
+            *votes.entry(y).or_insert(0) += 1;
+        }
+        votes.into_iter().max_by_key(|&(_, n)| n).map(|(y, _)| y)
+    }
+
+    /// Holdout accuracy (Fig. 5-style metric for the classifiers).
+    pub fn accuracy(&self, test: &[Example], k: usize) -> f64 {
+        if test.is_empty() {
+            return 0.0;
+        }
+        let correct = test
+            .iter()
+            .filter(|e| self.predict(&e.x, k) == Some(e.y))
+            .count();
+        correct as f64 / test.len() as f64
+    }
+}
+
+impl DecrementalModel for KnnLsh {
+    type Datum = Example;
+
+    fn update(&mut self, e: &Example, mw: &mut dyn Middleware) -> OpCost {
+        assert_eq!(e.x.len(), self.dim);
+        for t in &mut self.tables {
+            let key = t.key(&e.x);
+            t.buckets.entry(key).or_default().push(e.id);
+        }
+        self.store.insert(e.id, (e.x.clone(), e.y));
+        mw.cpu_freq(1);
+        let ops = (self.tables.len() * self.bits * self.dim) as f64;
+        let pages = (self.tables.len() as u64) + 1;
+        let _ = mw.access_pages(e.id, pages);
+        OpCost::new(ops, pages)
+    }
+
+    fn forget(&mut self, e: &Example, mw: &mut dyn Middleware) -> OpCost {
+        mw.cpu_freq(-1);
+        if let Some((x, _)) = self.store.remove(&e.id) {
+            for t in &mut self.tables {
+                let key = t.key(&x);
+                if let Some(ids) = t.buckets.get_mut(&key) {
+                    ids.retain(|&id| id != e.id);
+                    if ids.is_empty() {
+                        t.buckets.remove(&key);
+                    }
+                }
+            }
+        }
+        mw.cpu_freq(0);
+        let ops = (self.tables.len() * self.bits * self.dim) as f64;
+        let pages = (self.tables.len() as u64) + 1;
+        let _ = mw.access_pages(e.id, pages);
+        OpCost::new(ops, pages)
+    }
+
+    fn retrain_cost(&self, n: usize) -> OpCost {
+        let ops = (n * self.tables.len() * self.bits * self.dim) as f64;
+        OpCost::new(ops, (n as u64 * self.dim as u64 * 4).div_ceil(4096))
+    }
+
+    fn state_pages(&self) -> u64 {
+        (self.store.len() as u64 * (self.dim as u64 * 4 + 16)).div_ceil(4096) + 1
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::learn::traits::NullMiddleware;
+    use crate::util::rng::Rng;
+
+    /// Two well-separated Gaussian blobs.
+    fn blobs(seed: u64, n: usize, dim: usize) -> Vec<Example> {
+        let mut rng = Rng::new(seed);
+        (0..n)
+            .map(|i| {
+                let y = (i % 2) as u32;
+                let center = if y == 0 { -3.0 } else { 3.0 };
+                let x = (0..dim).map(|_| rng.normal_ms(center, 1.0) as f32).collect();
+                Example { id: i as u64, x, y }
+            })
+            .collect()
+    }
+
+    fn index_of(data: &[Example]) -> KnnLsh {
+        let mut idx = KnnLsh::new(data[0].x.len(), 8, 6, 42);
+        let mut mw = NullMiddleware;
+        for e in data {
+            idx.update(e, &mut mw);
+        }
+        idx
+    }
+
+    #[test]
+    fn query_finds_self() {
+        let data = blobs(1, 50, 8);
+        let idx = index_of(&data);
+        let nn = idx.query(&data[7].x, 1);
+        assert_eq!(nn[0].0, 7);
+        assert!(nn[0].1 < 1e-9);
+    }
+
+    #[test]
+    fn query_results_sorted_by_distance() {
+        let data = blobs(2, 80, 8);
+        let idx = index_of(&data);
+        let nn = idx.query(&data[0].x, 10);
+        for w in nn.windows(2) {
+            assert!(w[0].1 <= w[1].1);
+        }
+    }
+
+    #[test]
+    fn classifies_separated_blobs() {
+        let data = blobs(3, 200, 8);
+        let (train, test) = data.split_at(150);
+        let idx = index_of(train);
+        assert!(idx.accuracy(test, 5) > 0.95);
+    }
+
+    #[test]
+    fn forget_removes_from_results() {
+        let data = blobs(4, 40, 6);
+        let mut idx = index_of(&data);
+        let mut mw = NullMiddleware;
+        idx.forget(&data[3], &mut mw);
+        assert_eq!(idx.len(), 39);
+        let nn = idx.query(&data[3].x, 40);
+        assert!(nn.iter().all(|&(id, _)| id != 3), "forgotten id surfaced");
+    }
+
+    #[test]
+    fn update_forget_roundtrip_empties() {
+        let data = blobs(5, 20, 4);
+        let mut idx = KnnLsh::new(4, 8, 4, 7);
+        let mut mw = NullMiddleware;
+        for e in &data {
+            idx.update(e, &mut mw);
+        }
+        for e in &data {
+            idx.forget(e, &mut mw);
+        }
+        assert!(idx.is_empty());
+        for t in &idx.tables {
+            assert!(t.buckets.is_empty(), "leaked bucket entries");
+        }
+    }
+
+    #[test]
+    fn lsh_candidates_much_smaller_than_store() {
+        // sanity that LSH actually buckets (not one giant bucket)
+        let data = blobs(6, 400, 16);
+        let idx = index_of(&data);
+        let c = idx.candidates(&data[0].x);
+        assert!(c.len() < 400, "no bucketing happened");
+        assert!(!c.is_empty());
+    }
+
+    #[test]
+    fn predict_none_on_empty() {
+        let idx = KnnLsh::new(4, 8, 4, 7);
+        assert_eq!(idx.predict(&[0.0; 4], 3), None);
+    }
+
+    #[test]
+    fn property_forget_is_inverse_of_update() {
+        crate::util::prop::check(0x4E4, 10, |g| {
+            let dim = g.usize_in(2, 12);
+            let n = g.usize_in(5, 30);
+            let data = blobs(g.case as u64 + 10, n, dim);
+            let mut idx = KnnLsh::new(dim, 6, 4, 11);
+            let mut mw = NullMiddleware;
+            for e in &data {
+                idx.update(e, &mut mw);
+            }
+            let probe = g.usize_in(0, n - 1);
+            let before = idx.query(&data[probe].x, 3);
+            let extra = Example {
+                id: 999_999,
+                x: g.vec_f32(dim, -5.0, 5.0),
+                y: 0,
+            };
+            idx.update(&extra, &mut mw);
+            idx.forget(&extra, &mut mw);
+            let after = idx.query(&data[probe].x, 3);
+            crate::prop_assert!(before == after, "query changed after roundtrip");
+            Ok(())
+        });
+    }
+}

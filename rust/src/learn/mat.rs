@@ -1,0 +1,227 @@
+//! Minimal dense f64 matrix for the learner engines (substrate).
+//!
+//! Row-major storage, just the operations the decremental learners need:
+//! matvec, transpose-matvec, outer-product accumulate, gram. Deliberately
+//! not a general linear-algebra crate — the batch-sized math runs through
+//! the AOT artifacts (runtime::engine); this type backs the small
+//! per-event updates where d ≤ ~100.
+
+/// Dense row-major matrix.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Mat {
+    rows: usize,
+    cols: usize,
+    data: Vec<f64>,
+}
+
+impl Mat {
+    pub fn zeros(rows: usize, cols: usize) -> Self {
+        Mat { rows, cols, data: vec![0.0; rows * cols] }
+    }
+
+    pub fn eye(n: usize) -> Self {
+        let mut m = Mat::zeros(n, n);
+        for i in 0..n {
+            m[(i, i)] = 1.0;
+        }
+        m
+    }
+
+    pub fn from_rows(rows_in: &[Vec<f64>]) -> Self {
+        let rows = rows_in.len();
+        let cols = rows_in.first().map_or(0, |r| r.len());
+        let mut data = Vec::with_capacity(rows * cols);
+        for r in rows_in {
+            assert_eq!(r.len(), cols, "ragged rows");
+            data.extend_from_slice(r);
+        }
+        Mat { rows, cols, data }
+    }
+
+    pub fn rows(&self) -> usize {
+        self.rows
+    }
+
+    pub fn cols(&self) -> usize {
+        self.cols
+    }
+
+    pub fn row(&self, i: usize) -> &[f64] {
+        &self.data[i * self.cols..(i + 1) * self.cols]
+    }
+
+    pub fn row_mut(&mut self, i: usize) -> &mut [f64] {
+        &mut self.data[i * self.cols..(i + 1) * self.cols]
+    }
+
+    /// y = A x
+    pub fn matvec(&self, x: &[f64]) -> Vec<f64> {
+        assert_eq!(x.len(), self.cols);
+        (0..self.rows)
+            .map(|i| dot(self.row(i), x))
+            .collect()
+    }
+
+    /// y = Aᵀ x
+    pub fn tmatvec(&self, x: &[f64]) -> Vec<f64> {
+        assert_eq!(x.len(), self.rows);
+        let mut y = vec![0.0; self.cols];
+        for i in 0..self.rows {
+            let xi = x[i];
+            for (yj, &aij) in y.iter_mut().zip(self.row(i)) {
+                *yj += xi * aij;
+            }
+        }
+        y
+    }
+
+    /// A += alpha · u vᵀ
+    pub fn rank1_acc(&mut self, alpha: f64, u: &[f64], v: &[f64]) {
+        assert_eq!(u.len(), self.rows);
+        assert_eq!(v.len(), self.cols);
+        for i in 0..self.rows {
+            let s = alpha * u[i];
+            for (aij, &vj) in self.row_mut(i).iter_mut().zip(v) {
+                *aij += s * vj;
+            }
+        }
+    }
+
+    /// C = A B
+    pub fn matmul(&self, b: &Mat) -> Mat {
+        assert_eq!(self.cols, b.rows);
+        let mut c = Mat::zeros(self.rows, b.cols);
+        for i in 0..self.rows {
+            for k in 0..self.cols {
+                let aik = self[(i, k)];
+                if aik == 0.0 {
+                    continue;
+                }
+                let brow = b.row(k);
+                for (cij, &bkj) in c.row_mut(i).iter_mut().zip(brow) {
+                    *cij += aik * bkj;
+                }
+            }
+        }
+        c
+    }
+
+    /// Aᵀ A + lambda I (regularized gram matrix of Alg. 2).
+    pub fn gram_reg(&self, lambda: f64) -> Mat {
+        let mut g = Mat::zeros(self.cols, self.cols);
+        for i in 0..self.rows {
+            let r = self.row(i);
+            for a in 0..self.cols {
+                let ra = r[a];
+                if ra == 0.0 {
+                    continue;
+                }
+                for b in 0..self.cols {
+                    g[(a, b)] += ra * r[b];
+                }
+            }
+        }
+        for k in 0..self.cols {
+            g[(k, k)] += lambda;
+        }
+        g
+    }
+
+    pub fn transpose(&self) -> Mat {
+        let mut t = Mat::zeros(self.cols, self.rows);
+        for i in 0..self.rows {
+            for j in 0..self.cols {
+                t[(j, i)] = self[(i, j)];
+            }
+        }
+        t
+    }
+
+    /// max |A - B| entry.
+    pub fn max_abs_diff(&self, other: &Mat) -> f64 {
+        assert_eq!((self.rows, self.cols), (other.rows, other.cols));
+        self.data
+            .iter()
+            .zip(&other.data)
+            .map(|(a, b)| (a - b).abs())
+            .fold(0.0, f64::max)
+    }
+}
+
+impl std::ops::Index<(usize, usize)> for Mat {
+    type Output = f64;
+    #[inline]
+    fn index(&self, (i, j): (usize, usize)) -> &f64 {
+        &self.data[i * self.cols + j]
+    }
+}
+
+impl std::ops::IndexMut<(usize, usize)> for Mat {
+    #[inline]
+    fn index_mut(&mut self, (i, j): (usize, usize)) -> &mut f64 {
+        &mut self.data[i * self.cols + j]
+    }
+}
+
+/// Dot product.
+#[inline]
+pub fn dot(a: &[f64], b: &[f64]) -> f64 {
+    debug_assert_eq!(a.len(), b.len());
+    a.iter().zip(b).map(|(x, y)| x * y).sum()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn index_and_eye() {
+        let m = Mat::eye(3);
+        assert_eq!(m[(0, 0)], 1.0);
+        assert_eq!(m[(0, 1)], 0.0);
+    }
+
+    #[test]
+    fn matvec_identity() {
+        let m = Mat::eye(3);
+        assert_eq!(m.matvec(&[1.0, 2.0, 3.0]), vec![1.0, 2.0, 3.0]);
+    }
+
+    #[test]
+    fn matvec_known() {
+        let m = Mat::from_rows(&[vec![1.0, 2.0], vec![3.0, 4.0]]);
+        assert_eq!(m.matvec(&[1.0, 1.0]), vec![3.0, 7.0]);
+        assert_eq!(m.tmatvec(&[1.0, 1.0]), vec![4.0, 6.0]);
+    }
+
+    #[test]
+    fn rank1_acc_known() {
+        let mut m = Mat::zeros(2, 2);
+        m.rank1_acc(2.0, &[1.0, 2.0], &[3.0, 4.0]);
+        assert_eq!(m[(0, 0)], 6.0);
+        assert_eq!(m[(1, 1)], 16.0);
+    }
+
+    #[test]
+    fn matmul_identity() {
+        let a = Mat::from_rows(&[vec![1.0, 2.0], vec![3.0, 4.0]]);
+        let c = a.matmul(&Mat::eye(2));
+        assert_eq!(c, a);
+    }
+
+    #[test]
+    fn gram_reg_matches_manual() {
+        let a = Mat::from_rows(&[vec![1.0, 2.0], vec![3.0, 4.0]]);
+        let g = a.gram_reg(0.5);
+        // AᵀA = [[10,14],[14,20]]
+        assert_eq!(g[(0, 0)], 10.5);
+        assert_eq!(g[(0, 1)], 14.0);
+        assert_eq!(g[(1, 1)], 20.5);
+    }
+
+    #[test]
+    fn transpose_roundtrip() {
+        let a = Mat::from_rows(&[vec![1.0, 2.0, 3.0], vec![4.0, 5.0, 6.0]]);
+        assert_eq!(a.transpose().transpose(), a);
+    }
+}

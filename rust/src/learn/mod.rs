@@ -1,0 +1,28 @@
+//! Decremental learner engines — the paper's §III-D local layer.
+//!
+//! Every model implements [`traits::DecrementalModel`]: an `update`
+//! (incremental) and `forget` (decremental) pair satisfying the paper's
+//! Eq. 1 identity `forget(fit(D), d) == fit(D \ d)`, with `CPU_Freq(±1/0)`
+//! DVFS hooks wired exactly as in Algorithms 1–2.
+//!
+//! - [`ppr`] — Personalized PageRank (Alg. 1)
+//! - [`tikhonov`] — Tikhonov regularization over rank-one QR (Alg. 2)
+//! - [`knn_lsh`] — kNN with locality-sensitive hashing
+//! - [`naive_bayes`] — Multinomial Naive Bayes
+//! - [`qr`], [`mat`] — dense linear-algebra substrate
+//! - [`recovery`] — deleted-data recovery attack + forget-level guard
+
+pub mod knn_lsh;
+pub mod mat;
+pub mod naive_bayes;
+pub mod ppr;
+pub mod qr;
+pub mod recovery;
+pub mod tikhonov;
+pub mod traits;
+
+pub use knn_lsh::KnnLsh;
+pub use naive_bayes::NaiveBayes;
+pub use ppr::Ppr;
+pub use tikhonov::Tikhonov;
+pub use traits::{DecrementalModel, Middleware, NullMiddleware, OpCost};

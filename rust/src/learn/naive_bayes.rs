@@ -1,0 +1,274 @@
+//! Multinomial Naive Bayes with decremental updates (paper Fig. 3(c)/6(c)
+//! classifier on mushrooms/phishing/covtype).
+//!
+//! NB's sufficient statistics are pure counts, so UPDATE/FORGET are exact
+//! add/subtract — the cleanest possible decremental learner, and the
+//! reason the paper includes it: the energy win is entirely from not
+//! retraining.
+
+use super::traits::{DecrementalModel, Middleware, OpCost};
+
+/// One labeled count-feature row.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Labeled {
+    pub x: Vec<f32>,
+    pub y: u32,
+}
+
+/// Multinomial NB sufficient statistics + smoothing.
+#[derive(Debug, Clone)]
+pub struct NaiveBayes {
+    classes: usize,
+    features: usize,
+    alpha: f64,
+    class_counts: Vec<f64>,
+    /// per class: feature count sums
+    feat_counts: Vec<Vec<f64>>,
+    /// per class: Σ_f feat_counts (cached denominator)
+    feat_totals: Vec<f64>,
+    n: usize,
+}
+
+impl NaiveBayes {
+    pub fn new(classes: usize, features: usize, alpha: f64) -> Self {
+        NaiveBayes {
+            classes,
+            features,
+            alpha,
+            class_counts: vec![0.0; classes],
+            feat_counts: vec![vec![0.0; features]; classes],
+            feat_totals: vec![0.0; classes],
+            n: 0,
+        }
+    }
+
+    pub fn fit(classes: usize, features: usize, alpha: f64, data: &[Labeled]) -> Self {
+        let mut m = NaiveBayes::new(classes, features, alpha);
+        let mut mw = super::traits::NullMiddleware;
+        for d in data {
+            m.update(d, &mut mw);
+        }
+        m
+    }
+
+    pub fn len(&self) -> usize {
+        self.n
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.n == 0
+    }
+
+    /// Unnormalized log posterior per class.
+    pub fn log_posterior(&self, x: &[f32]) -> Vec<f64> {
+        assert_eq!(x.len(), self.features);
+        let total_n: f64 = self.class_counts.iter().sum();
+        (0..self.classes)
+            .map(|c| {
+                let prior = (self.class_counts[c] + self.alpha).ln()
+                    - (total_n + self.alpha * self.classes as f64).ln();
+                let denom =
+                    (self.feat_totals[c] + self.alpha * self.features as f64).ln();
+                let mut ll = prior;
+                for (f, &xv) in x.iter().enumerate() {
+                    if xv == 0.0 {
+                        continue;
+                    }
+                    ll += xv as f64
+                        * ((self.feat_counts[c][f] + self.alpha).ln() - denom);
+                }
+                ll
+            })
+            .collect()
+    }
+
+    pub fn predict(&self, x: &[f32]) -> Option<u32> {
+        if self.n == 0 {
+            return None;
+        }
+        let lp = self.log_posterior(x);
+        lp.iter()
+            .enumerate()
+            .max_by(|a, b| a.1.partial_cmp(b.1).unwrap())
+            .map(|(c, _)| c as u32)
+    }
+
+    pub fn accuracy(&self, test: &[Labeled]) -> f64 {
+        if test.is_empty() {
+            return 0.0;
+        }
+        let ok = test.iter().filter(|d| self.predict(&d.x) == Some(d.y)).count();
+        ok as f64 / test.len() as f64
+    }
+
+    fn apply(&mut self, d: &Labeled, sign: f64) {
+        assert_eq!(d.x.len(), self.features);
+        let c = d.y as usize;
+        assert!(c < self.classes);
+        self.class_counts[c] = (self.class_counts[c] + sign).max(0.0);
+        let mut row_sum = 0.0;
+        for (fc, &xv) in self.feat_counts[c].iter_mut().zip(&d.x) {
+            *fc = (*fc + sign * xv as f64).max(0.0);
+            row_sum += sign * xv as f64;
+        }
+        self.feat_totals[c] = (self.feat_totals[c] + row_sum).max(0.0);
+    }
+
+    fn op_cost(&self) -> OpCost {
+        OpCost::new(
+            self.features as f64 * 3.0,
+            ((self.features * 8) as u64).div_ceil(4096).max(1),
+        )
+    }
+}
+
+impl DecrementalModel for NaiveBayes {
+    type Datum = Labeled;
+
+    fn update(&mut self, d: &Labeled, mw: &mut dyn Middleware) -> OpCost {
+        self.apply(d, 1.0);
+        self.n += 1;
+        mw.cpu_freq(1);
+        let cost = self.op_cost();
+        let _ = mw.access_pages(d.y as u64, cost.pages);
+        cost
+    }
+
+    fn forget(&mut self, d: &Labeled, mw: &mut dyn Middleware) -> OpCost {
+        mw.cpu_freq(-1);
+        self.apply(d, -1.0);
+        self.n = self.n.saturating_sub(1);
+        mw.cpu_freq(0);
+        let cost = self.op_cost();
+        let _ = mw.access_pages(d.y as u64, cost.pages);
+        cost
+    }
+
+    fn retrain_cost(&self, n: usize) -> OpCost {
+        OpCost::new(
+            (n * self.features) as f64 * 3.0,
+            (n as u64 * self.features as u64 * 4).div_ceil(4096),
+        )
+    }
+
+    fn state_pages(&self) -> u64 {
+        ((self.classes * self.features * 8) as u64).div_ceil(4096).max(1)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::learn::traits::NullMiddleware;
+    use crate::util::rng::Rng;
+
+    fn banded(seed: u64, n: usize, classes: usize, features: usize) -> Vec<Labeled> {
+        let mut rng = Rng::new(seed);
+        (0..n)
+            .map(|_| {
+                let y = rng.below(classes) as u32;
+                let band = features * y as usize / classes
+                    ..features * (y as usize + 1) / classes;
+                let x = (0..features)
+                    .map(|f| {
+                        let lam = if band.contains(&f) { 5.0 } else { 0.4 };
+                        rng.poisson(lam) as f32
+                    })
+                    .collect();
+                Labeled { x, y }
+            })
+            .collect()
+    }
+
+    #[test]
+    fn learns_banded_classes() {
+        let data = banded(1, 400, 4, 24);
+        let (train, test) = data.split_at(300);
+        let m = NaiveBayes::fit(4, 24, 1.0, train);
+        assert!(m.accuracy(test) > 0.9, "acc {}", m.accuracy(test));
+    }
+
+    #[test]
+    fn forget_equals_retrain_without_row() {
+        let data = banded(2, 60, 3, 12);
+        let mut dec = NaiveBayes::fit(3, 12, 1.0, &data);
+        let mut mw = NullMiddleware;
+        dec.forget(&data[17], &mut mw);
+        let mut wo = data.clone();
+        wo.remove(17);
+        let ret = NaiveBayes::fit(3, 12, 1.0, &wo);
+        assert_eq!(dec.n, ret.n);
+        for c in 0..3 {
+            assert!((dec.class_counts[c] - ret.class_counts[c]).abs() < 1e-9);
+            for f in 0..12 {
+                assert!(
+                    (dec.feat_counts[c][f] - ret.feat_counts[c][f]).abs() < 1e-6
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn update_forget_roundtrip_restores_posterior() {
+        let data = banded(3, 50, 2, 8);
+        let base = NaiveBayes::fit(2, 8, 1.0, &data);
+        let mut m = base.clone();
+        let mut mw = NullMiddleware;
+        let extra = Labeled { x: vec![3.0; 8], y: 1 };
+        m.update(&extra, &mut mw);
+        m.forget(&extra, &mut mw);
+        let probe = vec![1.0; 8];
+        let a = m.log_posterior(&probe);
+        let b = base.log_posterior(&probe);
+        for (x, y) in a.iter().zip(&b) {
+            assert!((x - y).abs() < 1e-9);
+        }
+    }
+
+    #[test]
+    fn empty_predicts_none() {
+        let m = NaiveBayes::new(3, 4, 1.0);
+        assert_eq!(m.predict(&[1.0; 4]), None);
+    }
+
+    #[test]
+    fn smoothing_keeps_finite_with_unseen_features() {
+        let mut m = NaiveBayes::new(2, 4, 1.0);
+        let mut mw = NullMiddleware;
+        m.update(&Labeled { x: vec![1.0, 0.0, 0.0, 0.0], y: 0 }, &mut mw);
+        let lp = m.log_posterior(&[0.0, 5.0, 0.0, 0.0]);
+        assert!(lp.iter().all(|v| v.is_finite()));
+    }
+
+    #[test]
+    fn property_count_linearity() {
+        // fit(D ∪ E) then forget all of E == fit(D), for random D, E
+        crate::util::prop::check(0xB5, 12, |g| {
+            let classes = g.usize_in(2, 5);
+            let features = g.usize_in(2, 16);
+            let nd = g.usize_in(3, 25);
+            let ne = g.usize_in(1, 10);
+            let all = banded(g.case as u64 + 77, nd + ne, classes, features);
+            let (d, e) = all.split_at(nd);
+            let mut m = NaiveBayes::fit(classes, features, 1.0, &all);
+            let mut mw = NullMiddleware;
+            for row in e {
+                m.forget(row, &mut mw);
+            }
+            let ret = NaiveBayes::fit(classes, features, 1.0, d);
+            for c in 0..classes {
+                crate::prop_assert!(
+                    (m.class_counts[c] - ret.class_counts[c]).abs() < 1e-6,
+                    "class count drift"
+                );
+                for f in 0..features {
+                    crate::prop_assert!(
+                        (m.feat_counts[c][f] - ret.feat_counts[c][f]).abs() < 1e-4,
+                        "feat count drift at ({c},{f})"
+                    );
+                }
+            }
+            Ok(())
+        });
+    }
+}

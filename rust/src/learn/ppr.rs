@@ -1,0 +1,434 @@
+//! Personalized PageRank with decremental updates — paper Alg. 1.
+//!
+//! Model state: item-interaction counts `v`, co-occurrence matrix `C`,
+//! and the Jaccard similarity matrix `L`, all dense (I ≤ ~2k for the
+//! paper's datasets; the paper notes the decremental intermediates
+//! "double the required memory").
+//!
+//! UPDATE (lines 2–8): v += Yᵤ; C[i₁,i₂] += 1 ∀ pairs; renew affected L
+//! entries; `CPU_Freq(1)`. FORGET (lines 10–17): the reverse;
+//! `CPU_Freq(-1)` then `CPU_Freq(0)`.
+//!
+//! Exactness note (DESIGN.md §6): Alg. 1 as printed renews only rows
+//! i₁ ∈ Yᵤ, but a changed count vᵢ also perturbs the *symmetric* entries
+//! L[j][i] of every co-occurrence neighbor j. Because L is dense here,
+//! those are O(1) each — we renew them too, so the engine satisfies
+//! Eq. 1 (`forget(fit(D), d) == fit(D \ d)`) bit-exactly.
+
+use super::traits::{DecrementalModel, Middleware, OpCost};
+
+/// Entries per simulated 4 KiB page for the matrices (f32/u32 = 4 B).
+const ENTRIES_PER_PAGE: u64 = 1024;
+
+/// The PPR model.
+#[derive(Debug, Clone)]
+pub struct Ppr {
+    items: usize,
+    top_k: usize,
+    /// interaction counts v (len = items)
+    v: Vec<u32>,
+    /// dense co-occurrence C (items × items, row-major)
+    c: Vec<u32>,
+    /// dense Jaccard similarity L (items × items, row-major; diag = 0)
+    l: Vec<f32>,
+    /// scratch for symmetric similarity writes (perf: reused, no alloc in
+    /// the UPDATE/FORGET hot path — see EXPERIMENTS.md §Perf)
+    scratch: Vec<(u32, f32)>,
+}
+
+impl Ppr {
+    pub fn new(items: usize, top_k: usize) -> Self {
+        Ppr {
+            items,
+            top_k,
+            v: vec![0; items],
+            c: vec![0; items * items],
+            l: vec![0.0; items * items],
+            scratch: Vec::new(),
+        }
+    }
+
+    /// Build from a set of user histories (sorted, deduped item lists).
+    pub fn fit(items: usize, top_k: usize, histories: &[Vec<u32>]) -> Self {
+        let mut m = Ppr::new(items, top_k);
+        let mut mw = super::traits::NullMiddleware;
+        for h in histories {
+            m.update(h, &mut mw);
+        }
+        m
+    }
+
+    pub fn items(&self) -> usize {
+        self.items
+    }
+
+    pub fn top_k(&self) -> usize {
+        self.top_k
+    }
+
+    #[inline]
+    fn c_at(&self, i: usize, j: usize) -> u32 {
+        self.c[i * self.items + j]
+    }
+
+    pub fn counts(&self) -> &[u32] {
+        &self.v
+    }
+
+    /// Jaccard similarity of an item pair (reads the maintained L).
+    #[inline]
+    pub fn similarity(&self, i1: usize, i2: usize) -> f32 {
+        self.l[i1 * self.items + i2]
+    }
+
+    #[inline]
+    fn jaccard(&self, i: usize, j: usize) -> f32 {
+        let c = self.c_at(i, j);
+        if c == 0 {
+            return 0.0;
+        }
+        let denom = self.v[i] + self.v[j] - c;
+        if denom == 0 {
+            0.0
+        } else {
+            c as f32 / denom as f32
+        }
+    }
+
+    /// Top-k similarity row of item `i` (the paper retains top-k of L;
+    /// here L is dense and top-k is a query-time view).
+    pub fn sim_row(&self, i: usize) -> Vec<(u32, f32)> {
+        let base = i * self.items;
+        let mut row: Vec<(u32, f32)> = Vec::with_capacity(self.top_k + 1);
+        for j in 0..self.items {
+            if j == i {
+                continue;
+            }
+            let s = self.l[base + j];
+            if s <= 0.0 {
+                continue;
+            }
+            let pos = row.partition_point(|&(_, rs)| rs > s);
+            if pos < self.top_k {
+                row.insert(pos, (j as u32, s));
+                row.truncate(self.top_k);
+            }
+        }
+        row
+    }
+
+    /// PREDICT (Alg. 1 lines 18–19): top-k recommendations for a user
+    /// history — similarity-weighted scores, interacted items masked.
+    pub fn predict(&self, history: &[u32], k: usize) -> Vec<(u32, f32)> {
+        let mut scores: Vec<f32> = vec![0.0; self.items];
+        for &it in history {
+            let base = it as usize * self.items;
+            for (j, sc) in scores.iter_mut().enumerate() {
+                *sc += self.l[base + j];
+            }
+        }
+        for &it in history {
+            scores[it as usize] = f32::NEG_INFINITY;
+        }
+        let mut idx: Vec<u32> = (0..self.items as u32).collect();
+        let k = k.min(self.items);
+        idx.select_nth_unstable_by(k.saturating_sub(1), |&a, &b| {
+            scores[b as usize].partial_cmp(&scores[a as usize]).unwrap()
+        });
+        idx.truncate(k);
+        idx.sort_by(|&a, &b| {
+            scores[b as usize].partial_cmp(&scores[a as usize]).unwrap()
+        });
+        idx.into_iter()
+            .map(|i| (i, scores[i as usize]))
+            .filter(|&(_, s)| s > 0.0)
+            .collect()
+    }
+
+    /// Full dense similarity matrix (recovery analysis / tests).
+    pub fn dense_similarity(&self) -> Vec<Vec<f32>> {
+        (0..self.items)
+            .map(|i| self.l[i * self.items..(i + 1) * self.items].to_vec())
+            .collect()
+    }
+
+    fn apply(&mut self, history: &[u32], sign: i64, mw: &mut dyn Middleware) -> OpCost {
+        let h = history.len() as f64;
+        // pages: C rows touched + v page + L rows touched
+        let pages_wanted = 2 * history.len() as u64
+            * (self.items as u64).div_ceil(ENTRIES_PER_PAGE)
+            + 1;
+        // θ-LRU may skip servicing stale pages (its forgetting semantics
+        // degrade *data* freshness, not the count updates themselves —
+        // model state is pinned).
+        let _ = mw.access_pages(0, pages_wanted);
+
+        for &it in history {
+            let vi = &mut self.v[it as usize];
+            *vi = (*vi as i64 + sign).max(0) as u32;
+        }
+        // pair counts (including the diagonal C_ii = v_i)
+        for a in 0..history.len() {
+            let i1 = history[a] as usize;
+            for b in 0..history.len() {
+                let i2 = history[b] as usize;
+                let c = &mut self.c[i1 * self.items + i2];
+                *c = (*c as i64 + sign).max(0) as u32;
+            }
+        }
+        // renew affected similarity entries:
+        //   (i, j) for i ∈ Yᵤ, j a current or former neighbor of i.
+        // Perf-shaped (EXPERIMENTS.md §Perf): zip over the row slices to
+        // elide bounds checks; symmetric partners collected into a reused
+        // scratch buffer and written in a second pass (the row pass holds
+        // a mutable borrow of l's row).
+        let mut touched_entries = 0u64;
+        let items = self.items;
+        let mut scratch = std::mem::take(&mut self.scratch);
+        for &it in history {
+            let i = it as usize;
+            let base = i * items;
+            let vi = self.v[i];
+            scratch.clear();
+            {
+                let c_row = &self.c[base..base + items];
+                let l_row = &mut self.l[base..base + items];
+                for (j, (&cv, lv)) in c_row.iter().zip(l_row.iter_mut()).enumerate() {
+                    if j == i {
+                        continue;
+                    }
+                    // entry is live if a co-occurrence exists now or its
+                    // similarity was nonzero before (needs zeroing)
+                    if cv > 0 || *lv != 0.0 {
+                        let s = if cv == 0 {
+                            0.0
+                        } else {
+                            let denom = vi + self.v[j] - cv;
+                            if denom == 0 { 0.0 } else { cv as f32 / denom as f32 }
+                        };
+                        *lv = s;
+                        scratch.push((j as u32, s));
+                    }
+                }
+            }
+            for &(j, s) in &scratch {
+                self.l[j as usize * items + i] = s;
+            }
+            touched_entries += 2 * scratch.len() as u64;
+        }
+        self.scratch = scratch;
+        // ops: arithmetic only — |Yᵤ|² pair updates + v updates + one
+        // Jaccard recompute per touched entry. The O(|Yᵤ|·I) row *scan*
+        // (the paper's §III-D worst case) is sequential memory traffic,
+        // billed via `pages_wanted` above, not as arithmetic; touched
+        // entries approach |Yᵤ|·I as C densifies, recovering the paper's
+        // bound.
+        OpCost::new(h * h + h + touched_entries as f64, pages_wanted)
+    }
+}
+
+impl DecrementalModel for Ppr {
+    type Datum = Vec<u32>;
+
+    fn update(&mut self, datum: &Vec<u32>, mw: &mut dyn Middleware) -> OpCost {
+        let cost = self.apply(datum, 1, mw);
+        mw.cpu_freq(1); // Alg. 1 line 8
+        cost
+    }
+
+    fn forget(&mut self, datum: &Vec<u32>, mw: &mut dyn Middleware) -> OpCost {
+        mw.cpu_freq(-1); // Alg. 1 line 13
+        let cost = self.apply(datum, -1, mw);
+        mw.cpu_freq(0); // Alg. 1 line 17
+        cost
+    }
+
+    fn retrain_cost(&self, n: usize) -> OpCost {
+        // retraining recomputes C = YᵀY over all n histories plus the full
+        // similarity matrix: n·h̄² + I², with h̄ estimated from v
+        let total_inter: f64 = self.v.iter().map(|&x| x as f64).sum();
+        let avg_h = if n > 0 { total_inter / n as f64 } else { 0.0 };
+        let ops = n as f64 * avg_h * avg_h + (self.items * self.items) as f64;
+        let pages = (self.items as u64 * self.items as u64)
+            .div_ceil(ENTRIES_PER_PAGE)
+            * 2;
+        OpCost::new(ops, pages)
+    }
+
+    fn state_pages(&self) -> u64 {
+        // C + L + v
+        let c = (self.items * self.items) as u64;
+        (2 * c + self.items as u64).div_ceil(ENTRIES_PER_PAGE)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::learn::traits::{NullMiddleware, RecordingMiddleware};
+    use crate::util::rng::Rng;
+
+    fn histories(seed: u64, users: usize, items: usize) -> Vec<Vec<u32>> {
+        let mut rng = Rng::new(seed);
+        (0..users)
+            .map(|_| {
+                let n = rng.range(1, (items / 2).max(2));
+                let mut h: Vec<u32> =
+                    rng.sample_indices(items, n).into_iter().map(|i| i as u32).collect();
+                h.sort_unstable();
+                h
+            })
+            .collect()
+    }
+
+    #[test]
+    fn update_counts_match_hand_example() {
+        // users {0,1}, {0}: v = [2,1], C01 = 1
+        let mut m = Ppr::new(3, 8);
+        let mut mw = NullMiddleware;
+        m.update(&vec![0, 1], &mut mw);
+        m.update(&vec![0], &mut mw);
+        assert_eq!(m.counts(), &[2, 1, 0]);
+        assert_eq!(m.c_at(0, 1), 1);
+        // Jaccard(0,1) = 1/(2+1-1) = 0.5
+        assert!((m.similarity(0, 1) - 0.5).abs() < 1e-6);
+        assert!((m.similarity(1, 0) - 0.5).abs() < 1e-6, "symmetry");
+    }
+
+    #[test]
+    fn forget_equals_retrain_without_user() {
+        // Eq. 1: p_forget(p(D), d_n) == p(D \ d_n)
+        let hs = histories(3, 12, 24);
+        let full = Ppr::fit(24, 24, &hs);
+        let mut decremented = full.clone();
+        let mut mw = NullMiddleware;
+        decremented.forget(&hs[5], &mut mw);
+        let mut without: Vec<Vec<u32>> = hs.clone();
+        without.remove(5);
+        let retrained = Ppr::fit(24, 24, &without);
+        assert_eq!(decremented.v, retrained.v);
+        assert_eq!(decremented.c, retrained.c);
+        assert_eq!(decremented.l, retrained.l);
+    }
+
+    #[test]
+    fn update_forget_roundtrip_is_identity() {
+        let hs = histories(5, 8, 16);
+        let base = Ppr::fit(16, 16, &hs);
+        let mut m = base.clone();
+        let mut mw = NullMiddleware;
+        let extra = vec![1u32, 3, 7, 11];
+        m.update(&extra, &mut mw);
+        m.forget(&extra, &mut mw);
+        assert_eq!(m.v, base.v);
+        assert_eq!(m.c, base.c);
+        assert_eq!(m.l, base.l);
+    }
+
+    #[test]
+    fn dvfs_protocol_matches_algorithm1() {
+        let mut m = Ppr::new(8, 4);
+        let mut mw = RecordingMiddleware::default();
+        m.update(&vec![0, 1], &mut mw);
+        assert_eq!(mw.hints, vec![1], "UPDATE ends with CPU_Freq(1)");
+        m.forget(&vec![0, 1], &mut mw);
+        assert_eq!(
+            mw.hints,
+            vec![1, -1, 0],
+            "FORGET: CPU_Freq(-1) then CPU_Freq(0)"
+        );
+    }
+
+    #[test]
+    fn similarity_matrix_is_symmetric_and_bounded() {
+        let hs = histories(7, 30, 20);
+        let m = Ppr::fit(20, 5, &hs);
+        for i in 0..20 {
+            for j in 0..20 {
+                let s = m.similarity(i, j);
+                assert!((0.0..=1.0).contains(&s));
+                assert_eq!(s, m.similarity(j, i));
+            }
+        }
+    }
+
+    #[test]
+    fn sim_row_is_topk_sorted() {
+        let hs = histories(7, 30, 20);
+        let m = Ppr::fit(20, 5, &hs);
+        for i in 0..20 {
+            let row = m.sim_row(i);
+            assert!(row.len() <= 5);
+            for w in row.windows(2) {
+                assert!(w[0].1 >= w[1].1, "row not sorted");
+            }
+        }
+    }
+
+    #[test]
+    fn predict_masks_history_and_ranks() {
+        let hs = histories(9, 40, 16);
+        let m = Ppr::fit(16, 16, &hs);
+        let user = &hs[0];
+        let recs = m.predict(user, 5);
+        assert!(!recs.is_empty());
+        for &(item, score) in &recs {
+            assert!(!user.contains(&item), "recommended an interacted item");
+            assert!(score > 0.0);
+        }
+        for w in recs.windows(2) {
+            assert!(w[0].1 >= w[1].1);
+        }
+    }
+
+    #[test]
+    fn update_cost_below_retrain_cost() {
+        let hs = histories(11, 50, 256);
+        let mut m = Ppr::fit(256, 10, &hs);
+        let mut mw = NullMiddleware;
+        let one = m.update(&hs[0].clone(), &mut mw);
+        let retrain = m.retrain_cost(50);
+        assert!(
+            retrain.giga_ops > one.giga_ops * 3.0,
+            "retrain {} vs update {}",
+            retrain.giga_ops,
+            one.giga_ops
+        );
+    }
+
+    #[test]
+    fn page_traffic_scales_with_items_and_ops_with_density() {
+        // memory traffic grows with the catalogue size…
+        let mut small = Ppr::new(64, 8);
+        let mut big = Ppr::new(2048, 8); // > one 1024-entry page per row
+        let mut mw = NullMiddleware;
+        let h: Vec<u32> = (0..10).collect();
+        let c_small = small.update(&h, &mut mw);
+        let c_big = big.update(&h, &mut mw);
+        assert!(c_big.pages > c_small.pages);
+        // …while arithmetic grows with co-occurrence density: a second
+        // update touching established neighbors costs more than the first
+        let c_again = big.update(&h, &mut mw);
+        assert!(c_again.giga_ops >= c_big.giga_ops);
+    }
+
+    #[test]
+    fn property_forget_any_user_matches_retrain() {
+        crate::util::prop::check(0x99A, 15, |g| {
+            let items = g.usize_in(8, 40);
+            let users = g.usize_in(2, 15);
+            let hs = histories(g.case as u64 + 100, users, items);
+            let u = g.usize_in(0, users - 1);
+            let mut dec = Ppr::fit(items, items, &hs);
+            let mut mw = NullMiddleware;
+            dec.forget(&hs[u], &mut mw);
+            let mut wo = hs.clone();
+            wo.remove(u);
+            let ret = Ppr::fit(items, items, &wo);
+            crate::prop_assert!(dec.v == ret.v, "v mismatch");
+            crate::prop_assert!(dec.c == ret.c, "C mismatch");
+            crate::prop_assert!(dec.l == ret.l, "L mismatch");
+            Ok(())
+        });
+    }
+}

@@ -1,0 +1,288 @@
+//! QR factorization with Givens rank-one update/downdate — the paper's
+//! Alg. 2 engine ("the fast rank-one update algorithm [25]", Golub & Van
+//! Loan §12.5.1; the paper budgets 26d² flops per update).
+//!
+//! Maintains Q (orthogonal) and R (upper triangular) with Q R = A for an
+//! SPD-but-drifting A = MᵀM + λI. `rank1_update(u, v)` applies
+//! A ← A + u vᵀ in O(d²); FORGET passes (−m, m).
+
+use super::mat::{dot, Mat};
+
+/// A maintained QR factorization Q R = A.
+#[derive(Debug, Clone)]
+pub struct QrFactor {
+    pub q: Mat,
+    pub r: Mat,
+    n: usize,
+}
+
+/// One Givens rotation (c, s) zeroing b in (a, b).
+#[inline]
+fn givens(a: f64, b: f64) -> (f64, f64) {
+    if b == 0.0 {
+        (1.0, 0.0)
+    } else {
+        let h = a.hypot(b);
+        (a / h, -b / h)
+    }
+}
+
+/// Apply G = [[c, -s], [s, c]]ᵀ-style rotation to rows i, j of M from the
+/// left: row_i ← c·row_i − s·row_j ; row_j ← s·row_i + c·row_j.
+#[inline]
+fn rot_rows(m: &mut Mat, i: usize, j: usize, c: f64, s: f64, from_col: usize) {
+    let cols = m.cols();
+    for k in from_col..cols {
+        let a = m[(i, k)];
+        let b = m[(j, k)];
+        m[(i, k)] = c * a - s * b;
+        m[(j, k)] = s * a + c * b;
+    }
+}
+
+impl QrFactor {
+    /// Householder QR of a square matrix.
+    pub fn decompose(a: &Mat) -> Self {
+        assert_eq!(a.rows(), a.cols());
+        let n = a.rows();
+        let mut r = a.clone();
+        let mut qt = Mat::eye(n);
+        for k in 0..n.saturating_sub(1) {
+            // Householder vector for column k below the diagonal
+            let mut norm = 0.0;
+            for i in k..n {
+                norm += r[(i, k)] * r[(i, k)];
+            }
+            let norm = norm.sqrt();
+            if norm == 0.0 {
+                continue;
+            }
+            let alpha = if r[(k, k)] > 0.0 { -norm } else { norm };
+            let mut v = vec![0.0; n];
+            for i in k..n {
+                v[i] = r[(i, k)];
+            }
+            v[k] -= alpha;
+            let vnorm2 = dot(&v[k..], &v[k..]);
+            if vnorm2 == 0.0 {
+                continue;
+            }
+            // R ← (I − 2vvᵀ/vᵀv) R ; Qᵀ likewise
+            for m in [&mut r, &mut qt] {
+                for col in 0..n {
+                    let mut s = 0.0;
+                    for i in k..n {
+                        s += v[i] * m[(i, col)];
+                    }
+                    let s = 2.0 * s / vnorm2;
+                    for i in k..n {
+                        m[(i, col)] -= s * v[i];
+                    }
+                }
+            }
+        }
+        // clean tiny subdiagonal noise
+        for i in 1..n {
+            for j in 0..i {
+                r[(i, j)] = 0.0;
+            }
+        }
+        QrFactor { q: qt.transpose(), r, n }
+    }
+
+    pub fn dim(&self) -> usize {
+        self.n
+    }
+
+    /// Reconstruct A = Q R (tests / recovery diagnostics).
+    pub fn reconstruct(&self) -> Mat {
+        self.q.matmul(&self.r)
+    }
+
+    /// Rank-one update: A ← A + u vᵀ, in O(d²) via two Givens sweeps
+    /// (Golub & Van Loan Alg. 12.5.1). FORGET uses u = −m, v = m.
+    pub fn rank1_update(&mut self, u: &[f64], v: &[f64]) {
+        let n = self.n;
+        assert_eq!(u.len(), n);
+        assert_eq!(v.len(), n);
+        // w = Qᵀ u
+        let mut w = self.q.tmatvec(u);
+        // Sweep 1: rotations J(n-2)…J(0) zero w[n-1..1], turning R into
+        // upper Hessenberg. Apply to w, R, and Qᵀ (we keep Q, so rotate
+        // its columns — equivalent to rotating rows of Qᵀ).
+        for k in (0..n - 1).rev() {
+            let (c, s) = givens(w[k], w[k + 1]);
+            let (a, b) = (w[k], w[k + 1]);
+            w[k] = c * a - s * b;
+            w[k + 1] = s * a + c * b; // ≈ 0
+            rot_rows(&mut self.r, k, k + 1, c, s, k);
+            rot_cols(&mut self.q, k, k + 1, c, s);
+        }
+        // H = R + w[0] e1 vᵀ (H upper Hessenberg)
+        for j in 0..n {
+            self.r[(0, j)] += w[0] * v[j];
+        }
+        // Sweep 2: re-triangularize H with rotations J(0)…J(n-2)
+        for k in 0..n - 1 {
+            let (c, s) = givens(self.r[(k, k)], self.r[(k + 1, k)]);
+            rot_rows(&mut self.r, k, k + 1, c, s, k);
+            self.r[(k + 1, k)] = 0.0;
+            rot_cols(&mut self.q, k, k + 1, c, s);
+        }
+    }
+
+    /// Solve A x = b through the factorization: R x = Qᵀ b.
+    pub fn solve(&self, b: &[f64]) -> Vec<f64> {
+        let qtb = self.q.tmatvec(b);
+        self.back_substitute(&qtb)
+    }
+
+    /// Solve R x = y (back substitution).
+    pub fn back_substitute(&self, y: &[f64]) -> Vec<f64> {
+        let n = self.n;
+        let mut x = vec![0.0; n];
+        for i in (0..n).rev() {
+            let mut s = y[i];
+            for j in i + 1..n {
+                s -= self.r[(i, j)] * x[j];
+            }
+            let d = self.r[(i, i)];
+            x[i] = if d.abs() > 1e-12 { s / d } else { 0.0 };
+        }
+        x
+    }
+
+    /// ‖QᵀQ − I‖∞ — orthogonality drift diagnostic (recovery policy input).
+    pub fn orthogonality_error(&self) -> f64 {
+        self.q.transpose().matmul(&self.q).max_abs_diff(&Mat::eye(self.n))
+    }
+}
+
+/// Rotate columns i, j of M from the right (col_i ← c·col_i − s·col_j …).
+#[inline]
+fn rot_cols(m: &mut Mat, i: usize, j: usize, c: f64, s: f64) {
+    for rix in 0..m.rows() {
+        let a = m[(rix, i)];
+        let b = m[(rix, j)];
+        m[(rix, i)] = c * a - s * b;
+        m[(rix, j)] = s * a + c * b;
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Rng;
+
+    fn random_spd(n: usize, seed: u64) -> Mat {
+        let mut rng = Rng::new(seed);
+        let mut b = Mat::zeros(n, n);
+        for i in 0..n {
+            for j in 0..n {
+                b[(i, j)] = rng.normal();
+            }
+        }
+        let mut a = b.transpose().matmul(&b);
+        for i in 0..n {
+            a[(i, i)] += n as f64;
+        }
+        a
+    }
+
+    #[test]
+    fn decompose_reconstructs() {
+        let a = random_spd(8, 1);
+        let f = QrFactor::decompose(&a);
+        assert!(f.reconstruct().max_abs_diff(&a) < 1e-9);
+    }
+
+    #[test]
+    fn r_is_upper_triangular() {
+        let f = QrFactor::decompose(&random_spd(6, 2));
+        for i in 1..6 {
+            for j in 0..i {
+                assert_eq!(f.r[(i, j)], 0.0);
+            }
+        }
+    }
+
+    #[test]
+    fn q_is_orthogonal() {
+        let f = QrFactor::decompose(&random_spd(10, 3));
+        assert!(f.orthogonality_error() < 1e-9);
+    }
+
+    #[test]
+    fn solve_matches_direct() {
+        let a = random_spd(7, 4);
+        let f = QrFactor::decompose(&a);
+        let b: Vec<f64> = (0..7).map(|i| i as f64 + 1.0).collect();
+        let x = f.solve(&b);
+        let ax = a.matvec(&x);
+        for (got, want) in ax.iter().zip(&b) {
+            assert!((got - want).abs() < 1e-8, "{got} vs {want}");
+        }
+    }
+
+    #[test]
+    fn rank1_update_matches_fresh_decomposition() {
+        let mut rng = Rng::new(5);
+        let a = random_spd(9, 6);
+        let mut f = QrFactor::decompose(&a);
+        let u: Vec<f64> = (0..9).map(|_| rng.normal()).collect();
+        let v: Vec<f64> = (0..9).map(|_| rng.normal()).collect();
+        f.rank1_update(&u, &v);
+        let mut a2 = a.clone();
+        a2.rank1_acc(1.0, &u, &v);
+        assert!(
+            f.reconstruct().max_abs_diff(&a2) < 1e-8,
+            "err = {}",
+            f.reconstruct().max_abs_diff(&a2)
+        );
+        assert!(f.orthogonality_error() < 1e-8);
+    }
+
+    #[test]
+    fn downdate_reverses_update() {
+        let a = random_spd(8, 7);
+        let mut f = QrFactor::decompose(&a);
+        let m: Vec<f64> = (0..8).map(|i| (i as f64 * 0.37).sin()).collect();
+        f.rank1_update(&m, &m); // A + m mᵀ  (UPDATE)
+        let neg: Vec<f64> = m.iter().map(|x| -x).collect();
+        f.rank1_update(&neg, &m); // A − m mᵀ (FORGET)
+        assert!(f.reconstruct().max_abs_diff(&a) < 1e-8);
+    }
+
+    #[test]
+    fn many_updates_stay_orthogonal() {
+        // numerical-stability property: 500 update/forget cycles
+        let a = random_spd(6, 8);
+        let mut f = QrFactor::decompose(&a);
+        let mut rng = Rng::new(9);
+        for _ in 0..250 {
+            let m: Vec<f64> = (0..6).map(|_| rng.normal()).collect();
+            f.rank1_update(&m, &m);
+            let neg: Vec<f64> = m.iter().map(|x| -x).collect();
+            f.rank1_update(&neg, &m);
+        }
+        assert!(f.orthogonality_error() < 1e-6, "drift {}", f.orthogonality_error());
+        assert!(f.reconstruct().max_abs_diff(&a) < 1e-6);
+    }
+
+    #[test]
+    fn property_update_random_dims() {
+        crate::util::prop::check(0xDEA1, 30, |g| {
+            let n = g.usize_in(2, 16);
+            let a = random_spd(n, g.case as u64);
+            let mut f = QrFactor::decompose(&a);
+            let u: Vec<f64> = (0..n).map(|_| g.rng().normal()).collect();
+            let v: Vec<f64> = (0..n).map(|_| g.rng().normal()).collect();
+            f.rank1_update(&u, &v);
+            let mut a2 = a;
+            a2.rank1_acc(1.0, &u, &v);
+            let err = f.reconstruct().max_abs_diff(&a2);
+            crate::prop_assert!(err < 1e-7, "reconstruct err {err} at n={n}");
+            Ok(())
+        });
+    }
+}

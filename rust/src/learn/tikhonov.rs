@@ -1,0 +1,296 @@
+//! Tikhonov regularization with decremental updates — paper Alg. 2.
+//!
+//! Retained intermediates: `z = Mᵀr` and the QR factorization of the
+//! regularized gram matrix `G = MᵀM + λI`. UPDATE/FORGET are O(d²)
+//! (z axpy 2d + rank-one QR 26d² + solve 3d², per the paper's budget),
+//! against O(s·d²) for a full retrain.
+
+use super::mat::{dot, Mat};
+use super::qr::QrFactor;
+use super::traits::{DecrementalModel, Middleware, OpCost};
+
+/// One observation: feature row + target.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Observation {
+    pub m: Vec<f64>,
+    pub r: f64,
+}
+
+/// The Tikhonov model with maintained intermediates.
+#[derive(Debug, Clone)]
+pub struct Tikhonov {
+    d: usize,
+    lambda: f64,
+    z: Vec<f64>,
+    qr: QrFactor,
+    /// current weight vector h (resolved after every update)
+    h: Vec<f64>,
+    /// rows currently absorbed
+    s: usize,
+}
+
+impl Tikhonov {
+    /// Empty model: G = λI, z = 0.
+    pub fn new(d: usize, lambda: f64) -> Self {
+        assert!(lambda > 0.0, "λ must be positive for an invertible start");
+        let mut g = Mat::zeros(d, d);
+        for i in 0..d {
+            g[(i, i)] = lambda;
+        }
+        Tikhonov {
+            d,
+            lambda,
+            z: vec![0.0; d],
+            qr: QrFactor::decompose(&g),
+            h: vec![0.0; d],
+            s: 0,
+        }
+    }
+
+    /// Batch fit (model construction; the AOT `tikhonov_fit` artifact is
+    /// the L2 twin of this path).
+    pub fn fit(d: usize, lambda: f64, data: &[Observation]) -> Self {
+        let rows: Vec<Vec<f64>> = data.iter().map(|o| o.m.clone()).collect();
+        let m = Mat::from_rows(&rows);
+        let g = m.gram_reg(lambda);
+        let r: Vec<f64> = data.iter().map(|o| o.r).collect();
+        let z = m.tmatvec(&r);
+        let qr = QrFactor::decompose(&g);
+        let h = qr.solve(&z);
+        Tikhonov { d, lambda, z, qr, h, s: data.len() }
+    }
+
+    pub fn dim(&self) -> usize {
+        self.d
+    }
+
+    pub fn lambda(&self) -> f64 {
+        self.lambda
+    }
+
+    pub fn n_rows(&self) -> usize {
+        self.s
+    }
+
+    /// Current weight vector.
+    pub fn weights(&self) -> &[f64] {
+        &self.h
+    }
+
+    /// PREDICT (Alg. 2 line 12): r̂ = hᵀ m.
+    pub fn predict(&self, m: &[f64]) -> f64 {
+        dot(&self.h, m)
+    }
+
+    /// R² on a holdout set (the paper's Fig. 5 "accuracy" for regression).
+    pub fn r_squared(&self, data: &[Observation]) -> f64 {
+        if data.is_empty() {
+            return 0.0;
+        }
+        let mean = data.iter().map(|o| o.r).sum::<f64>() / data.len() as f64;
+        let (mut sse, mut sst) = (0.0, 0.0);
+        for o in data {
+            sse += (o.r - self.predict(&o.m)).powi(2);
+            sst += (o.r - mean).powi(2);
+        }
+        if sst == 0.0 {
+            0.0
+        } else {
+            1.0 - sse / sst
+        }
+    }
+
+    /// QR orthogonality drift (recovery-policy diagnostic).
+    pub fn drift(&self) -> f64 {
+        self.qr.orthogonality_error()
+    }
+
+    fn step(&mut self, obs: &Observation, sign: f64) -> OpCost {
+        assert_eq!(obs.m.len(), self.d);
+        // z ← z ± m r  (2d)
+        for (zi, &mi) in self.z.iter_mut().zip(&obs.m) {
+            *zi += sign * mi * obs.r;
+        }
+        // G ← G ± m mᵀ via rank-one QR (26d²)
+        let u: Vec<f64> = obs.m.iter().map(|&x| sign * x).collect();
+        self.qr.rank1_update(&u, &obs.m);
+        // solve R h = Qᵀ z (3d²: matvec + back substitution)
+        self.h = self.qr.solve(&self.z);
+        let d = self.d as f64;
+        OpCost::new(2.0 * d + 30.0 * d * d, pages_for(self.d))
+    }
+}
+
+/// f64 entries per 4 KiB page.
+fn pages_for(d: usize) -> u64 {
+    (((2 * d * d + 2 * d) * 8) as u64).div_ceil(4096).max(1)
+}
+
+impl DecrementalModel for Tikhonov {
+    type Datum = Observation;
+
+    fn update(&mut self, datum: &Observation, mw: &mut dyn Middleware) -> OpCost {
+        let cost = self.step(datum, 1.0);
+        let _ = mw.access_pages(0, cost.pages);
+        self.s += 1;
+        mw.cpu_freq(1); // Alg. 2 line 5
+        cost
+    }
+
+    fn forget(&mut self, datum: &Observation, mw: &mut dyn Middleware) -> OpCost {
+        let cost = self.step(datum, -1.0);
+        let _ = mw.access_pages(0, cost.pages);
+        self.s = self.s.saturating_sub(1);
+        mw.cpu_freq(-1); // Alg. 2 line 10
+        cost
+    }
+
+    fn retrain_cost(&self, n: usize) -> OpCost {
+        // O(s·d²) gram build + O(d³) factorization
+        let d = self.d as f64;
+        let ops = n as f64 * d * d + d * d * d;
+        OpCost::new(ops, pages_for(self.d) + (n as u64 * self.d as u64 * 8).div_ceil(4096))
+    }
+
+    fn state_pages(&self) -> u64 {
+        pages_for(self.d)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::learn::traits::{NullMiddleware, RecordingMiddleware};
+    use crate::util::rng::Rng;
+
+    fn make_data(seed: u64, s: usize, d: usize) -> (Vec<Observation>, Vec<f64>) {
+        let mut rng = Rng::new(seed);
+        let w: Vec<f64> = (0..d).map(|_| rng.normal()).collect();
+        let data = (0..s)
+            .map(|_| {
+                let m: Vec<f64> = (0..d).map(|_| rng.normal()).collect();
+                let r = dot(&m, &w) + rng.normal_ms(0.0, 0.05);
+                Observation { m, r }
+            })
+            .collect();
+        (data, w)
+    }
+
+    #[test]
+    fn fit_recovers_generating_weights() {
+        let (data, w) = make_data(1, 200, 6);
+        let t = Tikhonov::fit(6, 1e-3, &data);
+        for (got, want) in t.weights().iter().zip(&w) {
+            assert!((got - want).abs() < 0.05, "{got} vs {want}");
+        }
+        assert!(t.r_squared(&data) > 0.98);
+    }
+
+    #[test]
+    fn incremental_fit_matches_batch_fit() {
+        let (data, _) = make_data(2, 60, 5);
+        let batch = Tikhonov::fit(5, 0.5, &data);
+        let mut inc = Tikhonov::new(5, 0.5);
+        let mut mw = NullMiddleware;
+        for o in &data {
+            inc.update(o, &mut mw);
+        }
+        for (a, b) in inc.weights().iter().zip(batch.weights()) {
+            assert!((a - b).abs() < 1e-8, "{a} vs {b}");
+        }
+        assert_eq!(inc.n_rows(), 60);
+    }
+
+    #[test]
+    fn forget_equals_retrain_without_row() {
+        // Eq. 6
+        let (data, _) = make_data(3, 40, 7);
+        let mut dec = Tikhonov::fit(7, 1.0, &data);
+        let mut mw = NullMiddleware;
+        dec.forget(&data[13], &mut mw);
+        let mut wo = data.clone();
+        wo.remove(13);
+        let ret = Tikhonov::fit(7, 1.0, &wo);
+        for (a, b) in dec.weights().iter().zip(ret.weights()) {
+            assert!((a - b).abs() < 1e-7, "{a} vs {b}");
+        }
+    }
+
+    #[test]
+    fn update_forget_roundtrip() {
+        let (data, _) = make_data(4, 30, 4);
+        let base = Tikhonov::fit(4, 1.0, &data);
+        let mut m = base.clone();
+        let mut mw = NullMiddleware;
+        let extra = Observation { m: vec![0.3, -1.2, 0.8, 2.0], r: 1.5 };
+        m.update(&extra, &mut mw);
+        m.forget(&extra, &mut mw);
+        for (a, b) in m.weights().iter().zip(base.weights()) {
+            assert!((a - b).abs() < 1e-8);
+        }
+    }
+
+    #[test]
+    fn dvfs_protocol_matches_algorithm2() {
+        let mut t = Tikhonov::new(3, 1.0);
+        let mut mw = RecordingMiddleware::default();
+        let o = Observation { m: vec![1.0, 0.0, 0.0], r: 2.0 };
+        t.update(&o, &mut mw);
+        assert_eq!(mw.hints, vec![1]);
+        t.forget(&o, &mut mw);
+        assert_eq!(mw.hints, vec![1, -1]);
+    }
+
+    #[test]
+    fn empty_model_predicts_zero() {
+        let t = Tikhonov::new(5, 1.0);
+        assert_eq!(t.predict(&[1.0, 2.0, 3.0, 4.0, 5.0]), 0.0);
+    }
+
+    #[test]
+    fn decremental_cheaper_than_retrain() {
+        let t = Tikhonov::new(30, 1.0);
+        let one = OpCost::new(2.0 * 30.0 + 30.0 * 900.0, 1).giga_ops;
+        let retrain = t.retrain_cost(10_000).giga_ops;
+        assert!(retrain > one * 100.0, "decremental should win by ≫100×");
+    }
+
+    #[test]
+    fn long_sequence_stays_accurate() {
+        // stability: 1000 mixed updates/forgets tracks batch fit
+        let (data, _) = make_data(5, 400, 6);
+        let mut m = Tikhonov::new(6, 1.0);
+        let mut mw = NullMiddleware;
+        for o in &data {
+            m.update(o, &mut mw);
+        }
+        for o in &data[..200] {
+            m.forget(o, &mut mw);
+        }
+        let ret = Tikhonov::fit(6, 1.0, &data[200..]);
+        for (a, b) in m.weights().iter().zip(ret.weights()) {
+            assert!((a - b).abs() < 1e-6, "{a} vs {b}");
+        }
+        assert!(m.drift() < 1e-7);
+    }
+
+    #[test]
+    fn property_forget_matches_retrain() {
+        crate::util::prop::check(0x71C, 12, |g| {
+            let d = g.usize_in(2, 10);
+            let s = g.usize_in(d + 1, 40);
+            let (data, _) = make_data(g.case as u64 + 50, s, d);
+            let u = g.usize_in(0, s - 1);
+            let mut dec = Tikhonov::fit(d, 1.0, &data);
+            let mut mw = NullMiddleware;
+            dec.forget(&data[u], &mut mw);
+            let mut wo = data.clone();
+            wo.remove(u);
+            let ret = Tikhonov::fit(d, 1.0, &wo);
+            for (a, b) in dec.weights().iter().zip(ret.weights()) {
+                crate::prop_assert!((a - b).abs() < 1e-6, "weight {a} vs {b} (d={d}, s={s})");
+            }
+            Ok(())
+        });
+    }
+}

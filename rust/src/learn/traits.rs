@@ -1,0 +1,116 @@
+//! The decremental-learning contract (paper §III-D) and the middleware
+//! hooks that couple UPDATE/FORGET to the device's energy manager.
+
+/// Middleware surface the learners drive: the paper's `CPU_Freq(±1/0)`
+/// DVFS hook plus page-cache access (θ-LRU may *skip* stale pages — the
+/// forgotten-data semantics).
+pub trait Middleware {
+    /// DVFS hint: +1 tune up (Alg. 1 line 8), −1 tune down (line 13),
+    /// 0 reset (line 17).
+    fn cpu_freq(&mut self, hint: i32);
+
+    /// Touch `count` pages of the region starting at `base`; returns how
+    /// many were actually serviced (θ-LRU skips beyond its round budget).
+    fn access_pages(&mut self, base: u64, count: u64) -> u64;
+}
+
+/// No-op middleware for standalone (non-simulated) library use.
+#[derive(Debug, Default, Clone, Copy)]
+pub struct NullMiddleware;
+
+impl Middleware for NullMiddleware {
+    fn cpu_freq(&mut self, _hint: i32) {}
+    fn access_pages(&mut self, _base: u64, count: u64) -> u64 {
+        count
+    }
+}
+
+/// Counting middleware used by unit tests to assert the DVFS protocol.
+#[derive(Debug, Default, Clone)]
+pub struct RecordingMiddleware {
+    pub hints: Vec<i32>,
+    pub pages_touched: u64,
+}
+
+impl Middleware for RecordingMiddleware {
+    fn cpu_freq(&mut self, hint: i32) {
+        self.hints.push(hint);
+    }
+    fn access_pages(&mut self, _base: u64, count: u64) -> u64 {
+        self.pages_touched += count;
+        count
+    }
+}
+
+/// Work accounting returned by every learner operation; feeds the paper's
+/// Eq. 3 time model (T = A·F/f + B) and Eq. 2 energy integration.
+#[derive(Debug, Clone, Copy, Default, PartialEq)]
+pub struct OpCost {
+    /// Arithmetic work in units of 10⁹ operations.
+    pub giga_ops: f64,
+    /// Pages touched (memory traffic, feeds the θ-LRU simulator).
+    pub pages: u64,
+}
+
+impl OpCost {
+    pub fn new(ops: f64, pages: u64) -> Self {
+        OpCost { giga_ops: ops / 1e9, pages }
+    }
+
+    pub fn add(&mut self, other: OpCost) {
+        self.giga_ops += other.giga_ops;
+        self.pages += other.pages;
+    }
+}
+
+/// A model with decremental semantics (paper Eq. 1):
+/// `forget(update(m, d), d) == m` and
+/// `forget(fit(D), d) == fit(D \ d)`.
+pub trait DecrementalModel {
+    /// One training datum (a user's history row, an observation, …).
+    type Datum;
+
+    /// Incrementally absorb a datum (Alg. 1/2 UPDATE).
+    fn update(&mut self, datum: &Self::Datum, mw: &mut dyn Middleware) -> OpCost;
+
+    /// Decrementally remove a datum (Alg. 1/2 FORGET).
+    fn forget(&mut self, datum: &Self::Datum, mw: &mut dyn Middleware) -> OpCost;
+
+    /// Work a full retrain over `n` data would cost (the `Original`
+    /// baseline's per-round bill).
+    fn retrain_cost(&self, n: usize) -> OpCost;
+
+    /// Model-state memory footprint in pages (for the θ-LRU capacity).
+    fn state_pages(&self) -> u64;
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn null_middleware_services_everything() {
+        let mut mw = NullMiddleware;
+        assert_eq!(mw.access_pages(0, 10), 10);
+        mw.cpu_freq(1); // no-op, must not panic
+    }
+
+    #[test]
+    fn recording_middleware_records() {
+        let mut mw = RecordingMiddleware::default();
+        mw.cpu_freq(1);
+        mw.cpu_freq(-1);
+        mw.access_pages(0, 5);
+        mw.access_pages(100, 7);
+        assert_eq!(mw.hints, vec![1, -1]);
+        assert_eq!(mw.pages_touched, 12);
+    }
+
+    #[test]
+    fn opcost_accumulates() {
+        let mut c = OpCost::new(1e9, 3);
+        c.add(OpCost::new(2e9, 4));
+        assert!((c.giga_ops - 3.0).abs() < 1e-12);
+        assert_eq!(c.pages, 7);
+    }
+}

@@ -1,0 +1,22 @@
+//! DEAL: Decremental Energy-Aware Learning in a Federated System.
+//!
+//! Full reproduction of Zou et al. (2021): a federated-learning framework
+//! that cuts worker energy with (1) a multi-armed-bandit worker-selection
+//! layer and (2) decremental learning (models that *forget*) whose
+//! UPDATE/FORGET calls drive the device's DVFS energy manager.
+//!
+//! Architecture (DESIGN.md):
+//! - L3 (this crate): coordinator, bandit selection, device/power
+//!   simulation, decremental learner engines, bench harness.
+//! - L2/L1 (python/, build-time only): JAX graphs + Pallas kernels,
+//!   AOT-lowered to `artifacts/*.hlo.txt`, executed from
+//!   [`runtime`] via PJRT. Python never runs on the request path.
+
+pub mod bandit;
+pub mod coordinator;
+pub mod data;
+pub mod learn;
+pub mod memsim;
+pub mod power;
+pub mod runtime;
+pub mod util;

@@ -1,0 +1,235 @@
+//! `deal` — leader entrypoint for the DEAL federated-learning system.
+//!
+//! Subcommands:
+//!   run        drive a federation over the threaded PUB/SUB topology
+//!   profiles   print the paper's Table I device profiles
+//!   artifacts  verify + smoke-execute the AOT artifacts (PJRT)
+//!   leak       run the Fig. 1 privacy-leak demonstration
+
+use deal::bandit::{SelectAll, Selector, SelectorConfig, SleepingBandit};
+use deal::coordinator::fleet::{build_devices, FleetConfig};
+use deal::coordinator::pubsub::{Broker, PubMsg};
+use deal::coordinator::{ModelKind, Scheme};
+use deal::data::events::generate_events;
+use deal::data::Dataset;
+use deal::learn::recovery;
+use deal::power::profile::table1_profiles;
+use deal::runtime::{Engine, Registry, Tensor};
+use deal::util::cli::Cli;
+use deal::util::tables::{fmt_uah, Table};
+
+fn main() {
+    let mut args: Vec<String> = std::env::args().skip(1).collect();
+    let cmd = if args.is_empty() { "help".to_string() } else { args.remove(0) };
+    let code = match cmd.as_str() {
+        "run" => cmd_run(args),
+        "profiles" => cmd_profiles(),
+        "artifacts" => cmd_artifacts(args),
+        "leak" => cmd_leak(),
+        _ => {
+            println!(
+                "deal — Decremental Energy-Aware Learning\n\n\
+                 USAGE: deal <run|profiles|artifacts|leak> [flags]\n\
+                 Try: deal run --help"
+            );
+            0
+        }
+    };
+    std::process::exit(code);
+}
+
+fn cmd_run(args: Vec<String>) -> i32 {
+    let cli = Cli::new("deal run", "drive a federation over the PUB/SUB broker")
+        .flag("dataset", "movielens", "dataset (paper §IV-A name)")
+        .flag("model", "auto", "ppr|knn|nb|tikhonov (auto = paper default)")
+        .flag("scheme", "deal", "deal|original|newfl")
+        .flag("devices", "16", "fleet size")
+        .flag("rounds", "20", "federated rounds")
+        .flag("m", "4", "max selected per round (DEAL)")
+        .flag("theta", "0.3", "forget degree θ")
+        .flag("scale", "0.05", "dataset scale (0,1]")
+        .flag("seed", "1", "experiment seed")
+        .switch("quiet", "suppress per-round lines");
+    let a = match cli.parse(args) {
+        Ok(a) => a,
+        Err(deal::util::cli::CliError::Help) => {
+            println!("{}", cli.usage());
+            return 0;
+        }
+        Err(e) => {
+            eprintln!("error: {e}");
+            return 2;
+        }
+    };
+    let dataset = match Dataset::from_name(a.get("dataset")) {
+        Some(d) => d,
+        None => {
+            eprintln!("unknown dataset {:?}", a.get("dataset"));
+            return 2;
+        }
+    };
+    let scheme = Scheme::from_name(a.get("scheme")).unwrap_or(Scheme::Deal);
+    let model = match a.get("model") {
+        "auto" => None,
+        m => ModelKind::from_name(m),
+    };
+    let cfg = FleetConfig {
+        n_devices: a.get_usize("devices").unwrap(),
+        dataset,
+        scale: a.get_f64("scale").unwrap(),
+        model,
+        scheme,
+        theta: a.get_f64("theta").unwrap(),
+        m: a.get_usize("m").unwrap(),
+        seed: a.get_u64("seed").unwrap(),
+        ..FleetConfig::default()
+    };
+    let rounds = a.get_usize("rounds").unwrap();
+    let quiet = a.get_bool("quiet");
+
+    println!(
+        "federation: {} devices, {} on {}, scheme {}",
+        cfg.n_devices,
+        cfg.model.map_or("auto", |m| m.name()),
+        dataset.name(),
+        scheme.name()
+    );
+    // threaded PUB/SUB topology
+    let broker = Broker::spawn(build_devices(&cfg));
+    let mut selector: Box<dyn Selector> = if scheme.uses_selection() {
+        Box::new(SleepingBandit::new(
+            cfg.n_devices,
+            SelectorConfig { m: cfg.m, min_fraction: cfg.min_fraction, gamma: 20.0 },
+        ))
+    } else {
+        Box::new(SelectAll)
+    };
+    let ttl = cfg.ttl_s;
+    let mut clock = 0.0f64;
+    let mut total_energy = 0.0f64;
+    for round in 1..=rounds as u64 {
+        let available = broker.probe_availability();
+        let selected = selector.select(&available);
+        let replies = broker.publish_round(
+            &selected,
+            PubMsg { round, scheme, arrivals: cfg.arrivals_per_round, theta: cfg.theta },
+        );
+        let round_time = if replies.is_empty() {
+            0.0
+        } else if scheme.majority_aggregation() {
+            replies[replies.len() / 2].1.time_s.min(ttl)
+        } else {
+            replies.last().unwrap().1.time_s
+        };
+        let energy: f64 = replies.iter().map(|r| r.1.energy_uah).sum();
+        for (w, out) in &replies {
+            let lat = (1.0 - out.time_s / ttl).clamp(0.0, 1.0);
+            selector.observe(*w, lat);
+        }
+        clock += round_time;
+        total_energy += energy;
+        if !quiet {
+            println!(
+                "round {round:>3}: avail {:>2}  selected {:>2}  t={:>8.3}s  e={}",
+                available.len(),
+                selected.len(),
+                round_time,
+                fmt_uah(energy)
+            );
+        }
+    }
+    broker.shutdown();
+    println!(
+        "done: {} rounds, virtual time {:.2}s, total energy {}",
+        rounds,
+        clock,
+        fmt_uah(total_energy)
+    );
+    0
+}
+
+fn cmd_profiles() -> i32 {
+    let mut t = Table::new(
+        "Table I — device profiles",
+        &["Device", "Android", "#Core", "Max Freq", "Battery", "DVFS steps"],
+    );
+    for p in table1_profiles() {
+        t.row([
+            p.name.to_string(),
+            p.android_version.to_string(),
+            p.cores.to_string(),
+            format!("{:.2}GHz", p.max_freq_ghz()),
+            format!("{:.0}mAh", p.battery_uah / 1000.0),
+            p.n_freq_steps().to_string(),
+        ]);
+    }
+    print!("{}", t.render());
+    0
+}
+
+fn cmd_artifacts(args: Vec<String>) -> i32 {
+    let dir = args
+        .first()
+        .cloned()
+        .unwrap_or_else(|| Registry::default_dir().display().to_string());
+    let reg = match Registry::load(&dir) {
+        Ok(r) => r,
+        Err(e) => {
+            eprintln!("error: {e}");
+            return 1;
+        }
+    };
+    println!("artifacts in {dir}: {}", reg.len());
+    for name in reg.names() {
+        let meta = reg.get(name).unwrap();
+        println!(
+            "  {name}: {} in / {} out, {}",
+            meta.inputs.len(),
+            meta.outputs.len(),
+            meta.path.file_name().unwrap().to_string_lossy()
+        );
+    }
+    // smoke-execute one artifact through PJRT
+    let mut engine = match Engine::new(reg) {
+        Ok(e) => e,
+        Err(e) => {
+            eprintln!("engine error: {e}");
+            return 1;
+        }
+    };
+    let h = Tensor::vec(vec![1.0; 32]);
+    let x = Tensor::matrix(8, 32, vec![0.5; 256]);
+    match engine.call("tikhonov_predict", &[h, x]) {
+        Ok(out) => {
+            println!(
+                "smoke ok on {}: tikhonov_predict -> {:?} (16.0 expected)",
+                engine.platform(),
+                &out[0].data[..2]
+            );
+            0
+        }
+        Err(e) => {
+            eprintln!("smoke failed: {e}");
+            1
+        }
+    }
+}
+
+fn cmd_leak() -> i32 {
+    // compact version of examples/gdpr_forget.rs
+    use deal::learn::DecrementalModel;
+    let log = generate_events(7, 60, 300, 3, 40);
+    let hist = log.user_histories();
+    let model = deal::learn::Ppr::fit(log.items, 10, &hist);
+    let stale_counts = model.counts().to_vec();
+    let mut after = model.clone();
+    let mut mw = deal::learn::NullMiddleware;
+    after.forget(&hist[0], &mut mw);
+    let recovered = recovery::recover_deleted_items_exact(&stale_counts, after.counts());
+    println!(
+        "user 0 deleted {} items; stale-model attack recovered {} of them",
+        hist[0].len(),
+        recovered.iter().filter(|i| hist[0].contains(i)).count()
+    );
+    0
+}

@@ -1,0 +1,350 @@
+//! Paged-memory simulator with LRU and the paper's θ-LRU policy (§III-D).
+//!
+//! The paper: training "repeatedly retrieve[s] all local data from memory
+//! …causing a large number of page faults"; the DEAL middleware "adapts a
+//! θ-LRU, that only replaces θ-percent of allocated pages recently used",
+//! reducing page replacement frequency and swap count (claimed: up to 378
+//! swaps saved in one round at θ=30%, I=1000 — see `benches/ablation_theta`).
+//!
+//! Model: a resident set of `capacity` page frames over a virtual page
+//! space. Under plain LRU every miss evicts the least-recently-used frame.
+//! Under θ-LRU a training *round* may replace at most ⌈θ·capacity⌉ frames;
+//! once the budget is exhausted further misses are *skipped* — the access
+//! is not serviced (the datum is treated as forgotten, exactly the
+//! data-reduction semantics of decremental learning: stale pages are the
+//! old data the model no longer trains on).
+
+use std::collections::HashMap;
+use std::hash::{BuildHasherDefault, Hasher};
+
+/// Multiplicative hasher for u64 page ids (perf: the default SipHash cost
+/// dominated `access()` — EXPERIMENTS.md §Perf). Fibonacci hashing gives
+/// adequate dispersion for sequential/strided page ids.
+#[derive(Default)]
+pub struct PageHasher(u64);
+
+impl Hasher for PageHasher {
+    #[inline]
+    fn finish(&self) -> u64 {
+        self.0
+    }
+    #[inline]
+    fn write(&mut self, bytes: &[u8]) {
+        // only u64 keys are ever hashed here
+        let mut buf = [0u8; 8];
+        let n = bytes.len().min(8);
+        buf[..n].copy_from_slice(&bytes[..n]);
+        self.write_u64(u64::from_le_bytes(buf));
+    }
+    #[inline]
+    fn write_u64(&mut self, x: u64) {
+        let h = x.wrapping_mul(0x9E37_79B9_7F4A_7C15);
+        self.0 = h ^ (h >> 29);
+    }
+}
+
+type PageMap = HashMap<u64, usize, BuildHasherDefault<PageHasher>>;
+
+/// Replacement policy.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub enum Replacement {
+    /// Classic LRU — every miss swaps.
+    Lru,
+    /// θ-LRU: per-round swap budget of ⌈θ·capacity⌉ (paper §III-D).
+    ThetaLru { theta: f64 },
+}
+
+/// Access outcome, reported to the caller so the learner can skip
+/// forgotten data under θ-LRU.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Access {
+    Hit,
+    /// Miss serviced by a swap (page fault + replacement).
+    Fault,
+    /// Miss *not* serviced: swap budget exhausted (θ-LRU only).
+    Skipped,
+}
+
+/// Counters for one cache lifetime.
+#[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
+pub struct PageStats {
+    pub hits: u64,
+    pub faults: u64,
+    pub swaps: u64,
+    pub skipped: u64,
+}
+
+impl PageStats {
+    pub fn accesses(&self) -> u64 {
+        self.hits + self.faults + self.skipped
+    }
+}
+
+/// The page cache simulator.
+///
+/// LRU order is kept with an intrusive doubly-linked list over a slab of
+/// frames (O(1) hit/evict — this is on the simulated hot path for every
+/// data access in every experiment, see EXPERIMENTS.md §Perf).
+#[derive(Debug)]
+pub struct PageCache {
+    capacity: usize,
+    policy: Replacement,
+    /// page id -> frame index
+    map: PageMap,
+    /// frame slab: (page, prev, next); usize::MAX is the null link.
+    frames: Vec<(u64, usize, usize)>,
+    head: usize, // most recently used
+    tail: usize, // least recently used
+    stats: PageStats,
+    round_swaps: u64,
+    round_budget: u64,
+}
+
+const NIL: usize = usize::MAX;
+
+impl PageCache {
+    pub fn new(capacity: usize, policy: Replacement) -> Self {
+        assert!(capacity > 0);
+        let round_budget = match policy {
+            Replacement::Lru => u64::MAX,
+            Replacement::ThetaLru { theta } => {
+                ((theta.clamp(0.0, 1.0) * capacity as f64).ceil() as u64).max(1)
+            }
+        };
+        PageCache {
+            capacity,
+            policy,
+            map: PageMap::with_capacity_and_hasher(capacity * 2, Default::default()),
+            frames: Vec::with_capacity(capacity),
+            head: NIL,
+            tail: NIL,
+            stats: PageStats::default(),
+            round_swaps: 0,
+            round_budget,
+        }
+    }
+
+    pub fn capacity(&self) -> usize {
+        self.capacity
+    }
+
+    pub fn policy(&self) -> Replacement {
+        self.policy
+    }
+
+    pub fn stats(&self) -> PageStats {
+        self.stats
+    }
+
+    pub fn resident(&self) -> usize {
+        self.map.len()
+    }
+
+    /// Per-round swap budget (θ-LRU); u64::MAX for plain LRU.
+    pub fn round_budget(&self) -> u64 {
+        self.round_budget
+    }
+
+    /// Start a new training round: reset the θ-LRU swap budget.
+    pub fn begin_round(&mut self) {
+        self.round_swaps = 0;
+    }
+
+    /// Access one page.
+    pub fn access(&mut self, page: u64) -> Access {
+        if let Some(&idx) = self.map.get(&page) {
+            self.stats.hits += 1;
+            self.move_to_head(idx);
+            return Access::Hit;
+        }
+        // miss
+        if self.frames.len() < self.capacity {
+            // free frame: fill without eviction (cold fault, no swap-out)
+            self.stats.faults += 1;
+            let idx = self.frames.len();
+            self.frames.push((page, NIL, NIL));
+            self.map.insert(page, idx);
+            self.link_head(idx);
+            return Access::Fault;
+        }
+        if self.round_swaps >= self.round_budget {
+            self.stats.skipped += 1;
+            return Access::Skipped;
+        }
+        // evict LRU tail
+        self.stats.faults += 1;
+        self.stats.swaps += 1;
+        self.round_swaps += 1;
+        let victim = self.tail;
+        let old_page = self.frames[victim].0;
+        self.map.remove(&old_page);
+        self.unlink(victim);
+        self.frames[victim].0 = page;
+        self.map.insert(page, victim);
+        self.link_head(victim);
+        Access::Fault
+    }
+
+    /// Sweep an access sequence; returns (#hits, #faults, #skipped).
+    pub fn access_all<I: IntoIterator<Item = u64>>(&mut self, pages: I) -> (u64, u64, u64) {
+        let (mut h, mut f, mut s) = (0, 0, 0);
+        for p in pages {
+            match self.access(p) {
+                Access::Hit => h += 1,
+                Access::Fault => f += 1,
+                Access::Skipped => s += 1,
+            }
+        }
+        (h, f, s)
+    }
+
+    fn unlink(&mut self, idx: usize) {
+        let (_, prev, next) = self.frames[idx];
+        if prev != NIL {
+            self.frames[prev].2 = next;
+        } else {
+            self.head = next;
+        }
+        if next != NIL {
+            self.frames[next].1 = prev;
+        } else {
+            self.tail = prev;
+        }
+        self.frames[idx].1 = NIL;
+        self.frames[idx].2 = NIL;
+    }
+
+    fn link_head(&mut self, idx: usize) {
+        self.frames[idx].1 = NIL;
+        self.frames[idx].2 = self.head;
+        if self.head != NIL {
+            self.frames[self.head].1 = idx;
+        }
+        self.head = idx;
+        if self.tail == NIL {
+            self.tail = idx;
+        }
+    }
+
+    fn move_to_head(&mut self, idx: usize) {
+        if self.head == idx {
+            return;
+        }
+        self.unlink(idx);
+        self.link_head(idx);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn hits_after_fill() {
+        let mut c = PageCache::new(4, Replacement::Lru);
+        for p in 0..4 {
+            assert_eq!(c.access(p), Access::Fault);
+        }
+        for p in 0..4 {
+            assert_eq!(c.access(p), Access::Hit);
+        }
+        assert_eq!(c.stats().hits, 4);
+        assert_eq!(c.stats().faults, 4);
+        assert_eq!(c.stats().swaps, 0, "cold faults are not swaps");
+    }
+
+    #[test]
+    fn lru_evicts_least_recent() {
+        let mut c = PageCache::new(3, Replacement::Lru);
+        c.access_all([1, 2, 3]);
+        c.access(1); // 2 is now LRU
+        c.access(4); // evicts 2
+        assert_eq!(c.access(1), Access::Hit);
+        assert_eq!(c.access(3), Access::Hit);
+        assert_eq!(c.access(2), Access::Fault, "2 was evicted");
+    }
+
+    #[test]
+    fn lru_cyclic_thrash() {
+        // classic worst case: cycle of capacity+1 pages faults every time
+        let mut c = PageCache::new(4, Replacement::Lru);
+        for _ in 0..5 {
+            for p in 0..5u64 {
+                c.access(p);
+            }
+        }
+        assert_eq!(c.stats().hits, 0);
+    }
+
+    #[test]
+    fn theta_lru_bounds_swaps_per_round() {
+        let mut c = PageCache::new(10, Replacement::ThetaLru { theta: 0.3 });
+        assert_eq!(c.round_budget(), 3);
+        c.begin_round();
+        c.access_all(0..10u64); // cold fill, no swaps
+        let (_, _, skipped) = c.access_all(10..30u64); // 20 misses, 3 swaps max
+        assert_eq!(c.stats().swaps, 3);
+        assert_eq!(skipped, 17);
+    }
+
+    #[test]
+    fn theta_budget_resets_per_round() {
+        let mut c = PageCache::new(10, Replacement::ThetaLru { theta: 0.2 });
+        c.access_all(0..10u64);
+        c.begin_round();
+        c.access_all(10..20u64);
+        assert_eq!(c.stats().swaps, 2);
+        c.begin_round();
+        c.access_all(20..30u64);
+        assert_eq!(c.stats().swaps, 4);
+    }
+
+    #[test]
+    fn theta_one_with_fresh_rounds_equals_lru() {
+        // with the budget reset before every access, θ-LRU never clamps
+        // and must behave exactly like LRU on any trace.
+        let accesses: Vec<u64> = (0..200).map(|i| (i * 7) % 37).collect();
+        let mut lru = PageCache::new(16, Replacement::Lru);
+        let mut t1 = PageCache::new(16, Replacement::ThetaLru { theta: 1.0 });
+        for &p in &accesses {
+            t1.begin_round();
+            assert_eq!(lru.access(p), t1.access(p));
+        }
+        assert_eq!(lru.stats(), t1.stats());
+    }
+
+    #[test]
+    fn theta_reduces_swaps_on_thrash() {
+        // the paper's claim: θ-LRU cuts swap count on scan-heavy rounds
+        let mut lru = PageCache::new(50, Replacement::Lru);
+        let mut theta = PageCache::new(50, Replacement::ThetaLru { theta: 0.3 });
+        for _ in 0..10 {
+            theta.begin_round();
+            for p in 0..200u64 {
+                lru.access(p);
+                theta.access(p);
+            }
+        }
+        assert!(
+            theta.stats().swaps < lru.stats().swaps / 5,
+            "theta={} lru={}",
+            theta.stats().swaps,
+            lru.stats().swaps
+        );
+    }
+
+    #[test]
+    fn stats_add_up() {
+        let mut c = PageCache::new(8, Replacement::ThetaLru { theta: 0.5 });
+        c.begin_round();
+        c.access_all((0..100u64).map(|i| i % 23));
+        let s = c.stats();
+        assert_eq!(s.accesses(), 100);
+    }
+
+    #[test]
+    fn budget_is_at_least_one() {
+        let c = PageCache::new(4, Replacement::ThetaLru { theta: 0.0 });
+        assert_eq!(c.round_budget(), 1);
+    }
+}

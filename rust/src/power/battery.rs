@@ -1,0 +1,104 @@
+//! Battery model: capacity, drain, drop-out.
+//!
+//! A drained device violates the round TTL and is treated as "sleeping"
+//! by the global layer (it leaves the sleeping-bandit availability set
+//! G(k) — paper §III-B).
+
+/// Battery state of one simulated device.
+#[derive(Debug, Clone)]
+pub struct Battery {
+    capacity_uah: f64,
+    level_uah: f64,
+    /// Below this fraction the device refuses training jobs.
+    low_water_frac: f64,
+}
+
+impl Battery {
+    pub fn new(capacity_uah: f64) -> Self {
+        Battery { capacity_uah, level_uah: capacity_uah, low_water_frac: 0.05 }
+    }
+
+    pub fn with_level(capacity_uah: f64, frac: f64) -> Self {
+        Battery {
+            capacity_uah,
+            level_uah: capacity_uah * frac.clamp(0.0, 1.0),
+            low_water_frac: 0.05,
+        }
+    }
+
+    pub fn capacity_uah(&self) -> f64 {
+        self.capacity_uah
+    }
+
+    pub fn level_uah(&self) -> f64 {
+        self.level_uah
+    }
+
+    pub fn fraction(&self) -> f64 {
+        self.level_uah / self.capacity_uah
+    }
+
+    /// Drain by a measured charge; returns false if the battery hit empty
+    /// (the drain is clamped).
+    pub fn drain(&mut self, uah: f64) -> bool {
+        debug_assert!(uah >= 0.0);
+        self.level_uah -= uah;
+        if self.level_uah <= 0.0 {
+            self.level_uah = 0.0;
+            false
+        } else {
+            true
+        }
+    }
+
+    /// Recharge by a charge amount (clamped at capacity).
+    pub fn charge(&mut self, uah: f64) {
+        self.level_uah = (self.level_uah + uah).min(self.capacity_uah);
+    }
+
+    /// Device will participate in training only above the low-water mark.
+    pub fn can_train(&self) -> bool {
+        self.fraction() > self.low_water_frac
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn starts_full() {
+        let b = Battery::new(1000.0);
+        assert_eq!(b.fraction(), 1.0);
+        assert!(b.can_train());
+    }
+
+    #[test]
+    fn drain_and_empty() {
+        let mut b = Battery::new(100.0);
+        assert!(b.drain(60.0));
+        assert!((b.level_uah() - 40.0).abs() < 1e-12);
+        assert!(!b.drain(50.0));
+        assert_eq!(b.level_uah(), 0.0);
+    }
+
+    #[test]
+    fn low_water_blocks_training() {
+        let mut b = Battery::new(100.0);
+        b.drain(96.0);
+        assert!(!b.can_train());
+    }
+
+    #[test]
+    fn charge_clamps_at_capacity() {
+        let mut b = Battery::with_level(100.0, 0.5);
+        b.charge(500.0);
+        assert_eq!(b.level_uah(), 100.0);
+    }
+
+    #[test]
+    fn with_level_clamps_fraction() {
+        let b = Battery::with_level(100.0, 2.0);
+        assert_eq!(b.level_uah(), 100.0);
+    }
+}

@@ -1,0 +1,216 @@
+//! DVFS governor state machines (substrate for the paper's §III-D
+//! `CPU_Freq(±1/0)` control hooks).
+//!
+//! The paper's middleware exposes three knobs: `CPU_Freq(1)` before an
+//! incremental UPDATE (work is coming — ramp up), `CPU_Freq(-1)` inside
+//! FORGET (demand is shrinking — ramp down), `CPU_Freq(0)` reset. Whether
+//! the hint is honored depends on the active governor:
+//! `interactive`/`ondemand` follow utilization, `performance`/`powersave`
+//! pin the ladder ends, and DEAL's `deal-aggressive` policy follows the
+//! hints directly (the "allow aggressive DVFS" configuration of Fig. 3).
+
+use super::profile::DeviceProfile;
+
+/// Governor policy (mirrors Android cpufreq governors + DEAL's).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Policy {
+    /// Pin max frequency.
+    Performance,
+    /// Pin min frequency.
+    Powersave,
+    /// Android default: ramp toward a target tracking utilization.
+    Interactive,
+    /// Follow `CPU_Freq(±1)` hints from the learning middleware (DEAL).
+    DealAggressive,
+    /// Hold a fixed ladder step (the paper's "under different CPU
+    /// frequencies" sweeps in Figs. 3/6).
+    Fixed(usize),
+}
+
+impl Policy {
+    pub fn name(&self) -> String {
+        match self {
+            Policy::Performance => "performance".into(),
+            Policy::Powersave => "powersave".into(),
+            Policy::Interactive => "interactive".into(),
+            Policy::DealAggressive => "deal-aggressive".into(),
+            Policy::Fixed(s) => format!("fixed[{s}]"),
+        }
+    }
+}
+
+/// A DVFS governor instance bound to one device profile.
+#[derive(Debug, Clone)]
+pub struct Governor {
+    pub policy: Policy,
+    step: usize,
+    n_steps: usize,
+    /// Interactive: hysteresis counters.
+    above_count: u32,
+    below_count: u32,
+}
+
+impl Governor {
+    pub fn new(profile: &DeviceProfile, policy: Policy) -> Self {
+        let n_steps = profile.n_freq_steps();
+        let step = match policy {
+            Policy::Performance => n_steps - 1,
+            Policy::Powersave => 0,
+            Policy::Interactive => n_steps / 2,
+            Policy::DealAggressive => n_steps / 2,
+            Policy::Fixed(s) => s.min(n_steps - 1),
+        };
+        Governor { policy, step, n_steps, above_count: 0, below_count: 0 }
+    }
+
+    /// Current ladder step.
+    pub fn step(&self) -> usize {
+        self.step
+    }
+
+    /// The paper's `CPU_Freq(hint)` middleware hook: +1 tune up, -1 tune
+    /// down, 0 reset to the policy's resting point. Only `DealAggressive`
+    /// honors hints (and `Interactive` treats them as utilization nudges).
+    pub fn cpu_freq_hint(&mut self, hint: i32) {
+        match self.policy {
+            Policy::DealAggressive => match hint.signum() {
+                1 => self.step = (self.step + 1).min(self.n_steps - 1),
+                -1 => self.step = self.step.saturating_sub(1),
+                _ => self.step = self.n_steps / 2,
+            },
+            Policy::Interactive => {
+                // hints act as a mild bias; the ramp logic stays
+                // utilization-driven (tick()).
+                if hint > 0 {
+                    self.above_count += 1;
+                } else if hint < 0 {
+                    self.below_count += 1;
+                }
+            }
+            _ => {}
+        }
+    }
+
+    /// Periodic utilization sample (interactive/ondemand ramping).
+    /// `util` in [0,1]; call once per scheduling quantum.
+    pub fn tick(&mut self, util: f64) {
+        if self.policy != Policy::Interactive {
+            return;
+        }
+        const UP: f64 = 0.80;
+        const DOWN: f64 = 0.30;
+        if util > UP {
+            self.above_count += 1;
+            self.below_count = 0;
+            if self.above_count >= 1 {
+                self.step = (self.step + 1).min(self.n_steps - 1);
+                self.above_count = 0;
+            }
+        } else if util < DOWN {
+            self.below_count += 1;
+            self.above_count = 0;
+            // hysteresis: require two consecutive low samples to drop
+            if self.below_count >= 2 {
+                self.step = self.step.saturating_sub(1);
+                self.below_count = 0;
+            }
+        } else {
+            self.above_count = 0;
+            self.below_count = 0;
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::power::profile::honor;
+
+    #[test]
+    fn performance_pins_max() {
+        let p = honor();
+        let mut g = Governor::new(&p, Policy::Performance);
+        assert_eq!(g.step(), p.n_freq_steps() - 1);
+        g.cpu_freq_hint(-1);
+        g.tick(0.0);
+        assert_eq!(g.step(), p.n_freq_steps() - 1);
+    }
+
+    #[test]
+    fn powersave_pins_min() {
+        let p = honor();
+        let mut g = Governor::new(&p, Policy::Powersave);
+        g.cpu_freq_hint(1);
+        g.tick(1.0);
+        assert_eq!(g.step(), 0);
+    }
+
+    #[test]
+    fn fixed_holds_step() {
+        let p = honor();
+        let mut g = Governor::new(&p, Policy::Fixed(3));
+        g.cpu_freq_hint(1);
+        g.tick(1.0);
+        assert_eq!(g.step(), 3);
+    }
+
+    #[test]
+    fn fixed_clamps_to_ladder() {
+        let p = honor();
+        let g = Governor::new(&p, Policy::Fixed(99));
+        assert_eq!(g.step(), p.n_freq_steps() - 1);
+    }
+
+    #[test]
+    fn deal_aggressive_follows_hints() {
+        let p = honor();
+        let mut g = Governor::new(&p, Policy::DealAggressive);
+        let mid = g.step();
+        g.cpu_freq_hint(1);
+        assert_eq!(g.step(), mid + 1);
+        g.cpu_freq_hint(-1);
+        g.cpu_freq_hint(-1);
+        assert_eq!(g.step(), mid - 1);
+        g.cpu_freq_hint(0);
+        assert_eq!(g.step(), mid);
+    }
+
+    #[test]
+    fn deal_aggressive_saturates() {
+        let p = honor();
+        let mut g = Governor::new(&p, Policy::DealAggressive);
+        for _ in 0..100 {
+            g.cpu_freq_hint(-1);
+        }
+        assert_eq!(g.step(), 0);
+        for _ in 0..100 {
+            g.cpu_freq_hint(1);
+        }
+        assert_eq!(g.step(), p.n_freq_steps() - 1);
+    }
+
+    #[test]
+    fn interactive_ramps_with_utilization() {
+        let p = honor();
+        let mut g = Governor::new(&p, Policy::Interactive);
+        let start = g.step();
+        g.tick(0.95);
+        assert_eq!(g.step(), start + 1);
+        // two low samples required to drop (hysteresis)
+        g.tick(0.1);
+        assert_eq!(g.step(), start + 1);
+        g.tick(0.1);
+        assert_eq!(g.step(), start);
+    }
+
+    #[test]
+    fn interactive_mid_band_is_stable() {
+        let p = honor();
+        let mut g = Governor::new(&p, Policy::Interactive);
+        let start = g.step();
+        for _ in 0..10 {
+            g.tick(0.5);
+        }
+        assert_eq!(g.step(), start);
+    }
+}

@@ -1,0 +1,18 @@
+//! Device power simulation substrate: Table I profiles, DVFS governors,
+//! the paper's Eq. 2 energy integrator and Eq. 3 completion-time model,
+//! and a battery with training drop-out.
+//!
+//! Substitution note (DESIGN.md §2): the paper measured real phones with
+//! a Monsoon power monitor; this module computes the same quantities from
+//! the paper's own published models, so scheme-vs-scheme comparisons are
+//! preserved even though absolute µAh differ from their testbed.
+
+pub mod battery;
+pub mod energy;
+pub mod governor;
+pub mod profile;
+
+pub use battery::Battery;
+pub use energy::EnergyMeter;
+pub use governor::{Governor, Policy};
+pub use profile::{table1_profiles, DeviceProfile};

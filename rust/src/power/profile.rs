@@ -1,0 +1,241 @@
+//! Device profiles — paper Table I, plus the derived DVFS ladder and
+//! power-model coefficients the simulator needs.
+//!
+//! The paper measured five Android phones with a Monsoon power monitor;
+//! offline we encode each phone's published frequency ladder shape and a
+//! utilization→current model of the paper's own Eq. 2 form (their ref
+//! [12] fits current linear in utilization with a frequency-dependent
+//! coefficient; superlinear in frequency because voltage scales with f).
+
+/// Static power state of a non-CPU component (paper's `e_j`, modeled as a
+/// state machine per their refs [16], [17]).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum ComponentState {
+    /// Component fully active (screen on / radio transmitting).
+    Active,
+    /// Low-power retention state.
+    Idle,
+    /// Deep sleep.
+    Sleep,
+}
+
+/// One auxiliary component with per-state current draw (µA).
+#[derive(Debug, Clone)]
+pub struct Component {
+    pub name: &'static str,
+    pub active_ua: f64,
+    pub idle_ua: f64,
+    pub sleep_ua: f64,
+    pub state: ComponentState,
+}
+
+impl Component {
+    pub fn current_ua(&self) -> f64 {
+        match self.state {
+            ComponentState::Active => self.active_ua,
+            ComponentState::Idle => self.idle_ua,
+            ComponentState::Sleep => self.sleep_ua,
+        }
+    }
+}
+
+/// A device profile: Table I row + simulation coefficients.
+#[derive(Debug, Clone)]
+pub struct DeviceProfile {
+    pub name: &'static str,
+    pub android_version: &'static str,
+    pub cores: u32,
+    /// DVFS ladder in GHz, ascending. `max_freq_ghz` is the last entry.
+    pub freqs_ghz: Vec<f64>,
+    /// CPU current draw at 100% utilization per ladder step (µA). The
+    /// paper's `f_CPU` coefficient: e_cpu = f_CPU(f) · Ū per unit time.
+    pub cpu_active_ua: Vec<f64>,
+    /// CPU idle floor (µA), frequency-independent leakage.
+    pub cpu_idle_ua: f64,
+    /// Auxiliary components (screen, radio, memory/IO).
+    pub components: Vec<Component>,
+    /// Battery capacity (µAh).
+    pub battery_uah: f64,
+    /// Eq. 3 calibration: T = time_a * ops / freq + time_b.
+    /// `time_a` is seconds per (giga-op / GHz); `time_b` fixed overhead s.
+    pub time_a: f64,
+    pub time_b: f64,
+}
+
+impl DeviceProfile {
+    pub fn max_freq_ghz(&self) -> f64 {
+        *self.freqs_ghz.last().unwrap()
+    }
+
+    pub fn n_freq_steps(&self) -> usize {
+        self.freqs_ghz.len()
+    }
+
+    /// CPU current (µA) at ladder step `step` and utilization `util`∈[0,1]
+    /// — the integrand of Eq. 2 restated in current terms.
+    pub fn cpu_current_ua(&self, step: usize, util: f64) -> f64 {
+        let util = util.clamp(0.0, 1.0);
+        self.cpu_idle_ua + self.cpu_active_ua[step] * util
+    }
+
+    /// Completion time (s) of `giga_ops` of training work at ladder step
+    /// `step` (paper Eq. 3 with F = work/freq; A,B profile-calibrated).
+    pub fn completion_time_s(&self, step: usize, giga_ops: f64) -> f64 {
+        let f = self.freqs_ghz[step];
+        self.time_a * giga_ops / (f * self.cores as f64) + self.time_b
+    }
+}
+
+/// Build a ladder of `steps` frequencies from fmin to fmax with the
+/// superlinear current curve i(f) = base·(f/fmax)·(v(f)/vmax)² where
+/// voltage ramps linearly over the ladder (classic DVFS cubic-ish shape).
+fn ladder(fmax_ghz: f64, steps: usize, active_ua_at_max: f64) -> (Vec<f64>, Vec<f64>) {
+    let fmin = fmax_ghz * 0.35;
+    let mut freqs = Vec::with_capacity(steps);
+    let mut currents = Vec::with_capacity(steps);
+    for i in 0..steps {
+        let t = i as f64 / (steps - 1) as f64;
+        let f = fmin + t * (fmax_ghz - fmin);
+        let v = 0.7 + 0.3 * t; // normalized voltage ramp
+        freqs.push(f);
+        currents.push(active_ua_at_max * (f / fmax_ghz) * v * v);
+    }
+    (freqs, currents)
+}
+
+fn phone(
+    name: &'static str,
+    android_version: &'static str,
+    cores: u32,
+    fmax: f64,
+    active_ua_at_max: f64,
+    battery_mah: f64,
+) -> DeviceProfile {
+    let (freqs_ghz, cpu_active_ua) = ladder(fmax, 8, active_ua_at_max);
+    DeviceProfile {
+        name,
+        android_version,
+        cores,
+        freqs_ghz,
+        cpu_active_ua,
+        cpu_idle_ua: 18_000.0,
+        components: vec![
+            Component {
+                name: "screen",
+                active_ua: 180_000.0,
+                idle_ua: 25_000.0,
+                sleep_ua: 0.0,
+                state: ComponentState::Idle,
+            },
+            Component {
+                name: "radio",
+                active_ua: 120_000.0,
+                idle_ua: 8_000.0,
+                sleep_ua: 1_000.0,
+                state: ComponentState::Idle,
+            },
+            Component {
+                name: "mem_io",
+                active_ua: 60_000.0,
+                idle_ua: 4_000.0,
+                sleep_ua: 500.0,
+                state: ComponentState::Idle,
+            },
+        ],
+        battery_uah: battery_mah * 1000.0,
+        time_a: 2.2,
+        time_b: 0.008,
+    }
+}
+
+/// The five phones of paper Table I.
+pub fn table1_profiles() -> Vec<DeviceProfile> {
+    vec![
+        phone("Honor", "8.0", 8, 2.11, 310_000.0, 3000.0),
+        phone("Lenovo", "5.0.2", 4, 1.04, 180_000.0, 2300.0),
+        phone("ZTE", "5.1.1", 4, 1.09, 185_000.0, 2400.0),
+        phone("Mi", "5.1.1", 6, 1.44, 230_000.0, 3100.0),
+        phone("Nexus", "6.0", 4, 2.65, 380_000.0, 3220.0),
+    ]
+}
+
+/// Profile by Table I name (case-insensitive).
+pub fn profile_by_name(name: &str) -> Option<DeviceProfile> {
+    table1_profiles()
+        .into_iter()
+        .find(|p| p.name.eq_ignore_ascii_case(name))
+}
+
+/// The paper's testbed phone for Figs. 3/6 ("Huawei Honor 8 Lite").
+pub fn honor() -> DeviceProfile {
+    profile_by_name("Honor").unwrap()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn table1_matches_paper() {
+        let ps = table1_profiles();
+        assert_eq!(ps.len(), 5);
+        let honor = &ps[0];
+        assert_eq!(honor.cores, 8);
+        assert!((honor.max_freq_ghz() - 2.11).abs() < 1e-9);
+        let nexus = &ps[4];
+        assert_eq!(nexus.android_version, "6.0");
+        assert!((nexus.max_freq_ghz() - 2.65).abs() < 1e-9);
+    }
+
+    #[test]
+    fn ladder_is_ascending_and_current_superlinear() {
+        let p = honor();
+        for w in p.freqs_ghz.windows(2) {
+            assert!(w[0] < w[1]);
+        }
+        for w in p.cpu_active_ua.windows(2) {
+            assert!(w[0] < w[1]);
+        }
+        // energy/op grows with frequency: current/freq increasing
+        let per_op_low = p.cpu_active_ua[0] / p.freqs_ghz[0];
+        let per_op_high = p.cpu_active_ua[7] / p.freqs_ghz[7];
+        assert!(per_op_high > per_op_low);
+    }
+
+    #[test]
+    fn cpu_current_clamps_util() {
+        let p = honor();
+        assert_eq!(p.cpu_current_ua(0, -1.0), p.cpu_idle_ua);
+        assert!(p.cpu_current_ua(7, 2.0) <= p.cpu_idle_ua + p.cpu_active_ua[7]);
+    }
+
+    #[test]
+    fn completion_time_decreases_with_frequency() {
+        let p = honor();
+        let slow = p.completion_time_s(0, 10.0);
+        let fast = p.completion_time_s(7, 10.0);
+        assert!(slow > fast);
+        assert!(fast > p.time_b);
+    }
+
+    #[test]
+    fn completion_time_scales_with_work() {
+        let p = honor();
+        let t1 = p.completion_time_s(3, 1.0) - p.time_b;
+        let t10 = p.completion_time_s(3, 10.0) - p.time_b;
+        assert!((t10 / t1 - 10.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn lookup_by_name() {
+        assert!(profile_by_name("mi").is_some());
+        assert!(profile_by_name("iphone").is_none());
+    }
+
+    #[test]
+    fn component_states_order_power() {
+        let c = &honor().components[0];
+        assert!(c.active_ua > c.idle_ua);
+        assert!(c.idle_ua >= c.sleep_ua);
+    }
+}

@@ -1,0 +1,186 @@
+//! Artifact registry: parses the `manifest.json` emitted by
+//! `python/compile/aot.py` and locates the HLO-text artifacts.
+//!
+//! Python runs once at build time (`make artifacts`); afterwards this
+//! module + [`super::engine`] are the only consumers — the request path
+//! is pure rust.
+
+use std::collections::BTreeMap;
+use std::path::{Path, PathBuf};
+
+use crate::util::json::Json;
+
+/// Shape + dtype of one artifact input/output.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct TensorSpec {
+    pub shape: Vec<usize>,
+    pub dtype: String,
+}
+
+impl TensorSpec {
+    pub fn n_elements(&self) -> usize {
+        self.shape.iter().product::<usize>().max(1)
+    }
+
+    fn from_json(j: &Json) -> Option<TensorSpec> {
+        let shape = j
+            .get("shape")?
+            .as_arr()?
+            .iter()
+            .map(|d| d.as_usize())
+            .collect::<Option<Vec<_>>>()?;
+        let dtype = j.get("dtype")?.as_str()?.to_string();
+        Some(TensorSpec { shape, dtype })
+    }
+}
+
+/// One AOT-lowered computation.
+#[derive(Debug, Clone)]
+pub struct ArtifactMeta {
+    pub name: String,
+    pub path: PathBuf,
+    pub inputs: Vec<TensorSpec>,
+    pub outputs: Vec<TensorSpec>,
+}
+
+/// The registry of all artifacts in a directory.
+#[derive(Debug, Clone)]
+pub struct Registry {
+    pub dir: PathBuf,
+    entries: BTreeMap<String, ArtifactMeta>,
+}
+
+#[derive(Debug, thiserror::Error)]
+pub enum RegistryError {
+    #[error("artifacts dir {0} has no manifest.json (run `make artifacts`)")]
+    NoManifest(PathBuf),
+    #[error("manifest parse error: {0}")]
+    BadManifest(String),
+    #[error("artifact file missing: {0}")]
+    MissingFile(PathBuf),
+    #[error("unknown artifact {0}")]
+    Unknown(String),
+}
+
+impl Registry {
+    /// Load `<dir>/manifest.json` and validate the artifact files exist.
+    pub fn load(dir: impl AsRef<Path>) -> Result<Registry, RegistryError> {
+        let dir = dir.as_ref().to_path_buf();
+        let manifest_path = dir.join("manifest.json");
+        let text = std::fs::read_to_string(&manifest_path)
+            .map_err(|_| RegistryError::NoManifest(dir.clone()))?;
+        let json =
+            Json::parse(&text).map_err(|e| RegistryError::BadManifest(e.to_string()))?;
+        let obj = json
+            .as_obj()
+            .ok_or_else(|| RegistryError::BadManifest("manifest is not an object".into()))?;
+        let mut entries = BTreeMap::new();
+        for (name, entry) in obj {
+            let file = entry
+                .get("file")
+                .and_then(|f| f.as_str())
+                .ok_or_else(|| RegistryError::BadManifest(format!("{name}: no file")))?;
+            let path = dir.join(file);
+            if !path.exists() {
+                return Err(RegistryError::MissingFile(path));
+            }
+            let parse_specs = |key: &str| -> Result<Vec<TensorSpec>, RegistryError> {
+                entry
+                    .get(key)
+                    .and_then(|v| v.as_arr())
+                    .ok_or_else(|| RegistryError::BadManifest(format!("{name}: no {key}")))?
+                    .iter()
+                    .map(|s| {
+                        TensorSpec::from_json(s).ok_or_else(|| {
+                            RegistryError::BadManifest(format!("{name}: bad {key} spec"))
+                        })
+                    })
+                    .collect()
+            };
+            entries.insert(
+                name.clone(),
+                ArtifactMeta {
+                    name: name.clone(),
+                    path,
+                    inputs: parse_specs("inputs")?,
+                    outputs: parse_specs("outputs")?,
+                },
+            );
+        }
+        Ok(Registry { dir, entries })
+    }
+
+    /// Default location: `$DEAL_ARTIFACTS` or `./artifacts`.
+    pub fn default_dir() -> PathBuf {
+        std::env::var("DEAL_ARTIFACTS")
+            .map(PathBuf::from)
+            .unwrap_or_else(|_| PathBuf::from("artifacts"))
+    }
+
+    pub fn names(&self) -> Vec<&str> {
+        self.entries.keys().map(|s| s.as_str()).collect()
+    }
+
+    pub fn get(&self, name: &str) -> Result<&ArtifactMeta, RegistryError> {
+        self.entries
+            .get(name)
+            .ok_or_else(|| RegistryError::Unknown(name.to_string()))
+    }
+
+    pub fn len(&self) -> usize {
+        self.entries.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.entries.is_empty()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn manifest_dir() -> Option<PathBuf> {
+        let dir = PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("artifacts");
+        dir.join("manifest.json").exists().then_some(dir)
+    }
+
+    #[test]
+    fn loads_real_manifest_when_present() {
+        let Some(dir) = manifest_dir() else {
+            eprintln!("skipping: artifacts not built");
+            return;
+        };
+        let reg = Registry::load(&dir).unwrap();
+        assert!(reg.len() >= 9, "expected all DEAL artifacts, got {}", reg.len());
+        let tik = reg.get("tikhonov_step").unwrap();
+        assert_eq!(tik.inputs.len(), 5);
+        assert_eq!(tik.outputs.len(), 3);
+        assert_eq!(tik.inputs[0].shape, vec![32, 32]);
+        assert!(reg.get("nope").is_err());
+    }
+
+    #[test]
+    fn missing_dir_is_clean_error() {
+        let err = Registry::load("/nonexistent/place").unwrap_err();
+        assert!(matches!(err, RegistryError::NoManifest(_)));
+    }
+
+    #[test]
+    fn bad_manifest_reports() {
+        let tmp = std::env::temp_dir().join(format!("deal-reg-{}", std::process::id()));
+        std::fs::create_dir_all(&tmp).unwrap();
+        std::fs::write(tmp.join("manifest.json"), "not json").unwrap();
+        let err = Registry::load(&tmp).unwrap_err();
+        assert!(matches!(err, RegistryError::BadManifest(_)));
+        std::fs::remove_dir_all(&tmp).ok();
+    }
+
+    #[test]
+    fn tensor_spec_elements() {
+        let s = TensorSpec { shape: vec![4, 8], dtype: "float32".into() };
+        assert_eq!(s.n_elements(), 32);
+        let scalar = TensorSpec { shape: vec![], dtype: "float32".into() };
+        assert_eq!(scalar.n_elements(), 1);
+    }
+}

@@ -1,0 +1,245 @@
+//! PJRT execution engine: loads HLO-text artifacts and runs them on the
+//! CPU PJRT client via the `xla` crate.
+//!
+//! Pattern (see /opt/xla-example/load_hlo.rs and aot_recipe):
+//! `PjRtClient::cpu()` → `HloModuleProto::from_text_file` →
+//! `XlaComputation::from_proto` → `client.compile` → `execute`.
+//! HLO *text* is the interchange format — jax ≥ 0.5 emits 64-bit
+//! instruction ids in serialized protos which xla_extension 0.5.1
+//! rejects; the text parser reassigns ids.
+//!
+//! Executables are compiled once and cached; `call` dispatches f32
+//! tensors in/out. Python is never involved at runtime.
+
+use std::collections::HashMap;
+
+use super::artifacts::{ArtifactMeta, Registry, RegistryError};
+
+/// An f32 tensor exchanged with the engine.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Tensor {
+    pub shape: Vec<usize>,
+    pub data: Vec<f32>,
+}
+
+impl Tensor {
+    pub fn new(shape: Vec<usize>, data: Vec<f32>) -> Self {
+        assert_eq!(
+            shape.iter().product::<usize>().max(1),
+            data.len().max(1),
+            "shape/data mismatch"
+        );
+        Tensor { shape, data }
+    }
+
+    pub fn scalar(x: f32) -> Self {
+        Tensor { shape: vec![], data: vec![x] }
+    }
+
+    pub fn vec(data: Vec<f32>) -> Self {
+        Tensor { shape: vec![data.len()], data }
+    }
+
+    pub fn matrix(rows: usize, cols: usize, data: Vec<f32>) -> Self {
+        assert_eq!(rows * cols, data.len());
+        Tensor { shape: vec![rows, cols], data }
+    }
+}
+
+#[derive(Debug, thiserror::Error)]
+pub enum EngineError {
+    #[error(transparent)]
+    Registry(#[from] RegistryError),
+    #[error("xla error: {0}")]
+    Xla(String),
+    #[error("artifact {name}: expected {expected} inputs, got {got}")]
+    Arity { name: String, expected: usize, got: usize },
+    #[error("artifact {name} input {index}: expected shape {expected:?}, got {got:?}")]
+    Shape { name: String, index: usize, expected: Vec<usize>, got: Vec<usize> },
+}
+
+impl From<xla::Error> for EngineError {
+    fn from(e: xla::Error) -> Self {
+        EngineError::Xla(e.to_string())
+    }
+}
+
+/// The engine: PJRT client + compiled-executable cache.
+pub struct Engine {
+    registry: Registry,
+    client: xla::PjRtClient,
+    cache: HashMap<String, xla::PjRtLoadedExecutable>,
+}
+
+impl Engine {
+    /// Create over a registry (compiles lazily per artifact).
+    pub fn new(registry: Registry) -> Result<Engine, EngineError> {
+        let client = xla::PjRtClient::cpu()?;
+        Ok(Engine { registry, client, cache: HashMap::new() })
+    }
+
+    /// Convenience: load the default artifacts directory.
+    pub fn from_default_dir() -> Result<Engine, EngineError> {
+        Ok(Engine::new(Registry::load(Registry::default_dir())?)?)
+    }
+
+    pub fn platform(&self) -> String {
+        self.client.platform_name()
+    }
+
+    pub fn registry(&self) -> &Registry {
+        &self.registry
+    }
+
+    /// Ensure an artifact is compiled (idempotent).
+    pub fn prepare(&mut self, name: &str) -> Result<(), EngineError> {
+        if self.cache.contains_key(name) {
+            return Ok(());
+        }
+        let meta = self.registry.get(name)?.clone();
+        let proto = xla::HloModuleProto::from_text_file(
+            meta.path.to_str().expect("utf8 path"),
+        )?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        let exe = self.client.compile(&comp)?;
+        self.cache.insert(name.to_string(), exe);
+        Ok(())
+    }
+
+    /// Execute an artifact on f32 inputs; returns its (flattened-tuple)
+    /// outputs. Shapes are validated against the manifest.
+    pub fn call(&mut self, name: &str, inputs: &[Tensor]) -> Result<Vec<Tensor>, EngineError> {
+        let meta = self.registry.get(name)?.clone();
+        validate(&meta, inputs)?;
+        self.prepare(name)?;
+        let exe = self.cache.get(name).expect("prepared");
+        let literals: Vec<xla::Literal> = inputs
+            .iter()
+            .map(|t| to_literal(t))
+            .collect::<Result<_, EngineError>>()?;
+        let result = exe.execute::<xla::Literal>(&literals)?[0][0].to_literal_sync()?;
+        // aot.py lowers with return_tuple=True: output is always a tuple
+        let parts = result.to_tuple()?;
+        let mut out = Vec::with_capacity(parts.len());
+        for (lit, spec) in parts.into_iter().zip(&meta.outputs) {
+            out.push(from_literal(&lit, &spec.shape)?);
+        }
+        Ok(out)
+    }
+}
+
+fn validate(meta: &ArtifactMeta, inputs: &[Tensor]) -> Result<(), EngineError> {
+    if meta.inputs.len() != inputs.len() {
+        return Err(EngineError::Arity {
+            name: meta.name.clone(),
+            expected: meta.inputs.len(),
+            got: inputs.len(),
+        });
+    }
+    for (i, (spec, t)) in meta.inputs.iter().zip(inputs).enumerate() {
+        if spec.shape != t.shape {
+            return Err(EngineError::Shape {
+                name: meta.name.clone(),
+                index: i,
+                expected: spec.shape.clone(),
+                got: t.shape.clone(),
+            });
+        }
+    }
+    Ok(())
+}
+
+fn to_literal(t: &Tensor) -> Result<xla::Literal, EngineError> {
+    let flat = xla::Literal::vec1(&t.data);
+    if t.shape.is_empty() {
+        // rank-0 scalar
+        Ok(flat.reshape(&[])?)
+    } else {
+        let dims: Vec<i64> = t.shape.iter().map(|&d| d as i64).collect();
+        Ok(flat.reshape(&dims)?)
+    }
+}
+
+fn from_literal(lit: &xla::Literal, shape: &[usize]) -> Result<Tensor, EngineError> {
+    // integer outputs (e.g. top-k indices) are converted to f32
+    let ty = lit.ty()?;
+    let data: Vec<f32> = match ty {
+        xla::ElementType::F32 => lit.to_vec::<f32>()?,
+        xla::ElementType::S32 => lit
+            .to_vec::<i32>()?
+            .into_iter()
+            .map(|x| x as f32)
+            .collect(),
+        other => {
+            return Err(EngineError::Xla(format!("unsupported output type {other:?}")))
+        }
+    };
+    Ok(Tensor { shape: shape.to_vec(), data })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::path::PathBuf;
+
+    fn engine() -> Option<Engine> {
+        let dir = PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("artifacts");
+        if !dir.join("manifest.json").exists() {
+            eprintln!("skipping: artifacts not built (run `make artifacts`)");
+            return None;
+        }
+        Some(Engine::new(Registry::load(dir).unwrap()).unwrap())
+    }
+
+    #[test]
+    fn tensor_constructors() {
+        assert_eq!(Tensor::scalar(2.0).shape, Vec::<usize>::new());
+        assert_eq!(Tensor::vec(vec![1.0, 2.0]).shape, vec![2]);
+        assert_eq!(Tensor::matrix(2, 3, vec![0.0; 6]).shape, vec![2, 3]);
+    }
+
+    #[test]
+    #[should_panic(expected = "shape/data mismatch")]
+    fn tensor_shape_checked() {
+        Tensor::new(vec![2, 2], vec![1.0]);
+    }
+
+    #[test]
+    fn engine_runs_tikhonov_predict() {
+        let Some(mut e) = engine() else { return };
+        assert_eq!(e.platform(), "cpu");
+        // h = e1, X = 8 rows of e1 scaled
+        let h = Tensor::vec({
+            let mut v = vec![0.0f32; 32];
+            v[0] = 2.0;
+            v
+        });
+        let mut xdata = vec![0.0f32; 8 * 32];
+        for r in 0..8 {
+            xdata[r * 32] = r as f32;
+        }
+        let x = Tensor::matrix(8, 32, xdata);
+        let out = e.call("tikhonov_predict", &[h, x]).unwrap();
+        assert_eq!(out.len(), 1);
+        let want: Vec<f32> = (0..8).map(|r| 2.0 * r as f32).collect();
+        assert_eq!(out[0].data, want);
+    }
+
+    #[test]
+    fn engine_validates_arity_and_shape() {
+        let Some(mut e) = engine() else { return };
+        let bad = e.call("tikhonov_predict", &[Tensor::scalar(1.0)]);
+        assert!(matches!(bad, Err(EngineError::Arity { .. })));
+        let bad2 = e.call(
+            "tikhonov_predict",
+            &[Tensor::vec(vec![0.0; 7]), Tensor::matrix(8, 32, vec![0.0; 256])],
+        );
+        assert!(matches!(bad2, Err(EngineError::Shape { .. })));
+    }
+
+    #[test]
+    fn engine_unknown_artifact() {
+        let Some(mut e) = engine() else { return };
+        assert!(e.call("nope", &[]).is_err());
+    }
+}

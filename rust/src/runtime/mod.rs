@@ -1,0 +1,13 @@
+//! Runtime bridge to the AOT-compiled L2/L1 artifacts (PJRT CPU client).
+//!
+//! [`artifacts`] parses the build-time manifest; [`engine`] compiles and
+//! executes the HLO-text computations. See DESIGN.md §1 for when the
+//! rust engines vs the artifacts serve an operation (sparse per-event
+//! updates run native; batch construction/recompute/predict paths run
+//! through PJRT at the canonical shapes).
+
+pub mod artifacts;
+pub mod engine;
+
+pub use artifacts::{ArtifactMeta, Registry, TensorSpec};
+pub use engine::{Engine, EngineError, Tensor};

@@ -1,0 +1,148 @@
+//! Micro-benchmark timing harness (substrate — no `criterion` offline).
+//!
+//! Warmup + calibrated batching + robust statistics. Benches built on this
+//! print "name  median  mean±std  iters" lines and return the median so
+//! harness code (benches/) can compute speedup ratios programmatically.
+
+use std::hint::black_box;
+use std::time::{Duration, Instant};
+
+use super::stats::percentile;
+
+/// Result of one benchmark.
+#[derive(Debug, Clone)]
+pub struct BenchResult {
+    pub name: String,
+    /// Median seconds per iteration.
+    pub median: f64,
+    pub mean: f64,
+    pub std: f64,
+    pub iters_per_sample: u64,
+    pub samples: usize,
+}
+
+impl BenchResult {
+    pub fn line(&self) -> String {
+        format!(
+            "{:<44} {:>12} median  {:>12} mean  (±{:>10}, {} x {} iters)",
+            self.name,
+            super::tables::fmt_duration(self.median),
+            super::tables::fmt_duration(self.mean),
+            super::tables::fmt_duration(self.std),
+            self.samples,
+            self.iters_per_sample,
+        )
+    }
+}
+
+/// Benchmark runner with configurable budget.
+#[derive(Debug, Clone)]
+pub struct Bencher {
+    /// Wall-clock budget per benchmark (measurement phase).
+    pub budget: Duration,
+    pub warmup: Duration,
+    pub samples: usize,
+}
+
+impl Default for Bencher {
+    fn default() -> Self {
+        Bencher {
+            budget: Duration::from_millis(600),
+            warmup: Duration::from_millis(120),
+            samples: 30,
+        }
+    }
+}
+
+/// Honor `DEAL_BENCH_FAST=1` for CI-quick runs.
+pub fn from_env() -> Bencher {
+    if std::env::var("DEAL_BENCH_FAST").as_deref() == Ok("1") {
+        Bencher {
+            budget: Duration::from_millis(120),
+            warmup: Duration::from_millis(30),
+            samples: 10,
+        }
+    } else {
+        Bencher::default()
+    }
+}
+
+impl Bencher {
+    /// Time `f`, printing and returning the result. `f` should produce a
+    /// value; it is black_box'ed to defeat DCE.
+    pub fn run<T, F: FnMut() -> T>(&self, name: &str, mut f: F) -> BenchResult {
+        // Warmup + calibration: find iters/sample so one sample ~ budget/samples.
+        let mut iters = 1u64;
+        let warm_end = Instant::now() + self.warmup;
+        let mut one = Duration::from_secs(0);
+        loop {
+            let t0 = Instant::now();
+            for _ in 0..iters {
+                black_box(f());
+            }
+            one = t0.elapsed() / iters as u32;
+            if Instant::now() >= warm_end || one * (iters as u32) > self.warmup / 4 {
+                break;
+            }
+            iters = iters.saturating_mul(2);
+        }
+        let target = self.budget / self.samples as u32;
+        let iters_per_sample = if one.is_zero() {
+            1000
+        } else {
+            ((target.as_secs_f64() / one.as_secs_f64()).ceil() as u64).clamp(1, 1_000_000)
+        };
+
+        let mut times = Vec::with_capacity(self.samples);
+        for _ in 0..self.samples {
+            let t0 = Instant::now();
+            for _ in 0..iters_per_sample {
+                black_box(f());
+            }
+            times.push(t0.elapsed().as_secs_f64() / iters_per_sample as f64);
+        }
+        let median = percentile(&times, 50.0);
+        let mean = times.iter().sum::<f64>() / times.len() as f64;
+        let var = times.iter().map(|t| (t - mean).powi(2)).sum::<f64>()
+            / (times.len() - 1).max(1) as f64;
+        let result = BenchResult {
+            name: name.to_string(),
+            median,
+            mean,
+            std: var.sqrt(),
+            iters_per_sample,
+            samples: self.samples,
+        };
+        println!("{}", result.line());
+        result
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn measures_something_positive() {
+        let b = Bencher {
+            budget: Duration::from_millis(40),
+            warmup: Duration::from_millis(5),
+            samples: 5,
+        };
+        let r = b.run("sum", || (0..100u64).sum::<u64>());
+        assert!(r.median > 0.0);
+        assert!(r.median < 1e-3, "100-element sum should be fast");
+    }
+
+    #[test]
+    fn ordering_detects_slower_work() {
+        let b = Bencher {
+            budget: Duration::from_millis(40),
+            warmup: Duration::from_millis(5),
+            samples: 5,
+        };
+        let fast = b.run("fast", || (0..10u64).sum::<u64>());
+        let slow = b.run("slow", || (0..10_000u64).map(|x| x * x).sum::<u64>());
+        assert!(slow.median > fast.median);
+    }
+}

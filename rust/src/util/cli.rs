@@ -1,0 +1,255 @@
+//! Declarative CLI flag parser (substrate — no `clap` offline).
+//!
+//! Supports `--flag value`, `--flag=value`, boolean `--flag`, positional
+//! args, defaults, and auto-generated `--help`. Used by the `deal` binary,
+//! examples and benches.
+
+use std::collections::BTreeMap;
+
+/// One registered flag.
+#[derive(Debug, Clone)]
+struct Flag {
+    name: &'static str,
+    help: &'static str,
+    default: Option<String>,
+    is_bool: bool,
+}
+
+/// Declarative argument parser.
+#[derive(Debug, Default)]
+pub struct Cli {
+    bin: &'static str,
+    about: &'static str,
+    flags: Vec<Flag>,
+}
+
+/// Parse result: flag map + positionals.
+#[derive(Debug, Clone)]
+pub struct Args {
+    values: BTreeMap<&'static str, String>,
+    bools: BTreeMap<&'static str, bool>,
+    pub positional: Vec<String>,
+}
+
+#[derive(Debug, thiserror::Error)]
+pub enum CliError {
+    #[error("unknown flag --{0}")]
+    Unknown(String),
+    #[error("flag --{0} requires a value")]
+    MissingValue(&'static str),
+    #[error("flag --{0}: cannot parse {1:?} as {2}")]
+    BadValue(&'static str, String, &'static str),
+    #[error("help requested")]
+    Help,
+}
+
+impl Cli {
+    pub fn new(bin: &'static str, about: &'static str) -> Self {
+        Cli { bin, about, flags: Vec::new() }
+    }
+
+    /// Register a value flag with a default.
+    pub fn flag(mut self, name: &'static str, default: &str, help: &'static str) -> Self {
+        self.flags.push(Flag {
+            name,
+            help,
+            default: Some(default.to_string()),
+            is_bool: false,
+        });
+        self
+    }
+
+    /// Register a required value flag (no default).
+    pub fn required(mut self, name: &'static str, help: &'static str) -> Self {
+        self.flags.push(Flag { name, help, default: None, is_bool: false });
+        self
+    }
+
+    /// Register a boolean switch (default false).
+    pub fn switch(mut self, name: &'static str, help: &'static str) -> Self {
+        self.flags.push(Flag { name, help, default: None, is_bool: true });
+        self
+    }
+
+    pub fn usage(&self) -> String {
+        let mut out = format!("{} — {}\n\nFLAGS:\n", self.bin, self.about);
+        for f in &self.flags {
+            let kind = if f.is_bool {
+                String::new()
+            } else if let Some(d) = &f.default {
+                format!(" <value, default {d}>")
+            } else {
+                " <value, required>".to_string()
+            };
+            out.push_str(&format!("  --{}{}\n      {}\n", f.name, kind, f.help));
+        }
+        out.push_str("  --help\n      print this message\n");
+        out
+    }
+
+    /// Parse an iterator of argument strings (excluding argv[0]).
+    pub fn parse<I: IntoIterator<Item = String>>(&self, argv: I) -> Result<Args, CliError> {
+        let mut values = BTreeMap::new();
+        let mut bools = BTreeMap::new();
+        for f in &self.flags {
+            if f.is_bool {
+                bools.insert(f.name, false);
+            } else if let Some(d) = &f.default {
+                values.insert(f.name, d.clone());
+            }
+        }
+        let mut positional = Vec::new();
+        let mut it = argv.into_iter().peekable();
+        while let Some(arg) = it.next() {
+            if arg == "--help" || arg == "-h" {
+                return Err(CliError::Help);
+            }
+            if let Some(body) = arg.strip_prefix("--") {
+                let (name, inline) = match body.split_once('=') {
+                    Some((n, v)) => (n, Some(v.to_string())),
+                    None => (body, None),
+                };
+                let flag = self
+                    .flags
+                    .iter()
+                    .find(|f| f.name == name)
+                    .ok_or_else(|| CliError::Unknown(name.to_string()))?;
+                if flag.is_bool {
+                    bools.insert(flag.name, true);
+                } else {
+                    let v = match inline {
+                        Some(v) => v,
+                        None => it.next().ok_or(CliError::MissingValue(flag.name))?,
+                    };
+                    values.insert(flag.name, v);
+                }
+            } else {
+                positional.push(arg);
+            }
+        }
+        for f in &self.flags {
+            if !f.is_bool && !values.contains_key(f.name) {
+                return Err(CliError::MissingValue(f.name));
+            }
+        }
+        Ok(Args { values, bools, positional })
+    }
+
+    /// Parse std::env::args(), printing usage + exiting on --help or error.
+    pub fn parse_env(&self) -> Args {
+        match self.parse(std::env::args().skip(1)) {
+            Ok(a) => a,
+            Err(CliError::Help) => {
+                println!("{}", self.usage());
+                std::process::exit(0);
+            }
+            Err(e) => {
+                eprintln!("error: {e}\n\n{}", self.usage());
+                std::process::exit(2);
+            }
+        }
+    }
+}
+
+impl Args {
+    pub fn get(&self, name: &'static str) -> &str {
+        self.values
+            .get(name)
+            .unwrap_or_else(|| panic!("flag --{name} not registered"))
+    }
+
+    pub fn get_bool(&self, name: &'static str) -> bool {
+        *self
+            .bools
+            .get(name)
+            .unwrap_or_else(|| panic!("switch --{name} not registered"))
+    }
+
+    pub fn get_usize(&self, name: &'static str) -> Result<usize, CliError> {
+        self.get(name)
+            .parse()
+            .map_err(|_| CliError::BadValue(name, self.get(name).into(), "usize"))
+    }
+
+    pub fn get_u64(&self, name: &'static str) -> Result<u64, CliError> {
+        self.get(name)
+            .parse()
+            .map_err(|_| CliError::BadValue(name, self.get(name).into(), "u64"))
+    }
+
+    pub fn get_f64(&self, name: &'static str) -> Result<f64, CliError> {
+        self.get(name)
+            .parse()
+            .map_err(|_| CliError::BadValue(name, self.get(name).into(), "f64"))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn cli() -> Cli {
+        Cli::new("t", "test")
+            .flag("rounds", "10", "round count")
+            .flag("theta", "0.3", "forget degree")
+            .switch("verbose", "chatty")
+            .required("model", "model name")
+    }
+
+    fn parse(args: &[&str]) -> Result<Args, CliError> {
+        cli().parse(args.iter().map(|s| s.to_string()))
+    }
+
+    #[test]
+    fn defaults_apply() {
+        let a = parse(&["--model", "ppr"]).unwrap();
+        assert_eq!(a.get_usize("rounds").unwrap(), 10);
+        assert_eq!(a.get_f64("theta").unwrap(), 0.3);
+        assert!(!a.get_bool("verbose"));
+    }
+
+    #[test]
+    fn explicit_values_override() {
+        let a = parse(&["--model=tik", "--rounds=99", "--verbose"]).unwrap();
+        assert_eq!(a.get("model"), "tik");
+        assert_eq!(a.get_usize("rounds").unwrap(), 99);
+        assert!(a.get_bool("verbose"));
+    }
+
+    #[test]
+    fn space_separated_value() {
+        let a = parse(&["--model", "knn", "--theta", "0.5"]).unwrap();
+        assert_eq!(a.get_f64("theta").unwrap(), 0.5);
+    }
+
+    #[test]
+    fn positionals_collected() {
+        let a = parse(&["--model", "nb", "one", "two"]).unwrap();
+        assert_eq!(a.positional, vec!["one", "two"]);
+    }
+
+    #[test]
+    fn missing_required_rejected() {
+        assert!(matches!(parse(&[]), Err(CliError::MissingValue("model"))));
+    }
+
+    #[test]
+    fn unknown_flag_rejected() {
+        assert!(matches!(
+            parse(&["--model", "x", "--bogus"]),
+            Err(CliError::Unknown(_))
+        ));
+    }
+
+    #[test]
+    fn bad_value_type_rejected() {
+        let a = parse(&["--model", "x", "--rounds", "ten"]).unwrap();
+        assert!(matches!(a.get_usize("rounds"), Err(CliError::BadValue(..))));
+    }
+
+    #[test]
+    fn help_flag() {
+        assert!(matches!(parse(&["--help"]), Err(CliError::Help)));
+        assert!(cli().usage().contains("--theta"));
+    }
+}

