@@ -1,0 +1,127 @@
+//! Async-aggregation sweep — the new scenario the transport-generic
+//! engine opens: buffered-asynchronous rounds (`AsyncBuffered`, per the
+//! async-FL literature) against the paper's majority/TTL cut, on
+//! energy, convergence and round cadence.
+//!
+//! Setup: DEAL scheme (MAB selection active, so *delayed* rewards
+//! actually exercise `Selector::observe_delayed`) with the TTL pinned
+//! below the straggler tail: a pilot `WaitAll` run measures the mean
+//! round time, then the TTL is set to 60% of it so slow phones
+//! genuinely miss rounds. `Majority` discards nothing but cuts the
+//! clock at the median reply; `async:<δ>` stops the clock at the TTL
+//! and credits stragglers δ rounds later.
+//!
+//!     cargo bench --bench async_staleness
+
+mod common;
+
+use common::{banner, dataset_scale};
+use deal::coordinator::fleet::{self, FleetConfig};
+use deal::coordinator::{Aggregation, Scheme};
+use deal::data::Dataset;
+use deal::util::tables::{fmt_duration, fmt_uah, Table};
+
+const N_DEVICES: usize = 24;
+const ROUNDS: usize = 60;
+
+fn cfg(ttl_s: f64, aggregation: Option<Aggregation>) -> FleetConfig {
+    FleetConfig {
+        n_devices: N_DEVICES,
+        dataset: Dataset::Cadata,
+        scale: dataset_scale(Dataset::Cadata),
+        scheme: Scheme::Deal,
+        m: 8,
+        ttl_s,
+        seed: 808,
+        aggregation,
+        ..FleetConfig::default()
+    }
+}
+
+struct SweepRow {
+    policy: String,
+    virtual_time_s: f64,
+    energy_uah: f64,
+    converged: usize,
+    median_conv_s: f64,
+    final_acc: f64,
+    pending: usize,
+}
+
+fn run(ttl_s: f64, aggregation: Aggregation) -> SweepRow {
+    let mut fed = fleet::build(&cfg(ttl_s, Some(aggregation)));
+    let stats = fed.run(ROUNDS);
+    let mut conv = stats.convergence_times_s.clone();
+    conv.sort_by(f64::total_cmp);
+    SweepRow {
+        policy: aggregation.name(),
+        virtual_time_s: stats.total_time_s,
+        energy_uah: stats.total_energy_uah,
+        converged: stats.converged_devices,
+        median_conv_s: conv.get(conv.len() / 2).copied().unwrap_or(f64::NAN),
+        final_acc: stats.final_accuracy,
+        pending: fed.pending_replies(),
+    }
+}
+
+fn main() {
+    banner(
+        "Async sweep — AsyncBuffered staleness vs Majority (DEAL, Tikhonov/cadata)",
+        "buffered-async rounds trade reward freshness for a TTL-bounded clock",
+    );
+    // pilot: WaitAll at a huge TTL measures the natural round time
+    let pilot = fleet::build(&cfg(1e9, Some(Aggregation::WaitAll)))
+        .run(10)
+        .total_time_s
+        / 10.0;
+    let ttl = 0.6 * pilot;
+    println!(
+        "pilot mean round time {} → TTL pinned at {} (60%), {} devices, {} rounds\n",
+        fmt_duration(pilot),
+        fmt_duration(ttl),
+        N_DEVICES,
+        ROUNDS
+    );
+
+    let policies = [
+        Aggregation::Majority,
+        Aggregation::AsyncBuffered { staleness: 1 },
+        Aggregation::AsyncBuffered { staleness: 2 },
+        Aggregation::AsyncBuffered { staleness: 4 },
+        Aggregation::AsyncBuffered { staleness: 8 },
+    ];
+    let mut table = Table::new(
+        "aggregation sweep (same fleet, same seed)",
+        &[
+            "policy",
+            "virtual time",
+            "energy",
+            "converged",
+            "median conv",
+            "final R²",
+            "buffered at end",
+        ],
+    );
+    for agg in policies {
+        let r = run(ttl, agg);
+        table.row([
+            r.policy,
+            fmt_duration(r.virtual_time_s),
+            fmt_uah(r.energy_uah),
+            format!("{}/{}", r.converged, N_DEVICES),
+            if r.median_conv_s.is_nan() {
+                "—".to_string()
+            } else {
+                fmt_duration(r.median_conv_s)
+            },
+            format!("{:.3}", r.final_acc),
+            r.pending.to_string(),
+        ]);
+    }
+    print!("{}", table.render());
+    println!(
+        "\n(majority cuts the clock at the median reply; async:δ caps every round at \
+         the TTL and credits stragglers δ rounds late — larger δ = staler rewards \
+         reaching the bandit, more replies still buffered when the run ends)"
+    );
+}

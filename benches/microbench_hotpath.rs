@@ -2,8 +2,8 @@
 //!
 //! Times the operations that dominate every experiment: learner
 //! UPDATE/FORGET, QR rank-one update, bandit selection, θ-LRU access,
-//! broker round-trip, and (when artifacts are built) a PJRT artifact
-//! dispatch.
+//! threaded-transport round-trip, and (when artifacts are built) a PJRT
+//! artifact dispatch.
 //!
 //!     cargo bench --bench microbench_hotpath
 
@@ -85,10 +85,10 @@ fn main() {
         cache.access(p)
     });
 
-    // --- broker round-trip (threaded PUB/SUB)
+    // --- threaded-transport round-trip (PUB/SUB worker fabric)
     {
         use deal::coordinator::fleet::{build_devices, FleetConfig};
-        use deal::coordinator::pubsub::{Broker, PubMsg};
+        use deal::coordinator::transport::{RoundJob, ThreadedTransport, Transport};
         use deal::coordinator::Scheme;
         let cfg = FleetConfig {
             n_devices: 4,
@@ -97,22 +97,23 @@ fn main() {
             seed: 3,
             ..FleetConfig::default()
         };
-        let broker = Broker::spawn(build_devices(&cfg));
+        let mut transport = ThreadedTransport::spawn(build_devices(&cfg));
         let mut round = 0u64;
-        b.run("broker_round_trip(4 workers)", || {
+        b.run("transport_round_trip(4 workers)", || {
             round += 1;
-            broker.publish_round(
+            transport.execute(
                 &[0, 1, 2, 3],
-                PubMsg { round, scheme: Scheme::NewFl, arrivals: 0, theta: 0.0 },
+                RoundJob { round, scheme: Scheme::NewFl, arrivals: 0, theta: 0.0 },
             )
         });
-        broker.shutdown();
     }
 
     // --- PJRT artifact dispatch (skipped without artifacts)
-    if let Ok(reg) = deal::runtime::Registry::load("artifacts") {
-        use deal::runtime::{Engine, Tensor};
-        let mut engine = Engine::new(reg).unwrap();
+    if let Ok(mut engine) = deal::runtime::Registry::load("artifacts")
+        .map_err(|e| e.to_string())
+        .and_then(|reg| deal::runtime::Engine::new(reg).map_err(|e| e.to_string()))
+    {
+        use deal::runtime::Tensor;
         engine.prepare("tikhonov_predict").unwrap();
         let h = Tensor::vec(vec![1.0; 32]);
         let x = Tensor::matrix(8, 32, vec![0.5; 256]);

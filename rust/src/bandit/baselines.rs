@@ -10,6 +10,14 @@ use crate::util::rng::Rng;
 pub trait Selector {
     fn select(&mut self, available: &[usize]) -> Vec<usize>;
     fn observe(&mut self, _arm: usize, _reward: f64) {}
+    /// Feed back a reward that arrived `delay` rounds after the arm was
+    /// selected (buffered-asynchronous aggregation). UCB-style
+    /// estimates are order-insensitive, so the default treats it as an
+    /// immediate observation; selectors that weight recency can
+    /// override and discount by `delay`.
+    fn observe_delayed(&mut self, arm: usize, reward: f64, _delay: u64) {
+        self.observe(arm, reward);
+    }
     fn name(&self) -> &'static str;
 }
 

@@ -4,10 +4,11 @@
 //! experiment through this module.
 
 use super::device::DeviceSim;
-use super::scheme::Scheme;
+use super::scheme::{Aggregation, Scheme};
 use super::server::{Federation, FederationConfig};
+use super::transport::{SyncTransport, ThreadedTransport, Transport, TransportKind};
 use super::workload::{ModelKind, Workload};
-use crate::bandit::{SelectAll, SelectorConfig, Selector, SleepingBandit};
+use crate::bandit::{SelectAll, Selector, SelectorConfig, SleepingBandit};
 use crate::data::synth::{self, Data, Dataset};
 use crate::memsim::Replacement;
 use crate::power::governor::Policy;
@@ -39,6 +40,11 @@ pub struct FleetConfig {
     /// model). `Original` retrains over this history every round.
     pub prefill_frac: f64,
     pub seed: u64,
+    /// Which transport the federation runs over (sync loop vs one
+    /// worker thread per device). Bit-identical stats either way.
+    pub transport: TransportKind,
+    /// Aggregation override; `None` uses the scheme default.
+    pub aggregation: Option<Aggregation>,
 }
 
 impl Default for FleetConfig {
@@ -57,6 +63,8 @@ impl Default for FleetConfig {
             ttl_s: 30.0,
             prefill_frac: 0.6,
             seed: 1,
+            transport: TransportKind::Sync,
+            aggregation: None,
         }
     }
 }
@@ -128,9 +136,14 @@ fn make_workload(model: ModelKind, data: &Data, idx: &[usize], seed: u64) -> Wor
     }
 }
 
-/// Build a full federation: devices + scheme-appropriate selector.
+/// Build a full federation: devices + scheme-appropriate selector over
+/// the configured transport.
 pub fn build(cfg: &FleetConfig) -> Federation {
     let devices = build_devices(cfg);
+    let transport: Box<dyn Transport> = match cfg.transport {
+        TransportKind::Sync => Box::new(SyncTransport::new(devices)),
+        TransportKind::Threaded => Box::new(ThreadedTransport::spawn(devices)),
+    };
     let selector: Box<dyn Selector> = if cfg.scheme.uses_selection() {
         Box::new(SleepingBandit::new(
             cfg.n_devices,
@@ -148,9 +161,10 @@ pub fn build(cfg: &FleetConfig) -> Federation {
         ttl_s: cfg.ttl_s,
         arrivals_per_round: cfg.arrivals_per_round,
         theta: cfg.theta,
+        aggregation: cfg.aggregation,
         ..FederationConfig::default()
     };
-    Federation::new(devices, selector, fed_cfg)
+    Federation::with_transport(transport, selector, fed_cfg)
 }
 
 #[cfg(test)]

@@ -1,22 +1,35 @@
 //! The DEAL coordinator — the paper's system contribution at L3.
 //!
+//! Round semantics live **once**, in a transport-generic federation
+//! engine:
+//!
 //! - [`scheme`] — DEAL / Original / NewFL semantics (§IV-A baselines)
+//!   and the [`Aggregation`] policies (`WaitAll` / `Majority` /
+//!   `AsyncBuffered`) the server can close rounds under
 //! - [`workload`] — a device's model + shard (dispatch over the 4 models)
 //! - [`device`] — one simulated worker: governor + meter + battery +
 //!   θ-LRU cache + decremental learner (§III-D local layer)
-//! - [`server`] — round loop, majority/TTL aggregation, rewards (§III-A)
+//! - [`transport`] — how the server reaches workers: [`SyncTransport`]
+//!   (in-place loop) or [`ThreadedTransport`] (one PUB/SUB worker
+//!   thread per device). Both probe availability G(k) and execute
+//!   [`RoundJob`]s, returning replies in a deterministic
+//!   (virtual-time, id) order — stats are bit-identical across
+//!   transports for the same seed
+//! - [`server`] — the [`Federation`] engine: selection, aggregation
+//!   (majority/TTL cut, wait-all, or buffered-async crediting of
+//!   stragglers δ rounds late), rewards, convergence (§III-A/B)
 //! - [`fleet`] — experiment builder used by benches and examples
-//! - [`pubsub`] — threaded PUB/SUB deployment topology
 
 pub mod device;
 pub mod fleet;
-pub mod pubsub;
 pub mod scheme;
 pub mod server;
+pub mod transport;
 pub mod workload;
 
 pub use device::{DeviceSim, LocalOutcome};
 pub use fleet::FleetConfig;
-pub use scheme::Scheme;
+pub use scheme::{Aggregation, Scheme};
 pub use server::{Federation, FederationConfig, FederationStats};
+pub use transport::{RoundJob, SyncTransport, ThreadedTransport, Transport, TransportKind};
 pub use workload::{ModelKind, Workload};

@@ -1,4 +1,5 @@
-//! Training schemes compared throughout the paper's evaluation (§IV-A).
+//! Training schemes compared throughout the paper's evaluation (§IV-A),
+//! and the server-side aggregation policies they run under.
 
 /// Which end-to-end scheme a federation runs.
 #[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
@@ -15,6 +16,52 @@ pub enum Scheme {
 }
 
 pub const ALL_SCHEMES: [Scheme; 3] = [Scheme::Deal, Scheme::Original, Scheme::NewFl];
+
+/// How the server closes a round over the selected workers' replies.
+///
+/// Replaces the old boolean `majority_aggregation()`: the paper's §III-A
+/// protocol is the `Majority` cut for DEAL and `WaitAll` for the
+/// baselines; `AsyncBuffered` is the buffered-asynchronous scenario
+/// studied in the async-FL literature (late replies are credited in a
+/// later round instead of blocking or being discarded).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum Aggregation {
+    /// Wait for every selected worker (stragglers included).
+    WaitAll,
+    /// Close at the ⌈(n+1)/2⌉-th reply or the TTL, whichever first.
+    Majority,
+    /// Close at the TTL; replies that miss it are buffered on the
+    /// virtual clock and credited — rewards, energy, convergence —
+    /// exactly once, `staleness` rounds later (δ clamped to ≥ 1).
+    AsyncBuffered { staleness: u64 },
+}
+
+impl Aggregation {
+    /// Render as the CLI spelling: `waitall`, `majority`, `async:<δ>`.
+    pub fn name(&self) -> String {
+        match self {
+            Aggregation::WaitAll => "waitall".to_string(),
+            Aggregation::Majority => "majority".to_string(),
+            Aggregation::AsyncBuffered { staleness } => format!("async:{staleness}"),
+        }
+    }
+
+    /// Parse the CLI spelling (`waitall|majority|async:<staleness>`).
+    /// Staleness must be ≥ 1 (a zero-delay buffer would silently behave
+    /// as `async:1`, so it is rejected rather than clamped).
+    pub fn from_name(s: &str) -> Option<Aggregation> {
+        let s = s.to_ascii_lowercase();
+        match s.as_str() {
+            "waitall" | "wait-all" | "all" => Some(Aggregation::WaitAll),
+            "majority" => Some(Aggregation::Majority),
+            _ => s
+                .strip_prefix("async:")
+                .and_then(|d| d.parse().ok())
+                .filter(|&staleness| staleness >= 1)
+                .map(|staleness| Aggregation::AsyncBuffered { staleness }),
+        }
+    }
+}
 
 impl Scheme {
     pub fn name(&self) -> &'static str {
@@ -34,9 +81,13 @@ impl Scheme {
         }
     }
 
-    /// Does the server cut the round at a majority of replies (vs all)?
-    pub fn majority_aggregation(&self) -> bool {
-        matches!(self, Scheme::Deal)
+    /// The paper's aggregation policy for this scheme (a federation may
+    /// override it — see `FederationConfig::aggregation`).
+    pub fn default_aggregation(&self) -> Aggregation {
+        match self {
+            Scheme::Deal => Aggregation::Majority,
+            Scheme::Original | Scheme::NewFl => Aggregation::WaitAll,
+        }
     }
 
     /// Does the scheme use MAB worker selection (vs select-all)?
@@ -59,9 +110,29 @@ mod tests {
 
     #[test]
     fn semantics_flags() {
-        assert!(Scheme::Deal.majority_aggregation());
-        assert!(!Scheme::Original.majority_aggregation());
+        assert_eq!(Scheme::Deal.default_aggregation(), Aggregation::Majority);
+        assert_eq!(Scheme::Original.default_aggregation(), Aggregation::WaitAll);
+        assert_eq!(Scheme::NewFl.default_aggregation(), Aggregation::WaitAll);
         assert!(Scheme::Deal.uses_selection());
         assert!(!Scheme::NewFl.uses_selection());
+    }
+
+    #[test]
+    fn aggregation_names_roundtrip() {
+        for a in [
+            Aggregation::WaitAll,
+            Aggregation::Majority,
+            Aggregation::AsyncBuffered { staleness: 3 },
+        ] {
+            assert_eq!(Aggregation::from_name(&a.name()), Some(a));
+        }
+        assert_eq!(
+            Aggregation::from_name("async:7"),
+            Some(Aggregation::AsyncBuffered { staleness: 7 })
+        );
+        assert_eq!(Aggregation::from_name("async:"), None);
+        assert_eq!(Aggregation::from_name("async:x"), None);
+        assert_eq!(Aggregation::from_name("async:0"), None, "zero staleness rejected");
+        assert_eq!(Aggregation::from_name("plurality"), None);
     }
 }

@@ -1,15 +1,21 @@
-//! The federation server: round loop, PUB/SUB aggregation semantics,
-//! reward computation, and convergence tracking (paper §III-A/B).
+//! The federation engine: round loop, aggregation semantics, reward
+//! computation, and convergence tracking (paper §III-A/B) — written
+//! exactly once, generic over the [`Transport`] the fleet runs on.
 //!
-//! Per round k: observe availability G(k) → select S(k) (MAB for DEAL,
-//! select-all otherwise) → PUB the job → each worker trains locally →
-//! SUB replies carry (virtual time, energy, gradients-proxy) → the round
-//! closes at the **majority** reply or the TTL (DEAL), or waits for all
-//! (Original/NewFL). Rewards Xᵢ(k) ∈ [0,1] blend latency, energy and
-//! data volume and feed the bandit.
+//! Per round k: probe availability G(k) through the transport → select
+//! S(k) (MAB for DEAL, select-all otherwise) → PUB the job → each worker
+//! trains locally → SUB replies carry (virtual time, energy,
+//! gradients-proxy) → the [`Aggregation`] policy closes the round:
+//! at the **majority** reply or the TTL (DEAL), after everyone
+//! (Original/NewFL), or at the TTL with stragglers *buffered* and
+//! credited δ rounds later (`AsyncBuffered`). Rewards Xᵢ(k) ∈ [0,1]
+//! blend latency, energy frugality against the device's own battery,
+//! and data volume, and feed the bandit — immediately for in-time
+//! replies, via `observe_delayed` for buffered ones.
 
 use super::device::{DeviceSim, LocalOutcome};
-use super::scheme::Scheme;
+use super::scheme::{Aggregation, Scheme};
+use super::transport::{RoundJob, SyncTransport, Transport};
 use crate::bandit::Selector;
 use crate::util::stats::Summary;
 
@@ -26,6 +32,9 @@ pub struct FederationConfig {
     /// Convergence: model_delta below this for `streak` rounds.
     pub convergence_eps: f64,
     pub convergence_streak: usize,
+    /// Aggregation policy; `None` uses the scheme default
+    /// (DEAL → `Majority`, Original/NewFL → `WaitAll`).
+    pub aggregation: Option<Aggregation>,
 }
 
 impl Default for FederationConfig {
@@ -37,32 +46,45 @@ impl Default for FederationConfig {
             theta: 0.3,
             convergence_eps: 0.05,
             convergence_streak: 2,
+            aggregation: None,
         }
     }
 }
 
 /// Per-round record kept by the server.
-#[derive(Debug, Clone)]
+#[derive(Debug, Clone, PartialEq)]
 pub struct RoundRecord {
     pub round: u64,
     pub available: usize,
     pub selected: usize,
     /// Virtual time at which the server closed the round.
     pub round_time_s: f64,
-    /// Total energy across participants (µAh).
+    /// Total energy credited this round (µAh) — under `AsyncBuffered`
+    /// this includes late replies from earlier rounds coming due, and
+    /// excludes this round's stragglers (credited later).
     pub energy_uah: f64,
-    /// Mean holdout accuracy across participants.
+    /// Mean holdout accuracy across credited participants.
     pub mean_accuracy: f64,
-    /// Reward Q(k) = Σ gᵢXᵢ over the selected set.
+    /// Reward Q(k) = Σ gᵢXᵢ over the credited set.
     pub reward: f64,
-    /// Replies that beat the TTL.
+    /// Replies that beat the TTL this round.
     pub in_time: usize,
 }
 
-/// The federation server driving a fleet of device simulators.
+/// A straggler reply buffered by `AsyncBuffered` aggregation, waiting
+/// for its credit round.
+#[derive(Debug, Clone)]
+struct PendingReply {
+    device: usize,
+    sent_round: u64,
+    due_round: u64,
+    outcome: LocalOutcome,
+}
+
+/// The federation server driving a fleet of workers over a transport.
 pub struct Federation {
     cfg: FederationConfig,
-    devices: Vec<DeviceSim>,
+    transport: Box<dyn Transport>,
     selector: Box<dyn Selector>,
     round: u64,
     /// cumulative virtual time (server clock)
@@ -71,23 +93,35 @@ pub struct Federation {
     conv_streak: Vec<usize>,
     /// per-device convergence time (virtual s), once reached
     pub convergence_time_s: Vec<Option<f64>>,
-    /// per-device cumulative busy time
+    /// per-device cumulative busy (training-compute) time
     device_busy_s: Vec<f64>,
     /// per-device cumulative energy
     pub device_energy_uah: Vec<f64>,
     pub rounds: Vec<RoundRecord>,
+    /// stragglers awaiting credit (AsyncBuffered only)
+    pending: Vec<PendingReply>,
 }
 
 impl Federation {
+    /// Build over the in-place [`SyncTransport`] (the benches' default).
     pub fn new(
         devices: Vec<DeviceSim>,
         selector: Box<dyn Selector>,
         cfg: FederationConfig,
     ) -> Self {
-        let n = devices.len();
+        Federation::with_transport(Box::new(SyncTransport::new(devices)), selector, cfg)
+    }
+
+    /// Build over any transport.
+    pub fn with_transport(
+        transport: Box<dyn Transport>,
+        selector: Box<dyn Selector>,
+        cfg: FederationConfig,
+    ) -> Self {
+        let n = transport.n_devices();
         Federation {
             cfg,
-            devices,
+            transport,
             selector,
             round: 0,
             clock_s: 0.0,
@@ -96,86 +130,138 @@ impl Federation {
             device_busy_s: vec![0.0; n],
             device_energy_uah: vec![0.0; n],
             rounds: Vec::new(),
+            pending: Vec::new(),
         }
     }
 
     pub fn n_devices(&self) -> usize {
-        self.devices.len()
+        self.transport.n_devices()
     }
 
     pub fn config(&self) -> &FederationConfig {
         &self.cfg
     }
 
-    pub fn devices(&self) -> &[DeviceSim] {
-        &self.devices
+    pub fn transport(&self) -> &dyn Transport {
+        self.transport.as_ref()
+    }
+
+    /// Per-device cumulative training-compute seconds (the paper's
+    /// completion-time axis; comm excluded).
+    pub fn device_busy_s(&self) -> &[f64] {
+        &self.device_busy_s
+    }
+
+    /// The aggregation policy in force (config override or scheme default).
+    pub fn aggregation(&self) -> Aggregation {
+        self.cfg
+            .aggregation
+            .unwrap_or_else(|| self.cfg.scheme.default_aggregation())
+    }
+
+    /// Stragglers currently buffered and not yet credited.
+    pub fn pending_replies(&self) -> usize {
+        self.pending.len()
     }
 
     /// Run one federated round; returns its record.
     pub fn run_round(&mut self) -> RoundRecord {
         self.round += 1;
-        // 1. availability G(k)
-        let available: Vec<usize> = (0..self.devices.len())
-            .filter(|&i| self.devices[i].step_availability())
-            .collect();
+        // 1. availability G(k), probed through the transport
+        let available = self.transport.probe();
         // 2. selection S(k)
         let selected: Vec<usize> = if self.cfg.scheme.uses_selection() {
             self.selector.select(&available)
         } else {
             available.clone()
         };
-        // 3. PUB → local training → SUB
-        let mut outcomes: Vec<(usize, LocalOutcome)> = selected
-            .iter()
-            .map(|&i| {
-                let out =
-                    self.devices[i].run_round(self.cfg.scheme, self.cfg.arrivals_per_round, self.cfg.theta);
-                (i, out)
-            })
-            .collect();
-        // 4. aggregation: sort replies by virtual arrival
-        outcomes.sort_by(|a, b| a.1.time_s.partial_cmp(&b.1.time_s).unwrap());
+        // 3. PUB → local training → SUB, replies sorted by (time, id)
+        let job = RoundJob {
+            round: self.round,
+            scheme: self.cfg.scheme,
+            arrivals: self.cfg.arrivals_per_round,
+            theta: self.cfg.theta,
+        };
+        let outcomes = self.transport.execute(&selected, job);
+        let agg = self.aggregation();
+        // 4. aggregation: when does the server close the round?
         let round_time = if outcomes.is_empty() {
             0.0
-        } else if self.cfg.scheme.majority_aggregation() {
-            // close at the ⌈(n+1)/2⌉-th reply or the TTL, whichever first
-            let majority_idx = outcomes.len() / 2;
-            outcomes[majority_idx].1.time_s.min(self.cfg.ttl_s)
         } else {
-            // wait for everyone (stragglers included)
-            outcomes.last().unwrap().1.time_s
+            match agg {
+                Aggregation::WaitAll => outcomes.last().unwrap().1.time_s,
+                Aggregation::Majority => {
+                    // ⌈(n+1)/2⌉-th reply or the TTL, whichever first
+                    let majority_idx = outcomes.len() / 2;
+                    outcomes[majority_idx].1.time_s.min(self.cfg.ttl_s)
+                }
+                Aggregation::AsyncBuffered { .. } => {
+                    // stop waiting at the TTL; if everyone beat it the
+                    // round closes at the last reply
+                    if outcomes.iter().all(|(_, o)| o.time_s <= self.cfg.ttl_s) {
+                        outcomes.last().unwrap().1.time_s
+                    } else {
+                        self.cfg.ttl_s
+                    }
+                }
+            }
         };
-        // 5. rewards + bandit feedback + convergence probes
+        // 5. credit: rewards + bandit feedback + convergence probes
         let mut acc = Summary::new();
         let mut energy = 0.0;
         let mut reward_q = 0.0;
         let mut in_time = 0;
+        // 5a. buffered stragglers coming due this round (AsyncBuffered)
+        let round_now = self.round;
+        let due: Vec<PendingReply> = {
+            let mut due = Vec::new();
+            self.pending.retain(|p| {
+                if p.due_round <= round_now {
+                    due.push(p.clone());
+                    false
+                } else {
+                    true
+                }
+            });
+            due
+        };
+        for p in &due {
+            let x = self.reward(p.device, &p.outcome);
+            reward_q += x;
+            self.selector
+                .observe_delayed(p.device, x, round_now - p.sent_round);
+            energy += p.outcome.energy_uah;
+            if p.outcome.accuracy > 0.0 {
+                acc.add(p.outcome.accuracy);
+            }
+            self.credit_device(p.device, &p.outcome);
+        }
+        // 5b. this round's replies
         for (i, out) in &outcomes {
-            if out.time_s <= self.cfg.ttl_s {
+            let beat_ttl = out.time_s <= self.cfg.ttl_s;
+            if beat_ttl {
                 in_time += 1;
+            }
+            if let Aggregation::AsyncBuffered { staleness } = agg {
+                if !beat_ttl {
+                    // buffer the straggler: credited once, δ rounds later
+                    self.pending.push(PendingReply {
+                        device: *i,
+                        sent_round: round_now,
+                        due_round: round_now + staleness.max(1),
+                        outcome: *out,
+                    });
+                    continue;
+                }
             }
             energy += out.energy_uah;
             if out.accuracy > 0.0 {
                 acc.add(out.accuracy);
             }
-            let x = self.reward(out);
+            let x = self.reward(*i, out);
             reward_q += x;
             self.selector.observe(*i, x);
-            // convergence clock: training-compute time (the paper's
-            // completion-time axis excludes the PUB/SUB radio window)
-            self.device_busy_s[*i] += out.compute_s;
-            self.device_energy_uah[*i] += out.energy_uah;
-            // convergence tracking on the device's own busy-time axis
-            if self.convergence_time_s[*i].is_none() {
-                if out.model_delta < self.cfg.convergence_eps {
-                    self.conv_streak[*i] += 1;
-                    if self.conv_streak[*i] >= self.cfg.convergence_streak {
-                        self.convergence_time_s[*i] = Some(self.device_busy_s[*i]);
-                    }
-                } else {
-                    self.conv_streak[*i] = 0;
-                }
-            }
+            self.credit_device(*i, out);
         }
         self.clock_s += round_time;
         let rec = RoundRecord {
@@ -192,6 +278,26 @@ impl Federation {
         rec
     }
 
+    /// Busy-time, energy and convergence bookkeeping for one credited
+    /// reply (called exactly once per reply, immediate or buffered).
+    fn credit_device(&mut self, i: usize, out: &LocalOutcome) {
+        // convergence clock: training-compute time (the paper's
+        // completion-time axis excludes the PUB/SUB radio window)
+        self.device_busy_s[i] += out.compute_s;
+        self.device_energy_uah[i] += out.energy_uah;
+        // convergence tracking on the device's own busy-time axis
+        if self.convergence_time_s[i].is_none() {
+            if out.model_delta < self.cfg.convergence_eps {
+                self.conv_streak[i] += 1;
+                if self.conv_streak[i] >= self.cfg.convergence_streak {
+                    self.convergence_time_s[i] = Some(self.device_busy_s[i]);
+                }
+            } else {
+                self.conv_streak[i] = 0;
+            }
+        }
+    }
+
     /// Run `n` rounds; returns aggregate statistics.
     pub fn run(&mut self, n: usize) -> FederationStats {
         for _ in 0..n {
@@ -202,10 +308,11 @@ impl Federation {
 
     /// Reward Xᵢ(k) ∈ [0,1]: the paper's objective blend — latency
     /// (1 − T/TTL), energy frugality, and contributed data volume.
-    fn reward(&self, out: &LocalOutcome) -> f64 {
+    fn reward(&self, device: usize, out: &LocalOutcome) -> f64 {
         let lat = (1.0 - out.time_s / self.cfg.ttl_s).clamp(0.0, 1.0);
-        // energy yardstick: round energy vs a 1%-battery budget
-        let budget = 0.01 * 3_000_000.0;
+        // energy yardstick: round energy vs 1% of *this device's*
+        // battery, so heterogeneous Table I profiles are scored fairly
+        let budget = 0.01 * self.transport.profile(device).battery_uah;
         let frugal = (1.0 - out.energy_uah / budget).clamp(0.0, 1.0);
         let volume = if self.cfg.arrivals_per_round == 0 {
             0.0
@@ -242,7 +349,7 @@ impl Federation {
 }
 
 /// Aggregate result of a federation run.
-#[derive(Debug, Clone)]
+#[derive(Debug, Clone, PartialEq)]
 pub struct FederationStats {
     pub rounds: usize,
     pub total_time_s: f64,
@@ -259,16 +366,19 @@ mod tests {
     use crate::coordinator::fleet;
     use crate::data::Dataset;
 
-    fn small_federation(scheme: Scheme) -> Federation {
-        let cfg = fleet::FleetConfig {
+    fn small_cfg(scheme: Scheme) -> fleet::FleetConfig {
+        fleet::FleetConfig {
             n_devices: 8,
             dataset: Dataset::Movielens,
             scale: 0.05,
             scheme,
             seed: 42,
             ..fleet::FleetConfig::default()
-        };
-        fleet::build(&cfg)
+        }
+    }
+
+    fn small_federation(scheme: Scheme) -> Federation {
+        fleet::build(&small_cfg(scheme))
     }
 
     #[test]
@@ -373,6 +483,120 @@ mod tests {
         with_mab.run(3);
         for r in &with_mab.rounds {
             assert!(r.selected <= 2);
+        }
+    }
+
+    #[test]
+    fn aggregation_defaults_follow_scheme() {
+        assert_eq!(
+            small_federation(Scheme::Deal).aggregation(),
+            Aggregation::Majority
+        );
+        assert_eq!(
+            small_federation(Scheme::Original).aggregation(),
+            Aggregation::WaitAll
+        );
+    }
+
+    /// A federation whose TTL is so small every reply is a straggler.
+    fn all_late_federation(agg: Option<Aggregation>) -> Federation {
+        let mut cfg = small_cfg(Scheme::NewFl);
+        cfg.ttl_s = 1e-9;
+        cfg.aggregation = agg;
+        fleet::build(&cfg)
+    }
+
+    #[test]
+    fn async_buffers_stragglers_and_credits_exactly_once() {
+        let staleness = 2u64;
+        let mut fed = all_late_federation(Some(Aggregation::AsyncBuffered { staleness }));
+        // reference run with identical fleet/seed: WaitAll credits every
+        // reply in its own round, so its per-round energies are the
+        // ground truth for what AsyncBuffered must credit δ rounds later
+        let mut reference = all_late_federation(Some(Aggregation::WaitAll));
+        let n = 8usize;
+        for _ in 0..n {
+            fed.run_round();
+            reference.run_round();
+        }
+        for k in 0..n {
+            let got = fed.rounds[k].energy_uah;
+            if (k as u64) < staleness {
+                assert_eq!(got, 0.0, "round {} credited before anything was due", k + 1);
+            } else {
+                let want = reference.rounds[k - staleness as usize].energy_uah;
+                assert_eq!(
+                    got.to_bits(),
+                    want.to_bits(),
+                    "round {}: late reply not credited exactly once (δ={staleness})",
+                    k + 1
+                );
+            }
+        }
+        // the last δ rounds' replies are still pending, never double-counted
+        let credited: f64 = fed.rounds.iter().map(|r| r.energy_uah).sum();
+        let device_total: f64 = fed.device_energy_uah.iter().sum();
+        assert_eq!(credited.to_bits(), device_total.to_bits());
+        assert!(fed.pending_replies() > 0, "tail stragglers remain buffered");
+    }
+
+    #[test]
+    fn async_round_time_capped_at_ttl_with_stragglers() {
+        let mut fed =
+            all_late_federation(Some(Aggregation::AsyncBuffered { staleness: 1 }));
+        let rec = fed.run_round();
+        assert!(rec.round_time_s <= fed.cfg.ttl_s);
+        assert_eq!(rec.in_time, 0);
+    }
+
+    #[test]
+    fn async_with_generous_ttl_matches_waitall_cadence() {
+        // when nobody misses the TTL, AsyncBuffered degenerates to
+        // WaitAll: same round times, same per-round energy
+        let mut cfg = small_cfg(Scheme::NewFl);
+        cfg.ttl_s = 1e9;
+        cfg.aggregation = Some(Aggregation::AsyncBuffered { staleness: 3 });
+        let mut fed = fleet::build(&cfg);
+        let mut cfg2 = small_cfg(Scheme::NewFl);
+        cfg2.ttl_s = 1e9;
+        cfg2.aggregation = Some(Aggregation::WaitAll);
+        let mut reference = fleet::build(&cfg2);
+        for _ in 0..5 {
+            let a = fed.run_round();
+            let b = reference.run_round();
+            assert_eq!(a.round_time_s.to_bits(), b.round_time_s.to_bits());
+            assert_eq!(a.energy_uah.to_bits(), b.energy_uah.to_bits());
+        }
+        assert_eq!(fed.pending_replies(), 0);
+    }
+
+    #[test]
+    fn reward_budget_scales_with_device_battery() {
+        // identical outcome, different profiles: the device with the
+        // larger battery must score a weakly higher frugality reward
+        let fed = small_federation(Scheme::Deal);
+        let out = LocalOutcome {
+            time_s: 1.0,
+            energy_uah: 25_000.0,
+            new_items: 10,
+            ..Default::default()
+        };
+        let mut rewards: Vec<(f64, f64)> = (0..fed.n_devices())
+            .map(|i| (fed.transport().profile(i).battery_uah, fed.reward(i, &out)))
+            .collect();
+        rewards.sort_by(|a, b| a.0.total_cmp(&b.0));
+        for w in rewards.windows(2) {
+            assert!(
+                w[1].1 >= w[0].1,
+                "bigger battery must not score lower: {rewards:?}"
+            );
+        }
+        let (min_b, max_b) = (rewards[0].0, rewards.last().unwrap().0);
+        if min_b != max_b {
+            assert!(
+                rewards.last().unwrap().1 > rewards[0].1,
+                "heterogeneous batteries must separate rewards: {rewards:?}"
+            );
         }
     }
 }

@@ -1,0 +1,439 @@
+//! Transport layer: how the server reaches its workers (paper §III-A's
+//! PUB/SUB fabric, abstracted).
+//!
+//! [`Federation`](super::server::Federation) holds round *semantics* —
+//! selection, aggregation policy, rewards, convergence — exactly once;
+//! a [`Transport`] only answers two questions: who is reachable
+//! ([`Transport::probe`], the paper's G(k)) and what did the selected
+//! workers reply ([`Transport::execute`]).
+//!
+//! Two implementations:
+//! - [`SyncTransport`] — in-place loop over the device simulators,
+//!   single-threaded, the benches' default.
+//! - [`ThreadedTransport`] — one OS thread + channel pair per device
+//!   (the PUB/SUB deployment topology that used to live in a separate
+//!   `Broker`), running selected workers in parallel.
+//!
+//! Determinism contract: both transports return replies sorted by
+//! (virtual reply time, worker id) with [`f64::total_cmp`], and all
+//! timing rides in the messages as *virtual* seconds — so a federation
+//! driven over either transport produces bit-identical
+//! [`FederationStats`](super::server::FederationStats) for the same
+//! seed, regardless of wall-clock thread scheduling.
+
+use std::sync::mpsc::{channel, Receiver, Sender};
+use std::thread::JoinHandle;
+
+use super::device::{DeviceSim, LocalOutcome};
+use super::scheme::Scheme;
+use crate::power::DeviceProfile;
+
+/// Job published to the selected workers for one round (the PUB half of
+/// the paper's PUB/SUB round protocol).
+#[derive(Debug, Clone, Copy)]
+pub struct RoundJob {
+    pub round: u64,
+    pub scheme: Scheme,
+    /// Items arriving per device this round.
+    pub arrivals: usize,
+    /// DEAL forget degree θ.
+    pub theta: f64,
+}
+
+/// Which transport a fleet is built over.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum TransportKind {
+    /// In-place loop, single-threaded.
+    Sync,
+    /// One worker thread per device.
+    Threaded,
+}
+
+impl TransportKind {
+    pub fn name(&self) -> &'static str {
+        match self {
+            TransportKind::Sync => "sync",
+            TransportKind::Threaded => "threaded",
+        }
+    }
+
+    pub fn from_name(s: &str) -> Option<TransportKind> {
+        match s.to_ascii_lowercase().as_str() {
+            "sync" => Some(TransportKind::Sync),
+            "threaded" | "pubsub" => Some(TransportKind::Threaded),
+            _ => None,
+        }
+    }
+}
+
+/// The server's view of its worker fabric.
+pub trait Transport {
+    /// Availability probe G(k): step every device's availability chain
+    /// and return the online worker ids, ascending.
+    fn probe(&mut self) -> Vec<usize>;
+
+    /// PUB `job` to the selected workers and collect every reply,
+    /// sorted by (virtual reply time, worker id). Every selected worker
+    /// replies — the *caller* applies majority/TTL/async semantics on
+    /// the virtual times.
+    fn execute(&mut self, selected: &[usize], job: RoundJob) -> Vec<(usize, LocalOutcome)>;
+
+    /// Fleet size.
+    fn n_devices(&self) -> usize;
+
+    /// Static profile of worker `i` (reward budgets, reporting).
+    fn profile(&self, i: usize) -> &DeviceProfile;
+
+    /// Transport kind, for reporting.
+    fn kind(&self) -> TransportKind;
+}
+
+/// Deterministic reply order shared by all transports: virtual time
+/// first (`total_cmp`, so a NaN time can never abort a round), worker
+/// id as the tie-break.
+pub fn sort_replies(replies: &mut [(usize, LocalOutcome)]) {
+    replies.sort_by(|a, b| a.1.time_s.total_cmp(&b.1.time_s).then(a.0.cmp(&b.0)));
+}
+
+// ---------------------------------------------------------------------
+// SyncTransport
+// ---------------------------------------------------------------------
+
+/// In-place loop over the device simulators — no threads, fully
+/// deterministic even under a debugger.
+pub struct SyncTransport {
+    devices: Vec<DeviceSim>,
+}
+
+impl SyncTransport {
+    pub fn new(devices: Vec<DeviceSim>) -> Self {
+        SyncTransport { devices }
+    }
+
+    pub fn devices(&self) -> &[DeviceSim] {
+        &self.devices
+    }
+}
+
+impl Transport for SyncTransport {
+    fn probe(&mut self) -> Vec<usize> {
+        (0..self.devices.len())
+            .filter(|&i| self.devices[i].step_availability())
+            .collect()
+    }
+
+    fn execute(&mut self, selected: &[usize], job: RoundJob) -> Vec<(usize, LocalOutcome)> {
+        let mut replies: Vec<(usize, LocalOutcome)> = selected
+            .iter()
+            .map(|&i| (i, self.devices[i].run_round(job.scheme, job.arrivals, job.theta)))
+            .collect();
+        sort_replies(&mut replies);
+        replies
+    }
+
+    fn n_devices(&self) -> usize {
+        self.devices.len()
+    }
+
+    fn profile(&self, i: usize) -> &DeviceProfile {
+        self.devices[i].profile()
+    }
+
+    fn kind(&self) -> TransportKind {
+        TransportKind::Sync
+    }
+}
+
+// ---------------------------------------------------------------------
+// ThreadedTransport
+// ---------------------------------------------------------------------
+
+/// Control messages PUBlished to a worker thread.
+enum Ctl {
+    Job(RoundJob),
+    /// Availability probe for G(k).
+    Probe,
+    Stop,
+}
+
+/// SUB reply from a worker thread.
+struct Reply {
+    worker: usize,
+    outcome: LocalOutcome,
+    online: bool,
+}
+
+/// One worker endpoint.
+struct Endpoint {
+    tx: Sender<Ctl>,
+    handle: Option<JoinHandle<()>>,
+}
+
+/// One OS thread + channel pair per device: the PUB/SUB deployment
+/// topology. Selected workers train in parallel; virtual time rides in
+/// the messages, so wall-clock scheduling never changes results.
+pub struct ThreadedTransport {
+    endpoints: Vec<Endpoint>,
+    inbox: Receiver<Reply>,
+    /// Profiles captured before the devices move into their threads.
+    profiles: Vec<DeviceProfile>,
+}
+
+impl ThreadedTransport {
+    /// Spawn one thread per device simulator.
+    pub fn spawn(devices: Vec<DeviceSim>) -> Self {
+        let profiles: Vec<DeviceProfile> =
+            devices.iter().map(|d| d.profile().clone()).collect();
+        let (inbox_tx, inbox) = channel::<Reply>();
+        let endpoints = devices
+            .into_iter()
+            .map(|mut dev| {
+                let (tx, rx) = channel::<Ctl>();
+                let out = inbox_tx.clone();
+                let worker = dev.id;
+                let handle = std::thread::Builder::new()
+                    .name(format!("deal-worker-{worker}"))
+                    .spawn(move || loop {
+                        match rx.recv() {
+                            Ok(Ctl::Job(job)) => {
+                                let outcome =
+                                    dev.run_round(job.scheme, job.arrivals, job.theta);
+                                let _ = out.send(Reply { worker, outcome, online: true });
+                            }
+                            Ok(Ctl::Probe) => {
+                                let online = dev.step_availability();
+                                let _ = out.send(Reply {
+                                    worker,
+                                    outcome: LocalOutcome::default(),
+                                    online,
+                                });
+                            }
+                            Ok(Ctl::Stop) | Err(_) => break,
+                        }
+                    })
+                    .expect("spawn worker thread");
+                Endpoint { tx, handle: Some(handle) }
+            })
+            .collect();
+        ThreadedTransport { endpoints, inbox, profiles }
+    }
+
+    fn shutdown(&mut self) {
+        for ep in &self.endpoints {
+            let _ = ep.tx.send(Ctl::Stop);
+        }
+        for ep in &mut self.endpoints {
+            if let Some(h) = ep.handle.take() {
+                let _ = h.join();
+            }
+        }
+    }
+
+    /// Collect one reply from every worker in `expected`, failing fast
+    /// (instead of blocking forever) if a worker thread died mid-round:
+    /// other endpoints keep the inbox sender alive, so a plain `recv`
+    /// would never see a disconnect.
+    fn collect_replies(&self, expected: &[usize]) -> Vec<Reply> {
+        let mut got = vec![false; self.endpoints.len()];
+        let mut replies = Vec::with_capacity(expected.len());
+        while replies.len() < expected.len() {
+            match self.inbox.recv_timeout(std::time::Duration::from_millis(200)) {
+                Ok(r) => {
+                    got[r.worker] = true;
+                    replies.push(r);
+                }
+                Err(std::sync::mpsc::RecvTimeoutError::Timeout) => {
+                    for &w in expected {
+                        let dead = !got[w]
+                            && self.endpoints[w]
+                                .handle
+                                .as_ref()
+                                .map_or(true, |h| h.is_finished());
+                        if dead {
+                            panic!(
+                                "deal worker thread {w} died before replying \
+                                 (panicked mid-round?)"
+                            );
+                        }
+                    }
+                }
+                Err(std::sync::mpsc::RecvTimeoutError::Disconnected) => {
+                    panic!("all deal worker threads disconnected");
+                }
+            }
+        }
+        replies
+    }
+}
+
+impl Drop for ThreadedTransport {
+    fn drop(&mut self) {
+        self.shutdown();
+    }
+}
+
+impl Transport for ThreadedTransport {
+    fn probe(&mut self) -> Vec<usize> {
+        for ep in &self.endpoints {
+            let _ = ep.tx.send(Ctl::Probe);
+        }
+        let all: Vec<usize> = (0..self.endpoints.len()).collect();
+        let mut online: Vec<usize> = self
+            .collect_replies(&all)
+            .into_iter()
+            .filter(|r| r.online)
+            .map(|r| r.worker)
+            .collect();
+        online.sort_unstable();
+        online
+    }
+
+    fn execute(&mut self, selected: &[usize], job: RoundJob) -> Vec<(usize, LocalOutcome)> {
+        for &w in selected {
+            let _ = self.endpoints[w].tx.send(Ctl::Job(job));
+        }
+        let mut replies: Vec<(usize, LocalOutcome)> = self
+            .collect_replies(selected)
+            .into_iter()
+            .map(|r| (r.worker, r.outcome))
+            .collect();
+        sort_replies(&mut replies);
+        replies
+    }
+
+    fn n_devices(&self) -> usize {
+        self.endpoints.len()
+    }
+
+    fn profile(&self, i: usize) -> &DeviceProfile {
+        &self.profiles[i]
+    }
+
+    fn kind(&self) -> TransportKind {
+        TransportKind::Threaded
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coordinator::fleet::{build_devices, FleetConfig};
+    use crate::data::Dataset;
+
+    fn fleet(n: usize) -> Vec<DeviceSim> {
+        let cfg = FleetConfig {
+            n_devices: n,
+            dataset: Dataset::Housing,
+            scale: 0.3,
+            seed: 5,
+            ..Default::default()
+        };
+        build_devices(&cfg)
+    }
+
+    fn job(round: u64, scheme: Scheme, arrivals: usize, theta: f64) -> RoundJob {
+        RoundJob { round, scheme, arrivals, theta }
+    }
+
+    #[test]
+    fn kind_names_roundtrip() {
+        for k in [TransportKind::Sync, TransportKind::Threaded] {
+            assert_eq!(TransportKind::from_name(k.name()), Some(k));
+        }
+        assert_eq!(TransportKind::from_name("carrier-pigeon"), None);
+    }
+
+    #[test]
+    fn threaded_spawns_and_drops() {
+        let t = ThreadedTransport::spawn(fleet(4));
+        assert_eq!(t.n_devices(), 4);
+        drop(t); // joins workers
+    }
+
+    #[test]
+    fn threaded_execute_collects_all_selected() {
+        let mut t = ThreadedTransport::spawn(fleet(6));
+        let replies = t.execute(&[0, 2, 4], job(1, Scheme::Deal, 5, 0.3));
+        assert_eq!(replies.len(), 3);
+        let ids: Vec<usize> = replies.iter().map(|r| r.0).collect();
+        for w in [0, 2, 4] {
+            assert!(ids.contains(&w));
+        }
+        for w in replies.windows(2) {
+            assert!(w[0].1.time_s <= w[1].1.time_s, "sorted by virtual time");
+        }
+    }
+
+    #[test]
+    fn probe_returns_ascending_subset() {
+        for mut t in [
+            Box::new(SyncTransport::new(fleet(5))) as Box<dyn Transport>,
+            Box::new(ThreadedTransport::spawn(fleet(5))),
+        ] {
+            let online = t.probe();
+            assert!(online.len() <= 5);
+            for w in online.windows(2) {
+                assert!(w[0] < w[1]);
+            }
+            for &w in &online {
+                assert!(w < 5);
+            }
+        }
+    }
+
+    #[test]
+    fn transports_agree_per_reply() {
+        // identical fleets, identical job stream → identical replies
+        let mut sync = SyncTransport::new(fleet(6));
+        let mut thr = ThreadedTransport::spawn(fleet(6));
+        for round in 1..=4u64 {
+            let j = job(round, Scheme::NewFl, 5, 0.0);
+            let a = sync.execute(&[0, 1, 3, 5], j);
+            let b = thr.execute(&[0, 1, 3, 5], j);
+            assert_eq!(a.len(), b.len());
+            for ((wa, oa), (wb, ob)) in a.iter().zip(&b) {
+                assert_eq!(wa, wb, "round {round} reply order");
+                assert_eq!(oa.time_s.to_bits(), ob.time_s.to_bits());
+                assert_eq!(oa.energy_uah.to_bits(), ob.energy_uah.to_bits());
+                assert_eq!(oa.new_items, ob.new_items);
+            }
+        }
+    }
+
+    #[test]
+    fn worker_state_persists_across_rounds() {
+        let mut t = ThreadedTransport::spawn(fleet(3));
+        let r1 = t.execute(&[0], job(1, Scheme::NewFl, 4, 0.0));
+        let r2 = t.execute(&[0], job(2, Scheme::NewFl, 4, 0.0));
+        assert_eq!(r1[0].1.new_items, 4);
+        assert_eq!(r2[0].1.new_items, 4);
+        assert_eq!(
+            r2[0].1.retained_items,
+            r1[0].1.retained_items + 4,
+            "worker state persists across publishes"
+        );
+    }
+
+    #[test]
+    fn sort_replies_survives_nan_times() {
+        let mut replies = vec![
+            (0, LocalOutcome { time_s: f64::NAN, ..Default::default() }),
+            (1, LocalOutcome { time_s: 1.0, ..Default::default() }),
+            (2, LocalOutcome { time_s: 0.5, ..Default::default() }),
+        ];
+        sort_replies(&mut replies); // must not panic
+        assert_eq!(replies[0].0, 2);
+        assert_eq!(replies[1].0, 1);
+        assert!(replies[2].1.time_s.is_nan(), "NaN sorts last under total_cmp");
+    }
+
+    #[test]
+    fn profiles_visible_through_both_transports() {
+        let sync = SyncTransport::new(fleet(4));
+        let thr = ThreadedTransport::spawn(fleet(4));
+        for i in 0..4 {
+            assert_eq!(sync.profile(i).name, thr.profile(i).name);
+            assert_eq!(sync.profile(i).battery_uah, thr.profile(i).battery_uah);
+        }
+    }
+}

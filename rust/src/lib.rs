@@ -6,11 +6,24 @@
 //! UPDATE/FORGET calls drive the device's DVFS energy manager.
 //!
 //! Architecture (DESIGN.md):
-//! - L3 (this crate): coordinator, bandit selection, device/power
-//!   simulation, decremental learner engines, bench harness.
+//! - L3 (this crate): a **transport-generic federation engine** — round
+//!   semantics (bandit selection, aggregation, rewards, convergence)
+//!   live once in [`coordinator::Federation`], which drives its fleet
+//!   through a [`coordinator::Transport`]: the single-threaded
+//!   [`coordinator::SyncTransport`] loop, or the parallel
+//!   [`coordinator::ThreadedTransport`] PUB/SUB fabric (one worker
+//!   thread per device). All time is virtual, so both transports
+//!   produce bit-identical stats for a seed. Rounds close under an
+//!   [`coordinator::Aggregation`] policy: `WaitAll` (classic FL),
+//!   `Majority` (the paper's majority/TTL cut), or `AsyncBuffered`
+//!   (buffered-asynchronous rounds — stragglers are credited and
+//!   rewarded δ rounds late instead of blocking or being discarded).
+//!   Below the engine sit the device/power simulation, the decremental
+//!   learner engines, and the bench harness.
 //! - L2/L1 (python/, build-time only): JAX graphs + Pallas kernels,
 //!   AOT-lowered to `artifacts/*.hlo.txt`, executed from
-//!   [`runtime`] via PJRT. Python never runs on the request path.
+//!   [`runtime`] via PJRT (behind the `pjrt` cargo feature). Python
+//!   never runs on the request path.
 
 pub mod bandit;
 pub mod coordinator;

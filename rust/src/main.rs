@@ -1,15 +1,13 @@
 //! `deal` — leader entrypoint for the DEAL federated-learning system.
 //!
 //! Subcommands:
-//!   run        drive a federation over the threaded PUB/SUB topology
+//!   run        drive a federation (threaded PUB/SUB transport by default)
 //!   profiles   print the paper's Table I device profiles
 //!   artifacts  verify + smoke-execute the AOT artifacts (PJRT)
 //!   leak       run the Fig. 1 privacy-leak demonstration
 
-use deal::bandit::{SelectAll, Selector, SelectorConfig, SleepingBandit};
-use deal::coordinator::fleet::{build_devices, FleetConfig};
-use deal::coordinator::pubsub::{Broker, PubMsg};
-use deal::coordinator::{ModelKind, Scheme};
+use deal::coordinator::fleet::{self, FleetConfig};
+use deal::coordinator::{Aggregation, ModelKind, Scheme, TransportKind};
 use deal::data::events::generate_events;
 use deal::data::Dataset;
 use deal::learn::recovery;
@@ -39,14 +37,21 @@ fn main() {
 }
 
 fn cmd_run(args: Vec<String>) -> i32 {
-    let cli = Cli::new("deal run", "drive a federation over the PUB/SUB broker")
+    let cli = Cli::new("deal run", "drive a federation over a worker transport")
         .flag("dataset", "movielens", "dataset (paper §IV-A name)")
         .flag("model", "auto", "ppr|knn|nb|tikhonov (auto = paper default)")
         .flag("scheme", "deal", "deal|original|newfl")
+        .flag("transport", "threaded", "sync|threaded worker transport")
+        .flag(
+            "aggregation",
+            "auto",
+            "waitall|majority|async:<staleness> (auto = scheme default)",
+        )
         .flag("devices", "16", "fleet size")
         .flag("rounds", "20", "federated rounds")
         .flag("m", "4", "max selected per round (DEAL)")
         .flag("theta", "0.3", "forget degree θ")
+        .flag("ttl", "30.0", "round TTL T̈ (virtual seconds)")
         .flag("scale", "0.05", "dataset scale (0,1]")
         .flag("seed", "1", "experiment seed")
         .switch("quiet", "suppress per-round lines");
@@ -73,6 +78,25 @@ fn cmd_run(args: Vec<String>) -> i32 {
         "auto" => None,
         m => ModelKind::from_name(m),
     };
+    let transport = match TransportKind::from_name(a.get("transport")) {
+        Some(t) => t,
+        None => {
+            eprintln!("unknown transport {:?} (want sync|threaded)", a.get("transport"));
+            return 2;
+        }
+    };
+    let aggregation = match a.get("aggregation") {
+        "auto" => None,
+        s => match Aggregation::from_name(s) {
+            Some(agg) => Some(agg),
+            None => {
+                eprintln!(
+                    "unknown aggregation {s:?} (want waitall|majority|async:<staleness>)"
+                );
+                return 2;
+            }
+        },
+    };
     let cfg = FleetConfig {
         n_devices: a.get_usize("devices").unwrap(),
         dataset,
@@ -81,69 +105,51 @@ fn cmd_run(args: Vec<String>) -> i32 {
         scheme,
         theta: a.get_f64("theta").unwrap(),
         m: a.get_usize("m").unwrap(),
+        ttl_s: a.get_f64("ttl").unwrap(),
         seed: a.get_u64("seed").unwrap(),
+        transport,
+        aggregation,
         ..FleetConfig::default()
     };
     let rounds = a.get_usize("rounds").unwrap();
     let quiet = a.get_bool("quiet");
 
+    let mut fed = fleet::build(&cfg);
     println!(
-        "federation: {} devices, {} on {}, scheme {}",
+        "federation: {} devices, {} on {}, scheme {}, transport {}, aggregation {}",
         cfg.n_devices,
         cfg.model.map_or("auto", |m| m.name()),
         dataset.name(),
-        scheme.name()
+        scheme.name(),
+        fed.transport().kind().name(),
+        fed.aggregation().name(),
     );
-    // threaded PUB/SUB topology
-    let broker = Broker::spawn(build_devices(&cfg));
-    let mut selector: Box<dyn Selector> = if scheme.uses_selection() {
-        Box::new(SleepingBandit::new(
-            cfg.n_devices,
-            SelectorConfig { m: cfg.m, min_fraction: cfg.min_fraction, gamma: 20.0 },
-        ))
-    } else {
-        Box::new(SelectAll)
-    };
-    let ttl = cfg.ttl_s;
-    let mut clock = 0.0f64;
-    let mut total_energy = 0.0f64;
-    for round in 1..=rounds as u64 {
-        let available = broker.probe_availability();
-        let selected = selector.select(&available);
-        let replies = broker.publish_round(
-            &selected,
-            PubMsg { round, scheme, arrivals: cfg.arrivals_per_round, theta: cfg.theta },
-        );
-        let round_time = if replies.is_empty() {
-            0.0
-        } else if scheme.majority_aggregation() {
-            replies[replies.len() / 2].1.time_s.min(ttl)
-        } else {
-            replies.last().unwrap().1.time_s
-        };
-        let energy: f64 = replies.iter().map(|r| r.1.energy_uah).sum();
-        for (w, out) in &replies {
-            let lat = (1.0 - out.time_s / ttl).clamp(0.0, 1.0);
-            selector.observe(*w, lat);
-        }
-        clock += round_time;
-        total_energy += energy;
+    for _ in 0..rounds {
+        let rec = fed.run_round();
         if !quiet {
             println!(
-                "round {round:>3}: avail {:>2}  selected {:>2}  t={:>8.3}s  e={}",
-                available.len(),
-                selected.len(),
-                round_time,
-                fmt_uah(energy)
+                "round {:>3}: avail {:>2}  selected {:>2}  in-time {:>2}  t={:>8.3}s  e={}",
+                rec.round,
+                rec.available,
+                rec.selected,
+                rec.in_time,
+                rec.round_time_s,
+                fmt_uah(rec.energy_uah)
             );
         }
     }
-    broker.shutdown();
+    let stats = fed.stats();
     println!(
-        "done: {} rounds, virtual time {:.2}s, total energy {}",
-        rounds,
-        clock,
-        fmt_uah(total_energy)
+        "done: {} rounds, virtual time {:.2}s, total energy {}, {} devices converged{}",
+        stats.rounds,
+        stats.total_time_s,
+        fmt_uah(stats.total_energy_uah),
+        stats.converged_devices,
+        if fed.pending_replies() > 0 {
+            format!(" ({} straggler replies still buffered)", fed.pending_replies())
+        } else {
+            String::new()
+        }
     );
     0
 }

@@ -50,17 +50,32 @@ pub struct Registry {
     entries: BTreeMap<String, ArtifactMeta>,
 }
 
-#[derive(Debug, thiserror::Error)]
+#[derive(Debug)]
 pub enum RegistryError {
-    #[error("artifacts dir {0} has no manifest.json (run `make artifacts`)")]
     NoManifest(PathBuf),
-    #[error("manifest parse error: {0}")]
     BadManifest(String),
-    #[error("artifact file missing: {0}")]
     MissingFile(PathBuf),
-    #[error("unknown artifact {0}")]
     Unknown(String),
 }
+
+impl std::fmt::Display for RegistryError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            RegistryError::NoManifest(dir) => write!(
+                f,
+                "artifacts dir {} has no manifest.json (run `make artifacts`)",
+                dir.display()
+            ),
+            RegistryError::BadManifest(msg) => write!(f, "manifest parse error: {msg}"),
+            RegistryError::MissingFile(path) => {
+                write!(f, "artifact file missing: {}", path.display())
+            }
+            RegistryError::Unknown(name) => write!(f, "unknown artifact {name}"),
+        }
+    }
+}
+
+impl std::error::Error for RegistryError {}
 
 impl Registry {
     /// Load `<dir>/manifest.json` and validate the artifact files exist.

@@ -10,8 +10,12 @@
 //!
 //! Executables are compiled once and cached; `call` dispatches f32
 //! tensors in/out. Python is never involved at runtime.
-
-use std::collections::HashMap;
+//!
+//! The `xla` crate is **not** vendored in every build environment, so
+//! the PJRT backend is gated behind the off-by-default `pjrt` cargo
+//! feature (see Cargo.toml). Without it, [`Engine::new`] returns a
+//! clear error and every artifact-dependent test/bench/example skips —
+//! the pure-rust engines (L3) are unaffected.
 
 use super::artifacts::{ArtifactMeta, Registry, RegistryError};
 
@@ -46,85 +50,43 @@ impl Tensor {
     }
 }
 
-#[derive(Debug, thiserror::Error)]
+#[derive(Debug)]
 pub enum EngineError {
-    #[error(transparent)]
-    Registry(#[from] RegistryError),
-    #[error("xla error: {0}")]
+    Registry(RegistryError),
     Xla(String),
-    #[error("artifact {name}: expected {expected} inputs, got {got}")]
     Arity { name: String, expected: usize, got: usize },
-    #[error("artifact {name} input {index}: expected shape {expected:?}, got {got:?}")]
     Shape { name: String, index: usize, expected: Vec<usize>, got: Vec<usize> },
 }
 
-impl From<xla::Error> for EngineError {
-    fn from(e: xla::Error) -> Self {
-        EngineError::Xla(e.to_string())
+impl std::fmt::Display for EngineError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            EngineError::Registry(e) => write!(f, "{e}"),
+            EngineError::Xla(msg) => write!(f, "xla error: {msg}"),
+            EngineError::Arity { name, expected, got } => write!(
+                f,
+                "artifact {name}: expected {expected} inputs, got {got}"
+            ),
+            EngineError::Shape { name, index, expected, got } => write!(
+                f,
+                "artifact {name} input {index}: expected shape {expected:?}, got {got:?}"
+            ),
+        }
     }
 }
 
-/// The engine: PJRT client + compiled-executable cache.
-pub struct Engine {
-    registry: Registry,
-    client: xla::PjRtClient,
-    cache: HashMap<String, xla::PjRtLoadedExecutable>,
+impl std::error::Error for EngineError {
+    fn source(&self) -> Option<&(dyn std::error::Error + 'static)> {
+        match self {
+            EngineError::Registry(e) => Some(e),
+            _ => None,
+        }
+    }
 }
 
-impl Engine {
-    /// Create over a registry (compiles lazily per artifact).
-    pub fn new(registry: Registry) -> Result<Engine, EngineError> {
-        let client = xla::PjRtClient::cpu()?;
-        Ok(Engine { registry, client, cache: HashMap::new() })
-    }
-
-    /// Convenience: load the default artifacts directory.
-    pub fn from_default_dir() -> Result<Engine, EngineError> {
-        Ok(Engine::new(Registry::load(Registry::default_dir())?)?)
-    }
-
-    pub fn platform(&self) -> String {
-        self.client.platform_name()
-    }
-
-    pub fn registry(&self) -> &Registry {
-        &self.registry
-    }
-
-    /// Ensure an artifact is compiled (idempotent).
-    pub fn prepare(&mut self, name: &str) -> Result<(), EngineError> {
-        if self.cache.contains_key(name) {
-            return Ok(());
-        }
-        let meta = self.registry.get(name)?.clone();
-        let proto = xla::HloModuleProto::from_text_file(
-            meta.path.to_str().expect("utf8 path"),
-        )?;
-        let comp = xla::XlaComputation::from_proto(&proto);
-        let exe = self.client.compile(&comp)?;
-        self.cache.insert(name.to_string(), exe);
-        Ok(())
-    }
-
-    /// Execute an artifact on f32 inputs; returns its (flattened-tuple)
-    /// outputs. Shapes are validated against the manifest.
-    pub fn call(&mut self, name: &str, inputs: &[Tensor]) -> Result<Vec<Tensor>, EngineError> {
-        let meta = self.registry.get(name)?.clone();
-        validate(&meta, inputs)?;
-        self.prepare(name)?;
-        let exe = self.cache.get(name).expect("prepared");
-        let literals: Vec<xla::Literal> = inputs
-            .iter()
-            .map(|t| to_literal(t))
-            .collect::<Result<_, EngineError>>()?;
-        let result = exe.execute::<xla::Literal>(&literals)?[0][0].to_literal_sync()?;
-        // aot.py lowers with return_tuple=True: output is always a tuple
-        let parts = result.to_tuple()?;
-        let mut out = Vec::with_capacity(parts.len());
-        for (lit, spec) in parts.into_iter().zip(&meta.outputs) {
-            out.push(from_literal(&lit, &spec.shape)?);
-        }
-        Ok(out)
+impl From<RegistryError> for EngineError {
+    fn from(e: RegistryError) -> Self {
+        EngineError::Registry(e)
     }
 }
 
@@ -149,33 +111,166 @@ fn validate(meta: &ArtifactMeta, inputs: &[Tensor]) -> Result<(), EngineError> {
     Ok(())
 }
 
-fn to_literal(t: &Tensor) -> Result<xla::Literal, EngineError> {
-    let flat = xla::Literal::vec1(&t.data);
-    if t.shape.is_empty() {
-        // rank-0 scalar
-        Ok(flat.reshape(&[])?)
-    } else {
-        let dims: Vec<i64> = t.shape.iter().map(|&d| d as i64).collect();
-        Ok(flat.reshape(&dims)?)
+#[cfg(feature = "pjrt")]
+mod backend {
+    use super::*;
+    use std::collections::HashMap;
+
+    impl From<xla::Error> for EngineError {
+        fn from(e: xla::Error) -> Self {
+            EngineError::Xla(e.to_string())
+        }
+    }
+
+    /// The engine: PJRT client + compiled-executable cache.
+    pub struct Engine {
+        registry: Registry,
+        client: xla::PjRtClient,
+        cache: HashMap<String, xla::PjRtLoadedExecutable>,
+    }
+
+    impl Engine {
+        /// Create over a registry (compiles lazily per artifact).
+        pub fn new(registry: Registry) -> Result<Engine, EngineError> {
+            let client = xla::PjRtClient::cpu()?;
+            Ok(Engine { registry, client, cache: HashMap::new() })
+        }
+
+        /// Convenience: load the default artifacts directory.
+        pub fn from_default_dir() -> Result<Engine, EngineError> {
+            Engine::new(Registry::load(Registry::default_dir())?)
+        }
+
+        pub fn platform(&self) -> String {
+            self.client.platform_name()
+        }
+
+        pub fn registry(&self) -> &Registry {
+            &self.registry
+        }
+
+        /// Ensure an artifact is compiled (idempotent).
+        pub fn prepare(&mut self, name: &str) -> Result<(), EngineError> {
+            if self.cache.contains_key(name) {
+                return Ok(());
+            }
+            let meta = self.registry.get(name)?.clone();
+            let proto = xla::HloModuleProto::from_text_file(
+                meta.path.to_str().expect("utf8 path"),
+            )?;
+            let comp = xla::XlaComputation::from_proto(&proto);
+            let exe = self.client.compile(&comp)?;
+            self.cache.insert(name.to_string(), exe);
+            Ok(())
+        }
+
+        /// Execute an artifact on f32 inputs; returns its
+        /// (flattened-tuple) outputs. Shapes are validated against the
+        /// manifest.
+        pub fn call(
+            &mut self,
+            name: &str,
+            inputs: &[Tensor],
+        ) -> Result<Vec<Tensor>, EngineError> {
+            let meta = self.registry.get(name)?.clone();
+            validate(&meta, inputs)?;
+            self.prepare(name)?;
+            let exe = self.cache.get(name).expect("prepared");
+            let literals: Vec<xla::Literal> = inputs
+                .iter()
+                .map(to_literal)
+                .collect::<Result<_, EngineError>>()?;
+            let result = exe.execute::<xla::Literal>(&literals)?[0][0].to_literal_sync()?;
+            // aot.py lowers with return_tuple=True: output is always a tuple
+            let parts = result.to_tuple()?;
+            let mut out = Vec::with_capacity(parts.len());
+            for (lit, spec) in parts.into_iter().zip(&meta.outputs) {
+                out.push(from_literal(&lit, &spec.shape)?);
+            }
+            Ok(out)
+        }
+    }
+
+    fn to_literal(t: &Tensor) -> Result<xla::Literal, EngineError> {
+        let flat = xla::Literal::vec1(&t.data);
+        if t.shape.is_empty() {
+            // rank-0 scalar
+            Ok(flat.reshape(&[])?)
+        } else {
+            let dims: Vec<i64> = t.shape.iter().map(|&d| d as i64).collect();
+            Ok(flat.reshape(&dims)?)
+        }
+    }
+
+    fn from_literal(lit: &xla::Literal, shape: &[usize]) -> Result<Tensor, EngineError> {
+        // integer outputs (e.g. top-k indices) are converted to f32
+        let ty = lit.ty()?;
+        let data: Vec<f32> = match ty {
+            xla::ElementType::F32 => lit.to_vec::<f32>()?,
+            xla::ElementType::S32 => lit
+                .to_vec::<i32>()?
+                .into_iter()
+                .map(|x| x as f32)
+                .collect(),
+            other => {
+                return Err(EngineError::Xla(format!(
+                    "unsupported output type {other:?}"
+                )))
+            }
+        };
+        Ok(Tensor { shape: shape.to_vec(), data })
     }
 }
 
-fn from_literal(lit: &xla::Literal, shape: &[usize]) -> Result<Tensor, EngineError> {
-    // integer outputs (e.g. top-k indices) are converted to f32
-    let ty = lit.ty()?;
-    let data: Vec<f32> = match ty {
-        xla::ElementType::F32 => lit.to_vec::<f32>()?,
-        xla::ElementType::S32 => lit
-            .to_vec::<i32>()?
-            .into_iter()
-            .map(|x| x as f32)
-            .collect(),
-        other => {
-            return Err(EngineError::Xla(format!("unsupported output type {other:?}")))
+#[cfg(not(feature = "pjrt"))]
+mod backend {
+    use super::*;
+
+    const UNAVAILABLE: &str =
+        "PJRT backend not compiled in (build with `--features pjrt` after adding \
+         the `xla` dependency)";
+
+    /// Stub engine: constructing one fails with a clear message, so all
+    /// artifact consumers degrade to their skip paths.
+    pub struct Engine {
+        registry: Registry,
+    }
+
+    impl Engine {
+        pub fn new(_registry: Registry) -> Result<Engine, EngineError> {
+            Err(EngineError::Xla(UNAVAILABLE.to_string()))
         }
-    };
-    Ok(Tensor { shape: shape.to_vec(), data })
+
+        pub fn from_default_dir() -> Result<Engine, EngineError> {
+            Engine::new(Registry::load(Registry::default_dir())?)
+        }
+
+        pub fn platform(&self) -> String {
+            "unavailable".to_string()
+        }
+
+        pub fn registry(&self) -> &Registry {
+            &self.registry
+        }
+
+        pub fn prepare(&mut self, _name: &str) -> Result<(), EngineError> {
+            Err(EngineError::Xla(UNAVAILABLE.to_string()))
+        }
+
+        pub fn call(
+            &mut self,
+            name: &str,
+            inputs: &[Tensor],
+        ) -> Result<Vec<Tensor>, EngineError> {
+            // still validate, so shape errors surface even stubbed
+            let meta = self.registry.get(name)?.clone();
+            validate(&meta, inputs)?;
+            Err(EngineError::Xla(UNAVAILABLE.to_string()))
+        }
+    }
 }
+
+pub use backend::Engine;
 
 #[cfg(test)]
 mod tests {
@@ -188,7 +283,13 @@ mod tests {
             eprintln!("skipping: artifacts not built (run `make artifacts`)");
             return None;
         }
-        Some(Engine::new(Registry::load(dir).unwrap()).unwrap())
+        match Engine::new(Registry::load(dir).unwrap()) {
+            Ok(e) => Some(e),
+            Err(e) => {
+                eprintln!("skipping: {e}");
+                None
+            }
+        }
     }
 
     #[test]
@@ -241,5 +342,15 @@ mod tests {
     fn engine_unknown_artifact() {
         let Some(mut e) = engine() else { return };
         assert!(e.call("nope", &[]).is_err());
+    }
+
+    #[cfg(not(feature = "pjrt"))]
+    #[test]
+    fn stub_engine_reports_unavailable() {
+        let dir = PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("artifacts");
+        if dir.join("manifest.json").exists() {
+            let err = Engine::new(Registry::load(dir).unwrap()).err().unwrap();
+            assert!(matches!(err, EngineError::Xla(_)));
+        }
     }
 }

@@ -2,7 +2,7 @@
 //! property-testing, tables, and a micro-bench timing harness.
 //!
 //! These exist because the offline build environment carries no
-//! `rand`/`serde`/`clap`/`proptest`/`criterion`; each module is a small,
+//! `rand`/`serde`/`clap`/`proptest`/`criterion`/`thiserror`; each module is a small,
 //! fully-tested from-scratch implementation of the slice this project
 //! needs (see DESIGN.md §3).
 

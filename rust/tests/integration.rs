@@ -4,8 +4,8 @@
 
 use deal::bandit::{Selector, SelectorConfig, SleepingBandit};
 use deal::coordinator::fleet::{self, build_devices, FleetConfig};
-use deal::coordinator::pubsub::{Broker, PubMsg};
 use deal::coordinator::scheme::ALL_SCHEMES;
+use deal::coordinator::transport::{RoundJob, ThreadedTransport, Transport};
 use deal::coordinator::{ModelKind, Scheme};
 use deal::data::Dataset;
 use deal::learn::tikhonov::{Observation, Tikhonov};
@@ -102,16 +102,17 @@ fn fairness_constraint_holds_in_full_federation() {
 }
 
 #[test]
-fn broker_and_sync_federation_agree_on_model_state() {
-    // same fleet, same jobs: threaded PUB/SUB must produce identical
-    // virtual outcomes to direct calls (determinism across topologies)
+fn threaded_transport_and_direct_calls_agree_on_model_state() {
+    // same fleet, same jobs: the threaded PUB/SUB transport must produce
+    // identical virtual outcomes to direct calls (determinism across
+    // topologies)
     let c = cfg(Scheme::NewFl, Dataset::Housing, 0.5);
-    let broker = Broker::spawn(build_devices(&c));
-    let replies = broker.publish_round(
+    let mut transport = ThreadedTransport::spawn(build_devices(&c));
+    let replies = transport.execute(
         &[0, 1, 2],
-        PubMsg { round: 1, scheme: Scheme::NewFl, arrivals: 5, theta: 0.0 },
+        RoundJob { round: 1, scheme: Scheme::NewFl, arrivals: 5, theta: 0.0 },
     );
-    broker.shutdown();
+    drop(transport);
 
     let mut direct = build_devices(&c);
     for (w, out) in &replies {
@@ -149,7 +150,10 @@ fn runtime_ppr_artifact_matches_native_engine() {
         eprintln!("skipping: artifacts not built");
         return;
     };
-    let mut engine = Engine::new(reg).unwrap();
+    let Ok(mut engine) = Engine::new(reg) else {
+        eprintln!("skipping: PJRT engine unavailable (pjrt feature off)");
+        return;
+    };
     // 64 users × 256 items history at the canonical artifact shape
     let mut rng = Rng::new(17);
     let users = 64usize;
@@ -192,7 +196,10 @@ fn runtime_knn_and_nb_artifacts_execute() {
         eprintln!("skipping: artifacts not built");
         return;
     };
-    let mut engine = Engine::new(reg).unwrap();
+    let Ok(mut engine) = Engine::new(reg) else {
+        eprintln!("skipping: PJRT engine unavailable (pjrt feature off)");
+        return;
+    };
     let mut rng = Rng::new(23);
     // knn_topk: 8 queries × 32 dims vs 256 data rows
     let q: Vec<f32> = (0..8 * 32).map(|_| rng.normal() as f32).collect();

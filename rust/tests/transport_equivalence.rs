@@ -1,0 +1,145 @@
+//! Transport-equivalence suite: the unified federation engine must be
+//! *bit-identical* across transports — all time is virtual, replies are
+//! deterministically ordered, so swapping the in-place loop for one
+//! worker thread per device may not change a single bit of the stats —
+//! and the buffered-async aggregation policy must credit every
+//! straggler exactly once.
+
+use deal::coordinator::fleet::{self, FleetConfig};
+use deal::coordinator::scheme::ALL_SCHEMES;
+use deal::coordinator::{Aggregation, Federation, FederationStats, Scheme, TransportKind};
+use deal::data::Dataset;
+
+fn build(scheme: Scheme, transport: TransportKind, ttl_s: f64) -> Federation {
+    fleet::build(&FleetConfig {
+        n_devices: 10,
+        dataset: Dataset::Housing,
+        scale: 0.4,
+        scheme,
+        ttl_s,
+        seed: 33,
+        transport,
+        ..FleetConfig::default()
+    })
+}
+
+fn assert_bit_identical(a: &FederationStats, b: &FederationStats, ctx: &str) {
+    assert_eq!(a.rounds, b.rounds, "{ctx}: rounds");
+    assert_eq!(
+        a.total_time_s.to_bits(),
+        b.total_time_s.to_bits(),
+        "{ctx}: total_time_s {} vs {}",
+        a.total_time_s,
+        b.total_time_s
+    );
+    assert_eq!(
+        a.total_energy_uah.to_bits(),
+        b.total_energy_uah.to_bits(),
+        "{ctx}: total_energy_uah {} vs {}",
+        a.total_energy_uah,
+        b.total_energy_uah
+    );
+    assert_eq!(
+        a.final_accuracy.to_bits(),
+        b.final_accuracy.to_bits(),
+        "{ctx}: final_accuracy"
+    );
+    assert_eq!(a.converged_devices, b.converged_devices, "{ctx}: converged");
+    assert_eq!(
+        a.convergence_times_s.len(),
+        b.convergence_times_s.len(),
+        "{ctx}: convergence count"
+    );
+    for (x, y) in a.convergence_times_s.iter().zip(&b.convergence_times_s) {
+        assert_eq!(x.to_bits(), y.to_bits(), "{ctx}: convergence time");
+    }
+}
+
+#[test]
+fn sync_and_threaded_stats_bit_identical_across_schemes() {
+    for scheme in ALL_SCHEMES {
+        let mut sync_fed = build(scheme, TransportKind::Sync, 30.0);
+        let mut thr_fed = build(scheme, TransportKind::Threaded, 30.0);
+        let s = sync_fed.run(15);
+        let t = thr_fed.run(15);
+        assert_bit_identical(&s, &t, scheme.name());
+        // per-round records must agree too, not just the aggregates
+        assert_eq!(sync_fed.rounds, thr_fed.rounds, "{} round records", scheme.name());
+    }
+}
+
+#[test]
+fn sync_and_threaded_agree_under_async_aggregation() {
+    // determinism must survive the buffered path: tiny TTL makes every
+    // reply a straggler, so the pending buffer is exercised heavily
+    for rounds in [3usize, 9] {
+        let mk = |transport| {
+            fleet::build(&FleetConfig {
+                n_devices: 8,
+                dataset: Dataset::Housing,
+                scale: 0.4,
+                scheme: Scheme::Deal,
+                ttl_s: 1e-9,
+                seed: 71,
+                transport,
+                aggregation: Some(Aggregation::AsyncBuffered { staleness: 2 }),
+                ..FleetConfig::default()
+            })
+        };
+        let mut sync_fed = mk(TransportKind::Sync);
+        let mut thr_fed = mk(TransportKind::Threaded);
+        let s = sync_fed.run(rounds);
+        let t = thr_fed.run(rounds);
+        assert_bit_identical(&s, &t, "async deal");
+        assert_eq!(sync_fed.pending_replies(), thr_fed.pending_replies());
+    }
+}
+
+#[test]
+fn async_buffered_credits_late_replies_once_with_fixed_delay() {
+    // all-late federation: δ-delayed credit means round k's record
+    // carries exactly round (k-δ)'s energy, each reply exactly once
+    let staleness = 3u64;
+    let mk = |agg| {
+        fleet::build(&FleetConfig {
+            n_devices: 6,
+            dataset: Dataset::Housing,
+            scale: 0.4,
+            scheme: Scheme::NewFl,
+            ttl_s: 1e-9,
+            seed: 9,
+            aggregation: Some(agg),
+            ..FleetConfig::default()
+        })
+    };
+    let mut fed = mk(Aggregation::AsyncBuffered { staleness });
+    let mut reference = mk(Aggregation::WaitAll);
+    let n = 10usize;
+    fed.run(n);
+    reference.run(n);
+    for k in 0..n {
+        let got = fed.rounds[k].energy_uah;
+        if (k as u64) < staleness {
+            assert_eq!(got, 0.0, "round {}: nothing due yet", k + 1);
+        } else {
+            let want = reference.rounds[k - staleness as usize].energy_uah;
+            assert_eq!(got.to_bits(), want.to_bits(), "round {}", k + 1);
+        }
+    }
+    let credited: f64 = fed.rounds.iter().map(|r| r.energy_uah).sum();
+    let per_device: f64 = fed.device_energy_uah.iter().sum();
+    assert_eq!(credited.to_bits(), per_device.to_bits(), "double/missed credit");
+    assert!(fed.pending_replies() > 0, "tail replies stay buffered");
+}
+
+#[test]
+fn transport_flags_parse() {
+    assert_eq!(TransportKind::from_name("sync"), Some(TransportKind::Sync));
+    assert_eq!(TransportKind::from_name("threaded"), Some(TransportKind::Threaded));
+    assert_eq!(
+        Aggregation::from_name("async:5"),
+        Some(Aggregation::AsyncBuffered { staleness: 5 })
+    );
+    assert_eq!(Aggregation::from_name("majority"), Some(Aggregation::Majority));
+    assert_eq!(Aggregation::from_name("waitall"), Some(Aggregation::WaitAll));
+}
