@@ -56,7 +56,7 @@ fn main() {
     let mut selectors: Vec<Box<dyn Selector>> = vec![
         Box::new(SleepingBandit::new(
             N,
-            SelectorConfig { m: M, min_fraction: 0.02, gamma: 20.0 },
+            SelectorConfig { m: M, min_fraction: 0.02, gamma: 20.0, ..Default::default() },
         )),
         Box::new(RandomSelector::new(M, 9)),
         Box::new(RoundRobinSelector::new(M)),

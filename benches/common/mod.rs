@@ -33,6 +33,7 @@ pub fn dataset_scale(ds: Dataset) -> f64 {
         Dataset::Cadata => 0.20,
         Dataset::YearPredictionMSD => 0.01,
         Dataset::Cifar10 => 0.01,
+        Dataset::Mnist => 0.01,
     };
     (base * bench_scale()).clamp(0.0005, 1.0)
 }

@@ -69,7 +69,7 @@ fn main() {
     // --- bandit selection at fleet scale
     let mut bandit = SleepingBandit::new(
         500,
-        SelectorConfig { m: 50, min_fraction: 0.01, gamma: 20.0 },
+        SelectorConfig { m: 50, min_fraction: 0.01, gamma: 20.0, ..Default::default() },
     );
     let avail: Vec<usize> = (0..500).step_by(2).collect();
     b.run("bandit_select(n=500,m=50)", || bandit.select(&avail));

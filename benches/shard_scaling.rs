@@ -1,0 +1,155 @@
+//! Shard-scaling sweep: devices × shards on the batched worker fabric.
+//!
+//! The ROADMAP's scale target — `n_devices ≫ 10³`, where DEAL's CSB-F
+//! selector (§III-C) actually matters — needs two things from the
+//! runtime: message cost per round that is O(workers), not O(devices)
+//! (batched stepping in `ThreadedTransport`), and a fleet partitioned
+//! across shard leaders (`ShardedTransport`) so no single fabric owns
+//! every device. This sweep measures wall-clock build/run cost across
+//! both axes on the MNIST-synth workload and re-checks the invariance
+//! contract: for a fixed seed, merged stats are bit-identical for every
+//! shard count.
+//!
+//!     cargo bench --bench shard_scaling
+//!     DEAL_BENCH_SCALE=0.2 cargo bench --bench shard_scaling   # quick
+//!
+//! The acceptance-style headline row is 10⁴ devices × 8 shards over the
+//! threaded fabric, 20 rounds — seconds, not minutes.
+
+mod common;
+
+use common::{banner, bench_scale};
+use deal::coordinator::fleet::{self, FleetConfig};
+use deal::coordinator::{FederationStats, Scheme, TransportKind};
+use deal::data::Dataset;
+use deal::util::tables::{fmt_duration, fmt_uah, Table};
+use std::time::Instant;
+
+const ROUNDS: usize = 20;
+
+fn cfg(devices: usize, shards: usize, transport: TransportKind) -> FleetConfig {
+    let m = (devices / 100).max(8);
+    FleetConfig {
+        n_devices: devices,
+        dataset: Dataset::Mnist,
+        scale: 0.05,
+        scheme: Scheme::Deal,
+        m,
+        // deliberately feasible Eq. 4 fractions at any fleet size
+        // (Σr = 0.25·m ≤ m), so the sweep never trips the fallback
+        min_fraction: 0.25 * m as f64 / devices as f64,
+        arrivals_per_round: 4,
+        seed: 4242,
+        transport,
+        shards,
+        ..FleetConfig::default()
+    }
+}
+
+struct Row {
+    devices: usize,
+    shards: usize,
+    topology: String,
+    build_s: f64,
+    run_s: f64,
+    stats: FederationStats,
+}
+
+fn run(devices: usize, shards: usize, transport: TransportKind) -> Row {
+    let t0 = Instant::now();
+    let mut fed = fleet::build(&cfg(devices, shards, transport));
+    let build_s = t0.elapsed().as_secs_f64();
+    let topology = fed.transport().describe();
+    let t1 = Instant::now();
+    let stats = fed.run(ROUNDS);
+    let run_s = t1.elapsed().as_secs_f64();
+    Row { devices, shards, topology, build_s, run_s, stats }
+}
+
+fn main() {
+    banner(
+        "Shard scaling — devices × shards, batched threaded fabric (MNIST-synth, DEAL)",
+        "process-level sharding + batched stepping keep 10⁴-device rounds in milliseconds",
+    );
+    // DEAL_BENCH_SCALE < 1 trims the fleet axis for smoke runs
+    let fleets: Vec<usize> = if bench_scale() >= 1.0 {
+        vec![256, 2048, 10_000]
+    } else {
+        vec![128, 512]
+    };
+    let shard_axis = [1usize, 2, 8];
+
+    let mut table = Table::new(
+        &format!("{ROUNDS} rounds per cell (same seed per fleet size)"),
+        &[
+            "devices", "shards", "topology", "build", "run", "rounds/s", "energy",
+            "invariant",
+        ],
+    );
+    let mut diverged = false;
+    for &devices in &fleets {
+        let mut baseline: Option<FederationStats> = None;
+        for &shards in &shard_axis {
+            let row = run(devices, shards, TransportKind::Threaded);
+            let invariant = match &baseline {
+                None => {
+                    baseline = Some(row.stats.clone());
+                    "baseline".to_string()
+                }
+                Some(b) => {
+                    let same = b.total_energy_uah.to_bits()
+                        == row.stats.total_energy_uah.to_bits()
+                        && b.total_time_s.to_bits() == row.stats.total_time_s.to_bits()
+                        && b.final_accuracy.to_bits()
+                            == row.stats.final_accuracy.to_bits();
+                    if !same {
+                        diverged = true;
+                    }
+                    if same { "✓ bit-identical".to_string() } else { "✗ DIVERGED".to_string() }
+                }
+            };
+            table.row([
+                row.devices.to_string(),
+                row.shards.to_string(),
+                row.topology,
+                fmt_duration(row.build_s),
+                fmt_duration(row.run_s),
+                format!("{:.1}", ROUNDS as f64 / row.run_s.max(1e-9)),
+                fmt_uah(row.stats.total_energy_uah),
+                invariant,
+            ]);
+        }
+        // sync single-shard reference for the dispatch-overhead column
+        let sync = run(devices, 1, TransportKind::Sync);
+        table.row([
+            sync.devices.to_string(),
+            "1".to_string(),
+            sync.topology,
+            fmt_duration(sync.build_s),
+            fmt_duration(sync.run_s),
+            format!("{:.1}", ROUNDS as f64 / sync.run_s.max(1e-9)),
+            fmt_uah(sync.stats.total_energy_uah),
+            match &baseline {
+                Some(b)
+                    if b.total_energy_uah.to_bits()
+                        == sync.stats.total_energy_uah.to_bits() =>
+                {
+                    "✓ bit-identical".to_string()
+                }
+                _ => {
+                    diverged = true;
+                    "✗ DIVERGED".to_string()
+                }
+            },
+        ]);
+    }
+    print!("{}", table.render());
+    println!(
+        "\n(invariant column: merged FederationStats vs the shards=1 threaded baseline \
+         at the same seed — the shard/transport/batch axes may never change a bit; \
+         `rust/tests/transport_equivalence.rs` enforces the same contract in CI)"
+    );
+    // self-checking sweep: a diverged cell is a correctness regression,
+    // not a formatting detail — fail the process so scripts notice
+    assert!(!diverged, "shard/batch invariance violated — see table above");
+}

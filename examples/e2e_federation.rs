@@ -9,8 +9,12 @@
 //! 2. **Federated run** — a 24-device fleet (threaded PUB/SUB topology)
 //!    trains Tikhonov under DEAL for 300 rounds with MAB selection;
 //!    the same fleet/seed is replayed under Original and NewFL.
-//! 3. Reports the convergence curve (accuracy every 25 rounds), total
+//!    Reports the convergence curve (accuracy every 25 rounds), total
 //!    virtual time and energy — the paper's headline quantities.
+//! 3. **Sharded multi-federation runtime** — replays a fleet across
+//!    shard leaders to spot-check the bit-identical merge contract,
+//!    then drives a 2000-device MNIST-synth fleet over 4 shard leaders
+//!    of batched threaded workers (the ROADMAP scale path).
 //!
 //! Recorded in EXPERIMENTS.md §E2E.
 
@@ -30,6 +34,7 @@ fn main() {
         .map(|s| (s, federated_run(s)))
         .collect();
     report(&results);
+    sharded_scale_demo();
     println!("\n(e2e wall time: {:.1}s)", t0.elapsed().as_secs_f64());
 }
 
@@ -162,6 +167,73 @@ fn federated_run(scheme: Scheme) -> RunResult {
         energy_uah: stats.total_energy_uah,
         accuracy_curve: curve,
         final_accuracy: last_acc,
+    }
+}
+
+/// Step 3: the sharded multi-federation runtime — merge invariance at
+/// small scale, then a large batched fleet at ROADMAP scale.
+fn sharded_scale_demo() {
+    println!("\n== step 3: sharded multi-federation runtime ==");
+    // invariance spot-check: same fleet/seed, 1 vs 3 shard leaders
+    let small = |shards: usize| FleetConfig {
+        n_devices: 24,
+        dataset: synth::Dataset::Cadata,
+        scale: 0.1,
+        model: Some(ModelKind::Tikhonov),
+        scheme: Scheme::Deal,
+        m: 6,
+        seed: 2026,
+        transport: TransportKind::Threaded,
+        shards,
+        ..FleetConfig::default()
+    };
+    let flat = fleet::build(&small(1)).run(40);
+    let sharded = fleet::build(&small(3)).run(40);
+    assert_eq!(
+        flat.total_energy_uah.to_bits(),
+        sharded.total_energy_uah.to_bits(),
+        "sharded merge must be bit-identical to the flat path"
+    );
+    println!(
+        "  24-device replay, shards 1 vs 3: energy {} both — bit-identical  ✓",
+        fmt_uah(flat.total_energy_uah)
+    );
+
+    // scale: 2000 devices, 4 shard leaders of batched threaded workers
+    let t0 = std::time::Instant::now();
+    let cfg = FleetConfig {
+        n_devices: 2000,
+        dataset: synth::Dataset::Mnist,
+        scale: 0.05,
+        scheme: Scheme::Deal,
+        m: 32,
+        // feasible Eq. 4 fractions at fleet scale: Σr = 0.25·m ≤ m
+        min_fraction: 0.25 * 32.0 / 2000.0,
+        arrivals_per_round: 4,
+        seed: 2026,
+        transport: TransportKind::Threaded,
+        shards: 4,
+        ..FleetConfig::default()
+    };
+    let mut fed = fleet::build(&cfg);
+    let topology = fed.transport().describe();
+    let stats = fed.run(20);
+    println!(
+        "  2000-device MNIST-synth fleet over {topology}: 20 rounds in {:.2}s wall, \
+         virtual time {:.2}s, energy {}",
+        t0.elapsed().as_secs_f64(),
+        stats.total_time_s,
+        fmt_uah(stats.total_energy_uah)
+    );
+    for s in fed.shard_summaries() {
+        println!(
+            "    shard {}: devices {:>4}..{:<4}  replies {:>5}  energy {}",
+            s.shard,
+            s.start,
+            s.end,
+            s.replies,
+            fmt_uah(s.energy_uah)
+        );
     }
 }
 

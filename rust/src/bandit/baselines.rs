@@ -11,10 +11,12 @@ pub trait Selector {
     fn select(&mut self, available: &[usize]) -> Vec<usize>;
     fn observe(&mut self, _arm: usize, _reward: f64) {}
     /// Feed back a reward that arrived `delay` rounds after the arm was
-    /// selected (buffered-asynchronous aggregation). UCB-style
-    /// estimates are order-insensitive, so the default treats it as an
-    /// immediate observation; selectors that weight recency can
-    /// override and discount by `delay`.
+    /// selected (buffered-asynchronous aggregation). The default treats
+    /// it as an immediate observation — correct for the stateless
+    /// baselines here, which ignore rewards entirely. Estimating
+    /// selectors should override and discount by `delay`:
+    /// [`super::SleepingBandit`] credits `reward · λ^delay` with its
+    /// configured `recency_lambda` (λ = 1 ⇒ fresh).
     fn observe_delayed(&mut self, arm: usize, reward: f64, _delay: u64) {
         self.observe(arm, reward);
     }
@@ -120,6 +122,9 @@ impl Selector for super::SleepingBandit {
     fn observe(&mut self, arm: usize, reward: f64) {
         super::SleepingBandit::observe(self, arm, reward)
     }
+    fn observe_delayed(&mut self, arm: usize, reward: f64, delay: u64) {
+        super::SleepingBandit::observe_delayed(self, arm, reward, delay)
+    }
     fn name(&self) -> &'static str {
         "deal-mab"
     }
@@ -178,11 +183,37 @@ mod tests {
     }
 
     #[test]
+    fn bandit_discounts_delayed_rewards_through_trait_object() {
+        use crate::bandit::{SelectorConfig, SleepingBandit};
+        // identical 0.8 rewards, but arm 1's all arrive 3 rounds late
+        // with λ = 0.5 → its UCB estimate must fall well below arm 0's
+        let cfg = SelectorConfig {
+            m: 1,
+            min_fraction: 0.0,
+            gamma: 1.0,
+            recency_lambda: 0.5,
+        };
+        let bandit = SleepingBandit::new(2, cfg);
+        let mut s: Box<dyn Selector> = Box::new(bandit);
+        for _ in 0..200 {
+            s.observe(0, 0.8);
+            s.observe_delayed(1, 0.8, 3); // credits 0.8 · 0.5³ = 0.1
+        }
+        // the trait object must route through the bandit's discounting
+        // override, not the trait's fresh-observation default
+        let b = s.select(&[0, 1]);
+        assert_eq!(b, vec![0], "fresh-reward arm must win selection");
+        // stateless baselines keep the pass-through default: a no-op
+        let mut rr: Box<dyn Selector> = Box::new(RoundRobinSelector::new(1));
+        rr.observe_delayed(0, 0.9, 7);
+    }
+
+    #[test]
     fn bandit_implements_selector_trait() {
         use crate::bandit::{SelectorConfig, SleepingBandit};
         let mut b: Box<dyn Selector> = Box::new(SleepingBandit::new(
             4,
-            SelectorConfig { m: 2, min_fraction: 0.0, gamma: 1.0 },
+            SelectorConfig { m: 2, min_fraction: 0.0, gamma: 1.0, ..Default::default() },
         ));
         let c = b.select(&[0, 1, 2, 3]);
         assert_eq!(c.len(), 2);

@@ -26,11 +26,16 @@ pub struct SelectorConfig {
     pub min_fraction: f64,
     /// Fairness/reward tradeoff γ.
     pub gamma: f64,
+    /// Recency discount λ ∈ [0, 1] applied to rewards arriving `delay`
+    /// rounds late (`observe_delayed`): the arm credits reward · λ^delay.
+    /// 1.0 (the default) treats late rewards as fresh and is
+    /// bit-preserving with the pre-discount behaviour.
+    pub recency_lambda: f64,
 }
 
 impl Default for SelectorConfig {
     fn default() -> Self {
-        SelectorConfig { m: 10, min_fraction: 0.05, gamma: 20.0 }
+        SelectorConfig { m: 10, min_fraction: 0.05, gamma: 20.0, recency_lambda: 1.0 }
     }
 }
 
@@ -153,6 +158,13 @@ impl SleepingBandit {
     pub fn observe(&mut self, i: usize, reward: f64) {
         self.arms[i].observe(reward);
     }
+
+    /// Feed back a reward observed `delay` rounds after the device was
+    /// selected (buffered-async aggregation), down-weighted by the
+    /// configured recency discount λ^delay.
+    pub fn observe_delayed(&mut self, i: usize, reward: f64, delay: u64) {
+        self.arms[i].observe_delayed(reward, delay, self.cfg.recency_lambda);
+    }
 }
 
 #[cfg(test)]
@@ -187,7 +199,7 @@ mod tests {
     fn respects_m_and_availability() {
         let mut b = SleepingBandit::new(
             10,
-            SelectorConfig { m: 3, min_fraction: 0.0, gamma: 1.0 },
+            SelectorConfig { m: 3, min_fraction: 0.0, gamma: 1.0, ..Default::default() },
         );
         let chosen = b.select(&[1, 4, 7, 9]);
         assert!(chosen.len() <= 3);
@@ -207,7 +219,7 @@ mod tests {
         mu[7] = 0.9;
         let mut b = SleepingBandit::new(
             10,
-            SelectorConfig { m: 2, min_fraction: 0.0, gamma: 1.0 },
+            SelectorConfig { m: 2, min_fraction: 0.0, gamma: 1.0, ..Default::default() },
         );
         run_rounds(&mut b, &mu, 2000, 1.0, 1);
         let counts = b.selection_counts();
@@ -220,7 +232,7 @@ mod tests {
         let mu: Vec<f64> = (0..12).map(|i| 0.1 + 0.07 * i as f64).collect();
         let mut b = SleepingBandit::new(
             12,
-            SelectorConfig { m: 3, min_fraction: 0.0, gamma: 1.0 },
+            SelectorConfig { m: 3, min_fraction: 0.0, gamma: 1.0, ..Default::default() },
         );
         let got = run_rounds(&mut b, &mu, 1500, 1.0, 2);
         // uniform random baseline expectation: mean(mu) * 3 per round
@@ -233,7 +245,7 @@ mod tests {
         // arm 0 is terrible but must still get ≥ 20% of rounds
         let mut mu = vec![0.9; 5];
         mu[0] = 0.01;
-        let cfg = SelectorConfig { m: 2, min_fraction: 0.2, gamma: 5.0 };
+        let cfg = SelectorConfig { m: 2, min_fraction: 0.2, gamma: 5.0, ..Default::default() };
         let mut b = SleepingBandit::new(5, cfg);
         run_rounds(&mut b, &mu, 3000, 1.0, 3);
         let frac = b.selection_fraction(0);
@@ -244,7 +256,7 @@ mod tests {
     fn no_fairness_starves_bad_arm() {
         let mut mu = vec![0.9; 5];
         mu[0] = 0.01;
-        let cfg = SelectorConfig { m: 2, min_fraction: 0.0, gamma: 1.0 };
+        let cfg = SelectorConfig { m: 2, min_fraction: 0.0, gamma: 1.0, ..Default::default() };
         let mut b = SleepingBandit::new(5, cfg);
         run_rounds(&mut b, &mu, 3000, 1.0, 4);
         assert!(b.selection_fraction(0) < 0.05);
@@ -254,7 +266,7 @@ mod tests {
     fn sleeping_devices_accumulate_priority() {
         // device 0 sleeps for 100 rounds then wakes; queue credit should
         // make it selected promptly
-        let cfg = SelectorConfig { m: 1, min_fraction: 0.3, gamma: 1.0 };
+        let cfg = SelectorConfig { m: 1, min_fraction: 0.3, gamma: 1.0, ..Default::default() };
         let mut b = SleepingBandit::new(3, cfg);
         for _ in 0..100 {
             let chosen = b.select(&[1, 2]);
@@ -269,13 +281,13 @@ mod tests {
     #[test]
     #[should_panic(expected = "infeasible")]
     fn infeasible_fractions_rejected() {
-        let cfg = SelectorConfig { m: 1, min_fraction: 0.0, gamma: 1.0 };
+        let cfg = SelectorConfig { m: 1, min_fraction: 0.0, gamma: 1.0, ..Default::default() };
         let _ = SleepingBandit::new(3, cfg).with_fractions(vec![0.5, 0.5, 0.5]);
     }
 
     #[test]
     fn gains_bias_selection() {
-        let cfg = SelectorConfig { m: 1, min_fraction: 0.0, gamma: 1.0 };
+        let cfg = SelectorConfig { m: 1, min_fraction: 0.0, gamma: 1.0, ..Default::default() };
         let mut b = SleepingBandit::new(2, cfg).with_gains(vec![1.0, 3.0]);
         // identical rewards; higher gain should win overwhelmingly
         let mut wins = [0usize; 2];
@@ -288,6 +300,31 @@ mod tests {
     }
 
     #[test]
+    fn delayed_rewards_discounted_under_lambda() {
+        let cfg = SelectorConfig {
+            m: 1,
+            min_fraction: 0.0,
+            gamma: 1.0,
+            recency_lambda: 0.5,
+        };
+        let mut b = SleepingBandit::new(2, cfg);
+        b.observe(0, 0.8); // fresh
+        b.observe_delayed(1, 0.8, 2); // 0.8 · 0.5² = 0.2
+        assert!((b.arms[0].mean() - 0.8).abs() < 1e-12);
+        assert!((b.arms[1].mean() - 0.2).abs() < 1e-12);
+    }
+
+    #[test]
+    fn default_lambda_keeps_delayed_rewards_bit_identical() {
+        let cfg = SelectorConfig { m: 1, min_fraction: 0.0, gamma: 1.0, ..Default::default() };
+        let mut fresh = SleepingBandit::new(1, cfg.clone());
+        let mut late = SleepingBandit::new(1, cfg);
+        fresh.observe(0, 0.37);
+        late.observe_delayed(0, 0.37, 9);
+        assert_eq!(fresh.arms[0].mean().to_bits(), late.arms[0].mean().to_bits());
+    }
+
+    #[test]
     fn property_selection_is_valid_subset() {
         crate::util::prop::check(0x5B, 25, |g| {
             let n = g.usize_in(1, 20);
@@ -296,6 +333,7 @@ mod tests {
                 m,
                 min_fraction: g.f64_in(0.0, 0.5 / n as f64),
                 gamma: g.f64_in(0.1, 50.0),
+                ..Default::default()
             };
             let mut b = SleepingBandit::new(n, cfg);
             for _ in 0..30 {

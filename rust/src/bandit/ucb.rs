@@ -19,6 +19,25 @@ impl ArmEstimate {
         self.plays += 1;
     }
 
+    /// Record a reward that arrived `delay` rounds late, recency-
+    /// discounted to `reward · λ^delay` (buffered-async aggregation
+    /// credits stragglers in a later round; a stale reward says less
+    /// about the arm's *current* worth). λ = 1 or delay = 0 bypasses
+    /// the multiply entirely, so default configs keep bit-identical
+    /// statistics with the pre-discount behaviour.
+    pub fn observe_delayed(&mut self, reward: f64, delay: u64, lambda: f64) {
+        debug_assert!(
+            (0.0..=1.0).contains(&lambda),
+            "recency lambda {lambda} out of [0,1]"
+        );
+        if lambda >= 1.0 || delay == 0 {
+            self.observe(reward);
+        } else {
+            let exp = delay.min(i32::MAX as u64) as i32;
+            self.observe(reward * lambda.max(0.0).powi(exp));
+        }
+    }
+
     pub fn plays(&self) -> u64 {
         self.plays
     }
@@ -89,6 +108,36 @@ mod tests {
             a.observe(0.3);
         }
         assert!(a.ucb(10_000) > a.ucb(100));
+    }
+
+    #[test]
+    fn delayed_rewards_down_weighted_when_lambda_below_one() {
+        let mut fresh = ArmEstimate::default();
+        let mut late = ArmEstimate::default();
+        fresh.observe(0.8);
+        late.observe_delayed(0.8, 2, 0.5); // 0.8 · 0.25 = 0.2
+        assert!((late.mean() - 0.2).abs() < 1e-12, "mean {}", late.mean());
+        assert!(late.mean() < fresh.mean());
+        assert_eq!(late.plays(), 1, "a discounted reward is still one play");
+    }
+
+    #[test]
+    fn unit_lambda_is_bit_identical_to_fresh_observation() {
+        let mut fresh = ArmEstimate::default();
+        let mut late = ArmEstimate::default();
+        for (r, d) in [(0.3, 1u64), (0.9, 5), (0.123456789, 100)] {
+            fresh.observe(r);
+            late.observe_delayed(r, d, 1.0);
+        }
+        assert_eq!(fresh.mean().to_bits(), late.mean().to_bits());
+        assert_eq!(fresh.plays(), late.plays());
+    }
+
+    #[test]
+    fn zero_delay_ignores_lambda() {
+        let mut a = ArmEstimate::default();
+        a.observe_delayed(0.6, 0, 0.1);
+        assert!((a.mean() - 0.6).abs() < 1e-12);
     }
 
     #[test]

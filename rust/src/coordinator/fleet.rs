@@ -6,6 +6,7 @@
 use super::device::DeviceSim;
 use super::scheme::{Aggregation, Scheme};
 use super::server::{Federation, FederationConfig};
+use super::shard::ShardedTransport;
 use super::transport::{SyncTransport, ThreadedTransport, Transport, TransportKind};
 use super::workload::{ModelKind, Workload};
 use crate::bandit::{SelectAll, Selector, SelectorConfig, SleepingBandit};
@@ -40,9 +41,17 @@ pub struct FleetConfig {
     /// model). `Original` retrains over this history every round.
     pub prefill_frac: f64,
     pub seed: u64,
-    /// Which transport the federation runs over (sync loop vs one
-    /// worker thread per device). Bit-identical stats either way.
+    /// Which transport the federation runs over (sync loop vs batched
+    /// PUB/SUB worker threads). Bit-identical stats either way.
     pub transport: TransportKind,
+    /// Shard-leader count: `> 1` partitions the fleet across a
+    /// [`ShardedTransport`] whose leaders each drive an inner
+    /// `transport`-kind fabric. Bit-identical stats for any value.
+    pub shards: usize,
+    /// Recency discount λ ∈ [0, 1] for bandit rewards arriving late
+    /// under buffered-async aggregation (reward · λ^delay; 1.0 treats
+    /// late rewards as fresh).
+    pub recency_lambda: f64,
     /// Aggregation override; `None` uses the scheme default.
     pub aggregation: Option<Aggregation>,
 }
@@ -64,6 +73,8 @@ impl Default for FleetConfig {
             prefill_frac: 0.6,
             seed: 1,
             transport: TransportKind::Sync,
+            shards: 1,
+            recency_lambda: 1.0,
             aggregation: None,
         }
     }
@@ -77,7 +88,7 @@ pub fn default_model(ds: Dataset) -> ModelKind {
     match ds {
         Dataset::Movielens | Dataset::Jester => ModelKind::Ppr,
         Dataset::Mushrooms | Dataset::Phishing => ModelKind::KnnLsh,
-        Dataset::Covtype | Dataset::Cifar10 => ModelKind::NaiveBayes,
+        Dataset::Covtype | Dataset::Cifar10 | Dataset::Mnist => ModelKind::NaiveBayes,
         Dataset::Housing | Dataset::Cadata | Dataset::YearPredictionMSD => {
             ModelKind::Tikhonov
         }
@@ -136,21 +147,54 @@ fn make_workload(model: ModelKind, data: &Data, idx: &[usize], seed: u64) -> Wor
     }
 }
 
-/// Build a full federation: devices + scheme-appropriate selector over
-/// the configured transport.
-pub fn build(cfg: &FleetConfig) -> Federation {
-    let devices = build_devices(cfg);
-    let transport: Box<dyn Transport> = match cfg.transport {
+/// Build the worker fabric for a fleet: flat Sync/Threaded when
+/// `shards <= 1`, otherwise a [`ShardedTransport`] with `shards`
+/// leaders each driving an inner transport of `kind`.
+pub fn build_transport(
+    devices: Vec<DeviceSim>,
+    kind: TransportKind,
+    shards: usize,
+) -> Box<dyn Transport> {
+    if shards > 1 {
+        return Box::new(ShardedTransport::new(devices, shards, kind));
+    }
+    match kind {
         TransportKind::Sync => Box::new(SyncTransport::new(devices)),
         TransportKind::Threaded => Box::new(ThreadedTransport::spawn(devices)),
-    };
+    }
+}
+
+/// Build a full federation: devices + scheme-appropriate selector over
+/// the configured (possibly sharded) transport.
+pub fn build(cfg: &FleetConfig) -> Federation {
+    let devices = build_devices(cfg);
+    let transport = build_transport(devices, cfg.transport, cfg.shards);
     let selector: Box<dyn Selector> = if cfg.scheme.uses_selection() {
+        // Eq. 4 feasibility: the queues only stabilize when Σᵢ rᵢ ≤ m.
+        // A fixed per-device fraction breaks that silently once the
+        // fleet outgrows m/min_fraction devices (n = 10⁴, m = 4 would
+        // demand Σr = 200). Feasible configs are honored exactly
+        // (pre-PR behaviour, bit-identical); an infeasible one falls
+        // back to half the per-device fair share m/n.
+        let n = cfg.n_devices.max(1);
+        let feasible_fraction = if cfg.min_fraction * n as f64 > cfg.m as f64 {
+            let fallback = 0.5 * cfg.m as f64 / n as f64;
+            eprintln!(
+                "warning: min_fraction {} infeasible for n={n}, m={} \
+                 (Σr > m breaks Eq. 4 queue stability); using {fallback:.6}",
+                cfg.min_fraction, cfg.m
+            );
+            fallback
+        } else {
+            cfg.min_fraction
+        };
         Box::new(SleepingBandit::new(
             cfg.n_devices,
             SelectorConfig {
                 m: cfg.m,
-                min_fraction: cfg.min_fraction,
+                min_fraction: feasible_fraction,
                 gamma: 20.0,
+                recency_lambda: cfg.recency_lambda,
             },
         ))
     } else {
@@ -233,6 +277,21 @@ mod tests {
         };
         let devices = build_devices(&cfg);
         assert_eq!(devices[0].workload().kind(), ModelKind::NaiveBayes);
+    }
+
+    #[test]
+    fn sharded_build_reports_topology() {
+        let cfg = FleetConfig {
+            n_devices: 8,
+            scale: 0.02,
+            shards: 4,
+            ..Default::default()
+        };
+        let fed = build(&cfg);
+        assert_eq!(fed.n_devices(), 8);
+        assert_eq!(fed.transport().shards(), 4);
+        assert_eq!(fed.transport().describe(), "sharded×4(sync)");
+        assert_eq!(fed.transport().shard_summaries().len(), 4);
     }
 
     #[test]

@@ -10,11 +10,17 @@
 //! - [`device`] — one simulated worker: governor + meter + battery +
 //!   θ-LRU cache + decremental learner (§III-D local layer)
 //! - [`transport`] — how the server reaches workers: [`SyncTransport`]
-//!   (in-place loop) or [`ThreadedTransport`] (one PUB/SUB worker
-//!   thread per device). Both probe availability G(k) and execute
-//!   [`RoundJob`]s, returning replies in a deterministic
-//!   (virtual-time, id) order — stats are bit-identical across
-//!   transports for the same seed
+//!   (in-place loop) or [`ThreadedTransport`] (PUB/SUB worker threads,
+//!   each batch-stepping a contiguous device slice). Both probe
+//!   availability G(k) and execute [`RoundJob`]s, returning replies in
+//!   a deterministic (virtual-time, id) order — stats are bit-identical
+//!   across transports for the same seed
+//! - [`shard`] — the multi-federation runtime's fabric:
+//!   [`ShardedTransport`] partitions the fleet across K shard leaders
+//!   (each driving its own inner Sync/Threaded transport) with a root
+//!   aggregator merging per-shard round results on the shared virtual
+//!   clock. Semantics-preserving: any shard count is bit-identical to
+//!   the flat path at a fixed seed
 //! - [`server`] — the [`Federation`] engine: selection, aggregation
 //!   (majority/TTL cut, wait-all, or buffered-async crediting of
 //!   stragglers δ rounds late), rewards, convergence (§III-A/B)
@@ -24,6 +30,7 @@ pub mod device;
 pub mod fleet;
 pub mod scheme;
 pub mod server;
+pub mod shard;
 pub mod transport;
 pub mod workload;
 
@@ -31,5 +38,8 @@ pub use device::{DeviceSim, LocalOutcome};
 pub use fleet::FleetConfig;
 pub use scheme::{Aggregation, Scheme};
 pub use server::{Federation, FederationConfig, FederationStats};
-pub use transport::{RoundJob, SyncTransport, ThreadedTransport, Transport, TransportKind};
+pub use shard::ShardedTransport;
+pub use transport::{
+    RoundJob, ShardSummary, SyncTransport, ThreadedTransport, Transport, TransportKind,
+};
 pub use workload::{ModelKind, Workload};

@@ -15,7 +15,7 @@
 
 use super::device::{DeviceSim, LocalOutcome};
 use super::scheme::{Aggregation, Scheme};
-use super::transport::{RoundJob, SyncTransport, Transport};
+use super::transport::{RoundJob, ShardSummary, SyncTransport, Transport};
 use crate::bandit::Selector;
 use crate::util::stats::Summary;
 
@@ -146,6 +146,12 @@ impl Federation {
         self.transport.as_ref()
     }
 
+    /// Per-shard cumulative summaries from the root aggregator (empty
+    /// when the fleet runs on a flat, unsharded transport).
+    pub fn shard_summaries(&self) -> Vec<ShardSummary> {
+        self.transport.shard_summaries()
+    }
+
     /// Per-device cumulative training-compute seconds (the paper's
     /// completion-time axis; comm excluded).
     pub fn device_busy_s(&self) -> &[f64] {
@@ -169,11 +175,13 @@ impl Federation {
         self.round += 1;
         // 1. availability G(k), probed through the transport
         let available = self.transport.probe();
-        // 2. selection S(k)
+        let n_available = available.len();
+        // 2. selection S(k) — select-all schemes take the availability
+        // vector by move (no per-round clone at n_devices ≫ 10³)
         let selected: Vec<usize> = if self.cfg.scheme.uses_selection() {
             self.selector.select(&available)
         } else {
-            available.clone()
+            available
         };
         // 3. PUB → local training → SUB, replies sorted by (time, id)
         let job = RoundJob {
@@ -266,7 +274,7 @@ impl Federation {
         self.clock_s += round_time;
         let rec = RoundRecord {
             round: self.round,
-            available: available.len(),
+            available: n_available,
             selected: selected.len(),
             round_time_s: round_time,
             energy_uah: energy,
@@ -477,7 +485,7 @@ mod tests {
         let devices2 = fleet::build_devices(&cfg);
         let bandit = SleepingBandit::new(
             6,
-            SelectorConfig { m: 2, min_fraction: 0.05, gamma: 10.0 },
+            SelectorConfig { m: 2, min_fraction: 0.05, gamma: 10.0, ..Default::default() },
         );
         let mut with_mab = Federation::new(devices2, Box::new(bandit), f_cfg);
         with_mab.run(3);

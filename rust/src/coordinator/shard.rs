@@ -1,0 +1,353 @@
+//! Process-level sharding above the [`Transport`] abstraction: the
+//! multi-federation runtime's fabric layer.
+//!
+//! A [`ShardedTransport`] partitions the fleet into K **contiguous**
+//! shards, each owned by a shard leader driving its own inner
+//! [`SyncTransport`] or [`ThreadedTransport`]; a root aggregator fans
+//! round jobs out over the leaders, merges their per-shard results
+//! (replies carry virtual times, so the merge is a sorted union on the
+//! shared virtual clock) and keeps per-shard [`ShardSummary`] counters.
+//!
+//! Semantics preservation is the design constraint, not an accident:
+//!
+//! - Every device simulator is an independent deterministic process, so
+//!   *where* it is stepped (which shard, which worker batch) can never
+//!   change *what* it computes.
+//! - Shards are contiguous in device-id order and inner replies arrive
+//!   (virtual-time, id)-sorted; the root re-sorts the merged set under
+//!   the same order. Hence for a fixed seed the merged
+//!   [`FederationStats`](super::server::FederationStats) are
+//!   bit-identical for shards ∈ {1, 2, 4, …} and for either inner
+//!   transport — enforced by `rust/tests/transport_equivalence.rs`.
+//! - Selection stays global (the federation's CSB-F bandit sees global
+//!   ids), and Eq. 4 fairness fractions are per-device, so each shard's
+//!   aggregate selection fraction meets Σᵢ∈shard rᵢ — enforced by
+//!   `rust/tests/prop_selector.rs`.
+
+use super::device::{DeviceSim, LocalOutcome};
+use super::transport::{
+    default_workers, partition_bounds, partition_chunks, sort_replies, RoundJob,
+    ShardSummary, SyncTransport, ThreadedTransport, Transport, TransportKind,
+};
+use crate::power::DeviceProfile;
+
+/// Cumulative counters per shard; device ranges live in `bounds` (one
+/// source of truth) and are joined in at `shard_summaries()` time.
+#[derive(Debug, Clone, Copy, Default)]
+struct ShardCounters {
+    jobs: u64,
+    replies: u64,
+    energy_uah: f64,
+    compute_s: f64,
+}
+
+/// One shard leader. Held concretely (not as `Box<dyn Transport>`) so
+/// the root can use the threaded fabric's dispatch/collect split and
+/// overlap all leaders within a round.
+enum Leader {
+    Sync(SyncTransport),
+    Threaded(ThreadedTransport),
+}
+
+impl Leader {
+    fn as_transport(&self) -> &dyn Transport {
+        match self {
+            Leader::Sync(t) => t,
+            Leader::Threaded(t) => t,
+        }
+    }
+}
+
+/// K shard leaders over contiguous fleet partitions, merged by a root
+/// aggregator. Implements [`Transport`], so the federation engine is
+/// oblivious to the sharding.
+///
+/// Rounds are two-phase over the leaders: jobs/probes are *dispatched*
+/// to every threaded leader before any reply is awaited, so the shards
+/// genuinely run concurrently — round wall time is the max over
+/// shards, not the sum.
+pub struct ShardedTransport {
+    leaders: Vec<Leader>,
+    /// Global device id at which each shard starts; `bounds[K]` = fleet
+    /// size (see [`partition_bounds`]).
+    bounds: Vec<usize>,
+    inner: TransportKind,
+    counters: Vec<ShardCounters>,
+}
+
+impl ShardedTransport {
+    /// Partition `devices` into `shards` contiguous slices and stand up
+    /// one inner transport of `inner` kind per shard. `shards` is
+    /// clamped to `[1, n_devices]`.
+    pub fn new(devices: Vec<DeviceSim>, shards: usize, inner: TransportKind) -> Self {
+        let n = devices.len();
+        let k = shards.clamp(1, n.max(1));
+        let bounds = partition_bounds(n, k);
+        let chunks = partition_chunks(devices, &bounds);
+        // threaded leaders share one machine and run concurrently:
+        // split the fleet-wide worker budget across them instead of
+        // letting each size itself at 4×cores (K-fold thread
+        // oversubscription otherwise)
+        let workers_per_leader = (default_workers(n) / k).max(1);
+        let leaders: Vec<Leader> = chunks
+            .into_iter()
+            .map(|chunk| match inner {
+                TransportKind::Sync => Leader::Sync(SyncTransport::new(chunk)),
+                TransportKind::Threaded => Leader::Threaded(
+                    ThreadedTransport::spawn_batched(chunk, workers_per_leader),
+                ),
+            })
+            .collect();
+        ShardedTransport {
+            leaders,
+            bounds,
+            inner,
+            counters: vec![ShardCounters::default(); k],
+        }
+    }
+
+    /// Owning shard of global device id `g`.
+    fn shard_of(&self, g: usize) -> usize {
+        debug_assert!(g < self.n_devices());
+        // bounds is ascending with bounds[0] = 0, so the last bound ≤ g
+        // names the owning shard
+        self.bounds.partition_point(|&b| b <= g) - 1
+    }
+}
+
+impl Transport for ShardedTransport {
+    fn probe(&mut self) -> Vec<usize> {
+        // phase 1: fire probes at every threaded leader so their
+        // fleets step concurrently
+        for leader in &mut self.leaders {
+            if let Leader::Threaded(t) = leader {
+                t.dispatch_probe();
+            }
+        }
+        // phase 2: walk shards in id order, stepping sync leaders
+        // inline and collecting threaded replies
+        let mut online = Vec::new();
+        for (s, leader) in self.leaders.iter_mut().enumerate() {
+            let base = self.bounds[s];
+            let local = match leader {
+                Leader::Sync(t) => t.probe(),
+                Leader::Threaded(t) => t.collect_probe(),
+            };
+            online.extend(local.into_iter().map(|i| base + i));
+        }
+        // each leader reports ascending local ids and shard bases
+        // ascend, so the concatenation is already globally ascending
+        online
+    }
+
+    fn execute(&mut self, selected: &[usize], job: RoundJob) -> Vec<(usize, LocalOutcome)> {
+        // bucket the (weight-ordered) selection by owning shard,
+        // preserving the server's dispatch order within each shard
+        let mut per_shard: Vec<Vec<usize>> = vec![Vec::new(); self.leaders.len()];
+        for &g in selected {
+            let s = self.shard_of(g);
+            per_shard[s].push(g - self.bounds[s]);
+        }
+        // phase 1: dispatch to every threaded leader before awaiting
+        // anyone — shards overlap, round wall time = max over shards
+        let mut pinged: Vec<Vec<usize>> = vec![Vec::new(); self.leaders.len()];
+        for (s, locals) in per_shard.iter().enumerate() {
+            if locals.is_empty() {
+                continue;
+            }
+            if let Leader::Threaded(t) = &mut self.leaders[s] {
+                pinged[s] = t.dispatch_jobs(locals, job);
+            }
+        }
+        // phase 2: run sync leaders / collect threaded replies, merge
+        let mut merged: Vec<(usize, LocalOutcome)> = Vec::with_capacity(selected.len());
+        for (s, locals) in per_shard.iter().enumerate() {
+            if locals.is_empty() {
+                continue;
+            }
+            let base = self.bounds[s];
+            let replies = match &mut self.leaders[s] {
+                Leader::Sync(t) => t.execute(locals, job),
+                Leader::Threaded(t) => t.collect_jobs(&pinged[s]),
+            };
+            let sum = &mut self.counters[s];
+            sum.jobs += 1;
+            sum.replies += replies.len() as u64;
+            for (_, out) in &replies {
+                sum.energy_uah += out.energy_uah;
+                sum.compute_s += out.compute_s;
+            }
+            merged.extend(replies.into_iter().map(|(i, out)| (base + i, out)));
+        }
+        // root aggregation: merge per-shard results on the shared
+        // virtual clock — the same (time, id) order a flat transport
+        // would have produced
+        sort_replies(&mut merged);
+        merged
+    }
+
+    fn n_devices(&self) -> usize {
+        *self.bounds.last().unwrap()
+    }
+
+    fn profile(&self, i: usize) -> &DeviceProfile {
+        let s = self.shard_of(i);
+        self.leaders[s].as_transport().profile(i - self.bounds[s])
+    }
+
+    fn kind(&self) -> TransportKind {
+        self.inner
+    }
+
+    fn describe(&self) -> String {
+        format!("sharded×{}({})", self.leaders.len(), self.inner.name())
+    }
+
+    fn shards(&self) -> usize {
+        self.leaders.len()
+    }
+
+    fn shard_summaries(&self) -> Vec<ShardSummary> {
+        self.counters
+            .iter()
+            .enumerate()
+            .map(|(s, c)| ShardSummary {
+                shard: s,
+                start: self.bounds[s],
+                end: self.bounds[s + 1],
+                jobs: c.jobs,
+                replies: c.replies,
+                energy_uah: c.energy_uah,
+                compute_s: c.compute_s,
+            })
+            .collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coordinator::fleet::{build_devices, FleetConfig};
+    use crate::coordinator::scheme::Scheme;
+    use crate::data::Dataset;
+
+    fn fleet(n: usize) -> Vec<DeviceSim> {
+        build_devices(&FleetConfig {
+            n_devices: n,
+            dataset: Dataset::Housing,
+            scale: 0.3,
+            seed: 5,
+            ..Default::default()
+        })
+    }
+
+    fn job(round: u64) -> RoundJob {
+        RoundJob { round, scheme: Scheme::Deal, arrivals: 5, theta: 0.3 }
+    }
+
+    #[test]
+    fn shards_partition_contiguously() {
+        let t = ShardedTransport::new(fleet(10), 3, TransportKind::Sync);
+        assert_eq!(t.n_devices(), 10);
+        assert_eq!(t.shards(), 3);
+        assert_eq!(t.bounds, vec![0, 3, 6, 10]);
+        for g in 0..10 {
+            let s = t.shard_of(g);
+            assert!(t.bounds[s] <= g && g < t.bounds[s + 1], "id {g} in shard {s}");
+        }
+    }
+
+    #[test]
+    fn shard_count_clamped_to_fleet() {
+        let t = ShardedTransport::new(fleet(3), 9, TransportKind::Sync);
+        assert_eq!(t.shards(), 3);
+        let t1 = ShardedTransport::new(fleet(3), 0, TransportKind::Sync);
+        assert_eq!(t1.shards(), 1);
+    }
+
+    #[test]
+    fn sharded_replies_bit_identical_to_flat() {
+        let mut flat = SyncTransport::new(fleet(9));
+        let mut sharded = ShardedTransport::new(fleet(9), 3, TransportKind::Sync);
+        let selected = [0usize, 2, 3, 5, 8];
+        for round in 1..=4u64 {
+            let want = flat.execute(&selected, job(round));
+            let got = sharded.execute(&selected, job(round));
+            assert_eq!(want.len(), got.len());
+            for ((wa, oa), (wb, ob)) in want.iter().zip(&got) {
+                assert_eq!(wa, wb, "round {round} merge order");
+                assert_eq!(oa.time_s.to_bits(), ob.time_s.to_bits());
+                assert_eq!(oa.energy_uah.to_bits(), ob.energy_uah.to_bits());
+            }
+            assert_eq!(flat.probe(), sharded.probe(), "round {round} availability");
+        }
+    }
+
+    #[test]
+    fn single_shard_delegates_transparently() {
+        let mut flat = SyncTransport::new(fleet(6));
+        let mut one = ShardedTransport::new(fleet(6), 1, TransportKind::Sync);
+        let want = flat.execute(&[1, 4], job(1));
+        let got = one.execute(&[1, 4], job(1));
+        for ((wa, oa), (wb, ob)) in want.iter().zip(&got) {
+            assert_eq!(wa, wb);
+            assert_eq!(oa.time_s.to_bits(), ob.time_s.to_bits());
+        }
+    }
+
+    #[test]
+    fn threaded_inner_matches_sync_inner() {
+        let mut a = ShardedTransport::new(fleet(8), 2, TransportKind::Sync);
+        let mut b = ShardedTransport::new(fleet(8), 2, TransportKind::Threaded);
+        assert_eq!(b.describe(), "sharded×2(threaded)");
+        for round in 1..=3u64 {
+            let x = a.execute(&[0, 3, 6, 7], job(round));
+            let y = b.execute(&[0, 3, 6, 7], job(round));
+            for ((wa, oa), (wb, ob)) in x.iter().zip(&y) {
+                assert_eq!(wa, wb);
+                assert_eq!(oa.time_s.to_bits(), ob.time_s.to_bits());
+                assert_eq!(oa.energy_uah.to_bits(), ob.energy_uah.to_bits());
+            }
+            assert_eq!(a.probe(), b.probe());
+        }
+    }
+
+    #[test]
+    fn profiles_route_through_shards() {
+        let flat = SyncTransport::new(fleet(7));
+        let sharded = ShardedTransport::new(fleet(7), 3, TransportKind::Sync);
+        for i in 0..7 {
+            assert_eq!(flat.profile(i).name, sharded.profile(i).name);
+            assert_eq!(flat.profile(i).battery_uah, sharded.profile(i).battery_uah);
+        }
+    }
+
+    #[test]
+    fn summaries_track_merged_round_results() {
+        let mut t = ShardedTransport::new(fleet(6), 2, TransportKind::Sync);
+        // round 1 touches both shards, round 2 only shard 0
+        let r1 = t.execute(&[0, 1, 4], job(1));
+        let r2 = t.execute(&[2], job(2));
+        let sums = t.shard_summaries();
+        assert_eq!(sums.len(), 2);
+        assert_eq!((sums[0].start, sums[0].end), (0, 3));
+        assert_eq!((sums[1].start, sums[1].end), (3, 6));
+        assert_eq!(sums[0].jobs, 2);
+        assert_eq!(sums[1].jobs, 1);
+        assert_eq!(sums[0].replies, 3);
+        assert_eq!(sums[1].replies, 1);
+        let merged_energy: f64 =
+            r1.iter().chain(&r2).map(|(_, o)| o.energy_uah).sum();
+        let shard_energy: f64 = sums.iter().map(|s| s.energy_uah).sum();
+        assert!((merged_energy - shard_energy).abs() < 1e-9);
+        assert!(sums.iter().all(|s| s.compute_s > 0.0));
+    }
+
+    #[test]
+    fn empty_selection_is_a_no_op() {
+        let mut t = ShardedTransport::new(fleet(4), 2, TransportKind::Sync);
+        let replies = t.execute(&[], job(1));
+        assert!(replies.is_empty());
+        assert!(t.shard_summaries().iter().all(|s| s.jobs == 0));
+    }
+}

@@ -7,17 +7,25 @@
 //! ([`Transport::probe`], the paper's G(k)) and what did the selected
 //! workers reply ([`Transport::execute`]).
 //!
-//! Two implementations:
+//! Implementations:
 //! - [`SyncTransport`] — in-place loop over the device simulators,
 //!   single-threaded, the benches' default.
-//! - [`ThreadedTransport`] — one OS thread + channel pair per device
-//!   (the PUB/SUB deployment topology that used to live in a separate
-//!   `Broker`), running selected workers in parallel.
+//! - [`ThreadedTransport`] — PUB/SUB worker threads, each owning a
+//!   **contiguous slice** of the fleet and stepping it batch-at-a-time
+//!   (one job/probe message per worker per round, not one per device).
+//!   Small fleets get one device per thread — the paper's deployment
+//!   topology; fleets beyond ~4× the core count are batched so
+//!   `n_devices ≫ 10³` costs O(workers) messages per round.
+//! - [`super::shard::ShardedTransport`] — K shard leaders, each
+//!   driving its own inner Sync/Threaded transport over a contiguous
+//!   partition, merged by a root aggregator.
 //!
-//! Determinism contract: both transports return replies sorted by
-//! (virtual reply time, worker id) with [`f64::total_cmp`], and all
-//! timing rides in the messages as *virtual* seconds — so a federation
-//! driven over either transport produces bit-identical
+//! Determinism contract: every device simulator is an independent
+//! deterministic process (own RNG stream), all timing rides in the
+//! messages as *virtual* seconds, and all transports return replies
+//! sorted by (virtual reply time, worker id) with [`f64::total_cmp`] —
+//! so a federation driven over any transport, any worker-batch size and
+//! any shard count produces bit-identical
 //! [`FederationStats`](super::server::FederationStats) for the same
 //! seed, regardless of wall-clock thread scheduling.
 
@@ -45,7 +53,7 @@ pub struct RoundJob {
 pub enum TransportKind {
     /// In-place loop, single-threaded.
     Sync,
-    /// One worker thread per device.
+    /// Batched PUB/SUB worker threads.
     Threaded,
 }
 
@@ -66,6 +74,25 @@ impl TransportKind {
     }
 }
 
+/// Cumulative per-shard counters kept by the root aggregator of a
+/// sharded transport (all zeros/empty for flat transports).
+#[derive(Debug, Clone, PartialEq)]
+pub struct ShardSummary {
+    /// Shard index.
+    pub shard: usize,
+    /// Global device ids `[start, end)` this shard leader owns.
+    pub start: usize,
+    pub end: usize,
+    /// Round jobs routed to this shard leader.
+    pub jobs: u64,
+    /// Worker replies merged from this shard.
+    pub replies: u64,
+    /// Σ energy over merged replies (µAh).
+    pub energy_uah: f64,
+    /// Σ training-compute time over merged replies (s).
+    pub compute_s: f64,
+}
+
 /// The server's view of its worker fabric.
 pub trait Transport {
     /// Availability probe G(k): step every device's availability chain
@@ -84,8 +111,24 @@ pub trait Transport {
     /// Static profile of worker `i` (reward budgets, reporting).
     fn profile(&self, i: usize) -> &DeviceProfile;
 
-    /// Transport kind, for reporting.
+    /// Transport kind, for reporting. Sharded transports report their
+    /// *inner* kind; use [`Transport::describe`] for the full topology.
     fn kind(&self) -> TransportKind;
+
+    /// Human-readable topology (e.g. `threaded`, `sharded×8(sync)`).
+    fn describe(&self) -> String {
+        self.kind().name().to_string()
+    }
+
+    /// Shard-leader count (1 for flat transports).
+    fn shards(&self) -> usize {
+        1
+    }
+
+    /// Per-shard cumulative summaries (empty for flat transports).
+    fn shard_summaries(&self) -> Vec<ShardSummary> {
+        Vec::new()
+    }
 }
 
 /// Deterministic reply order shared by all transports: virtual time
@@ -95,12 +138,38 @@ pub fn sort_replies(replies: &mut [(usize, LocalOutcome)]) {
     replies.sort_by(|a, b| a.1.time_s.total_cmp(&b.1.time_s).then(a.0.cmp(&b.0)));
 }
 
+/// Balanced contiguous partition of `n` items into `k` chunks: chunk
+/// `i` covers `[i·n/k, (i+1)·n/k)` — sizes differ by at most one.
+pub fn partition_bounds(n: usize, k: usize) -> Vec<usize> {
+    (0..=k).map(|i| i * n / k).collect()
+}
+
+/// Split `devices` into owned contiguous chunks along `bounds`
+/// (as produced by [`partition_bounds`]): chunk `i` keeps devices
+/// `[bounds[i], bounds[i+1])`. Shared by the batched worker fabric and
+/// the shard layer.
+pub(crate) fn partition_chunks(
+    devices: Vec<DeviceSim>,
+    bounds: &[usize],
+) -> Vec<Vec<DeviceSim>> {
+    let k = bounds.len() - 1;
+    // slice chunks off the back so indices in `bounds` stay valid
+    let mut rest = devices;
+    let mut chunks: Vec<Vec<DeviceSim>> = Vec::with_capacity(k);
+    for i in (0..k).rev() {
+        chunks.push(rest.split_off(bounds[i]));
+    }
+    chunks.reverse();
+    chunks
+}
+
 // ---------------------------------------------------------------------
 // SyncTransport
 // ---------------------------------------------------------------------
 
 /// In-place loop over the device simulators — no threads, fully
-/// deterministic even under a debugger.
+/// deterministic even under a debugger. Devices step in one contiguous
+/// pass per round (batched by construction).
 pub struct SyncTransport {
     devices: Vec<DeviceSim>,
 }
@@ -150,17 +219,18 @@ impl Transport for SyncTransport {
 
 /// Control messages PUBlished to a worker thread.
 enum Ctl {
-    Job(RoundJob),
-    /// Availability probe for G(k).
+    /// Step `members` (device ids owned by this worker, in the server's
+    /// dispatch order) through one training round.
+    Job { job: RoundJob, members: Vec<usize> },
+    /// Availability probe for G(k) over the worker's whole slice.
     Probe,
     Stop,
 }
 
-/// SUB reply from a worker thread.
-struct Reply {
-    worker: usize,
-    outcome: LocalOutcome,
-    online: bool,
+/// SUB reply from a worker thread — one message per batch.
+enum Reply {
+    Outcomes { worker: usize, outcomes: Vec<(usize, LocalOutcome)> },
+    Online { worker: usize, online: Vec<usize> },
 }
 
 /// One worker endpoint.
@@ -169,53 +239,70 @@ struct Endpoint {
     handle: Option<JoinHandle<()>>,
 }
 
-/// One OS thread + channel pair per device: the PUB/SUB deployment
-/// topology. Selected workers train in parallel; virtual time rides in
-/// the messages, so wall-clock scheduling never changes results.
+/// PUB/SUB worker threads, each owning a contiguous slice of the fleet.
+///
+/// Selected workers train in parallel; virtual time rides in the
+/// messages, so wall-clock scheduling never changes results. Message
+/// cost per round is O(workers), not O(devices) — the batched stepping
+/// that makes `n_devices ≫ 10³` practical.
 pub struct ThreadedTransport {
     endpoints: Vec<Endpoint>,
     inbox: Receiver<Reply>,
     /// Profiles captured before the devices move into their threads.
     profiles: Vec<DeviceProfile>,
+    /// Owning worker per device id.
+    owner: Vec<usize>,
+}
+
+/// Default worker-thread count for a fleet: one per device up to 4× the
+/// machine's cores, batched beyond that. Results are identical for any
+/// worker count — each device is an independent simulator.
+pub fn default_workers(n_devices: usize) -> usize {
+    let cores = std::thread::available_parallelism().map_or(8, |c| c.get());
+    n_devices.min((4 * cores).max(1))
 }
 
 impl ThreadedTransport {
-    /// Spawn one thread per device simulator.
+    /// Spawn over the default worker count (see [`default_workers`]).
     pub fn spawn(devices: Vec<DeviceSim>) -> Self {
+        let w = default_workers(devices.len());
+        ThreadedTransport::spawn_batched(devices, w)
+    }
+
+    /// Spawn exactly `workers` threads, each owning a contiguous,
+    /// balanced slice of `devices`.
+    pub fn spawn_batched(devices: Vec<DeviceSim>, workers: usize) -> Self {
+        let n = devices.len();
+        let workers = workers.clamp(1, n.max(1));
         let profiles: Vec<DeviceProfile> =
             devices.iter().map(|d| d.profile().clone()).collect();
+        let bounds = partition_bounds(n, workers);
+        let mut owner = vec![0usize; n];
+        let chunks = partition_chunks(devices, &bounds);
         let (inbox_tx, inbox) = channel::<Reply>();
-        let endpoints = devices
+        let endpoints = chunks
             .into_iter()
-            .map(|mut dev| {
+            .enumerate()
+            .map(|(w, batch)| {
+                let start = bounds[w];
+                for d in start..start + batch.len() {
+                    owner[d] = w;
+                }
                 let (tx, rx) = channel::<Ctl>();
                 let out = inbox_tx.clone();
-                let worker = dev.id;
                 let handle = std::thread::Builder::new()
-                    .name(format!("deal-worker-{worker}"))
-                    .spawn(move || loop {
-                        match rx.recv() {
-                            Ok(Ctl::Job(job)) => {
-                                let outcome =
-                                    dev.run_round(job.scheme, job.arrivals, job.theta);
-                                let _ = out.send(Reply { worker, outcome, online: true });
-                            }
-                            Ok(Ctl::Probe) => {
-                                let online = dev.step_availability();
-                                let _ = out.send(Reply {
-                                    worker,
-                                    outcome: LocalOutcome::default(),
-                                    online,
-                                });
-                            }
-                            Ok(Ctl::Stop) | Err(_) => break,
-                        }
-                    })
+                    .name(format!("deal-worker-{w}"))
+                    .spawn(move || worker_loop(w, start, batch, rx, out))
                     .expect("spawn worker thread");
                 Endpoint { tx, handle: Some(handle) }
             })
             .collect();
-        ThreadedTransport { endpoints, inbox, profiles }
+        ThreadedTransport { endpoints, inbox, profiles, owner }
+    }
+
+    /// Worker-thread count (≤ n_devices).
+    pub fn workers(&self) -> usize {
+        self.endpoints.len()
     }
 
     fn shutdown(&mut self) {
@@ -229,17 +316,22 @@ impl ThreadedTransport {
         }
     }
 
-    /// Collect one reply from every worker in `expected`, failing fast
-    /// (instead of blocking forever) if a worker thread died mid-round:
-    /// other endpoints keep the inbox sender alive, so a plain `recv`
-    /// would never see a disconnect.
-    fn collect_replies(&self, expected: &[usize]) -> Vec<Reply> {
+    /// Collect one batch reply from every worker in `expected`, failing
+    /// fast (instead of blocking forever) if a worker thread died
+    /// mid-round: other endpoints keep the inbox sender alive, so a
+    /// plain `recv` would never see a disconnect.
+    fn collect_from(&self, expected: &[usize]) -> Vec<Reply> {
         let mut got = vec![false; self.endpoints.len()];
         let mut replies = Vec::with_capacity(expected.len());
         while replies.len() < expected.len() {
             match self.inbox.recv_timeout(std::time::Duration::from_millis(200)) {
                 Ok(r) => {
-                    got[r.worker] = true;
+                    let w = match &r {
+                        Reply::Outcomes { worker, .. } | Reply::Online { worker, .. } => {
+                            *worker
+                        }
+                    };
+                    got[w] = true;
                     replies.push(r);
                 }
                 Err(std::sync::mpsc::RecvTimeoutError::Timeout) => {
@@ -266,6 +358,104 @@ impl ThreadedTransport {
     }
 }
 
+impl ThreadedTransport {
+    /// Fire a round's jobs at the owning workers without waiting;
+    /// returns the pinged worker ids for [`Self::collect_jobs`]. Split
+    /// out so a shard root can fan out to *all* its leaders before any
+    /// of them blocks on replies (round wall time = max over shards,
+    /// not sum).
+    pub(crate) fn dispatch_jobs(&mut self, selected: &[usize], job: RoundJob) -> Vec<usize> {
+        let mut members: Vec<Vec<usize>> = vec![Vec::new(); self.endpoints.len()];
+        for &i in selected {
+            members[self.owner[i]].push(i);
+        }
+        let mut pinged = Vec::new();
+        for (w, m) in members.into_iter().enumerate() {
+            if m.is_empty() {
+                continue;
+            }
+            pinged.push(w);
+            let _ = self.endpoints[w].tx.send(Ctl::Job { job, members: m });
+        }
+        pinged
+    }
+
+    /// Collect the replies owed by a prior [`Self::dispatch_jobs`],
+    /// sorted by (virtual time, id).
+    pub(crate) fn collect_jobs(&mut self, pinged: &[usize]) -> Vec<(usize, LocalOutcome)> {
+        let mut replies: Vec<(usize, LocalOutcome)> = self
+            .collect_from(pinged)
+            .into_iter()
+            .flat_map(|r| match r {
+                Reply::Outcomes { outcomes, .. } => outcomes,
+                Reply::Online { .. } => unreachable!("probe reply to a job"),
+            })
+            .collect();
+        sort_replies(&mut replies);
+        replies
+    }
+
+    /// Fire an availability probe at every worker without waiting.
+    pub(crate) fn dispatch_probe(&mut self) {
+        for ep in &self.endpoints {
+            let _ = ep.tx.send(Ctl::Probe);
+        }
+    }
+
+    /// Collect the online set owed by a prior [`Self::dispatch_probe`],
+    /// ascending.
+    pub(crate) fn collect_probe(&mut self) -> Vec<usize> {
+        let all: Vec<usize> = (0..self.endpoints.len()).collect();
+        let mut online: Vec<usize> = self
+            .collect_from(&all)
+            .into_iter()
+            .flat_map(|r| match r {
+                Reply::Online { online, .. } => online,
+                Reply::Outcomes { .. } => unreachable!("job reply to a probe"),
+            })
+            .collect();
+        online.sort_unstable();
+        online
+    }
+}
+
+/// Body of one worker thread: owns devices `[start, start+len)` and
+/// steps them batch-at-a-time per control message.
+fn worker_loop(
+    worker: usize,
+    start: usize,
+    mut devices: Vec<DeviceSim>,
+    rx: Receiver<Ctl>,
+    out: Sender<Reply>,
+) {
+    loop {
+        match rx.recv() {
+            Ok(Ctl::Job { job, members }) => {
+                let outcomes: Vec<(usize, LocalOutcome)> = members
+                    .into_iter()
+                    .map(|i| {
+                        (i, devices[i - start].run_round(job.scheme, job.arrivals, job.theta))
+                    })
+                    .collect();
+                if out.send(Reply::Outcomes { worker, outcomes }).is_err() {
+                    break;
+                }
+            }
+            Ok(Ctl::Probe) => {
+                let online: Vec<usize> = devices
+                    .iter_mut()
+                    .enumerate()
+                    .filter_map(|(j, d)| d.step_availability().then_some(start + j))
+                    .collect();
+                if out.send(Reply::Online { worker, online }).is_err() {
+                    break;
+                }
+            }
+            Ok(Ctl::Stop) | Err(_) => break,
+        }
+    }
+}
+
 impl Drop for ThreadedTransport {
     fn drop(&mut self) {
         self.shutdown();
@@ -274,35 +464,17 @@ impl Drop for ThreadedTransport {
 
 impl Transport for ThreadedTransport {
     fn probe(&mut self) -> Vec<usize> {
-        for ep in &self.endpoints {
-            let _ = ep.tx.send(Ctl::Probe);
-        }
-        let all: Vec<usize> = (0..self.endpoints.len()).collect();
-        let mut online: Vec<usize> = self
-            .collect_replies(&all)
-            .into_iter()
-            .filter(|r| r.online)
-            .map(|r| r.worker)
-            .collect();
-        online.sort_unstable();
-        online
+        self.dispatch_probe();
+        self.collect_probe()
     }
 
     fn execute(&mut self, selected: &[usize], job: RoundJob) -> Vec<(usize, LocalOutcome)> {
-        for &w in selected {
-            let _ = self.endpoints[w].tx.send(Ctl::Job(job));
-        }
-        let mut replies: Vec<(usize, LocalOutcome)> = self
-            .collect_replies(selected)
-            .into_iter()
-            .map(|r| (r.worker, r.outcome))
-            .collect();
-        sort_replies(&mut replies);
-        replies
+        let pinged = self.dispatch_jobs(selected, job);
+        self.collect_jobs(&pinged)
     }
 
     fn n_devices(&self) -> usize {
-        self.endpoints.len()
+        self.profiles.len()
     }
 
     fn profile(&self, i: usize) -> &DeviceProfile {
@@ -344,9 +516,24 @@ mod tests {
     }
 
     #[test]
+    fn partition_bounds_cover_contiguously() {
+        for (n, k) in [(10, 3), (7, 7), (5, 1), (0, 1), (16, 4)] {
+            let b = partition_bounds(n, k);
+            assert_eq!(b.len(), k + 1);
+            assert_eq!(b[0], 0);
+            assert_eq!(b[k], n);
+            for w in b.windows(2) {
+                assert!(w[0] <= w[1]);
+                assert!(w[1] - w[0] <= n / k + 1, "unbalanced: {b:?}");
+            }
+        }
+    }
+
+    #[test]
     fn threaded_spawns_and_drops() {
         let t = ThreadedTransport::spawn(fleet(4));
         assert_eq!(t.n_devices(), 4);
+        assert!(t.workers() >= 1 && t.workers() <= 4);
         drop(t); // joins workers
     }
 
@@ -369,6 +556,7 @@ mod tests {
         for mut t in [
             Box::new(SyncTransport::new(fleet(5))) as Box<dyn Transport>,
             Box::new(ThreadedTransport::spawn(fleet(5))),
+            Box::new(ThreadedTransport::spawn_batched(fleet(5), 2)),
         ] {
             let online = t.probe();
             assert!(online.len() <= 5);
@@ -401,8 +589,36 @@ mod tests {
     }
 
     #[test]
+    fn batch_size_never_changes_results() {
+        // same fleet/seed stepped under different worker counts must be
+        // bit-identical: batching is pure dispatch, devices are
+        // independent simulators
+        let mut reference = SyncTransport::new(fleet(7));
+        let mut batched: Vec<ThreadedTransport> = [1usize, 3, 7]
+            .into_iter()
+            .map(|w| ThreadedTransport::spawn_batched(fleet(7), w))
+            .collect();
+        for round in 1..=3u64 {
+            let j = job(round, Scheme::Deal, 4, 0.3);
+            let selected = [0usize, 2, 5, 6];
+            let want = reference.execute(&selected, j);
+            let avail_want = reference.probe();
+            for t in &mut batched {
+                let got = t.execute(&selected, j);
+                assert_eq!(got.len(), want.len());
+                for ((wa, oa), (wb, ob)) in want.iter().zip(&got) {
+                    assert_eq!(wa, wb, "workers={} round {round}", t.workers());
+                    assert_eq!(oa.time_s.to_bits(), ob.time_s.to_bits());
+                    assert_eq!(oa.energy_uah.to_bits(), ob.energy_uah.to_bits());
+                }
+                assert_eq!(t.probe(), avail_want, "workers={}", t.workers());
+            }
+        }
+    }
+
+    #[test]
     fn worker_state_persists_across_rounds() {
-        let mut t = ThreadedTransport::spawn(fleet(3));
+        let mut t = ThreadedTransport::spawn_batched(fleet(3), 2);
         let r1 = t.execute(&[0], job(1, Scheme::NewFl, 4, 0.0));
         let r2 = t.execute(&[0], job(2, Scheme::NewFl, 4, 0.0));
         assert_eq!(r1[0].1.new_items, 4);
@@ -430,10 +646,18 @@ mod tests {
     #[test]
     fn profiles_visible_through_both_transports() {
         let sync = SyncTransport::new(fleet(4));
-        let thr = ThreadedTransport::spawn(fleet(4));
+        let thr = ThreadedTransport::spawn_batched(fleet(4), 2);
         for i in 0..4 {
             assert_eq!(sync.profile(i).name, thr.profile(i).name);
             assert_eq!(sync.profile(i).battery_uah, thr.profile(i).battery_uah);
         }
+    }
+
+    #[test]
+    fn flat_transports_report_single_shard() {
+        let t = SyncTransport::new(fleet(3));
+        assert_eq!(t.shards(), 1);
+        assert!(t.shard_summaries().is_empty());
+        assert_eq!(t.describe(), "sync");
     }
 }

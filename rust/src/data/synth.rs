@@ -32,9 +32,12 @@ pub enum Dataset {
     YearPredictionMSD,
     /// Cifar-10 (image classification; NewFL freshness study): 60000 × 3072.
     Cifar10,
+    /// MNIST-synth (fleet-scale selection studies — small per-device
+    /// model, ≫10³ shards stay cheap): 60000 × 784, 10 classes.
+    Mnist,
 }
 
-pub const ALL_DATASETS: [Dataset; 9] = [
+pub const ALL_DATASETS: [Dataset; 10] = [
     Dataset::Movielens,
     Dataset::Jester,
     Dataset::Mushrooms,
@@ -44,6 +47,7 @@ pub const ALL_DATASETS: [Dataset; 9] = [
     Dataset::Cadata,
     Dataset::YearPredictionMSD,
     Dataset::Cifar10,
+    Dataset::Mnist,
 ];
 
 /// Task family a dataset belongs to (which paper model trains on it).
@@ -78,6 +82,7 @@ impl Dataset {
             Dataset::Cadata => "cadata",
             Dataset::YearPredictionMSD => "YearPredictionMSD",
             Dataset::Cifar10 => "cifar10",
+            Dataset::Mnist => "mnist",
         }
     }
 
@@ -100,6 +105,7 @@ impl Dataset {
             Dataset::Cadata => Shape { rows: 20_640, dims: 8, classes: 0, density: 0.0, task: Regression },
             Dataset::YearPredictionMSD => Shape { rows: 515_345, dims: 90, classes: 0, density: 0.0, task: Regression },
             Dataset::Cifar10 => Shape { rows: 60_000, dims: 3_072, classes: 10, density: 0.0, task: Classification },
+            Dataset::Mnist => Shape { rows: 60_000, dims: 784, classes: 10, density: 0.0, task: Classification },
         }
     }
 }
@@ -303,6 +309,9 @@ mod tests {
         assert_eq!(Dataset::Covtype.shape().classes, 7);
         assert_eq!(Dataset::Housing.shape().dims, 13);
         assert_eq!(Dataset::YearPredictionMSD.shape().dims, 90);
+        assert_eq!(Dataset::Mnist.shape().rows, 60_000);
+        assert_eq!(Dataset::Mnist.shape().dims, 784);
+        assert_eq!(Dataset::Mnist.shape().classes, 10);
     }
 
     #[test]

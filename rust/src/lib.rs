@@ -10,20 +10,53 @@
 //!   semantics (bandit selection, aggregation, rewards, convergence)
 //!   live once in [`coordinator::Federation`], which drives its fleet
 //!   through a [`coordinator::Transport`]: the single-threaded
-//!   [`coordinator::SyncTransport`] loop, or the parallel
-//!   [`coordinator::ThreadedTransport`] PUB/SUB fabric (one worker
-//!   thread per device). All time is virtual, so both transports
-//!   produce bit-identical stats for a seed. Rounds close under an
-//!   [`coordinator::Aggregation`] policy: `WaitAll` (classic FL),
-//!   `Majority` (the paper's majority/TTL cut), or `AsyncBuffered`
+//!   [`coordinator::SyncTransport`] loop, the batched
+//!   [`coordinator::ThreadedTransport`] PUB/SUB fabric (worker threads
+//!   each stepping a contiguous device slice — O(workers) messages per
+//!   round, so fleets of 10⁴+ devices stay cheap), or the
+//!   [`coordinator::ShardedTransport`] multi-federation runtime (K
+//!   shard leaders over contiguous fleet partitions, merged by a root
+//!   aggregator on the shared virtual clock). All time is virtual, so
+//!   every fabric produces bit-identical stats for a seed. Rounds close
+//!   under an [`coordinator::Aggregation`] policy: `WaitAll` (classic
+//!   FL), `Majority` (the paper's majority/TTL cut), or `AsyncBuffered`
 //!   (buffered-asynchronous rounds — stragglers are credited and
-//!   rewarded δ rounds late instead of blocking or being discarded).
+//!   rewarded δ rounds late, recency-discounted by the selector's
+//!   λ^delay, instead of blocking or being discarded).
 //!   Below the engine sit the device/power simulation, the decremental
 //!   learner engines, and the bench harness.
 //! - L2/L1 (python/, build-time only): JAX graphs + Pallas kernels,
 //!   AOT-lowered to `artifacts/*.hlo.txt`, executed from
-//!   [`runtime`] via PJRT (behind the `pjrt` cargo feature). Python
-//!   never runs on the request path.
+//!   [`runtime`] via PJRT (behind the `pjrt` cargo feature; offline
+//!   builds alias the API-mirroring `runtime::xla_stub` so the gate
+//!   stays compile-checked). Python never runs on the request path.
+//!
+//! # Testing guide
+//!
+//! Tier-1 gate: `cargo build --release && cargo test -q`.
+//!
+//! - **Unit + integration**: `cargo test -q` runs everything below plus
+//!   the in-module suites.
+//! - **Equivalence** (`cargo test --test transport_equivalence`): a
+//!   fixed seed must produce bit-identical [`coordinator::FederationStats`]
+//!   across sync/threaded transports, any worker-batch size, and any
+//!   shard count (shards ∈ {1, 2, 4} are pinned). Touch the round path
+//!   and these fail first.
+//! - **Properties** (`cargo test --test prop_selector`): randomized
+//!   invariants for the CSB-F selector on the in-tree harness
+//!   ([`util::prop`]) — |S(k)| ≤ m, sleeping devices never selected,
+//!   fairness-queue bounded-window liveness, per-shard aggregate
+//!   fairness. Failures print a `replay seed` to rerun one case.
+//! - **Golden stats** (`cargo test --test golden_stats`): fixed-seed
+//!   `FederationStats` snapshots per aggregation policy, stored at
+//!   `rust/tests/golden/federation_stats.golden` with full f64 bit
+//!   precision. The first run records the file (commit it); after an
+//!   *intentional* semantic change, regenerate with
+//!   `DEAL_REGEN_GOLDEN=1 cargo test --test golden_stats` and commit
+//!   the diff.
+//! - **Benches**: plain-main harnesses under `benches/` (no criterion
+//!   offline); `cargo bench --no-run` compiles them all and is a CI
+//!   gate, as is `cargo check --features pjrt --all-targets`.
 
 pub mod bandit;
 pub mod coordinator;

@@ -38,7 +38,7 @@ fn main() {
 
 fn cmd_run(args: Vec<String>) -> i32 {
     let cli = Cli::new("deal run", "drive a federation over a worker transport")
-        .flag("dataset", "movielens", "dataset (paper §IV-A name)")
+        .flag("dataset", "movielens", "dataset (paper §IV-A name; mnist for big fleets)")
         .flag("model", "auto", "ppr|knn|nb|tikhonov (auto = paper default)")
         .flag("scheme", "deal", "deal|original|newfl")
         .flag("transport", "threaded", "sync|threaded worker transport")
@@ -48,10 +48,12 @@ fn cmd_run(args: Vec<String>) -> i32 {
             "waitall|majority|async:<staleness> (auto = scheme default)",
         )
         .flag("devices", "16", "fleet size")
+        .flag("shards", "1", "shard-leader count (>1 = sharded multi-federation runtime)")
         .flag("rounds", "20", "federated rounds")
         .flag("m", "4", "max selected per round (DEAL)")
         .flag("theta", "0.3", "forget degree θ")
         .flag("ttl", "30.0", "round TTL T̈ (virtual seconds)")
+        .flag("lambda", "1.0", "recency discount λ for delayed rewards (async aggregation)")
         .flag("scale", "0.05", "dataset scale (0,1]")
         .flag("seed", "1", "experiment seed")
         .switch("quiet", "suppress per-round lines");
@@ -97,8 +99,29 @@ fn cmd_run(args: Vec<String>) -> i32 {
             }
         },
     };
+    let (n_devices, shards) = match (
+        a.get_usize_nonzero("devices"),
+        a.get_usize_nonzero("shards"),
+    ) {
+        (Ok(d), Ok(s)) => (d, s),
+        (Err(e), _) | (_, Err(e)) => {
+            eprintln!("error: {e}");
+            return 2;
+        }
+    };
+    let recency_lambda = match a.get_f64("lambda") {
+        Ok(l) if (0.0..=1.0).contains(&l) => l,
+        Ok(l) => {
+            eprintln!("error: flag --lambda: {l} out of [0, 1]");
+            return 2;
+        }
+        Err(e) => {
+            eprintln!("error: {e}");
+            return 2;
+        }
+    };
     let cfg = FleetConfig {
-        n_devices: a.get_usize("devices").unwrap(),
+        n_devices,
         dataset,
         scale: a.get_f64("scale").unwrap(),
         model,
@@ -108,6 +131,8 @@ fn cmd_run(args: Vec<String>) -> i32 {
         ttl_s: a.get_f64("ttl").unwrap(),
         seed: a.get_u64("seed").unwrap(),
         transport,
+        shards,
+        recency_lambda,
         aggregation,
         ..FleetConfig::default()
     };
@@ -121,7 +146,7 @@ fn cmd_run(args: Vec<String>) -> i32 {
         cfg.model.map_or("auto", |m| m.name()),
         dataset.name(),
         scheme.name(),
-        fed.transport().kind().name(),
+        fed.transport().describe(),
         fed.aggregation().name(),
     );
     for _ in 0..rounds {
@@ -151,6 +176,21 @@ fn cmd_run(args: Vec<String>) -> i32 {
             String::new()
         }
     );
+    let summaries = fed.shard_summaries();
+    if !summaries.is_empty() {
+        println!("per-shard (root aggregator):");
+        for s in &summaries {
+            println!(
+                "  shard {:>2}: devices {:>5}..{:<5}  jobs {:>4}  replies {:>6}  energy {}",
+                s.shard,
+                s.start,
+                s.end,
+                s.jobs,
+                s.replies,
+                fmt_uah(s.energy_uah)
+            );
+        }
+    }
     0
 }
 

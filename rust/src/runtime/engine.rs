@@ -116,6 +116,12 @@ mod backend {
     use super::*;
     use std::collections::HashMap;
 
+    // The real `xla` crate is not vendored in the offline image; the
+    // in-tree stub mirrors its API so this backend keeps compiling
+    // under `--features pjrt` (CI checks it — the feature gate can't
+    // rot). Swap this alias for `use xla;` once the crate is vendored.
+    use crate::runtime::xla_stub as xla;
+
     impl From<xla::Error> for EngineError {
         fn from(e: xla::Error) -> Self {
             EngineError::Xla(e.to_string())

@@ -8,6 +8,8 @@
 
 pub mod artifacts;
 pub mod engine;
+#[cfg(feature = "pjrt")]
+pub mod xla_stub;
 
 pub use artifacts::{ArtifactMeta, Registry, TensorSpec};
 pub use engine::{Engine, EngineError, Tensor};

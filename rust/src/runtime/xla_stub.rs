@@ -1,0 +1,143 @@
+//! Build-checkable stand-in for the `xla` crate's API surface used by
+//! the PJRT backend in [`super::engine`].
+//!
+//! The real crate (github.com/LaurentMazare/xla-rs) is not vendored in
+//! the offline image, but the backend code behind `--features pjrt`
+//! must keep *compiling* so the feature gate can't rot silently — CI
+//! runs `cargo check --features pjrt --all-targets` against this stub.
+//! It mirrors exactly the constructors and methods the engine calls;
+//! every fallible operation returns [`Error`] at runtime, so a
+//! stub-backed `Engine::new` degrades to the same skip paths as the
+//! `not(pjrt)` stub engine.
+//!
+//! When the real crate is vendored, swap the
+//! `use crate::runtime::xla_stub as xla;` alias in `engine.rs` for the
+//! crate and delete this module (ROADMAP: vendored/backend-selectable
+//! PJRT build).
+
+/// Stub error: every operation reports the backend is unavailable.
+#[derive(Debug, Clone)]
+pub struct Error(pub String);
+
+impl std::fmt::Display for Error {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(f, "{}", self.0)
+    }
+}
+
+impl std::error::Error for Error {}
+
+fn unavailable<T>() -> Result<T, Error> {
+    Err(Error(
+        "PJRT stub backend: vendor the `xla` crate (swap the xla_stub alias in \
+         runtime/engine.rs) to execute artifacts"
+            .to_string(),
+    ))
+}
+
+/// Element types the engine converts (plus a catch-all so exhaustive
+/// matches keep their `other` arm).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum ElementType {
+    F32,
+    S32,
+    Pred,
+}
+
+/// Host-side literal (stub: carries no data).
+#[derive(Debug, Clone)]
+pub struct Literal;
+
+impl Literal {
+    pub fn vec1(_data: &[f32]) -> Literal {
+        Literal
+    }
+
+    pub fn reshape(&self, _dims: &[i64]) -> Result<Literal, Error> {
+        unavailable()
+    }
+
+    pub fn ty(&self) -> Result<ElementType, Error> {
+        unavailable()
+    }
+
+    pub fn to_vec<T>(&self) -> Result<Vec<T>, Error> {
+        unavailable()
+    }
+
+    pub fn to_tuple(&self) -> Result<Vec<Literal>, Error> {
+        unavailable()
+    }
+}
+
+/// Device buffer returned by an execution (stub).
+#[derive(Debug)]
+pub struct PjRtBuffer;
+
+impl PjRtBuffer {
+    pub fn to_literal_sync(&self) -> Result<Literal, Error> {
+        unavailable()
+    }
+}
+
+/// PJRT client (stub: construction always fails).
+#[derive(Debug)]
+pub struct PjRtClient;
+
+impl PjRtClient {
+    pub fn cpu() -> Result<PjRtClient, Error> {
+        unavailable()
+    }
+
+    pub fn platform_name(&self) -> String {
+        "stub".to_string()
+    }
+
+    pub fn compile(&self, _comp: &XlaComputation) -> Result<PjRtLoadedExecutable, Error> {
+        unavailable()
+    }
+}
+
+/// Parsed HLO module (stub).
+#[derive(Debug)]
+pub struct HloModuleProto;
+
+impl HloModuleProto {
+    pub fn from_text_file(_path: &str) -> Result<HloModuleProto, Error> {
+        unavailable()
+    }
+}
+
+/// XLA computation (stub).
+#[derive(Debug)]
+pub struct XlaComputation;
+
+impl XlaComputation {
+    pub fn from_proto(_proto: &HloModuleProto) -> XlaComputation {
+        XlaComputation
+    }
+}
+
+/// Compiled executable (stub).
+#[derive(Debug)]
+pub struct PjRtLoadedExecutable;
+
+impl PjRtLoadedExecutable {
+    pub fn execute<T>(&self, _args: &[T]) -> Result<Vec<Vec<PjRtBuffer>>, Error> {
+        unavailable()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn stub_operations_fail_with_clear_message() {
+        assert!(PjRtClient::cpu().is_err());
+        assert!(HloModuleProto::from_text_file("x.hlo.txt").is_err());
+        let lit = Literal::vec1(&[1.0, 2.0]);
+        let err = lit.ty().unwrap_err();
+        assert!(err.to_string().contains("stub"), "{err}");
+    }
+}

@@ -182,6 +182,15 @@ impl Args {
             .map_err(|_| CliError::BadValue(name, self.get(name).into(), "usize"))
     }
 
+    /// Parse a usize flag and reject zero — for counts where 0 is
+    /// meaningless (fleet sizes, shard-leader counts, round budgets).
+    pub fn get_usize_nonzero(&self, name: &'static str) -> Result<usize, CliError> {
+        match self.get_usize(name)? {
+            0 => Err(CliError::BadValue(name, self.get(name).into(), "nonzero usize")),
+            v => Ok(v),
+        }
+    }
+
     pub fn get_u64(&self, name: &'static str) -> Result<u64, CliError> {
         self.get(name)
             .parse()
@@ -256,6 +265,14 @@ mod tests {
     fn bad_value_type_rejected() {
         let a = parse(&["--model", "x", "--rounds", "ten"]).unwrap();
         assert!(matches!(a.get_usize("rounds"), Err(CliError::BadValue(..))));
+    }
+
+    #[test]
+    fn nonzero_guard_rejects_zero_only() {
+        let a = parse(&["--model", "x", "--rounds", "0"]).unwrap();
+        assert!(matches!(a.get_usize_nonzero("rounds"), Err(CliError::BadValue(..))));
+        let b = parse(&["--model", "x", "--rounds", "3"]).unwrap();
+        assert_eq!(b.get_usize_nonzero("rounds").unwrap(), 3);
     }
 
     #[test]

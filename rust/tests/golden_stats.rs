@@ -1,0 +1,136 @@
+//! Golden-stats regression suite: fixed-seed [`FederationStats`]
+//! snapshots for every [`Aggregation`] policy, serialized with full f64
+//! bit precision so *any* perturbation of round semantics — selection,
+//! aggregation cut, reward credit, convergence bookkeeping — fails
+//! loudly instead of drifting silently past the unit tests.
+//!
+//! Snapshot lifecycle (record-then-verify):
+//! - The golden file lives at `rust/tests/golden/federation_stats.golden`.
+//! - On the first run (file absent) the suite **records** it and passes;
+//!   commit the generated file to pin the semantics.
+//! - Afterwards any mismatch is a hard failure. If a semantic change is
+//!   intentional, regenerate with
+//!   `DEAL_REGEN_GOLDEN=1 cargo test --test golden_stats` and commit the
+//!   diff — the diff *is* the review artifact for the semantic change.
+
+use deal::coordinator::fleet::{self, FleetConfig};
+use deal::coordinator::{Aggregation, Federation, FederationStats, Scheme};
+use deal::data::Dataset;
+use std::path::PathBuf;
+
+const ROUNDS: usize = 12;
+
+/// Policies pinned by the snapshot, with stable labels.
+fn policies() -> Vec<(&'static str, Aggregation)> {
+    vec![
+        ("waitall", Aggregation::WaitAll),
+        ("majority", Aggregation::Majority),
+        ("async2", Aggregation::AsyncBuffered { staleness: 2 }),
+    ]
+}
+
+fn build(agg: Aggregation) -> Federation {
+    fleet::build(&FleetConfig {
+        n_devices: 10,
+        dataset: Dataset::Housing,
+        scale: 0.4,
+        scheme: Scheme::Deal,
+        // tight enough that policies genuinely diverge (majority cuts,
+        // async buffers) without zeroing every reward
+        ttl_s: 2.0,
+        seed: 2121,
+        aggregation: Some(agg),
+        ..FleetConfig::default()
+    })
+}
+
+/// One canonical line per policy: every float as raw bits (hex), plus
+/// the human-readable value for reviewable diffs.
+fn snapshot_line(name: &str, s: &FederationStats) -> String {
+    let conv: Vec<String> = s
+        .convergence_times_s
+        .iter()
+        .map(|t| format!("{:016x}", t.to_bits()))
+        .collect();
+    format!(
+        "{name} rounds={} time={:016x}({:.6}) energy={:016x}({:.6}) \
+         acc={:016x}({:.6}) converged={} conv=[{}]",
+        s.rounds,
+        s.total_time_s.to_bits(),
+        s.total_time_s,
+        s.total_energy_uah.to_bits(),
+        s.total_energy_uah,
+        s.final_accuracy.to_bits(),
+        s.final_accuracy,
+        s.converged_devices,
+        conv.join(",")
+    )
+}
+
+fn golden_path() -> PathBuf {
+    PathBuf::from(env!("CARGO_MANIFEST_DIR"))
+        .join("rust/tests/golden/federation_stats.golden")
+}
+
+fn current_snapshot() -> String {
+    let mut lines: Vec<String> = Vec::new();
+    for (name, agg) in policies() {
+        let stats = build(agg).run(ROUNDS);
+        lines.push(snapshot_line(name, &stats));
+    }
+    lines.join("\n") + "\n"
+}
+
+#[test]
+fn federation_stats_match_golden_snapshots() {
+    let got = current_snapshot();
+    let path = golden_path();
+    let regen = std::env::var("DEAL_REGEN_GOLDEN").is_ok();
+    if regen || !path.exists() {
+        // strict mode for CI once the snapshot is committed: a missing
+        // file is then a regression (e.g. a path typo silently flipping
+        // the suite back into record mode), not a first run
+        assert!(
+            regen || std::env::var("DEAL_REQUIRE_GOLDEN").is_err(),
+            "golden snapshot missing at {} but DEAL_REQUIRE_GOLDEN is set",
+            path.display()
+        );
+        std::fs::create_dir_all(path.parent().unwrap()).expect("mkdir golden dir");
+        std::fs::write(&path, &got).expect("write golden snapshot");
+        eprintln!(
+            "golden_stats: recorded {} — commit it to pin round semantics",
+            path.display()
+        );
+        return;
+    }
+    let want = std::fs::read_to_string(&path).expect("read golden snapshot");
+    assert_eq!(
+        got, want,
+        "fixed-seed FederationStats diverged from the golden snapshot at {}.\n\
+         If this semantic change is intentional, regenerate with\n\
+         `DEAL_REGEN_GOLDEN=1 cargo test --test golden_stats` and commit the diff.",
+        path.display()
+    );
+}
+
+#[test]
+fn snapshot_runs_are_reproducible_in_process() {
+    // the snapshot's own precondition: two identical builds in the same
+    // process produce bit-identical stats (no hidden global state)
+    assert_eq!(current_snapshot(), current_snapshot());
+}
+
+#[test]
+fn policies_produce_distinct_round_semantics() {
+    // sanity that the snapshot actually distinguishes the policies: on
+    // the same fleet/seed the majority cut must close rounds no later
+    // than wait-all
+    let w = build(Aggregation::WaitAll).run(ROUNDS);
+    let m = build(Aggregation::Majority).run(ROUNDS);
+    assert!(
+        m.total_time_s <= w.total_time_s + 1e-9,
+        "majority cut closed later than wait-all: {} vs {}",
+        m.total_time_s,
+        w.total_time_s
+    );
+}

@@ -87,7 +87,7 @@ fn fairness_constraint_holds_in_full_federation() {
     let devices = fleet::build_devices(&base);
     let bandit = SleepingBandit::new(
         base.n_devices,
-        SelectorConfig { m: base.m, min_fraction: base.min_fraction, gamma: 10.0 },
+        SelectorConfig { m: base.m, min_fraction: base.min_fraction, gamma: 10.0, ..Default::default() },
     );
     let fed_cfg = deal::coordinator::FederationConfig {
         scheme: Scheme::Deal,

@@ -1,0 +1,199 @@
+//! Property suite for the CSB-F sleeping bandit (§III-C, Eq. 4), on the
+//! in-tree harness (`deal::util::prop`) — failures print a replay seed.
+//!
+//! Invariants locked down here:
+//! - |S(k)| ≤ m, no duplicates, and a sleeping/unavailable device is
+//!   never selected, across randomized configs and availability churn.
+//! - Fairness-queue liveness: with full availability, every device with
+//!   rᵢ > 0 is selected within a bounded window — a starved device's
+//!   queue grows by rᵢ each round while any rival's weight is capped by
+//!   its own queue plus γ·μ̄ ≤ γ, so starvation beyond ~(γ + c)/rᵢ
+//!   rounds is impossible (we assert a 3× slack of that bound).
+//! - Long-run empirical selection fractions meet the Eq. 4 minimums
+//!   even for an arm that always pays zero reward.
+//! - Per-shard aggregate fairness: with per-device fractions rᵢ (the
+//!   `with_fractions` heterogeneous form), any contiguous device group
+//!   — i.e. a shard of the sharded runtime — accrues at least its
+//!   Σᵢ∈shard rᵢ share of selections.
+
+use deal::bandit::{SelectorConfig, SleepingBandit};
+use deal::prop_assert;
+use deal::util::prop::check;
+
+#[test]
+fn selection_is_bounded_deduped_and_never_sleeping() {
+    check(0xA11CE, 30, |g| {
+        let n = g.usize_in(1, 24);
+        let m = g.usize_in(1, n);
+        let cfg = SelectorConfig {
+            m,
+            min_fraction: g.f64_in(0.0, 0.5 / n as f64),
+            gamma: g.f64_in(0.1, 20.0),
+            ..Default::default()
+        };
+        let mut b = SleepingBandit::new(n, cfg);
+        for _ in 0..40 {
+            let sleeping: Vec<bool> = (0..n).map(|_| g.bool()).collect();
+            let avail: Vec<usize> = (0..n).filter(|&i| !sleeping[i]).collect();
+            let chosen = b.select(&avail);
+            prop_assert!(chosen.len() <= m, "|S| = {} > m = {m}", chosen.len());
+            let mut uniq = chosen.clone();
+            uniq.sort_unstable();
+            uniq.dedup();
+            prop_assert!(uniq.len() == chosen.len(), "duplicate selection {chosen:?}");
+            for &c in &chosen {
+                prop_assert!(c < n, "selected out-of-range id {c}");
+                prop_assert!(!sleeping[c], "selected sleeping device {c}");
+            }
+            for &c in &chosen {
+                b.observe(c, g.f64_in(0.0, 1.0));
+            }
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn every_fair_share_device_is_selected_within_a_bounded_window() {
+    check(0xFA17, 12, |g| {
+        let n = g.usize_in(3, 10);
+        let m = g.usize_in(1, n.min(4));
+        // strict feasibility margin (Σr ≤ 0.5·m) keeps the queue drift
+        // negative whenever every queue is positive, so total queue
+        // mass — and hence the worst wait — stays bounded
+        let r = g.f64_in(0.02, (0.5 * m as f64 / n as f64).min(0.15));
+        let gamma = g.f64_in(0.5, 4.0);
+        let cfg = SelectorConfig {
+            m,
+            min_fraction: r,
+            gamma,
+            ..Default::default()
+        };
+        let mut b = SleepingBandit::new(n, cfg);
+        let avail: Vec<usize> = (0..n).collect();
+        // bound sketch: once every queue is ≥ 1, total queue mass
+        // drifts down by ≥ m(1−r) − Σr > 0 per round, so ΣQ stays
+        // ≲ n·(γ + 2); a device starving w rounds holds Qᵢ ≥ w·r ≤ ΣQ,
+        // giving w ≤ n(γ + 2)/r — asserted with 2× slack
+        let window = (2.0 * n as f64 * (gamma + 2.0) / r).ceil() as usize + 8 * n;
+        let total = 2 * window;
+        let mut last_seen = vec![0usize; n];
+        for round in 1..=total {
+            let chosen = b.select(&avail);
+            for &c in &chosen {
+                last_seen[c] = round;
+                b.observe(c, g.f64_in(0.0, 1.0));
+            }
+            for (i, &seen) in last_seen.iter().enumerate() {
+                prop_assert!(
+                    round - seen <= window,
+                    "device {i} starved {} rounds (window {window}, n={n} m={m} \
+                     r={r:.3} γ={gamma:.2})",
+                    round - seen
+                );
+            }
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn empirical_fractions_meet_eq4_minimums_under_adversarial_rewards() {
+    check(0x5EED, 8, |g| {
+        let n = g.usize_in(3, 8);
+        let m = g.usize_in(2, n.min(4).max(2));
+        let r = g.f64_in(0.03, (0.4 * m as f64 / n as f64).min(0.12));
+        let cfg = SelectorConfig {
+            m,
+            min_fraction: r,
+            gamma: g.f64_in(1.0, 10.0),
+            ..Default::default()
+        };
+        let mut b = SleepingBandit::new(n, cfg);
+        let avail: Vec<usize> = (0..n).collect();
+        // device 0 always pays zero reward — fairness alone must carry it
+        for _ in 0..4000 {
+            let chosen = b.select(&avail);
+            for &c in &chosen {
+                b.observe(c, if c == 0 { 0.0 } else { 0.9 });
+            }
+        }
+        for i in 0..n {
+            let frac = b.selection_fraction(i);
+            prop_assert!(
+                frac >= 0.7 * r,
+                "device {i} fraction {frac:.4} < 0.7·r (r={r:.3}, n={n} m={m})"
+            );
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn contiguous_shard_groups_accrue_their_aggregate_fair_share() {
+    check(0x60D, 6, |g| {
+        let n = 8usize;
+        let m = 3usize;
+        // heterogeneous per-device fractions; Σr ≤ 8 · 0.15 = 1.2 ≤ m
+        let fractions: Vec<f64> = (0..n).map(|_| g.f64_in(0.02, 0.15)).collect();
+        let cfg = SelectorConfig {
+            m,
+            min_fraction: 0.0,
+            gamma: g.f64_in(1.0, 5.0),
+            ..Default::default()
+        };
+        let mut b = SleepingBandit::new(n, cfg).with_fractions(fractions.clone());
+        let avail: Vec<usize> = (0..n).collect();
+        for _ in 0..4000 {
+            let chosen = b.select(&avail);
+            for &c in &chosen {
+                b.observe(c, g.f64_in(0.0, 1.0));
+            }
+        }
+        // the sharded runtime partitions devices contiguously, so each
+        // half is one shard; per-device fairness must compose into the
+        // shard aggregate
+        for (lo, hi) in [(0usize, 4usize), (4, 8)] {
+            let want: f64 = fractions[lo..hi].iter().sum();
+            let got: f64 = (lo..hi).map(|i| b.selection_fraction(i)).sum();
+            prop_assert!(
+                got >= 0.8 * want,
+                "shard {lo}..{hi}: aggregate fraction {got:.3} < 0.8·Σr ({want:.3})"
+            );
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn woken_device_with_queue_credit_wins_promptly() {
+    // randomized sleeping-bandit liveness (the fixed-length variant
+    // lives in sleeping.rs unit tests): whatever r, γ and sleep length,
+    // once the accrued credit sleep·r clears any rival's weight bound
+    // (≈ 1 + r + γ·μ̄ ≤ 1 + r + γ), the waking device must win at once
+    check(0xBEE, 10, |g| {
+        let r = g.f64_in(0.1, 0.3); // Σr = 3r ≤ 0.9 ≤ m = 1, feasible
+        let gamma = g.f64_in(0.5, 2.0);
+        let sleep = ((3.0 + 2.0 * gamma) / r).ceil() as usize;
+        let cfg = SelectorConfig {
+            m: 1,
+            min_fraction: r,
+            gamma,
+            ..Default::default()
+        };
+        let mut b = SleepingBandit::new(3, cfg);
+        for _ in 0..sleep {
+            let chosen = b.select(&[1, 2]);
+            for c in chosen {
+                b.observe(c, g.f64_in(0.5, 1.0));
+            }
+        }
+        let woken = b.select(&[0, 1, 2]);
+        prop_assert!(
+            woken == vec![0],
+            "woken device (credit {:.2}) lost to {woken:?} (r={r:.2} γ={gamma:.2})",
+            sleep as f64 * r
+        );
+        Ok(())
+    });
+}

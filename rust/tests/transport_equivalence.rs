@@ -1,16 +1,30 @@
 //! Transport-equivalence suite: the unified federation engine must be
-//! *bit-identical* across transports — all time is virtual, replies are
-//! deterministically ordered, so swapping the in-place loop for one
-//! worker thread per device may not change a single bit of the stats —
-//! and the buffered-async aggregation policy must credit every
-//! straggler exactly once.
+//! *bit-identical* across worker fabrics — all time is virtual, replies
+//! are deterministically ordered, so swapping the in-place loop for
+//! batched PUB/SUB worker threads, or partitioning the fleet across
+//! shard leaders, may not change a single bit of the stats — and the
+//! buffered-async aggregation policy must credit every straggler
+//! exactly once.
 
+use deal::bandit::SelectAll;
 use deal::coordinator::fleet::{self, FleetConfig};
 use deal::coordinator::scheme::ALL_SCHEMES;
-use deal::coordinator::{Aggregation, Federation, FederationStats, Scheme, TransportKind};
+use deal::coordinator::{
+    Aggregation, Federation, FederationConfig, FederationStats, Scheme, ShardedTransport,
+    TransportKind,
+};
 use deal::data::Dataset;
 
 fn build(scheme: Scheme, transport: TransportKind, ttl_s: f64) -> Federation {
+    build_sharded(scheme, transport, ttl_s, 1)
+}
+
+fn build_sharded(
+    scheme: Scheme,
+    transport: TransportKind,
+    ttl_s: f64,
+    shards: usize,
+) -> Federation {
     fleet::build(&FleetConfig {
         n_devices: 10,
         dataset: Dataset::Housing,
@@ -19,6 +33,7 @@ fn build(scheme: Scheme, transport: TransportKind, ttl_s: f64) -> Federation {
         ttl_s,
         seed: 33,
         transport,
+        shards,
         ..FleetConfig::default()
     })
 }
@@ -130,6 +145,96 @@ fn async_buffered_credits_late_replies_once_with_fixed_delay() {
     let per_device: f64 = fed.device_energy_uah.iter().sum();
     assert_eq!(credited.to_bits(), per_device.to_bits(), "double/missed credit");
     assert!(fed.pending_replies() > 0, "tail replies stay buffered");
+}
+
+#[test]
+fn shard_count_invariance_for_both_inner_transports() {
+    // same seed, shards ∈ {1, 2, 4} → identical merged stats; shards=1
+    // is the pre-PR flat path, so this also pins "sharded ≡ unsharded"
+    for inner in [TransportKind::Sync, TransportKind::Threaded] {
+        for scheme in [Scheme::Deal, Scheme::NewFl] {
+            let mut flat = build_sharded(scheme, inner, 30.0, 1);
+            let base = flat.run(12);
+            for shards in [2usize, 4] {
+                let mut fed = build_sharded(scheme, inner, 30.0, shards);
+                let stats = fed.run(12);
+                assert_bit_identical(
+                    &base,
+                    &stats,
+                    &format!("{} {} shards={shards}", scheme.name(), inner.name()),
+                );
+                assert_eq!(
+                    flat.rounds, fed.rounds,
+                    "{} {} shards={shards}: per-round records",
+                    scheme.name(),
+                    inner.name()
+                );
+                // the root aggregator's per-shard energy must re-sum to
+                // the merged total
+                let merged: f64 = fed.rounds.iter().map(|r| r.energy_uah).sum();
+                let per_shard: f64 =
+                    fed.shard_summaries().iter().map(|s| s.energy_uah).sum();
+                assert!(
+                    (merged - per_shard).abs() < 1e-6,
+                    "shard summaries lost energy: {merged} vs {per_shard}"
+                );
+            }
+        }
+    }
+}
+
+#[test]
+fn shard_count_invariance_under_async_aggregation() {
+    // determinism must survive sharding + the buffered straggler path
+    let mk = |shards| {
+        fleet::build(&FleetConfig {
+            n_devices: 8,
+            dataset: Dataset::Housing,
+            scale: 0.4,
+            scheme: Scheme::Deal,
+            ttl_s: 1e-9,
+            seed: 71,
+            transport: TransportKind::Sync,
+            shards,
+            aggregation: Some(Aggregation::AsyncBuffered { staleness: 2 }),
+            ..FleetConfig::default()
+        })
+    };
+    let mut flat = mk(1);
+    let base = flat.run(9);
+    for shards in [2usize, 4] {
+        let mut fed = mk(shards);
+        let stats = fed.run(9);
+        assert_bit_identical(&base, &stats, &format!("async shards={shards}"));
+        assert_eq!(flat.pending_replies(), fed.pending_replies());
+    }
+}
+
+#[test]
+fn explicit_single_shard_wrapper_matches_flat_path() {
+    // shards=1 routes through the flat transport in `fleet::build`; the
+    // wrapper itself must also be transparent when constructed directly
+    let cfg = || FleetConfig {
+        n_devices: 9,
+        dataset: Dataset::Housing,
+        scale: 0.4,
+        scheme: Scheme::NewFl,
+        seed: 13,
+        ..FleetConfig::default()
+    };
+    let fed_cfg = || FederationConfig { scheme: Scheme::NewFl, ..Default::default() };
+    let mut flat =
+        Federation::new(fleet::build_devices(&cfg()), Box::new(SelectAll), fed_cfg());
+    let wrapper = ShardedTransport::new(
+        fleet::build_devices(&cfg()),
+        1,
+        TransportKind::Sync,
+    );
+    let mut sharded =
+        Federation::with_transport(Box::new(wrapper), Box::new(SelectAll), fed_cfg());
+    let a = flat.run(10);
+    let b = sharded.run(10);
+    assert_bit_identical(&a, &b, "explicit 1-shard wrapper");
 }
 
 #[test]
