@@ -1,6 +1,10 @@
 //! Ablation A — the global selection layer (§III-C design choice):
 //! DEAL's sleeping-bandit selector vs random, round-robin, oracle and
-//! select-all, on cumulative reward (regret) and fleet energy.
+//! select-all, on cumulative reward (regret) and fleet energy; plus the
+//! contextual ablation — CSB-F vs telemetry-fed LinUCB at equal m on a
+//! heterogeneous fleet (all five Table I phone profiles mixed), where
+//! battery/ladder/GFLOPS context should buy lower round wall time and
+//! less energy per converged device.
 //!
 //!     cargo bench --bench ablation_selection
 
@@ -9,8 +13,11 @@ mod common;
 use common::banner;
 use deal::bandit::{
     OracleSelector, RandomSelector, RoundRobinSelector, SelectAll, Selector,
-    SelectorConfig, SleepingBandit,
+    SelectorConfig, SelectorKind, SleepingBandit,
 };
+use deal::coordinator::fleet::{self, FleetConfig};
+use deal::coordinator::Scheme;
+use deal::data::Dataset;
 use deal::util::rng::Rng;
 use deal::util::tables::Table;
 
@@ -90,5 +97,80 @@ fn main() {
         100.0 * mab.1 / oracle_reward,
         100.0 * rand.1 / oracle_reward,
         100.0 * (1.0 - mab.2 / rand.2),
+    );
+    contextual_ablation();
+}
+
+/// Ablation B — context-free CSB-F vs telemetry-fed LinUCB at equal m,
+/// on a real federation whose 25 devices rotate through all five
+/// Table I profiles (5× Honor … 5× Nexus): genuinely heterogeneous
+/// capacity. Headline columns: mean round wall time and energy per
+/// converged device — the quantities heterogeneity-aware selection is
+/// supposed to lower by keeping slow/hungry stragglers out of S(k).
+fn contextual_ablation() {
+    const ROUNDS_FED: usize = 200;
+    banner(
+        "Ablation B — CSB-F vs LinUCB on a heterogeneous fleet (25 devices, m=5)",
+        "telemetry context should cut round wall time / energy per converged device at equal m",
+    );
+    let mk = |selector: SelectorKind| FleetConfig {
+        n_devices: 25,
+        dataset: Dataset::Housing,
+        scale: 0.4,
+        scheme: Scheme::Deal,
+        m: 5,
+        arrivals_per_round: 6,
+        ttl_s: 2.0,
+        seed: 7,
+        selector,
+        ..FleetConfig::default()
+    };
+    let mut table = Table::new(
+        &format!("{ROUNDS_FED} rounds, same fleet/seed, majority aggregation"),
+        &[
+            "selector",
+            "mean round t (s)",
+            "energy/round (µAh)",
+            "converged",
+            "energy/converged (µAh)",
+            "hi-cap share",
+        ],
+    );
+    let mut headline: Vec<(SelectorKind, f64, f64)> = Vec::new();
+    for selector in [SelectorKind::Csbf, SelectorKind::LinUcb] {
+        let mut fed = fleet::build(&mk(selector));
+        let stats = fed.run(ROUNDS_FED);
+        let mean_t = stats.total_time_s / stats.rounds as f64;
+        let e_round = stats.total_energy_uah / stats.rounds as f64;
+        let e_conv = stats.total_energy_uah / stats.converged_devices.max(1) as f64;
+        // selection share landing on the high-capacity profiles
+        // (Honor: 8×2.11 GHz, Nexus: 4×2.65 GHz — the fleet's top
+        // peak-GFLOPS phones)
+        let counts = fed.selection_counts();
+        let total: u64 = counts.iter().sum::<u64>().max(1);
+        let hi: u64 = (0..fed.n_devices())
+            .filter(|&i| {
+                let name = fed.transport().profile(i).name;
+                name == "Honor" || name == "Nexus"
+            })
+            .map(|i| counts[i])
+            .sum();
+        table.row([
+            selector.name().to_string(),
+            format!("{mean_t:.4}"),
+            format!("{e_round:.1}"),
+            stats.converged_devices.to_string(),
+            format!("{e_conv:.1}"),
+            format!("{:.1}%", 100.0 * hi as f64 / total as f64),
+        ]);
+        headline.push((selector, mean_t, e_conv));
+    }
+    print!("{}", table.render());
+    let (_, t_csbf, e_csbf) = headline[0];
+    let (_, t_lin, e_lin) = headline[1];
+    println!(
+        "\nLinUCB vs CSB-F at equal m: round wall time {:+.1}%, energy per converged device {:+.1}%",
+        100.0 * (t_lin / t_csbf - 1.0),
+        100.0 * (e_lin / e_csbf - 1.0),
     );
 }

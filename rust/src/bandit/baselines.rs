@@ -192,9 +192,15 @@ mod tests {
             min_fraction: 0.0,
             gamma: 1.0,
             recency_lambda: 0.5,
+            ..Default::default()
         };
         let bandit = SleepingBandit::new(2, cfg);
         let mut s: Box<dyn Selector> = Box::new(bandit);
+        // advance the round clock past the delay (delays saturate at the
+        // selector's own round count)
+        for _ in 0..4 {
+            let _ = s.select(&[0, 1]);
+        }
         for _ in 0..200 {
             s.observe(0, 0.8);
             s.observe_delayed(1, 0.8, 3); // credits 0.8 · 0.5³ = 0.1

@@ -1,0 +1,431 @@
+//! Contextual selection — the heterogeneity-aware layer above the
+//! paper's §III-C bandit (ROADMAP: "feed device profile features into
+//! the bandit context", à la AutoFL).
+//!
+//! The federation engine no longer talks to a context-free
+//! [`Selector`]: it drives a [`ContextualSelector`], handing it the
+//! [`DeviceSnapshot`] telemetry that rides every transport reply and
+//! availability probe. Two implementations:
+//!
+//! - [`ContextFree`] — adapter wrapping any [`Selector`] (the CSB-F
+//!   [`SleepingBandit`](super::SleepingBandit), the ablation
+//!   baselines). It drops the snapshots on the floor, so a federation
+//!   built over it is bit-identical to the pre-contextual selection
+//!   path — the `--features off` / `SelectorKind::Csbf` special case
+//!   pinned by `rust/tests/transport_equivalence.rs` and the golden
+//!   suite.
+//! - [`LinUcb`] — shared-parameter LinUCB (Li et al., WWW'10 form):
+//!   one ridge regression over the d = [`DeviceSnapshot::N_FEATURES`]
+//!   context features shared by all arms, hand-rolled on
+//!   [`learn::mat`](crate::learn::mat) (no external deps). Sharing the
+//!   parameter vector is what lets 10⁴-device fleets learn from O(m)
+//!   observations per round: every reply improves the score of *every*
+//!   device with similar telemetry, instead of only its own arm.
+//!
+//! Scoring: μ̂(x) = θᵀx with θ = A⁻¹b, bonus α·√(xᵀA⁻¹x), where
+//! A = λ_ridge·I + Σ xxᵀ over observed contexts and b = Σ reward·x.
+//! A⁻¹ is maintained incrementally by the Sherman–Morrison rank-one
+//! identity (O(d²) per observation — the same trick as the Tikhonov
+//! engine's QR rank-one path, but d ≈ 7 so a dense inverse is cheap
+//! and exactly symmetric).
+
+use super::baselines::Selector;
+use super::sleeping::SelectorConfig;
+use crate::learn::mat::{dot, Mat};
+use crate::power::DeviceSnapshot;
+
+/// A worker-selection policy that sees per-device telemetry.
+///
+/// `select` receives the available arm ids and their snapshots in
+/// lock-step (`snapshots[j]` describes `available[j]`); `observe`
+/// feeds back the reward together with the snapshot the reward was
+/// earned under, so the contextual model learns *which telemetry*
+/// predicts good rounds.
+pub trait ContextualSelector {
+    /// Pick S(k) ⊆ `available`, |S| ≤ m.
+    fn select(&mut self, available: &[usize], snapshots: &[DeviceSnapshot]) -> Vec<usize>;
+
+    /// Reward Xᵢ(k) for a selected arm, with the snapshot it replied
+    /// under.
+    fn observe(&mut self, arm: usize, reward: f64, snapshot: &DeviceSnapshot);
+
+    /// Reward arriving `delay` rounds late (buffered-async
+    /// aggregation). Default: treat as fresh.
+    fn observe_delayed(
+        &mut self,
+        arm: usize,
+        reward: f64,
+        _delay: u64,
+        snapshot: &DeviceSnapshot,
+    ) {
+        self.observe(arm, reward, snapshot);
+    }
+
+    /// Does this selector actually read the snapshots? Context-free
+    /// adapters return `false`, letting the engine skip gathering a
+    /// per-round context vector (an O(n_available) copy that matters at
+    /// the 10⁴-device scale target). When this returns `false`,
+    /// `select` may be handed an empty snapshot slice.
+    fn wants_context(&self) -> bool {
+        true
+    }
+
+    fn name(&self) -> &'static str;
+}
+
+/// Adapter: any context-free [`Selector`] as a [`ContextualSelector`]
+/// that ignores telemetry. The CSB-F path of `fleet::build` runs
+/// through this, which is why `SelectorKind::Csbf` stays bit-identical
+/// to the pre-contextual engine whatever the snapshots say.
+pub struct ContextFree(pub Box<dyn Selector>);
+
+impl ContextualSelector for ContextFree {
+    fn select(&mut self, available: &[usize], _snapshots: &[DeviceSnapshot]) -> Vec<usize> {
+        self.0.select(available)
+    }
+
+    fn observe(&mut self, arm: usize, reward: f64, _snapshot: &DeviceSnapshot) {
+        self.0.observe(arm, reward);
+    }
+
+    fn observe_delayed(
+        &mut self,
+        arm: usize,
+        reward: f64,
+        delay: u64,
+        _snapshot: &DeviceSnapshot,
+    ) {
+        self.0.observe_delayed(arm, reward, delay);
+    }
+
+    fn wants_context(&self) -> bool {
+        false
+    }
+
+    fn name(&self) -> &'static str {
+        self.0.name()
+    }
+}
+
+/// Shared-parameter LinUCB over [`DeviceSnapshot`] features.
+#[derive(Debug, Clone)]
+pub struct LinUcb {
+    cfg: SelectorConfig,
+    /// A⁻¹, maintained by Sherman–Morrison (d×d, symmetric PSD).
+    a_inv: Mat,
+    /// b = Σ reward·x.
+    b: Vec<f64>,
+    /// θ = A⁻¹ b, refreshed on every observation.
+    theta: Vec<f64>,
+    /// Per-arm selection counts (diagnostics/benches).
+    selections: Vec<u64>,
+    round: u64,
+}
+
+impl LinUcb {
+    pub fn new(n: usize, cfg: SelectorConfig) -> Self {
+        let d = DeviceSnapshot::N_FEATURES;
+        let ridge = cfg.ridge.max(1e-9);
+        let mut a_inv = Mat::zeros(d, d);
+        for i in 0..d {
+            a_inv[(i, i)] = 1.0 / ridge;
+        }
+        LinUcb {
+            cfg,
+            a_inv,
+            b: vec![0.0; d],
+            theta: vec![0.0; d],
+            selections: vec![0; n],
+            round: 0,
+        }
+    }
+
+    pub fn n_arms(&self) -> usize {
+        self.selections.len()
+    }
+
+    pub fn round(&self) -> u64 {
+        self.round
+    }
+
+    pub fn selection_counts(&self) -> &[u64] {
+        &self.selections
+    }
+
+    /// Learned parameter vector θ (diagnostics).
+    pub fn theta(&self) -> &[f64] {
+        &self.theta
+    }
+
+    /// UCB score of one context: θᵀx + α·√(xᵀA⁻¹x).
+    pub fn score(&self, snapshot: &DeviceSnapshot) -> f64 {
+        let x = snapshot.features();
+        let ax = self.a_inv.matvec(&x);
+        // xᵀA⁻¹x ≥ 0 in exact arithmetic (A⁻¹ is PSD); clamp the
+        // float residue so sqrt can never produce NaN
+        let var = dot(&x, &ax).max(0.0);
+        dot(&self.theta, &x) + self.cfg.alpha * var.sqrt()
+    }
+
+    /// Select up to m of the available arms by UCB score and advance
+    /// the round clock. Ties break on the lower arm id (the shared
+    /// [`top_m`](super::top_m) order); sleeping arms (absent from
+    /// `available`) are never scored at all.
+    pub fn select(&mut self, available: &[usize], snapshots: &[DeviceSnapshot]) -> Vec<usize> {
+        debug_assert_eq!(available.len(), snapshots.len(), "snapshot/arm misalignment");
+        self.round += 1;
+        let weighted: Vec<(f64, usize)> = available
+            .iter()
+            .zip(snapshots)
+            .map(|(&i, s)| (self.score(s), i))
+            .collect();
+        let chosen = super::top_m(weighted, self.cfg.m);
+        for &i in &chosen {
+            if let Some(c) = self.selections.get_mut(i) {
+                *c += 1;
+            }
+        }
+        chosen
+    }
+
+    /// Ridge update with the (context, reward) pair:
+    /// A ← A + xxᵀ (via Sherman–Morrison on A⁻¹), b ← b + r·x, θ = A⁻¹b.
+    pub fn observe(&mut self, _arm: usize, reward: f64, snapshot: &DeviceSnapshot) {
+        let r = reward.clamp(0.0, 1.0);
+        let x = snapshot.features();
+        let ax = self.a_inv.matvec(&x);
+        // (A + xxᵀ)⁻¹ = A⁻¹ − (A⁻¹x)(A⁻¹x)ᵀ / (1 + xᵀA⁻¹x); the
+        // denominator is ≥ 1, so the update is numerically tame
+        let denom = 1.0 + dot(&x, &ax);
+        self.a_inv.rank1_acc(-1.0 / denom, &ax, &ax);
+        for (bj, xj) in self.b.iter_mut().zip(&x) {
+            *bj += r * xj;
+        }
+        self.theta = self.a_inv.matvec(&self.b);
+    }
+
+    /// Late reward: recency-discounted by the shared λ^delay rule
+    /// ([`super::ucb::discount_delayed`]) like the CSB-F path, with
+    /// `delay` saturating at this selector's own round count (a merged
+    /// shard clock can report a delay larger than the rounds this
+    /// selector has run — see `SleepingBandit::observe_delayed`).
+    pub fn observe_delayed(
+        &mut self,
+        arm: usize,
+        reward: f64,
+        delay: u64,
+        snapshot: &DeviceSnapshot,
+    ) {
+        let delay = delay.min(self.round);
+        let r = super::ucb::discount_delayed(reward, delay, self.cfg.recency_lambda);
+        self.observe(arm, r, snapshot);
+    }
+}
+
+impl ContextualSelector for LinUcb {
+    // Fully-qualified paths resolve to the inherent methods (inherent
+    // impls shadow trait items), so these delegate rather than recurse
+    // — the same pattern as `Selector for SleepingBandit`.
+    fn select(&mut self, available: &[usize], snapshots: &[DeviceSnapshot]) -> Vec<usize> {
+        LinUcb::select(self, available, snapshots)
+    }
+
+    fn observe(&mut self, arm: usize, reward: f64, snapshot: &DeviceSnapshot) {
+        LinUcb::observe(self, arm, reward, snapshot)
+    }
+
+    fn observe_delayed(
+        &mut self,
+        arm: usize,
+        reward: f64,
+        delay: u64,
+        snapshot: &DeviceSnapshot,
+    ) {
+        LinUcb::observe_delayed(self, arm, reward, delay, snapshot)
+    }
+
+    fn name(&self) -> &'static str {
+        "linucb"
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::bandit::{RoundRobinSelector, SleepingBandit};
+
+    fn snap(cap: f64) -> DeviceSnapshot {
+        DeviceSnapshot {
+            battery_frac: cap,
+            ladder_step: (cap * 7.0) as usize,
+            ladder_steps: 8,
+            cores: 4,
+            peak_gflops: 20.0 * cap,
+            cache_resident_frac: cap,
+            swap_ewma: 300.0 * (1.0 - cap),
+            avail_ewma: cap,
+        }
+    }
+
+    fn cfg(m: usize) -> SelectorConfig {
+        SelectorConfig { m, min_fraction: 0.0, gamma: 1.0, ..Default::default() }
+    }
+
+    #[test]
+    fn selects_bounded_subset_of_available() {
+        let mut b = LinUcb::new(10, cfg(3));
+        let avail = [1usize, 4, 7, 9];
+        let snaps: Vec<DeviceSnapshot> = avail.iter().map(|_| snap(0.5)).collect();
+        let chosen = b.select(&avail, &snaps);
+        assert!(chosen.len() <= 3);
+        for c in &chosen {
+            assert!(avail.contains(c));
+        }
+        assert!(b.select(&[], &[]).is_empty());
+    }
+
+    #[test]
+    fn cold_start_prefers_larger_context_norm() {
+        // θ = 0 before any reward, so the score is pure exploration
+        // bonus α·√(xᵀx/λ) — the componentwise-larger context wins
+        let mut b = LinUcb::new(2, cfg(1));
+        let snaps = [snap(0.2), snap(0.9)];
+        assert_eq!(b.select(&[0, 1], &snaps), vec![1]);
+    }
+
+    #[test]
+    fn learns_capacity_correlated_rewards() {
+        // reward = affine function of capacity; after training, the
+        // high-capacity arm must dominate selections
+        let mut b = LinUcb::new(6, cfg(2));
+        let caps = [0.1, 0.25, 0.4, 0.55, 0.7, 0.95];
+        let snaps: Vec<DeviceSnapshot> = caps.iter().map(|&c| snap(c)).collect();
+        let avail: Vec<usize> = (0..6).collect();
+        for _ in 0..400 {
+            let chosen = b.select(&avail, &snaps);
+            for &i in &chosen {
+                b.observe(i, 0.2 + 0.7 * caps[i], &snaps[i]);
+            }
+        }
+        let counts = b.selection_counts();
+        assert!(
+            counts[5] > counts[0] * 3,
+            "high-capacity arm under-selected: {counts:?}"
+        );
+        assert!(
+            counts[4] > counts[1],
+            "capacity ordering not respected: {counts:?}"
+        );
+    }
+
+    #[test]
+    fn equal_contexts_fall_back_to_id_order() {
+        // features-off degeneracy: identical (neutral) contexts give
+        // identical scores, so the tie-break is deterministic id order
+        let mut b = LinUcb::new(5, cfg(2));
+        let snaps = [DeviceSnapshot::NEUTRAL; 5];
+        let chosen = b.select(&[0, 1, 2, 3, 4], &snaps[..]);
+        assert_eq!(chosen, vec![0, 1]);
+    }
+
+    #[test]
+    fn sherman_morrison_matches_direct_inverse() {
+        // after a few rank-one updates, A⁻¹·(λI + Σxxᵀ) ≈ I
+        let mut b = LinUcb::new(3, cfg(1));
+        let contexts = [snap(0.3), snap(0.6), snap(0.9), snap(0.45)];
+        let d = DeviceSnapshot::N_FEATURES;
+        let mut a = Mat::zeros(d, d);
+        for i in 0..d {
+            a[(i, i)] = 1.0; // default ridge = 1
+        }
+        for s in &contexts {
+            b.observe(0, 0.5, s);
+            let x = s.features();
+            a.rank1_acc(1.0, &x, &x);
+        }
+        let prod = b.a_inv.matmul(&a);
+        let eye = Mat::eye(d);
+        assert!(
+            prod.max_abs_diff(&eye) < 1e-9,
+            "Sherman–Morrison drifted: |A⁻¹A − I| = {}",
+            prod.max_abs_diff(&eye)
+        );
+    }
+
+    #[test]
+    fn delayed_rewards_saturate_and_discount() {
+        let mut b = LinUcb::new(2, SelectorConfig {
+            m: 1,
+            min_fraction: 0.0,
+            gamma: 1.0,
+            recency_lambda: 0.5,
+            ..Default::default()
+        });
+        // round 0: clamp to fresh — b accumulates the full reward
+        b.observe_delayed(0, 0.8, u64::MAX, &snap(0.5));
+        let b_fresh = b.b.clone();
+        let mut reference = LinUcb::new(2, cfg(1));
+        reference.observe(0, 0.8, &snap(0.5));
+        for (x, y) in b_fresh.iter().zip(&reference.b) {
+            assert_eq!(x.to_bits(), y.to_bits());
+        }
+        // two rounds in: delay 99 clamps to 2 → reward · 0.25
+        let snaps = [snap(0.4), snap(0.6)];
+        let _ = b.select(&[0, 1], &snaps);
+        let _ = b.select(&[0, 1], &snaps);
+        let before = b.b.clone();
+        b.observe_delayed(1, 0.8, 99, &snap(1.0));
+        let x = snap(1.0).features();
+        for j in 0..x.len() {
+            assert!(
+                (b.b[j] - before[j] - 0.2 * x[j]).abs() < 1e-12,
+                "feature {j} credited wrongly"
+            );
+        }
+    }
+
+    #[test]
+    fn context_free_adapter_delegates_and_ignores_snapshots() {
+        let mut a: Box<dyn ContextualSelector> =
+            Box::new(ContextFree(Box::new(RoundRobinSelector::new(2))));
+        let avail: Vec<usize> = (0..6).collect();
+        let hi = [snap(0.9); 6];
+        let lo = [snap(0.1); 6];
+        // snapshots must not influence a context-free policy
+        let c1 = a.select(&avail, &hi[..]);
+        let c2 = a.select(&avail, &lo[..]);
+        assert_eq!(c1, vec![0, 1]);
+        assert_eq!(c2, vec![2, 3]);
+        assert_eq!(a.name(), "round-robin");
+        // context-free: the engine may skip the snapshot gather and
+        // hand an empty slice
+        assert!(!a.wants_context());
+        let c3 = a.select(&avail, &[]);
+        assert_eq!(c3, vec![4, 5]);
+        let lin: Box<dyn ContextualSelector> = Box::new(LinUcb::new(2, cfg(1)));
+        assert!(lin.wants_context());
+    }
+
+    #[test]
+    fn context_free_adapter_routes_delayed_rewards_to_inner_discount() {
+        // the adapter must call the inner selector's observe_delayed
+        // (which discounts), not the trait default (fresh)
+        let cfg = SelectorConfig {
+            m: 1,
+            min_fraction: 0.0,
+            gamma: 1.0,
+            recency_lambda: 0.5,
+            ..Default::default()
+        };
+        let mut inner = SleepingBandit::new(2, cfg);
+        // advance the inner round clock so delay 2 is not clamped
+        let _ = inner.select(&[0, 1]);
+        let _ = inner.select(&[0, 1]);
+        let mut a: Box<dyn ContextualSelector> = Box::new(ContextFree(Box::new(inner)));
+        a.observe(0, 0.8, &DeviceSnapshot::NEUTRAL);
+        a.observe_delayed(1, 0.8, 2, &DeviceSnapshot::NEUTRAL);
+        // fresh arm must now out-score the discounted arm
+        let chosen = a.select(&[0, 1], &[DeviceSnapshot::NEUTRAL; 2]);
+        assert_eq!(chosen, vec![0]);
+    }
+}

@@ -1,12 +1,67 @@
 //! Global selection optimization — the paper's §III-C multi-armed-bandit
 //! layer: Eq. 5 UCB estimates ([`ucb`]), the combinatorial sleeping
-//! bandit with Eq. 4 fairness constraints ([`sleeping`]), and the
-//! ablation baselines ([`baselines`]).
+//! bandit with Eq. 4 fairness constraints ([`sleeping`]), the ablation
+//! baselines ([`baselines`]), and the heterogeneity-aware contextual
+//! layer ([`contextual`]) — a [`ContextualSelector`] trait the
+//! federation engine drives with per-device telemetry
+//! ([`crate::power::DeviceSnapshot`]), implemented by the
+//! shared-parameter [`LinUcb`] bandit and by [`ContextFree`], the
+//! adapter that runs any context-free [`Selector`] (CSB-F included)
+//! unchanged and bit-identically.
 
 pub mod baselines;
+pub mod contextual;
 pub mod sleeping;
 pub mod ucb;
 
 pub use baselines::{OracleSelector, RandomSelector, RoundRobinSelector, SelectAll, Selector};
-pub use sleeping::{SelectorConfig, SleepingBandit};
-pub use ucb::ArmEstimate;
+pub use contextual::{ContextFree, ContextualSelector, LinUcb};
+pub use sleeping::{SelectorConfig, SelectorKind, SleepingBandit};
+pub use ucb::{discount_delayed, ArmEstimate};
+
+/// Deterministic top-m partial selection shared by the selectors
+/// (CSB-F weights, LinUCB scores): order by (weight desc, id asc) and
+/// keep the m winners — O(n) partition + O(m log m) sort of the
+/// winners only (EXPERIMENTS.md §Perf), not a full sort. `total_cmp`
+/// keeps a NaN weight from ever panicking mid-round (it orders
+/// deterministically instead of aborting), and m = 0 selects nobody,
+/// so |S| ≤ m holds for *every* m.
+pub(crate) fn top_m(mut weighted: Vec<(f64, usize)>, m: usize) -> Vec<usize> {
+    if m == 0 || weighted.is_empty() {
+        return Vec::new();
+    }
+    let cmp =
+        |a: &(f64, usize), b: &(f64, usize)| b.0.total_cmp(&a.0).then(a.1.cmp(&b.1));
+    let m = m.min(weighted.len());
+    if m < weighted.len() {
+        weighted.select_nth_unstable_by(m - 1, cmp);
+        weighted.truncate(m);
+    }
+    weighted.sort_by(cmp);
+    weighted.into_iter().map(|(_, i)| i).collect()
+}
+
+#[cfg(test)]
+mod top_m_tests {
+    use super::top_m;
+
+    #[test]
+    fn zero_m_selects_nobody() {
+        assert!(top_m(vec![(1.0, 0), (2.0, 1)], 0).is_empty());
+        assert!(top_m(Vec::new(), 3).is_empty());
+    }
+
+    #[test]
+    fn orders_by_weight_then_id() {
+        let w = vec![(0.5, 3), (0.9, 1), (0.5, 0), (0.1, 2)];
+        assert_eq!(top_m(w.clone(), 3), vec![1, 0, 3]);
+        assert_eq!(top_m(w, 10), vec![1, 0, 3, 2]);
+    }
+
+    #[test]
+    fn nan_weight_orders_instead_of_panicking() {
+        let w = vec![(f64::NAN, 0), (0.9, 1), (0.3, 2)];
+        let chosen = top_m(w, 2);
+        assert_eq!(chosen.len(), 2);
+    }
+}

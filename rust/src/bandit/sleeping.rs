@@ -16,7 +16,43 @@
 
 use super::ucb::ArmEstimate;
 
-/// Configuration for the selection layer.
+/// Which selection algorithm a fleet stands up (see
+/// [`super::contextual`]): the context-free CSB-F sleeping bandit, or
+/// the LinUCB contextual bandit fed by device telemetry.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash, Default)]
+pub enum SelectorKind {
+    /// Combinatorial sleeping bandit with fairness (this module) — the
+    /// paper's §III-C layer, context-free. The default: bit-preserving
+    /// with the pre-contextual selection path.
+    #[default]
+    Csbf,
+    /// Shared-parameter LinUCB over [`DeviceSnapshot`] features
+    /// ([`super::LinUcb`]) — heterogeneity-aware selection.
+    ///
+    /// [`DeviceSnapshot`]: crate::power::DeviceSnapshot
+    LinUcb,
+}
+
+impl SelectorKind {
+    pub fn name(&self) -> &'static str {
+        match self {
+            SelectorKind::Csbf => "csbf",
+            SelectorKind::LinUcb => "linucb",
+        }
+    }
+
+    pub fn from_name(s: &str) -> Option<SelectorKind> {
+        match s.to_ascii_lowercase().as_str() {
+            "csbf" | "csb-f" | "mab" => Some(SelectorKind::Csbf),
+            "linucb" | "lin-ucb" => Some(SelectorKind::LinUcb),
+            _ => None,
+        }
+    }
+}
+
+/// Configuration for the selection layer (shared by both
+/// [`SelectorKind`]s; LinUCB ignores the fairness knobs, CSB-F ignores
+/// the LinUCB ones).
 #[derive(Debug, Clone)]
 pub struct SelectorConfig {
     /// Max selected per round (paper's m).
@@ -31,11 +67,25 @@ pub struct SelectorConfig {
     /// 1.0 (the default) treats late rewards as fresh and is
     /// bit-preserving with the pre-discount behaviour.
     pub recency_lambda: f64,
+    /// Which selection algorithm `fleet::build` stands up.
+    pub kind: SelectorKind,
+    /// LinUCB exploration strength α (bonus α·√(xᵀA⁻¹x)).
+    pub alpha: f64,
+    /// LinUCB ridge regularizer λ_ridge (A starts as λ_ridge·I).
+    pub ridge: f64,
 }
 
 impl Default for SelectorConfig {
     fn default() -> Self {
-        SelectorConfig { m: 10, min_fraction: 0.05, gamma: 20.0, recency_lambda: 1.0 }
+        SelectorConfig {
+            m: 10,
+            min_fraction: 0.05,
+            gamma: 20.0,
+            recency_lambda: 1.0,
+            kind: SelectorKind::Csbf,
+            alpha: 1.0,
+            ridge: 1.0,
+        }
     }
 }
 
@@ -124,25 +174,14 @@ impl SleepingBandit {
     pub fn select(&mut self, available: &[usize]) -> Vec<usize> {
         self.round += 1;
         let k = self.round;
-        let mut weighted: Vec<(f64, usize)> = available
+        let weighted: Vec<(f64, usize)> = available
             .iter()
             .map(|&i| {
                 let w = self.queues[i] + self.cfg.gamma * self.gains[i] * self.arms[i].ucb(k);
                 (w, i)
             })
             .collect();
-        // perf (EXPERIMENTS.md §Perf): partial selection of the top-m
-        // instead of a full sort — selection is O(n), sort only the m
-        let cmp = |a: &(f64, usize), b: &(f64, usize)| {
-            b.0.partial_cmp(&a.0).unwrap().then(a.1.cmp(&b.1))
-        };
-        let m = self.cfg.m.min(weighted.len());
-        if m > 0 && m < weighted.len() {
-            weighted.select_nth_unstable_by(m - 1, cmp);
-            weighted.truncate(m);
-        }
-        weighted.sort_by(cmp);
-        let chosen: Vec<usize> = weighted.into_iter().map(|(_, i)| i).collect();
+        let chosen = super::top_m(weighted, self.cfg.m);
         // queue dynamics over all devices
         for i in 0..self.queues.len() {
             let served = chosen.contains(&i) as u64 as f64;
@@ -162,7 +201,15 @@ impl SleepingBandit {
     /// Feed back a reward observed `delay` rounds after the device was
     /// selected (buffered-async aggregation), down-weighted by the
     /// configured recency discount λ^delay.
+    ///
+    /// `delay` saturates at this bandit's own round count: a merged
+    /// shard clock (or any out-of-band replay) can hand the root a
+    /// delay larger than the rounds this selector has actually run, and
+    /// no reward can be staler than the selector's whole history —
+    /// clamping keeps λ^delay from collapsing such rewards to 0 (or a
+    /// caller's `credit − sent` subtraction from underflowing first).
     pub fn observe_delayed(&mut self, i: usize, reward: f64, delay: u64) {
+        let delay = delay.min(self.round);
         self.arms[i].observe_delayed(reward, delay, self.cfg.recency_lambda);
     }
 }
@@ -306,11 +353,38 @@ mod tests {
             min_fraction: 0.0,
             gamma: 1.0,
             recency_lambda: 0.5,
+            ..Default::default()
         };
         let mut b = SleepingBandit::new(2, cfg);
+        // advance the round clock so a delay of 2 is meaningful
+        let _ = b.select(&[0, 1]);
+        let _ = b.select(&[0, 1]);
         b.observe(0, 0.8); // fresh
         b.observe_delayed(1, 0.8, 2); // 0.8 · 0.5² = 0.2
         assert!((b.arms[0].mean() - 0.8).abs() < 1e-12);
+        assert!((b.arms[1].mean() - 0.2).abs() < 1e-12);
+    }
+
+    #[test]
+    fn delay_beyond_round_clock_saturates_instead_of_vanishing() {
+        // regression: a merged shard clock can report a delay larger
+        // than this selector's own round count; the reward must clamp
+        // to the selector's history length, not underflow/zero out
+        let cfg = SelectorConfig {
+            m: 1,
+            min_fraction: 0.0,
+            gamma: 1.0,
+            recency_lambda: 0.5,
+            ..Default::default()
+        };
+        let mut b = SleepingBandit::new(2, cfg);
+        // round 0: any delay clamps to 0 → credited fresh
+        b.observe_delayed(0, 0.8, u64::MAX);
+        assert!((b.arms[0].mean() - 0.8).abs() < 1e-12);
+        // two rounds in: delay 99 clamps to 2 → 0.8 · 0.5² = 0.2
+        let _ = b.select(&[0, 1]);
+        let _ = b.select(&[0, 1]);
+        b.observe_delayed(1, 0.8, 99);
         assert!((b.arms[1].mean() - 0.2).abs() < 1e-12);
     }
 

@@ -11,6 +11,25 @@ pub struct ArmEstimate {
     plays: u64,
 }
 
+/// Recency-discount a reward that arrived `delay` rounds late:
+/// `reward · λ^delay`. λ ≥ 1 or delay = 0 bypasses the multiply
+/// entirely, so default configs keep bit-identical statistics with the
+/// undiscounted behaviour. Shared by every selector that credits late
+/// rewards ([`ArmEstimate::observe_delayed`], `LinUcb`), so the
+/// λ^delay semantics can never drift between them.
+pub fn discount_delayed(reward: f64, delay: u64, lambda: f64) -> f64 {
+    debug_assert!(
+        (0.0..=1.0).contains(&lambda),
+        "recency lambda {lambda} out of [0,1]"
+    );
+    if lambda >= 1.0 || delay == 0 {
+        reward
+    } else {
+        let exp = delay.min(i32::MAX as u64) as i32;
+        reward * lambda.max(0.0).powi(exp)
+    }
+}
+
 impl ArmEstimate {
     /// Record an observed reward Xᵢ(k) ∈ [0,1].
     pub fn observe(&mut self, reward: f64) {
@@ -22,20 +41,9 @@ impl ArmEstimate {
     /// Record a reward that arrived `delay` rounds late, recency-
     /// discounted to `reward · λ^delay` (buffered-async aggregation
     /// credits stragglers in a later round; a stale reward says less
-    /// about the arm's *current* worth). λ = 1 or delay = 0 bypasses
-    /// the multiply entirely, so default configs keep bit-identical
-    /// statistics with the pre-discount behaviour.
+    /// about the arm's *current* worth) — see [`discount_delayed`].
     pub fn observe_delayed(&mut self, reward: f64, delay: u64, lambda: f64) {
-        debug_assert!(
-            (0.0..=1.0).contains(&lambda),
-            "recency lambda {lambda} out of [0,1]"
-        );
-        if lambda >= 1.0 || delay == 0 {
-            self.observe(reward);
-        } else {
-            let exp = delay.min(i32::MAX as u64) as i32;
-            self.observe(reward * lambda.max(0.0).powi(exp));
-        }
+        self.observe(discount_delayed(reward, delay, lambda));
     }
 
     pub fn plays(&self) -> u64 {

@@ -13,7 +13,7 @@ use crate::learn::traits::Middleware;
 use crate::memsim::{PageCache, Replacement};
 use crate::power::governor::Policy;
 use crate::power::profile::ComponentState;
-use crate::power::{Battery, DeviceProfile, EnergyMeter, Governor};
+use crate::power::{Battery, DeviceProfile, DeviceSnapshot, EnergyMeter, Governor};
 use crate::util::rng::Rng;
 
 /// Per-swap I/O stall (s): flash page-in plus fault handling.
@@ -22,6 +22,10 @@ const SWAP_STALL_S: f64 = 0.002;
 const TRAIN_UTIL: f64 = 0.92;
 /// Radio seconds per round for PUB (model down) + SUB (gradients up).
 const COMM_S: f64 = 0.05;
+/// EWMA weight of the newest availability observation (telemetry).
+const AVAIL_EWMA_W: f64 = 0.2;
+/// EWMA weight of the newest per-round swap count (telemetry).
+const SWAP_EWMA_W: f64 = 0.3;
 
 /// Outcome of one local training round.
 #[derive(Debug, Clone, Copy, Default)]
@@ -67,6 +71,11 @@ pub struct DeviceSim {
     online: bool,
     p_drop: f64,
     p_join: f64,
+    /// Telemetry EWMAs for [`DeviceSnapshot`]: recent availability and
+    /// swaps/round. Pure bookkeeping — never read by the simulation
+    /// itself, so they cannot perturb outcomes.
+    avail_ewma: f64,
+    swap_ewma: f64,
 }
 
 impl DeviceSim {
@@ -98,6 +107,8 @@ impl DeviceSim {
             online: true,
             p_drop: 0.05,
             p_join: 0.5,
+            avail_ewma: 1.0,
+            swap_ewma: 0.0,
         }
     }
 
@@ -141,18 +152,38 @@ impl DeviceSim {
     pub fn step_availability(&mut self) -> bool {
         if !self.battery.can_train() {
             self.online = false;
-            return false;
-        }
-        self.online = if self.online {
-            !self.rng.chance(self.p_drop)
         } else {
-            self.rng.chance(self.p_join)
-        };
+            self.online = if self.online {
+                !self.rng.chance(self.p_drop)
+            } else {
+                self.rng.chance(self.p_join)
+            };
+        }
+        let observed = if self.online { 1.0 } else { 0.0 };
+        self.avail_ewma += AVAIL_EWMA_W * (observed - self.avail_ewma);
         self.online
     }
 
     pub fn is_online(&self) -> bool {
         self.online
+    }
+
+    /// Telemetry snapshot of this device, reported with every round
+    /// reply and availability probe. A pure read of simulator state —
+    /// no RNG draw, no mutation — so emitting it cannot change any
+    /// outcome the transports carry.
+    pub fn snapshot(&self) -> DeviceSnapshot {
+        DeviceSnapshot {
+            battery_frac: self.battery.fraction(),
+            ladder_step: self.governor.step(),
+            ladder_steps: self.profile.n_freq_steps(),
+            cores: self.profile.cores,
+            peak_gflops: self.profile.max_freq_ghz() * self.profile.cores as f64,
+            cache_resident_frac: self.cache.resident() as f64
+                / self.cache.capacity() as f64,
+            swap_ewma: self.swap_ewma,
+            avail_ewma: self.avail_ewma,
+        }
     }
 
     /// Run one local training round under `scheme`; `new_count` items
@@ -228,6 +259,7 @@ impl DeviceSim {
         out.compute_s += stall;
         out.energy_uah = self.meter.total_uah();
         self.battery.drain(out.energy_uah);
+        self.swap_ewma += SWAP_EWMA_W * (out.swaps as f64 - self.swap_ewma);
 
         // --- convergence probe
         out.accuracy = self.workload.accuracy();
@@ -390,6 +422,43 @@ mod tests {
         let mid = d.run_round(Scheme::NewFl, 10, 0.0).model_delta;
         let late = d.run_round(Scheme::NewFl, 2, 0.0).model_delta;
         assert!(late <= mid || late < 0.3, "deltas: mid={mid} late={late}");
+    }
+
+    #[test]
+    fn snapshot_is_a_pure_read_and_tracks_round_state() {
+        let mut d = device(Replacement::ThetaLru { theta: 0.3 }, Policy::DealAggressive);
+        let s0 = d.snapshot();
+        assert_eq!(s0.battery_frac, 1.0);
+        assert_eq!(s0.cores, 8);
+        assert!((s0.peak_gflops - 2.11 * 8.0).abs() < 1e-9);
+        assert_eq!(s0.swap_ewma, 0.0);
+        assert_eq!(s0.avail_ewma, 1.0);
+        // pure read: a twin device stepped without snapshot calls must
+        // produce a bit-identical outcome stream
+        let mut mirror = device(Replacement::ThetaLru { theta: 0.3 }, Policy::DealAggressive);
+        for _ in 0..3 {
+            let _ = d.snapshot();
+            let a = d.run_round(Scheme::Deal, 8, 0.3);
+            let _ = d.snapshot();
+            let b = mirror.run_round(Scheme::Deal, 8, 0.3);
+            assert_eq!(a.energy_uah.to_bits(), b.energy_uah.to_bits());
+            assert_eq!(a.time_s.to_bits(), b.time_s.to_bits());
+        }
+        let s1 = d.snapshot();
+        assert!(s1.battery_frac < 1.0, "battery telemetry tracks drain");
+        assert!(s1.cache_resident_frac > 0.0, "cache telemetry tracks residency");
+    }
+
+    #[test]
+    fn availability_ewma_tracks_churn() {
+        let mut d = device(Replacement::Lru, Policy::Interactive);
+        for _ in 0..300 {
+            d.step_availability();
+        }
+        let s = d.snapshot();
+        // churn visits both states within 300 steps (see
+        // availability_churn_rejoins), so the EWMA is strictly interior
+        assert!(s.avail_ewma > 0.0 && s.avail_ewma < 1.0, "ewma {}", s.avail_ewma);
     }
 
     #[test]

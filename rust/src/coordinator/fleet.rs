@@ -9,7 +9,10 @@ use super::server::{Federation, FederationConfig};
 use super::shard::ShardedTransport;
 use super::transport::{SyncTransport, ThreadedTransport, Transport, TransportKind};
 use super::workload::{ModelKind, Workload};
-use crate::bandit::{SelectAll, Selector, SelectorConfig, SleepingBandit};
+use crate::bandit::{
+    ContextFree, ContextualSelector, LinUcb, SelectAll, SelectorConfig, SelectorKind,
+    SleepingBandit,
+};
 use crate::data::synth::{self, Data, Dataset};
 use crate::memsim::Replacement;
 use crate::power::governor::Policy;
@@ -54,6 +57,14 @@ pub struct FleetConfig {
     pub recency_lambda: f64,
     /// Aggregation override; `None` uses the scheme default.
     pub aggregation: Option<Aggregation>,
+    /// Selection algorithm (`deal run --selector csbf|linucb`): the
+    /// context-free CSB-F sleeping bandit (default, bit-preserving) or
+    /// the telemetry-fed LinUCB contextual bandit.
+    pub selector: SelectorKind,
+    /// Feed live device telemetry to the selector (`--features
+    /// on|off`). Off ⇒ every context is neutral; CSB-F is bit-identical
+    /// either way.
+    pub features: bool,
 }
 
 impl Default for FleetConfig {
@@ -76,6 +87,8 @@ impl Default for FleetConfig {
             shards: 1,
             recency_lambda: 1.0,
             aggregation: None,
+            selector: SelectorKind::Csbf,
+            features: true,
         }
     }
 }
@@ -169,7 +182,7 @@ pub fn build_transport(
 pub fn build(cfg: &FleetConfig) -> Federation {
     let devices = build_devices(cfg);
     let transport = build_transport(devices, cfg.transport, cfg.shards);
-    let selector: Box<dyn Selector> = if cfg.scheme.uses_selection() {
+    let selector: Box<dyn ContextualSelector> = if cfg.scheme.uses_selection() {
         // Eq. 4 feasibility: the queues only stabilize when Σᵢ rᵢ ≤ m.
         // A fixed per-device fraction breaks that silently once the
         // fleet outgrows m/min_fraction devices (n = 10⁴, m = 4 would
@@ -188,17 +201,27 @@ pub fn build(cfg: &FleetConfig) -> Federation {
         } else {
             cfg.min_fraction
         };
-        Box::new(SleepingBandit::new(
-            cfg.n_devices,
-            SelectorConfig {
-                m: cfg.m,
-                min_fraction: feasible_fraction,
-                gamma: 20.0,
-                recency_lambda: cfg.recency_lambda,
-            },
-        ))
+        let sel_cfg = SelectorConfig {
+            m: cfg.m,
+            min_fraction: feasible_fraction,
+            gamma: 20.0,
+            recency_lambda: cfg.recency_lambda,
+            kind: cfg.selector,
+            ..SelectorConfig::default()
+        };
+        // dispatch on the SelectorConfig's own kind so the config that
+        // reaches the selector can never disagree with what was built
+        match sel_cfg.kind {
+            // the ContextFree adapter drops snapshots on the floor, so
+            // this arm is bit-identical to the pre-contextual path
+            SelectorKind::Csbf => Box::new(ContextFree(Box::new(SleepingBandit::new(
+                cfg.n_devices,
+                sel_cfg,
+            )))),
+            SelectorKind::LinUcb => Box::new(LinUcb::new(cfg.n_devices, sel_cfg)),
+        }
     } else {
-        Box::new(SelectAll)
+        Box::new(ContextFree(Box::new(SelectAll)))
     };
     let fed_cfg = FederationConfig {
         scheme: cfg.scheme,
@@ -206,9 +229,10 @@ pub fn build(cfg: &FleetConfig) -> Federation {
         arrivals_per_round: cfg.arrivals_per_round,
         theta: cfg.theta,
         aggregation: cfg.aggregation,
+        features: cfg.features,
         ..FederationConfig::default()
     };
-    Federation::with_transport(transport, selector, fed_cfg)
+    Federation::with_contextual_selector(transport, selector, fed_cfg)
 }
 
 #[cfg(test)]
@@ -292,6 +316,25 @@ mod tests {
         assert_eq!(fed.transport().shards(), 4);
         assert_eq!(fed.transport().describe(), "sharded×4(sync)");
         assert_eq!(fed.transport().shard_summaries().len(), 4);
+    }
+
+    #[test]
+    fn linucb_build_runs_and_respects_m() {
+        let cfg = FleetConfig {
+            n_devices: 8,
+            scale: 0.05,
+            selector: SelectorKind::LinUcb,
+            ..Default::default()
+        };
+        let mut fed = build(&cfg);
+        let stats = fed.run(6);
+        assert_eq!(stats.rounds, 6);
+        assert!(stats.total_energy_uah > 0.0);
+        for r in &fed.rounds {
+            assert!(r.selected <= cfg.m, "LinUCB violated m: {}", r.selected);
+        }
+        let total: u64 = fed.selection_counts().iter().sum();
+        assert!(total > 0, "nobody was ever selected");
     }
 
     #[test]

@@ -8,23 +8,33 @@
 //!   `AsyncBuffered`) the server can close rounds under
 //! - [`workload`] — a device's model + shard (dispatch over the 4 models)
 //! - [`device`] — one simulated worker: governor + meter + battery +
-//!   θ-LRU cache + decremental learner (§III-D local layer)
+//!   θ-LRU cache + decremental learner (§III-D local layer). Emits a
+//!   [`crate::power::DeviceSnapshot`] (battery, ladder step, cores,
+//!   peak GFLOPS, cache residency, swap/availability EWMAs) with every
+//!   reply and probe — the telemetry the selection layer feeds on
 //! - [`transport`] — how the server reaches workers: [`SyncTransport`]
 //!   (in-place loop) or [`ThreadedTransport`] (PUB/SUB worker threads,
 //!   each batch-stepping a contiguous device slice). Both probe
-//!   availability G(k) and execute [`RoundJob`]s, returning replies in
-//!   a deterministic (virtual-time, id) order — stats are bit-identical
-//!   across transports for the same seed
+//!   availability G(k) (returning [`transport::ProbeReport`]s: id +
+//!   snapshot, so idle-but-online devices still report telemetry) and
+//!   execute [`RoundJob`]s, returning [`WorkerReply`]s (outcome +
+//!   post-round snapshot) in a deterministic (virtual-time, id) order —
+//!   stats are bit-identical across transports for the same seed
 //! - [`shard`] — the multi-federation runtime's fabric:
 //!   [`ShardedTransport`] partitions the fleet across K shard leaders
 //!   (each driving its own inner Sync/Threaded transport) with a root
 //!   aggregator merging per-shard round results on the shared virtual
 //!   clock. Semantics-preserving: any shard count is bit-identical to
 //!   the flat path at a fixed seed
-//! - [`server`] — the [`Federation`] engine: selection, aggregation
-//!   (majority/TTL cut, wait-all, or buffered-async crediting of
-//!   stragglers δ rounds late), rewards, convergence (§III-A/B)
+//! - [`server`] — the [`Federation`] engine: selection (driving a
+//!   [`crate::bandit::ContextualSelector`] with the fleet's latest
+//!   telemetry — CSB-F rides the context-free adapter, LinUCB consumes
+//!   the features), aggregation (majority/TTL cut, wait-all, or
+//!   buffered-async crediting of stragglers δ rounds late), rewards,
+//!   convergence (§III-A/B)
 //! - [`fleet`] — experiment builder used by benches and examples
+//!   (`FleetConfig::selector` / `FleetConfig::features` pick the
+//!   selection algorithm and gate the telemetry pipeline)
 
 pub mod device;
 pub mod fleet;
@@ -40,6 +50,7 @@ pub use scheme::{Aggregation, Scheme};
 pub use server::{Federation, FederationConfig, FederationStats};
 pub use shard::ShardedTransport;
 pub use transport::{
-    RoundJob, ShardSummary, SyncTransport, ThreadedTransport, Transport, TransportKind,
+    ProbeReport, RoundJob, ShardSummary, SyncTransport, ThreadedTransport, Transport,
+    TransportKind, WorkerReply,
 };
 pub use workload::{ModelKind, Workload};

@@ -16,7 +16,8 @@
 use super::device::{DeviceSim, LocalOutcome};
 use super::scheme::{Aggregation, Scheme};
 use super::transport::{RoundJob, ShardSummary, SyncTransport, Transport};
-use crate::bandit::Selector;
+use crate::bandit::{ContextFree, ContextualSelector, Selector};
+use crate::power::DeviceSnapshot;
 use crate::util::stats::Summary;
 
 /// Federation configuration.
@@ -35,6 +36,12 @@ pub struct FederationConfig {
     /// Aggregation policy; `None` uses the scheme default
     /// (DEAL → `Majority`, Original/NewFL → `WaitAll`).
     pub aggregation: Option<Aggregation>,
+    /// Feed live [`DeviceSnapshot`] telemetry to the selection layer
+    /// (`deal run --features on|off`). When `false` every device looks
+    /// like [`DeviceSnapshot::NEUTRAL`] to the selector, so contextual
+    /// selectors degenerate to context-free behaviour; context-free
+    /// selectors (CSB-F) are bit-identical either way.
+    pub features: bool,
 }
 
 impl Default for FederationConfig {
@@ -47,6 +54,7 @@ impl Default for FederationConfig {
             convergence_eps: 0.05,
             convergence_streak: 2,
             aggregation: None,
+            features: true,
         }
     }
 }
@@ -72,20 +80,23 @@ pub struct RoundRecord {
 }
 
 /// A straggler reply buffered by `AsyncBuffered` aggregation, waiting
-/// for its credit round.
+/// for its credit round. Carries the decision-time telemetry snapshot
+/// the device was selected under, so the delayed bandit observation
+/// still pairs the reward with the context that earned the selection.
 #[derive(Debug, Clone)]
 struct PendingReply {
     device: usize,
     sent_round: u64,
     due_round: u64,
     outcome: LocalOutcome,
+    snapshot: DeviceSnapshot,
 }
 
 /// The federation server driving a fleet of workers over a transport.
 pub struct Federation {
     cfg: FederationConfig,
     transport: Box<dyn Transport>,
-    selector: Box<dyn Selector>,
+    selector: Box<dyn ContextualSelector>,
     round: u64,
     /// cumulative virtual time (server clock)
     pub clock_s: f64,
@@ -97,6 +108,11 @@ pub struct Federation {
     device_busy_s: Vec<f64>,
     /// per-device cumulative energy
     pub device_energy_uah: Vec<f64>,
+    /// per-device cumulative selections (diagnostics/benches)
+    device_selected: Vec<u64>,
+    /// freshest telemetry per device (probe reports + round replies);
+    /// stays [`DeviceSnapshot::NEUTRAL`] when `cfg.features` is off
+    latest_snapshot: Vec<DeviceSnapshot>,
     pub rounds: Vec<RoundRecord>,
     /// stragglers awaiting credit (AsyncBuffered only)
     pending: Vec<PendingReply>,
@@ -112,10 +128,26 @@ impl Federation {
         Federation::with_transport(Box::new(SyncTransport::new(devices)), selector, cfg)
     }
 
-    /// Build over any transport.
+    /// Build over any transport with a context-free [`Selector`] —
+    /// wrapped in the [`ContextFree`] adapter, so this path is
+    /// bit-identical to the pre-contextual engine.
     pub fn with_transport(
         transport: Box<dyn Transport>,
         selector: Box<dyn Selector>,
+        cfg: FederationConfig,
+    ) -> Self {
+        Federation::with_contextual_selector(
+            transport,
+            Box::new(ContextFree(selector)),
+            cfg,
+        )
+    }
+
+    /// Build over any transport with a [`ContextualSelector`] — the
+    /// telemetry-fed path (`SelectorKind::LinUcb` in `fleet::build`).
+    pub fn with_contextual_selector(
+        transport: Box<dyn Transport>,
+        selector: Box<dyn ContextualSelector>,
         cfg: FederationConfig,
     ) -> Self {
         let n = transport.n_devices();
@@ -129,6 +161,8 @@ impl Federation {
             convergence_time_s: vec![None; n],
             device_busy_s: vec![0.0; n],
             device_energy_uah: vec![0.0; n],
+            device_selected: vec![0; n],
+            latest_snapshot: vec![DeviceSnapshot::NEUTRAL; n],
             rounds: Vec::new(),
             pending: Vec::new(),
         }
@@ -170,44 +204,78 @@ impl Federation {
         self.pending.len()
     }
 
+    /// Per-device cumulative selection counts.
+    pub fn selection_counts(&self) -> &[u64] {
+        &self.device_selected
+    }
+
+    /// The freshest telemetry the server holds for device `i`
+    /// ([`DeviceSnapshot::NEUTRAL`] before first contact or with the
+    /// feature pipeline disabled).
+    pub fn device_snapshot(&self, i: usize) -> &DeviceSnapshot {
+        &self.latest_snapshot[i]
+    }
+
     /// Run one federated round; returns its record.
     pub fn run_round(&mut self) -> RoundRecord {
         self.round += 1;
-        // 1. availability G(k), probed through the transport
-        let available = self.transport.probe();
-        let n_available = available.len();
-        // 2. selection S(k) — select-all schemes take the availability
-        // vector by move (no per-round clone at n_devices ≫ 10³)
+        // 1. availability G(k), probed through the transport — each
+        // online device reports its telemetry snapshot, so the context
+        // table stays fresh even for idle-but-online devices
+        let probes = self.transport.probe();
+        let n_available = probes.len();
+        if self.cfg.features {
+            for &(i, snap) in &probes {
+                self.latest_snapshot[i] = snap;
+            }
+        }
+        // 2. selection S(k) — contextual selectors score the available
+        // devices by their telemetry; select-all schemes take the
+        // availability vector by move (no per-round clone at
+        // n_devices ≫ 10³)
         let selected: Vec<usize> = if self.cfg.scheme.uses_selection() {
-            self.selector.select(&available)
+            let available: Vec<usize> = probes.iter().map(|&(i, _)| i).collect();
+            if self.selector.wants_context() {
+                let snapshots: Vec<DeviceSnapshot> =
+                    available.iter().map(|&i| self.latest_snapshot[i]).collect();
+                self.selector.select(&available, &snapshots)
+            } else {
+                // context-free selector: skip the O(n_available)
+                // snapshot gather on the hot path
+                self.selector.select(&available, &[])
+            }
         } else {
-            available
+            probes.into_iter().map(|(i, _)| i).collect()
         };
-        // 3. PUB → local training → SUB, replies sorted by (time, id)
+        for &i in &selected {
+            self.device_selected[i] += 1;
+        }
+        // 3. PUB → local training → SUB, replies sorted by (time, id),
+        // each carrying the device's post-round snapshot
         let job = RoundJob {
             round: self.round,
             scheme: self.cfg.scheme,
             arrivals: self.cfg.arrivals_per_round,
             theta: self.cfg.theta,
         };
-        let outcomes = self.transport.execute(&selected, job);
+        let replies = self.transport.execute(&selected, job);
         let agg = self.aggregation();
         // 4. aggregation: when does the server close the round?
-        let round_time = if outcomes.is_empty() {
+        let round_time = if replies.is_empty() {
             0.0
         } else {
             match agg {
-                Aggregation::WaitAll => outcomes.last().unwrap().1.time_s,
+                Aggregation::WaitAll => replies.last().unwrap().outcome.time_s,
                 Aggregation::Majority => {
                     // ⌈(n+1)/2⌉-th reply or the TTL, whichever first
-                    let majority_idx = outcomes.len() / 2;
-                    outcomes[majority_idx].1.time_s.min(self.cfg.ttl_s)
+                    let majority_idx = replies.len() / 2;
+                    replies[majority_idx].outcome.time_s.min(self.cfg.ttl_s)
                 }
                 Aggregation::AsyncBuffered { .. } => {
                     // stop waiting at the TTL; if everyone beat it the
                     // round closes at the last reply
-                    if outcomes.iter().all(|(_, o)| o.time_s <= self.cfg.ttl_s) {
-                        outcomes.last().unwrap().1.time_s
+                    if replies.iter().all(|r| r.outcome.time_s <= self.cfg.ttl_s) {
+                        replies.last().unwrap().outcome.time_s
                     } else {
                         self.cfg.ttl_s
                     }
@@ -236,8 +304,14 @@ impl Federation {
         for p in &due {
             let x = self.reward(p.device, &p.outcome);
             reward_q += x;
-            self.selector
-                .observe_delayed(p.device, x, round_now - p.sent_round);
+            // saturating: a due_round inherited from a merged/replayed
+            // clock can precede sent_round — never underflow the delay
+            self.selector.observe_delayed(
+                p.device,
+                x,
+                round_now.saturating_sub(p.sent_round),
+                &p.snapshot,
+            );
             energy += p.outcome.energy_uah;
             if p.outcome.accuracy > 0.0 {
                 acc.add(p.outcome.accuracy);
@@ -245,7 +319,24 @@ impl Federation {
             self.credit_device(p.device, &p.outcome);
         }
         // 5b. this round's replies
-        for (i, out) in &outcomes {
+        for r in &replies {
+            let (i, out) = (r.device, &r.outcome);
+            // pair the reward with the *decision-time* context — the
+            // snapshot select() actually scored (still in
+            // latest_snapshot; the post-round reply telemetry is folded
+            // in only after crediting). Training on the post-round
+            // snapshot instead would skew the fit: the reward would be
+            // credited to a context the round itself already degraded
+            // (drained battery, raised swap EWMA). The features gate
+            // covers the whole selector contract: with features off the
+            // observe path must see NEUTRAL too, or a contextual
+            // selector would still train on telemetry the flag claims
+            // is blanked.
+            let ctx = if self.cfg.features {
+                self.latest_snapshot[i]
+            } else {
+                DeviceSnapshot::NEUTRAL
+            };
             let beat_ttl = out.time_s <= self.cfg.ttl_s;
             if beat_ttl {
                 in_time += 1;
@@ -254,10 +345,11 @@ impl Federation {
                 if !beat_ttl {
                     // buffer the straggler: credited once, δ rounds later
                     self.pending.push(PendingReply {
-                        device: *i,
+                        device: i,
                         sent_round: round_now,
                         due_round: round_now + staleness.max(1),
                         outcome: *out,
+                        snapshot: ctx,
                     });
                     continue;
                 }
@@ -266,10 +358,19 @@ impl Federation {
             if out.accuracy > 0.0 {
                 acc.add(out.accuracy);
             }
-            let x = self.reward(*i, out);
+            let x = self.reward(i, out);
             reward_q += x;
-            self.selector.observe(*i, x);
-            self.credit_device(*i, out);
+            self.selector.observe(i, x, &ctx);
+            self.credit_device(i, out);
+        }
+        // 6. fold the post-round reply telemetry into the context table
+        // *after* crediting: next round's probe refreshes online
+        // devices anyway, but a device that goes dark keeps its
+        // freshest (post-round) state here
+        if self.cfg.features {
+            for r in &replies {
+                self.latest_snapshot[r.device] = r.snapshot;
+            }
         }
         self.clock_s += round_time;
         let rec = RoundRecord {
@@ -576,6 +677,45 @@ mod tests {
             assert_eq!(a.energy_uah.to_bits(), b.energy_uah.to_bits());
         }
         assert_eq!(fed.pending_replies(), 0);
+    }
+
+    #[test]
+    fn features_off_keeps_selector_context_neutral() {
+        use crate::bandit::SelectorKind;
+        use crate::power::DeviceSnapshot;
+        let mut cfg = small_cfg(Scheme::Deal);
+        cfg.selector = SelectorKind::LinUcb;
+        cfg.features = false;
+        let mut fed = fleet::build(&cfg);
+        fed.run(4);
+        for i in 0..fed.n_devices() {
+            assert_eq!(
+                *fed.device_snapshot(i),
+                DeviceSnapshot::NEUTRAL,
+                "device {i} leaked telemetry with features off"
+            );
+        }
+    }
+
+    #[test]
+    fn features_on_populates_snapshot_table() {
+        let mut fed = small_federation(Scheme::Deal);
+        fed.run(4);
+        // at least the selected devices reported post-round telemetry
+        // (battery drained below full)
+        let drained = (0..fed.n_devices())
+            .filter(|&i| fed.device_snapshot(i).battery_frac < 1.0)
+            .count();
+        assert!(drained > 0, "no telemetry reached the server");
+    }
+
+    #[test]
+    fn selection_counts_track_rounds() {
+        let mut fed = small_federation(Scheme::Deal);
+        fed.run(6);
+        let by_counts: u64 = fed.selection_counts().iter().sum();
+        let by_records: u64 = fed.rounds.iter().map(|r| r.selected as u64).sum();
+        assert_eq!(by_counts, by_records);
     }
 
     #[test]

@@ -24,21 +24,27 @@
 //!   aggregate selection fraction meets Σᵢ∈shard rᵢ — enforced by
 //!   `rust/tests/prop_selector.rs`.
 
-use super::device::{DeviceSim, LocalOutcome};
+use super::device::DeviceSim;
 use super::transport::{
-    default_workers, partition_bounds, partition_chunks, sort_replies, RoundJob,
-    ShardSummary, SyncTransport, ThreadedTransport, Transport, TransportKind,
+    default_workers, partition_bounds, partition_chunks, sort_replies, ProbeReport,
+    RoundJob, ShardSummary, SyncTransport, ThreadedTransport, Transport, TransportKind,
+    WorkerReply,
 };
 use crate::power::DeviceProfile;
 
 /// Cumulative counters per shard; device ranges live in `bounds` (one
 /// source of truth) and are joined in at `shard_summaries()` time.
+/// The capacity sums come from the telemetry snapshots riding the
+/// merged replies — the root aggregator's view of each shard's fleet
+/// health.
 #[derive(Debug, Clone, Copy, Default)]
 struct ShardCounters {
     jobs: u64,
     replies: u64,
     energy_uah: f64,
     compute_s: f64,
+    battery_frac_sum: f64,
+    peak_gflops_sum: f64,
 }
 
 /// One shard leader. Held concretely (not as `Box<dyn Transport>`) so
@@ -116,7 +122,7 @@ impl ShardedTransport {
 }
 
 impl Transport for ShardedTransport {
-    fn probe(&mut self) -> Vec<usize> {
+    fn probe(&mut self) -> Vec<ProbeReport> {
         // phase 1: fire probes at every threaded leader so their
         // fleets step concurrently
         for leader in &mut self.leaders {
@@ -133,14 +139,14 @@ impl Transport for ShardedTransport {
                 Leader::Sync(t) => t.probe(),
                 Leader::Threaded(t) => t.collect_probe(),
             };
-            online.extend(local.into_iter().map(|i| base + i));
+            online.extend(local.into_iter().map(|(i, snap)| (base + i, snap)));
         }
         // each leader reports ascending local ids and shard bases
         // ascend, so the concatenation is already globally ascending
         online
     }
 
-    fn execute(&mut self, selected: &[usize], job: RoundJob) -> Vec<(usize, LocalOutcome)> {
+    fn execute(&mut self, selected: &[usize], job: RoundJob) -> Vec<WorkerReply> {
         // bucket the (weight-ordered) selection by owning shard,
         // preserving the server's dispatch order within each shard
         let mut per_shard: Vec<Vec<usize>> = vec![Vec::new(); self.leaders.len()];
@@ -160,7 +166,7 @@ impl Transport for ShardedTransport {
             }
         }
         // phase 2: run sync leaders / collect threaded replies, merge
-        let mut merged: Vec<(usize, LocalOutcome)> = Vec::with_capacity(selected.len());
+        let mut merged: Vec<WorkerReply> = Vec::with_capacity(selected.len());
         for (s, locals) in per_shard.iter().enumerate() {
             if locals.is_empty() {
                 continue;
@@ -173,11 +179,17 @@ impl Transport for ShardedTransport {
             let sum = &mut self.counters[s];
             sum.jobs += 1;
             sum.replies += replies.len() as u64;
-            for (_, out) in &replies {
-                sum.energy_uah += out.energy_uah;
-                sum.compute_s += out.compute_s;
+            for r in &replies {
+                sum.energy_uah += r.outcome.energy_uah;
+                sum.compute_s += r.outcome.compute_s;
+                // aggregate capacity from the telemetry riding the reply
+                sum.battery_frac_sum += r.snapshot.battery_frac;
+                sum.peak_gflops_sum += r.snapshot.peak_gflops;
             }
-            merged.extend(replies.into_iter().map(|(i, out)| (base + i, out)));
+            merged.extend(replies.into_iter().map(|mut r| {
+                r.device += base;
+                r
+            }));
         }
         // root aggregation: merge per-shard results on the shared
         // virtual clock — the same (time, id) order a flat transport
@@ -219,6 +231,8 @@ impl Transport for ShardedTransport {
                 replies: c.replies,
                 energy_uah: c.energy_uah,
                 compute_s: c.compute_s,
+                battery_frac_sum: c.battery_frac_sum,
+                peak_gflops_sum: c.peak_gflops_sum,
             })
             .collect()
     }
@@ -274,10 +288,14 @@ mod tests {
             let want = flat.execute(&selected, job(round));
             let got = sharded.execute(&selected, job(round));
             assert_eq!(want.len(), got.len());
-            for ((wa, oa), (wb, ob)) in want.iter().zip(&got) {
-                assert_eq!(wa, wb, "round {round} merge order");
-                assert_eq!(oa.time_s.to_bits(), ob.time_s.to_bits());
-                assert_eq!(oa.energy_uah.to_bits(), ob.energy_uah.to_bits());
+            for (ra, rb) in want.iter().zip(&got) {
+                assert_eq!(ra.device, rb.device, "round {round} merge order");
+                assert_eq!(ra.outcome.time_s.to_bits(), rb.outcome.time_s.to_bits());
+                assert_eq!(
+                    ra.outcome.energy_uah.to_bits(),
+                    rb.outcome.energy_uah.to_bits()
+                );
+                assert_eq!(ra.snapshot, rb.snapshot, "round {round} telemetry");
             }
             assert_eq!(flat.probe(), sharded.probe(), "round {round} availability");
         }
@@ -289,9 +307,9 @@ mod tests {
         let mut one = ShardedTransport::new(fleet(6), 1, TransportKind::Sync);
         let want = flat.execute(&[1, 4], job(1));
         let got = one.execute(&[1, 4], job(1));
-        for ((wa, oa), (wb, ob)) in want.iter().zip(&got) {
-            assert_eq!(wa, wb);
-            assert_eq!(oa.time_s.to_bits(), ob.time_s.to_bits());
+        for (ra, rb) in want.iter().zip(&got) {
+            assert_eq!(ra.device, rb.device);
+            assert_eq!(ra.outcome.time_s.to_bits(), rb.outcome.time_s.to_bits());
         }
     }
 
@@ -303,10 +321,13 @@ mod tests {
         for round in 1..=3u64 {
             let x = a.execute(&[0, 3, 6, 7], job(round));
             let y = b.execute(&[0, 3, 6, 7], job(round));
-            for ((wa, oa), (wb, ob)) in x.iter().zip(&y) {
-                assert_eq!(wa, wb);
-                assert_eq!(oa.time_s.to_bits(), ob.time_s.to_bits());
-                assert_eq!(oa.energy_uah.to_bits(), ob.energy_uah.to_bits());
+            for (ra, rb) in x.iter().zip(&y) {
+                assert_eq!(ra.device, rb.device);
+                assert_eq!(ra.outcome.time_s.to_bits(), rb.outcome.time_s.to_bits());
+                assert_eq!(
+                    ra.outcome.energy_uah.to_bits(),
+                    rb.outcome.energy_uah.to_bits()
+                );
             }
             assert_eq!(a.probe(), b.probe());
         }
@@ -337,10 +358,25 @@ mod tests {
         assert_eq!(sums[0].replies, 3);
         assert_eq!(sums[1].replies, 1);
         let merged_energy: f64 =
-            r1.iter().chain(&r2).map(|(_, o)| o.energy_uah).sum();
+            r1.iter().chain(&r2).map(|r| r.outcome.energy_uah).sum();
         let shard_energy: f64 = sums.iter().map(|s| s.energy_uah).sum();
         assert!((merged_energy - shard_energy).abs() < 1e-9);
         assert!(sums.iter().all(|s| s.compute_s > 0.0));
+        // capacity counters: mean battery ∈ (0, 1], peak GFLOPS positive
+        for s in &sums {
+            let mean_battery = s.battery_frac_sum / s.replies as f64;
+            assert!(
+                mean_battery > 0.0 && mean_battery <= 1.0,
+                "shard {} mean battery {mean_battery}",
+                s.shard
+            );
+            assert!(s.peak_gflops_sum > 0.0);
+        }
+        // and they re-sum from the merged replies' telemetry
+        let merged_battery: f64 =
+            r1.iter().chain(&r2).map(|r| r.snapshot.battery_frac).sum();
+        let shard_battery: f64 = sums.iter().map(|s| s.battery_frac_sum).sum();
+        assert!((merged_battery - shard_battery).abs() < 1e-12);
     }
 
     #[test]

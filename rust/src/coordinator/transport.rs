@@ -34,7 +34,7 @@ use std::thread::JoinHandle;
 
 use super::device::{DeviceSim, LocalOutcome};
 use super::scheme::Scheme;
-use crate::power::DeviceProfile;
+use crate::power::{DeviceProfile, DeviceSnapshot};
 
 /// Job published to the selected workers for one round (the PUB half of
 /// the paper's PUB/SUB round protocol).
@@ -74,6 +74,23 @@ impl TransportKind {
     }
 }
 
+/// One worker's SUB reply for a round: the training outcome plus the
+/// telemetry snapshot taken right after the round, so the root's
+/// selection layer sees the fleet's post-round state (battery, ladder,
+/// cache pressure) without an extra message.
+#[derive(Debug, Clone, Copy)]
+pub struct WorkerReply {
+    /// Global device id.
+    pub device: usize,
+    pub outcome: LocalOutcome,
+    pub snapshot: DeviceSnapshot,
+}
+
+/// One online device reported by an availability probe G(k): id plus
+/// its current telemetry — this is how *idle-but-online* devices keep
+/// the selection layer's context fresh between participations.
+pub type ProbeReport = (usize, DeviceSnapshot);
+
 /// Cumulative per-shard counters kept by the root aggregator of a
 /// sharded transport (all zeros/empty for flat transports).
 #[derive(Debug, Clone, PartialEq)]
@@ -91,19 +108,26 @@ pub struct ShardSummary {
     pub energy_uah: f64,
     /// Σ training-compute time over merged replies (s).
     pub compute_s: f64,
+    /// Aggregate capacity counters over merged replies' telemetry:
+    /// Σ battery residual (÷ `replies` ⇒ mean battery fraction) …
+    pub battery_frac_sum: f64,
+    /// … and Σ peak GFLOPS (÷ `replies` ⇒ mean compute capacity).
+    pub peak_gflops_sum: f64,
 }
 
 /// The server's view of its worker fabric.
 pub trait Transport {
     /// Availability probe G(k): step every device's availability chain
-    /// and return the online worker ids, ascending.
-    fn probe(&mut self) -> Vec<usize>;
+    /// and return the online workers ascending by id, each with its
+    /// current [`DeviceSnapshot`] (telemetry flows even on rounds the
+    /// device is idle-but-online).
+    fn probe(&mut self) -> Vec<ProbeReport>;
 
     /// PUB `job` to the selected workers and collect every reply,
     /// sorted by (virtual reply time, worker id). Every selected worker
     /// replies — the *caller* applies majority/TTL/async semantics on
     /// the virtual times.
-    fn execute(&mut self, selected: &[usize], job: RoundJob) -> Vec<(usize, LocalOutcome)>;
+    fn execute(&mut self, selected: &[usize], job: RoundJob) -> Vec<WorkerReply>;
 
     /// Fleet size.
     fn n_devices(&self) -> usize;
@@ -134,8 +158,13 @@ pub trait Transport {
 /// Deterministic reply order shared by all transports: virtual time
 /// first (`total_cmp`, so a NaN time can never abort a round), worker
 /// id as the tie-break.
-pub fn sort_replies(replies: &mut [(usize, LocalOutcome)]) {
-    replies.sort_by(|a, b| a.1.time_s.total_cmp(&b.1.time_s).then(a.0.cmp(&b.0)));
+pub fn sort_replies(replies: &mut [WorkerReply]) {
+    replies.sort_by(|a, b| {
+        a.outcome
+            .time_s
+            .total_cmp(&b.outcome.time_s)
+            .then(a.device.cmp(&b.device))
+    });
 }
 
 /// Balanced contiguous partition of `n` items into `k` chunks: chunk
@@ -185,16 +214,22 @@ impl SyncTransport {
 }
 
 impl Transport for SyncTransport {
-    fn probe(&mut self) -> Vec<usize> {
-        (0..self.devices.len())
-            .filter(|&i| self.devices[i].step_availability())
+    fn probe(&mut self) -> Vec<ProbeReport> {
+        self.devices
+            .iter_mut()
+            .enumerate()
+            .filter_map(|(i, d)| d.step_availability().then(|| (i, d.snapshot())))
             .collect()
     }
 
-    fn execute(&mut self, selected: &[usize], job: RoundJob) -> Vec<(usize, LocalOutcome)> {
-        let mut replies: Vec<(usize, LocalOutcome)> = selected
+    fn execute(&mut self, selected: &[usize], job: RoundJob) -> Vec<WorkerReply> {
+        let mut replies: Vec<WorkerReply> = selected
             .iter()
-            .map(|&i| (i, self.devices[i].run_round(job.scheme, job.arrivals, job.theta)))
+            .map(|&i| {
+                let d = &mut self.devices[i];
+                let outcome = d.run_round(job.scheme, job.arrivals, job.theta);
+                WorkerReply { device: i, outcome, snapshot: d.snapshot() }
+            })
             .collect();
         sort_replies(&mut replies);
         replies
@@ -229,8 +264,8 @@ enum Ctl {
 
 /// SUB reply from a worker thread — one message per batch.
 enum Reply {
-    Outcomes { worker: usize, outcomes: Vec<(usize, LocalOutcome)> },
-    Online { worker: usize, online: Vec<usize> },
+    Outcomes { worker: usize, outcomes: Vec<WorkerReply> },
+    Online { worker: usize, online: Vec<ProbeReport> },
 }
 
 /// One worker endpoint.
@@ -382,8 +417,8 @@ impl ThreadedTransport {
 
     /// Collect the replies owed by a prior [`Self::dispatch_jobs`],
     /// sorted by (virtual time, id).
-    pub(crate) fn collect_jobs(&mut self, pinged: &[usize]) -> Vec<(usize, LocalOutcome)> {
-        let mut replies: Vec<(usize, LocalOutcome)> = self
+    pub(crate) fn collect_jobs(&mut self, pinged: &[usize]) -> Vec<WorkerReply> {
+        let mut replies: Vec<WorkerReply> = self
             .collect_from(pinged)
             .into_iter()
             .flat_map(|r| match r {
@@ -403,10 +438,10 @@ impl ThreadedTransport {
     }
 
     /// Collect the online set owed by a prior [`Self::dispatch_probe`],
-    /// ascending.
-    pub(crate) fn collect_probe(&mut self) -> Vec<usize> {
+    /// ascending by device id.
+    pub(crate) fn collect_probe(&mut self) -> Vec<ProbeReport> {
         let all: Vec<usize> = (0..self.endpoints.len()).collect();
-        let mut online: Vec<usize> = self
+        let mut online: Vec<ProbeReport> = self
             .collect_from(&all)
             .into_iter()
             .flat_map(|r| match r {
@@ -414,7 +449,7 @@ impl ThreadedTransport {
                 Reply::Outcomes { .. } => unreachable!("job reply to a probe"),
             })
             .collect();
-        online.sort_unstable();
+        online.sort_unstable_by_key(|&(i, _)| i);
         online
     }
 }
@@ -431,10 +466,12 @@ fn worker_loop(
     loop {
         match rx.recv() {
             Ok(Ctl::Job { job, members }) => {
-                let outcomes: Vec<(usize, LocalOutcome)> = members
+                let outcomes: Vec<WorkerReply> = members
                     .into_iter()
                     .map(|i| {
-                        (i, devices[i - start].run_round(job.scheme, job.arrivals, job.theta))
+                        let d = &mut devices[i - start];
+                        let outcome = d.run_round(job.scheme, job.arrivals, job.theta);
+                        WorkerReply { device: i, outcome, snapshot: d.snapshot() }
                     })
                     .collect();
                 if out.send(Reply::Outcomes { worker, outcomes }).is_err() {
@@ -442,10 +479,12 @@ fn worker_loop(
                 }
             }
             Ok(Ctl::Probe) => {
-                let online: Vec<usize> = devices
+                let online: Vec<ProbeReport> = devices
                     .iter_mut()
                     .enumerate()
-                    .filter_map(|(j, d)| d.step_availability().then_some(start + j))
+                    .filter_map(|(j, d)| {
+                        d.step_availability().then(|| (start + j, d.snapshot()))
+                    })
                     .collect();
                 if out.send(Reply::Online { worker, online }).is_err() {
                     break;
@@ -463,12 +502,12 @@ impl Drop for ThreadedTransport {
 }
 
 impl Transport for ThreadedTransport {
-    fn probe(&mut self) -> Vec<usize> {
+    fn probe(&mut self) -> Vec<ProbeReport> {
         self.dispatch_probe();
         self.collect_probe()
     }
 
-    fn execute(&mut self, selected: &[usize], job: RoundJob) -> Vec<(usize, LocalOutcome)> {
+    fn execute(&mut self, selected: &[usize], job: RoundJob) -> Vec<WorkerReply> {
         let pinged = self.dispatch_jobs(selected, job);
         self.collect_jobs(&pinged)
     }
@@ -542,17 +581,20 @@ mod tests {
         let mut t = ThreadedTransport::spawn(fleet(6));
         let replies = t.execute(&[0, 2, 4], job(1, Scheme::Deal, 5, 0.3));
         assert_eq!(replies.len(), 3);
-        let ids: Vec<usize> = replies.iter().map(|r| r.0).collect();
+        let ids: Vec<usize> = replies.iter().map(|r| r.device).collect();
         for w in [0, 2, 4] {
             assert!(ids.contains(&w));
         }
         for w in replies.windows(2) {
-            assert!(w[0].1.time_s <= w[1].1.time_s, "sorted by virtual time");
+            assert!(
+                w[0].outcome.time_s <= w[1].outcome.time_s,
+                "sorted by virtual time"
+            );
         }
     }
 
     #[test]
-    fn probe_returns_ascending_subset() {
+    fn probe_returns_ascending_subset_with_telemetry() {
         for mut t in [
             Box::new(SyncTransport::new(fleet(5))) as Box<dyn Transport>,
             Box::new(ThreadedTransport::spawn(fleet(5))),
@@ -561,10 +603,13 @@ mod tests {
             let online = t.probe();
             assert!(online.len() <= 5);
             for w in online.windows(2) {
-                assert!(w[0] < w[1]);
+                assert!(w[0].0 < w[1].0);
             }
-            for &w in &online {
+            for &(w, snap) in &online {
                 assert!(w < 5);
+                // an idle-but-online device still reports live telemetry
+                assert!((0.0..=1.0).contains(&snap.battery_frac));
+                assert!(snap.peak_gflops > 0.0);
             }
         }
     }
@@ -579,11 +624,16 @@ mod tests {
             let a = sync.execute(&[0, 1, 3, 5], j);
             let b = thr.execute(&[0, 1, 3, 5], j);
             assert_eq!(a.len(), b.len());
-            for ((wa, oa), (wb, ob)) in a.iter().zip(&b) {
-                assert_eq!(wa, wb, "round {round} reply order");
-                assert_eq!(oa.time_s.to_bits(), ob.time_s.to_bits());
-                assert_eq!(oa.energy_uah.to_bits(), ob.energy_uah.to_bits());
-                assert_eq!(oa.new_items, ob.new_items);
+            for (ra, rb) in a.iter().zip(&b) {
+                assert_eq!(ra.device, rb.device, "round {round} reply order");
+                assert_eq!(ra.outcome.time_s.to_bits(), rb.outcome.time_s.to_bits());
+                assert_eq!(
+                    ra.outcome.energy_uah.to_bits(),
+                    rb.outcome.energy_uah.to_bits()
+                );
+                assert_eq!(ra.outcome.new_items, rb.outcome.new_items);
+                // telemetry rides the reply identically on either fabric
+                assert_eq!(ra.snapshot, rb.snapshot, "round {round} snapshot");
             }
         }
     }
@@ -606,10 +656,14 @@ mod tests {
             for t in &mut batched {
                 let got = t.execute(&selected, j);
                 assert_eq!(got.len(), want.len());
-                for ((wa, oa), (wb, ob)) in want.iter().zip(&got) {
-                    assert_eq!(wa, wb, "workers={} round {round}", t.workers());
-                    assert_eq!(oa.time_s.to_bits(), ob.time_s.to_bits());
-                    assert_eq!(oa.energy_uah.to_bits(), ob.energy_uah.to_bits());
+                for (ra, rb) in want.iter().zip(&got) {
+                    assert_eq!(ra.device, rb.device, "workers={} round {round}", t.workers());
+                    assert_eq!(ra.outcome.time_s.to_bits(), rb.outcome.time_s.to_bits());
+                    assert_eq!(
+                        ra.outcome.energy_uah.to_bits(),
+                        rb.outcome.energy_uah.to_bits()
+                    );
+                    assert_eq!(ra.snapshot, rb.snapshot);
                 }
                 assert_eq!(t.probe(), avail_want, "workers={}", t.workers());
             }
@@ -621,26 +675,32 @@ mod tests {
         let mut t = ThreadedTransport::spawn_batched(fleet(3), 2);
         let r1 = t.execute(&[0], job(1, Scheme::NewFl, 4, 0.0));
         let r2 = t.execute(&[0], job(2, Scheme::NewFl, 4, 0.0));
-        assert_eq!(r1[0].1.new_items, 4);
-        assert_eq!(r2[0].1.new_items, 4);
+        assert_eq!(r1[0].outcome.new_items, 4);
+        assert_eq!(r2[0].outcome.new_items, 4);
         assert_eq!(
-            r2[0].1.retained_items,
-            r1[0].1.retained_items + 4,
+            r2[0].outcome.retained_items,
+            r1[0].outcome.retained_items + 4,
             "worker state persists across publishes"
         );
+        // battery telemetry is monotone across the two replies
+        assert!(r2[0].snapshot.battery_frac <= r1[0].snapshot.battery_frac);
     }
 
     #[test]
     fn sort_replies_survives_nan_times() {
-        let mut replies = vec![
-            (0, LocalOutcome { time_s: f64::NAN, ..Default::default() }),
-            (1, LocalOutcome { time_s: 1.0, ..Default::default() }),
-            (2, LocalOutcome { time_s: 0.5, ..Default::default() }),
-        ];
+        let reply = |device: usize, time_s: f64| WorkerReply {
+            device,
+            outcome: LocalOutcome { time_s, ..Default::default() },
+            snapshot: Default::default(),
+        };
+        let mut replies = vec![reply(0, f64::NAN), reply(1, 1.0), reply(2, 0.5)];
         sort_replies(&mut replies); // must not panic
-        assert_eq!(replies[0].0, 2);
-        assert_eq!(replies[1].0, 1);
-        assert!(replies[2].1.time_s.is_nan(), "NaN sorts last under total_cmp");
+        assert_eq!(replies[0].device, 2);
+        assert_eq!(replies[1].device, 1);
+        assert!(
+            replies[2].outcome.time_s.is_nan(),
+            "NaN sorts last under total_cmp"
+        );
     }
 
     #[test]

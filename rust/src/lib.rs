@@ -23,6 +23,20 @@
 //!   (buffered-asynchronous rounds — stragglers are credited and
 //!   rewarded δ rounds late, recency-discounted by the selector's
 //!   λ^delay, instead of blocking or being discarded).
+//!   **Selection is context-carrying**: every round reply and
+//!   availability probe ships a [`power::DeviceSnapshot`] (battery
+//!   residual, DVFS ladder step, cores, peak GFLOPS, page-cache
+//!   residency, swap/availability EWMAs) from the device layer through
+//!   whichever transport is in use — shard roots merge snapshots along
+//!   with outcomes and keep per-shard capacity counters — into the
+//!   engine's telemetry table, which feeds a
+//!   [`bandit::ContextualSelector`]: either the CSB-F sleeping bandit
+//!   behind the context-free [`bandit::ContextFree`] adapter
+//!   (`--selector csbf`, the bit-preserving default) or the
+//!   shared-parameter [`bandit::LinUcb`] contextual bandit
+//!   (`--selector linucb`) that scores workers by their telemetry
+//!   (heterogeneity-aware selection à la AutoFL); `--features off`
+//!   blanks the telemetry without touching round semantics.
 //!   Below the engine sit the device/power simulation, the decremental
 //!   learner engines, and the bench harness.
 //! - L2/L1 (python/, build-time only): JAX graphs + Pallas kernels,
@@ -43,10 +57,13 @@
 //!   shard count (shards ∈ {1, 2, 4} are pinned). Touch the round path
 //!   and these fail first.
 //! - **Properties** (`cargo test --test prop_selector`): randomized
-//!   invariants for the CSB-F selector on the in-tree harness
-//!   ([`util::prop`]) — |S(k)| ≤ m, sleeping devices never selected,
-//!   fairness-queue bounded-window liveness, per-shard aggregate
-//!   fairness. Failures print a `replay seed` to rerun one case.
+//!   invariants for the CSB-F *and* LinUCB selectors on the in-tree
+//!   harness ([`util::prop`]) — |S(k)| ≤ m, sleeping devices never
+//!   selected, fairness-queue bounded-window liveness, per-shard
+//!   aggregate fairness, and the contextual monotonicity promise (a
+//!   componentwise-dominating snapshot with an equal reward history is
+//!   selected at least as often). Failures print a `replay seed` to
+//!   rerun one case.
 //! - **Golden stats** (`cargo test --test golden_stats`): fixed-seed
 //!   `FederationStats` snapshots per aggregation policy, stored at
 //!   `rust/tests/golden/federation_stats.golden` with full f64 bit

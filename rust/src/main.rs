@@ -6,6 +6,7 @@
 //!   artifacts  verify + smoke-execute the AOT artifacts (PJRT)
 //!   leak       run the Fig. 1 privacy-leak demonstration
 
+use deal::bandit::SelectorKind;
 use deal::coordinator::fleet::{self, FleetConfig};
 use deal::coordinator::{Aggregation, ModelKind, Scheme, TransportKind};
 use deal::data::events::generate_events;
@@ -47,6 +48,8 @@ fn cmd_run(args: Vec<String>) -> i32 {
             "auto",
             "waitall|majority|async:<staleness> (auto = scheme default)",
         )
+        .flag("selector", "csbf", "worker selection: csbf (context-free) | linucb (telemetry-fed)")
+        .flag("features", "on", "on|off — feed device telemetry to the selector")
         .flag("devices", "16", "fleet size")
         .flag("shards", "1", "shard-leader count (>1 = sharded multi-federation runtime)")
         .flag("rounds", "20", "federated rounds")
@@ -99,6 +102,21 @@ fn cmd_run(args: Vec<String>) -> i32 {
             }
         },
     };
+    let selector = match SelectorKind::from_name(a.get("selector")) {
+        Some(s) => s,
+        None => {
+            eprintln!("unknown selector {:?} (want csbf|linucb)", a.get("selector"));
+            return 2;
+        }
+    };
+    let features = match a.get("features") {
+        "on" | "true" | "1" => true,
+        "off" | "false" | "0" => false,
+        other => {
+            eprintln!("unknown --features value {other:?} (want on|off)");
+            return 2;
+        }
+    };
     let (n_devices, shards) = match (
         a.get_usize_nonzero("devices"),
         a.get_usize_nonzero("shards"),
@@ -134,6 +152,8 @@ fn cmd_run(args: Vec<String>) -> i32 {
         shards,
         recency_lambda,
         aggregation,
+        selector,
+        features,
         ..FleetConfig::default()
     };
     let rounds = a.get_usize("rounds").unwrap();
@@ -141,13 +161,16 @@ fn cmd_run(args: Vec<String>) -> i32 {
 
     let mut fed = fleet::build(&cfg);
     println!(
-        "federation: {} devices, {} on {}, scheme {}, transport {}, aggregation {}",
+        "federation: {} devices, {} on {}, scheme {}, transport {}, aggregation {}, \
+         selector {} (features {})",
         cfg.n_devices,
         cfg.model.map_or("auto", |m| m.name()),
         dataset.name(),
         scheme.name(),
         fed.transport().describe(),
         fed.aggregation().name(),
+        selector.name(),
+        if features { "on" } else { "off" },
     );
     for _ in 0..rounds {
         let rec = fed.run_round();
@@ -180,8 +203,17 @@ fn cmd_run(args: Vec<String>) -> i32 {
     if !summaries.is_empty() {
         println!("per-shard (root aggregator):");
         for s in &summaries {
+            let (mean_bat, mean_gflops) = if s.replies > 0 {
+                (
+                    100.0 * s.battery_frac_sum / s.replies as f64,
+                    s.peak_gflops_sum / s.replies as f64,
+                )
+            } else {
+                (0.0, 0.0)
+            };
             println!(
-                "  shard {:>2}: devices {:>5}..{:<5}  jobs {:>4}  replies {:>6}  energy {}",
+                "  shard {:>2}: devices {:>5}..{:<5}  jobs {:>4}  replies {:>6}  \
+                 energy {}  capacity {mean_bat:.0}%bat/{mean_gflops:.1}gflops",
                 s.shard,
                 s.start,
                 s.end,

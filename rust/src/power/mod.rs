@@ -1,6 +1,8 @@
 //! Device power simulation substrate: Table I profiles, DVFS governors,
 //! the paper's Eq. 2 energy integrator and Eq. 3 completion-time model,
-//! and a battery with training drop-out.
+//! a battery with training drop-out, and the per-device telemetry
+//! snapshot ([`telemetry::DeviceSnapshot`]) that carries this layer's
+//! state up to the selection layer.
 //!
 //! Substitution note (DESIGN.md §2): the paper measured real phones with
 //! a Monsoon power monitor; this module computes the same quantities from
@@ -11,8 +13,10 @@ pub mod battery;
 pub mod energy;
 pub mod governor;
 pub mod profile;
+pub mod telemetry;
 
 pub use battery::Battery;
 pub use energy::EnergyMeter;
 pub use governor::{Governor, Policy};
 pub use profile::{table1_profiles, DeviceProfile};
+pub use telemetry::DeviceSnapshot;

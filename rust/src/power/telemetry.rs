@@ -1,0 +1,174 @@
+//! Per-device telemetry: the [`DeviceSnapshot`] a worker reports
+//! alongside every round reply and availability probe.
+//!
+//! The power/device layers already compute a rich per-device state —
+//! battery residual, DVFS ladder position, core count, page-cache
+//! pressure, churn history — but until this module it was dropped on
+//! the floor after billing. A snapshot packages that state so it can
+//! travel the full stack (device → transport → root aggregator →
+//! selection layer) and feed heterogeneity-aware selection à la AutoFL:
+//! the contextual bandit ([`crate::bandit::LinUcb`]) scores each
+//! available worker by these features instead of by arm index alone.
+//!
+//! Snapshots are *pure reads* of simulator state: producing one draws
+//! no randomness and mutates nothing, so carrying them in transport
+//! messages cannot perturb the bit-identical determinism contract.
+
+/// Normalization ceiling for [`DeviceSnapshot::peak_gflops`] (the
+/// 1-op/cycle/core proxy tops out at ~17 for Table I's Honor; headroom
+/// for beefier profiles keeps the feature in [0, 1]).
+const GFLOPS_CEIL: f64 = 24.0;
+
+/// Swap-rate scale: an EWMA of ~`SWAP_SCALE` swaps/round halves the
+/// cache-health feature.
+const SWAP_SCALE: f64 = 100.0;
+
+/// Telemetry snapshot of one device, taken at probe time (idle but
+/// online) or right after a local round (attached to the reply).
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct DeviceSnapshot {
+    /// Battery residual ∈ [0, 1].
+    pub battery_frac: f64,
+    /// Current DVFS governor ladder step (0-based).
+    pub ladder_step: usize,
+    /// Ladder length, so `ladder_step` can be normalized.
+    pub ladder_steps: usize,
+    /// Core count (static, from the Table I profile).
+    pub cores: u32,
+    /// Peak compute proxy: `max_freq_ghz × cores` (giga-ops/s at one
+    /// op per cycle per core).
+    pub peak_gflops: f64,
+    /// Page-cache residency: resident frames / capacity ∈ [0, 1].
+    pub cache_resident_frac: f64,
+    /// Recent swaps per round (EWMA) — memory pressure.
+    pub swap_ewma: f64,
+    /// Recent availability (EWMA of the online indicator) ∈ [0, 1] —
+    /// churn history.
+    pub avail_ewma: f64,
+}
+
+impl DeviceSnapshot {
+    /// Context dimensionality of [`Self::features`].
+    pub const N_FEATURES: usize = 7;
+
+    /// Neutral snapshot: what the selection layer sees for a device it
+    /// has no telemetry for yet, and for every device when the feature
+    /// pipeline is disabled (`--features off`) — identical contexts
+    /// carry zero information, so a contextual selector degenerates to
+    /// its context-free behaviour.
+    pub const NEUTRAL: DeviceSnapshot = DeviceSnapshot {
+        battery_frac: 1.0,
+        ladder_step: 0,
+        ladder_steps: 1,
+        cores: 1,
+        peak_gflops: 0.0,
+        cache_resident_frac: 0.0,
+        swap_ewma: 0.0,
+        avail_ewma: 1.0,
+    };
+
+    /// The LinUCB context vector: a bias term plus six telemetry
+    /// features, each normalized to [0, 1] and oriented so that *more
+    /// capacity ⇒ larger value* (swap pressure enters inverted). A
+    /// snapshot that dominates another componentwise therefore yields a
+    /// componentwise-larger context — the monotonicity the selection
+    /// property tests lean on.
+    pub fn features(&self) -> [f64; Self::N_FEATURES] {
+        let ladder = if self.ladder_steps > 1 {
+            self.ladder_step.min(self.ladder_steps - 1) as f64
+                / (self.ladder_steps - 1) as f64
+        } else {
+            0.0
+        };
+        [
+            1.0,
+            self.battery_frac.clamp(0.0, 1.0),
+            ladder,
+            (self.peak_gflops / GFLOPS_CEIL).clamp(0.0, 1.0),
+            self.cache_resident_frac.clamp(0.0, 1.0),
+            1.0 / (1.0 + self.swap_ewma.max(0.0) / SWAP_SCALE),
+            self.avail_ewma.clamp(0.0, 1.0),
+        ]
+    }
+}
+
+impl Default for DeviceSnapshot {
+    fn default() -> Self {
+        DeviceSnapshot::NEUTRAL
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn snap() -> DeviceSnapshot {
+        DeviceSnapshot {
+            battery_frac: 0.8,
+            ladder_step: 6,
+            ladder_steps: 8,
+            cores: 8,
+            peak_gflops: 16.88,
+            cache_resident_frac: 0.9,
+            swap_ewma: 100.0,
+            avail_ewma: 0.95,
+        }
+    }
+
+    #[test]
+    fn features_bounded_and_bias_leads() {
+        let f = snap().features();
+        assert_eq!(f.len(), DeviceSnapshot::N_FEATURES);
+        assert_eq!(f[0], 1.0);
+        for (i, v) in f.iter().enumerate() {
+            assert!((0.0..=1.0).contains(v), "feature {i} = {v} out of [0,1]");
+        }
+        // swap feature: EWMA at the scale constant halves it
+        assert!((f[5] - 0.5).abs() < 1e-12);
+    }
+
+    #[test]
+    fn componentwise_dominance_carries_into_features() {
+        let lo = DeviceSnapshot {
+            battery_frac: 0.2,
+            ladder_step: 1,
+            ladder_steps: 8,
+            cores: 4,
+            peak_gflops: 4.2,
+            cache_resident_frac: 0.3,
+            swap_ewma: 250.0,
+            avail_ewma: 0.5,
+        };
+        let hi = snap();
+        for (a, b) in hi.features().iter().zip(lo.features()) {
+            assert!(*a >= b, "hi feature {a} < lo feature {b}");
+        }
+    }
+
+    #[test]
+    fn neutral_is_degenerate_but_finite() {
+        let f = DeviceSnapshot::NEUTRAL.features();
+        for v in f {
+            assert!(v.is_finite());
+        }
+        // single-step ladder maps to 0, not NaN
+        assert_eq!(f[2], 0.0);
+    }
+
+    #[test]
+    fn out_of_range_telemetry_is_clamped() {
+        let s = DeviceSnapshot {
+            battery_frac: 1.7,
+            ladder_step: 99,
+            ladder_steps: 8,
+            peak_gflops: 500.0,
+            swap_ewma: -3.0,
+            ..DeviceSnapshot::NEUTRAL
+        };
+        let f = s.features();
+        for (i, v) in f.iter().enumerate() {
+            assert!((0.0..=1.0).contains(v), "feature {i} = {v}");
+        }
+        assert_eq!(f[2], 1.0, "ladder step clamps to the ladder top");
+    }
+}

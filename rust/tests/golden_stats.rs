@@ -13,6 +13,7 @@
 //!   `DEAL_REGEN_GOLDEN=1 cargo test --test golden_stats` and commit the
 //!   diff — the diff *is* the review artifact for the semantic change.
 
+use deal::bandit::SelectorKind;
 use deal::coordinator::fleet::{self, FleetConfig};
 use deal::coordinator::{Aggregation, Federation, FederationStats, Scheme};
 use deal::data::Dataset;
@@ -20,16 +21,20 @@ use std::path::PathBuf;
 
 const ROUNDS: usize = 12;
 
-/// Policies pinned by the snapshot, with stable labels.
-fn policies() -> Vec<(&'static str, Aggregation)> {
+/// Configurations pinned by the snapshot, with stable labels: every
+/// aggregation policy on the CSB-F path, plus the LinUCB contextual
+/// path (its telemetry-fed selection is part of the round semantics
+/// now, so it must not drift either).
+fn policies() -> Vec<(&'static str, Aggregation, SelectorKind)> {
     vec![
-        ("waitall", Aggregation::WaitAll),
-        ("majority", Aggregation::Majority),
-        ("async2", Aggregation::AsyncBuffered { staleness: 2 }),
+        ("waitall", Aggregation::WaitAll, SelectorKind::Csbf),
+        ("majority", Aggregation::Majority, SelectorKind::Csbf),
+        ("async2", Aggregation::AsyncBuffered { staleness: 2 }, SelectorKind::Csbf),
+        ("linucb-majority", Aggregation::Majority, SelectorKind::LinUcb),
     ]
 }
 
-fn build(agg: Aggregation) -> Federation {
+fn build(agg: Aggregation, selector: SelectorKind) -> Federation {
     fleet::build(&FleetConfig {
         n_devices: 10,
         dataset: Dataset::Housing,
@@ -40,6 +45,7 @@ fn build(agg: Aggregation) -> Federation {
         ttl_s: 2.0,
         seed: 2121,
         aggregation: Some(agg),
+        selector,
         ..FleetConfig::default()
     })
 }
@@ -74,8 +80,8 @@ fn golden_path() -> PathBuf {
 
 fn current_snapshot() -> String {
     let mut lines: Vec<String> = Vec::new();
-    for (name, agg) in policies() {
-        let stats = build(agg).run(ROUNDS);
+    for (name, agg, selector) in policies() {
+        let stats = build(agg, selector).run(ROUNDS);
         lines.push(snapshot_line(name, &stats));
     }
     lines.join("\n") + "\n"
@@ -125,8 +131,8 @@ fn policies_produce_distinct_round_semantics() {
     // sanity that the snapshot actually distinguishes the policies: on
     // the same fleet/seed the majority cut must close rounds no later
     // than wait-all
-    let w = build(Aggregation::WaitAll).run(ROUNDS);
-    let m = build(Aggregation::Majority).run(ROUNDS);
+    let w = build(Aggregation::WaitAll, SelectorKind::Csbf).run(ROUNDS);
+    let m = build(Aggregation::Majority, SelectorKind::Csbf).run(ROUNDS);
     assert!(
         m.total_time_s <= w.total_time_s + 1e-9,
         "majority cut closed later than wait-all: {} vs {}",

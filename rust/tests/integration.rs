@@ -115,11 +115,17 @@ fn threaded_transport_and_direct_calls_agree_on_model_state() {
     drop(transport);
 
     let mut direct = build_devices(&c);
-    for (w, out) in &replies {
-        let d = direct[*w].run_round(Scheme::NewFl, 5, 0.0);
-        assert!((d.time_s - out.time_s).abs() < 1e-12, "worker {w} time");
-        assert!((d.energy_uah - out.energy_uah).abs() < 1e-9, "worker {w} energy");
-        assert_eq!(d.new_items, out.new_items);
+    for r in &replies {
+        let w = r.device;
+        let d = direct[w].run_round(Scheme::NewFl, 5, 0.0);
+        assert!((d.time_s - r.outcome.time_s).abs() < 1e-12, "worker {w} time");
+        assert!(
+            (d.energy_uah - r.outcome.energy_uah).abs() < 1e-9,
+            "worker {w} energy"
+        );
+        assert_eq!(d.new_items, r.outcome.new_items);
+        // the reply's telemetry must match the direct device's own
+        assert_eq!(direct[w].snapshot(), r.snapshot, "worker {w} snapshot");
     }
 }
 

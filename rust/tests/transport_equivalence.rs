@@ -6,12 +6,12 @@
 //! buffered-async aggregation policy must credit every straggler
 //! exactly once.
 
-use deal::bandit::SelectAll;
+use deal::bandit::{SelectAll, SelectorConfig, SelectorKind, SleepingBandit};
 use deal::coordinator::fleet::{self, FleetConfig};
 use deal::coordinator::scheme::ALL_SCHEMES;
 use deal::coordinator::{
     Aggregation, Federation, FederationConfig, FederationStats, Scheme, ShardedTransport,
-    TransportKind,
+    SyncTransport, TransportKind,
 };
 use deal::data::Dataset;
 
@@ -238,9 +238,105 @@ fn explicit_single_shard_wrapper_matches_flat_path() {
 }
 
 #[test]
+fn csbf_is_bit_identical_with_features_on_off_and_legacy_wiring() {
+    // the context-free special case of the contextual pipeline: CSB-F
+    // through the ContextFree adapter must be bit-identical (a) with
+    // the telemetry pipeline on or off, and (b) to a SleepingBandit
+    // hand-wired through the legacy Box<dyn Selector> constructor —
+    // i.e. exactly the pre-contextual engine
+    let cfg = |features: bool| FleetConfig {
+        n_devices: 10,
+        dataset: Dataset::Housing,
+        scale: 0.4,
+        scheme: Scheme::Deal,
+        seed: 33,
+        selector: SelectorKind::Csbf,
+        features,
+        ..FleetConfig::default()
+    };
+    let mut on = fleet::build(&cfg(true));
+    let mut off = fleet::build(&cfg(false));
+    let a = on.run(12);
+    let b = off.run(12);
+    assert_bit_identical(&a, &b, "csbf features on vs off");
+    assert_eq!(on.rounds, off.rounds, "per-round records");
+
+    // legacy wiring: same fleet, same bandit parameters as fleet::build
+    let c = cfg(true);
+    let bandit = SleepingBandit::new(
+        c.n_devices,
+        SelectorConfig {
+            m: c.m,
+            min_fraction: c.min_fraction,
+            gamma: 20.0,
+            recency_lambda: c.recency_lambda,
+            ..Default::default()
+        },
+    );
+    let mut legacy = Federation::with_transport(
+        Box::new(SyncTransport::new(fleet::build_devices(&c))),
+        Box::new(bandit),
+        FederationConfig {
+            scheme: c.scheme,
+            ttl_s: c.ttl_s,
+            arrivals_per_round: c.arrivals_per_round,
+            theta: c.theta,
+            ..FederationConfig::default()
+        },
+    );
+    let l = legacy.run(12);
+    assert_bit_identical(&a, &l, "csbf vs legacy Box<dyn Selector> wiring");
+}
+
+#[test]
+fn linucb_stats_bit_identical_across_transports_and_shards() {
+    // the telemetry pipeline must honor the same determinism contract
+    // as the rewards: snapshots ride the messages, the merge order is
+    // (virtual time, id), so a LinUCB federation is bit-identical on
+    // any fabric at a fixed seed
+    let mk = |transport: TransportKind, shards: usize| {
+        fleet::build(&FleetConfig {
+            n_devices: 10,
+            dataset: Dataset::Housing,
+            scale: 0.4,
+            scheme: Scheme::Deal,
+            seed: 33,
+            transport,
+            shards,
+            selector: SelectorKind::LinUcb,
+            ..FleetConfig::default()
+        })
+    };
+    let mut flat = mk(TransportKind::Sync, 1);
+    let base = flat.run(12);
+    for (transport, shards) in [
+        (TransportKind::Threaded, 1usize),
+        (TransportKind::Sync, 2),
+        (TransportKind::Sync, 4),
+        (TransportKind::Threaded, 2),
+    ] {
+        let mut fed = mk(transport, shards);
+        let stats = fed.run(12);
+        assert_bit_identical(
+            &base,
+            &stats,
+            &format!("linucb {} shards={shards}", transport.name()),
+        );
+        assert_eq!(
+            flat.rounds, fed.rounds,
+            "linucb {} shards={shards}: per-round records",
+            transport.name()
+        );
+    }
+}
+
+#[test]
 fn transport_flags_parse() {
     assert_eq!(TransportKind::from_name("sync"), Some(TransportKind::Sync));
     assert_eq!(TransportKind::from_name("threaded"), Some(TransportKind::Threaded));
+    assert_eq!(SelectorKind::from_name("csbf"), Some(SelectorKind::Csbf));
+    assert_eq!(SelectorKind::from_name("linucb"), Some(SelectorKind::LinUcb));
+    assert_eq!(SelectorKind::from_name("thompson"), None);
     assert_eq!(
         Aggregation::from_name("async:5"),
         Some(Aggregation::AsyncBuffered { staleness: 5 })
