@@ -6,6 +6,10 @@
 //! `DEAL_BENCH_SCALE` (default 1.0) multiplies the dataset scales for
 //! quicker smoke runs.
 
+// Each bench target compiles this module separately and uses a
+// different subset of the helpers — the unused remainder is expected.
+#![allow(dead_code)]
+
 use deal::coordinator::device::DeviceSim;
 use deal::coordinator::fleet::{build_devices, FleetConfig};
 use deal::coordinator::Scheme;

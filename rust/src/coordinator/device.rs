@@ -6,9 +6,19 @@
 //! billed through the Eq. 3 time model at the governor's current ladder
 //! step and integrated by the Eq. 2 [`EnergyMeter`]; data accesses run
 //! through the θ-LRU [`PageCache`], whose swaps add I/O stall time.
+//!
+//! Besides the per-round θ-LRU rotation, the device serves **targeted
+//! unlearning**: [`DeviceSim::forget_datum`] resolves a
+//! [`ForgetCommand`](super::unlearn::ForgetCommand) by id — executing
+//! the decremental FORGET through the same middleware (so `CPU_Freq(-1)`
+//! and the θ-LRU fire exactly as Alg. 1 prescribes), guarded by a
+//! [`ForgetGuard`] against over-aggressive deletion, and audited post-op
+//! with the §III-D recovery attack before the ack goes back up.
 
 use super::scheme::Scheme;
+use super::unlearn::{ForgetAck, ForgetStatus};
 use super::workload::Workload;
+use crate::learn::recovery::{recover_deleted_items_exact, ForgetGuard};
 use crate::learn::traits::Middleware;
 use crate::memsim::{PageCache, Replacement};
 use crate::power::governor::Policy;
@@ -18,6 +28,8 @@ use crate::util::rng::Rng;
 
 /// Per-swap I/O stall (s): flash page-in plus fault handling.
 const SWAP_STALL_S: f64 = 0.002;
+/// CPU utilization during swap stalls (near-idle, mem/IO active).
+const STALL_UTIL: f64 = 0.05;
 /// CPU utilization while the trainer is on-core.
 const TRAIN_UTIL: f64 = 0.92;
 /// Radio seconds per round for PUB (model down) + SUB (gradients up).
@@ -52,6 +64,22 @@ pub struct LocalOutcome {
     pub model_delta: f64,
 }
 
+/// Lifecycle of one shard item on the device (targeted unlearning needs
+/// id-addressable state, not just the contiguous [oldest, arrived)
+/// window the θ-LRU rotation maintains).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+enum ItemState {
+    /// Not yet arrived.
+    Pending,
+    /// Arrived and absorbed into the model.
+    Absorbed,
+    /// Decrementally forgotten (θ-LRU rotation or a targeted FORGET).
+    Forgotten,
+    /// Deletion was requested before arrival: the arrival loop drops the
+    /// item pre-ingest, so it never touches the model.
+    Tombstoned,
+}
+
 /// A simulated device.
 pub struct DeviceSim {
     pub id: usize,
@@ -63,8 +91,18 @@ pub struct DeviceSim {
     workload: Workload,
     /// next unconsumed train item (arrival stream position)
     arrived: usize,
-    /// oldest retained item (forget stream position)
+    /// θ-LRU forget scan position (advances past targeted holes)
     oldest: usize,
+    /// per-item lifecycle (len = shard size)
+    items: Vec<ItemState>,
+    /// count of items currently absorbed in the model
+    n_absorbed: usize,
+    /// forget-level guard for targeted FORGETs (§III-D "level of
+    /// forgetness" tracking; the θ-LRU rotation is scheme-controlled and
+    /// bypasses it, but feeds its absorbed/forgotten books)
+    guard: ForgetGuard,
+    /// most recent finite model delta — the guard's drift input
+    last_model_delta: f64,
     prev_signature: Vec<f64>,
     rng: Rng,
     /// Markov availability state + transition probs (join/leave churn).
@@ -92,6 +130,7 @@ impl DeviceSim {
         // cache sized to the model state + a data window; θ-LRU budget
         // derives from this capacity
         let cap = (workload.state_pages() as usize + 64).max(128);
+        let n_items = workload.len();
         DeviceSim {
             id,
             meter: EnergyMeter::new(profile.clone()),
@@ -102,6 +141,10 @@ impl DeviceSim {
             workload,
             arrived: 0,
             oldest: 0,
+            items: vec![ItemState::Pending; n_items],
+            n_absorbed: 0,
+            guard: ForgetGuard::new(0.05, f64::INFINITY),
+            last_model_delta: 0.0,
             prev_signature: Vec::new(),
             rng: Rng::new(seed ^ 0xDEAD_BEEF_u64.rotate_left(id as u32)),
             online: true,
@@ -124,8 +167,24 @@ impl DeviceSim {
         &self.workload
     }
 
+    /// Items currently absorbed in the model (targeted FORGETs punch
+    /// holes in the [oldest, arrived) window, so this is a count, not a
+    /// pointer difference).
     pub fn retained(&self) -> usize {
-        self.arrived - self.oldest
+        self.n_absorbed
+    }
+
+    /// The forget-level guard vetting targeted FORGETs.
+    pub fn guard(&self) -> &ForgetGuard {
+        &self.guard
+    }
+
+    /// Set the guard's thresholds (fleet configuration): the minimum
+    /// retained fraction a targeted FORGET must leave, and the maximum
+    /// model drift at which a downdate is still trusted.
+    pub fn configure_guard(&mut self, min_retained_frac: f64, max_drift: f64) {
+        self.guard.min_retained_frac = min_retained_frac;
+        self.guard.max_drift = max_drift;
     }
 
     /// Absorb the first `n` shard items as pre-existing on-device data
@@ -138,6 +197,9 @@ impl DeviceSim {
         while self.arrived < n {
             let i = self.arrived;
             self.workload.update_at(i, &mut mw);
+            self.items[i] = ItemState::Absorbed;
+            self.n_absorbed += 1;
+            self.guard.on_update();
             self.arrived += 1;
         }
         self.prev_signature = self.workload.signature();
@@ -208,37 +270,41 @@ impl DeviceSim {
             Scheme::Deal => {
                 // incremental absorb of fresh data
                 for _ in 0..n_new {
-                    let i = self.arrived;
-                    self.train_op(|w, mw| w.update_at(i, mw), &mut out);
-                    self.arrived += 1;
-                    out.new_items += 1;
+                    self.absorb_next(&mut out);
                 }
-                // decremental forget of the oldest θ·batch items
-                let n_forget =
-                    ((n_new as f64 * theta).round() as usize).min(self.retained().saturating_sub(1));
+                // decremental forget of the oldest θ·batch items still
+                // absorbed (the scan skips holes a targeted FORGET or a
+                // pre-ingest tombstone already punched)
+                let n_forget = ((n_new as f64 * theta).round() as usize)
+                    .min(self.n_absorbed.saturating_sub(1));
                 for _ in 0..n_forget {
+                    while self.oldest < self.arrived
+                        && self.items[self.oldest] != ItemState::Absorbed
+                    {
+                        self.oldest += 1;
+                    }
+                    if self.oldest >= self.arrived {
+                        break;
+                    }
                     let i = self.oldest;
                     self.train_op(|w, mw| w.forget_at(i, mw), &mut out);
+                    self.items[i] = ItemState::Forgotten;
+                    self.n_absorbed -= 1;
+                    self.guard.on_forget();
                     self.oldest += 1;
                     out.forgotten_items += 1;
                 }
             }
             Scheme::NewFl => {
                 for _ in 0..n_new {
-                    let i = self.arrived;
-                    self.train_op(|w, mw| w.update_at(i, mw), &mut out);
-                    self.arrived += 1;
-                    out.new_items += 1;
+                    self.absorb_next(&mut out);
                 }
             }
             Scheme::Original => {
                 // model state: absorb the new items (end state equals a
                 // full retrain over everything arrived)…
                 for _ in 0..n_new {
-                    let i = self.arrived;
-                    self.train_op(|w, mw| w.update_at(i, mw), &mut out);
-                    self.arrived += 1;
-                    out.new_items += 1;
+                    self.absorb_next(&mut out);
                 }
                 // …but the *scheme* bills a full retrain over all data
                 let retrain = self.workload.retrain_cost(self.arrived);
@@ -249,11 +315,10 @@ impl DeviceSim {
         // --- settle: governor back to rest, CPU idles briefly
         out.retained_items = self.retained();
         out.swaps = self.cache.stats().swaps - swaps_before;
-        // swap stalls: flash page-in, CPU near-idle but mem/IO active.
-        // Stalls are training time (the paper's completion-time metric
-        // includes the paging the Original scheme's full reload causes).
-        let stall = out.swaps as f64 * SWAP_STALL_S;
-        self.meter.accumulate(stall, self.governor.step(), 0.05);
+        // swap stalls are training time (the paper's completion-time
+        // metric includes the paging the Original scheme's full reload
+        // causes)
+        let stall = self.bill_swap_stalls(out.swaps);
         self.meter.set_component("mem_io", ComponentState::Idle);
         out.time_s += stall + self.profile.time_b; // Eq. 3 constant
         out.compute_s += stall;
@@ -266,7 +331,129 @@ impl DeviceSim {
         let sig = self.workload.signature();
         out.model_delta = signature_delta(&self.prev_signature, &sig);
         self.prev_signature = sig;
+        if out.model_delta.is_finite() {
+            // drift input for the forget guard (the first round's ∞ —
+            // no prior signature — is not numerical drift)
+            self.last_model_delta = out.model_delta;
+        }
         out
+    }
+
+    /// Absorb the next arrival through the middleware; advances the
+    /// arrival pointer either way — a tombstoned datum (deletion served
+    /// pre-ingest) is dropped without ever touching the model.
+    fn absorb_next(&mut self, out: &mut LocalOutcome) {
+        let i = self.arrived;
+        self.arrived += 1;
+        if self.items[i] == ItemState::Tombstoned {
+            return;
+        }
+        self.train_op(|w, mw| w.update_at(i, mw), out);
+        self.items[i] = ItemState::Absorbed;
+        self.n_absorbed += 1;
+        self.guard.on_update();
+        out.new_items += 1;
+    }
+
+    /// Resolve one targeted FORGET command (paper §III-D / Fig. 1: the
+    /// GDPR deletion path). An absorbed datum is decrementally forgotten
+    /// **through the middleware** — `CPU_Freq(-1)`/`CPU_Freq(0)` and the
+    /// θ-LRU page accesses fire exactly as in Alg. 1 — billed at the
+    /// governor's current ladder step and drained from the battery; the
+    /// [`ForgetGuard`] may veto it first. A datum that has not arrived
+    /// yet is tombstoned (served pre-ingest, unbilled); one already out
+    /// of the model resolves as already-gone. The ack carries the op's
+    /// virtual time/energy plus the post-op audit verdict: for PPR the
+    /// §III-D recovery attack
+    /// ([`recover_deleted_items_exact`]) must expose exactly the victim
+    /// datum's items leaving the model; the other models (whose recovery
+    /// the paper argues is hard — one equation, d unknowns) get a
+    /// finite-downdate signature check.
+    pub fn forget_datum(&mut self, request: u64, datum: usize) -> ForgetAck {
+        let mut time_s = 0.0;
+        let mut energy_uah = 0.0;
+        let mut model_delta = 0.0;
+        let mut audit_pass = true;
+        let status = if datum >= self.items.len() {
+            // out-of-shard request: nothing ever to forget
+            ForgetStatus::AlreadyGone
+        } else {
+            match self.items[datum] {
+                ItemState::Pending => {
+                    self.items[datum] = ItemState::Tombstoned;
+                    ForgetStatus::Tombstoned
+                }
+                ItemState::Forgotten | ItemState::Tombstoned => ForgetStatus::AlreadyGone,
+                ItemState::Absorbed => match self.guard.check_forget(self.last_model_delta) {
+                    Err(denied) => ForgetStatus::Denied(denied),
+                    Ok(()) => {
+                        // audit prologue: stale fingerprints of the live model
+                        let stale_sig = self.workload.signature();
+                        let stale_counts = self.workload.ppr_counts();
+                        // billed decremental FORGET through the middleware;
+                        // the command piggybacks the round's PUB/SUB window,
+                        // so no extra radio wake is billed
+                        self.meter.reset();
+                        self.cache.begin_round();
+                        let swaps_before = self.cache.stats().swaps;
+                        let mut op = LocalOutcome::default();
+                        self.meter.set_component("mem_io", ComponentState::Active);
+                        self.train_op(|w, mw| w.forget_at(datum, mw), &mut op);
+                        let swaps = self.cache.stats().swaps - swaps_before;
+                        let stall = self.bill_swap_stalls(swaps);
+                        self.meter.set_component("mem_io", ComponentState::Idle);
+                        self.items[datum] = ItemState::Forgotten;
+                        self.n_absorbed -= 1;
+                        self.guard.on_forget();
+                        time_s = op.time_s + stall;
+                        energy_uah = self.meter.total_uah();
+                        self.battery.drain(energy_uah);
+                        // audit epilogue: stale-vs-fresh recovery attack
+                        let fresh_sig = self.workload.signature();
+                        model_delta = signature_delta(&stale_sig, &fresh_sig);
+                        audit_pass = self.audit_forget(datum, stale_counts, model_delta);
+                        ForgetStatus::Served
+                    }
+                },
+            }
+        };
+        ForgetAck {
+            request,
+            device: self.id,
+            datum,
+            status,
+            time_s,
+            energy_uah,
+            model_delta,
+            audit_pass,
+            signature: self.workload.signature(),
+        }
+    }
+
+    /// Post-FORGET audit: is the victim datum's trace verifiably out of
+    /// the live model? PPR gets the paper's exact attack — the
+    /// interaction-count diff must flag exactly the datum's item set;
+    /// the other models get a numerical-sanity check (the downdate left
+    /// a finite model).
+    fn audit_forget(
+        &self,
+        datum: usize,
+        stale_counts: Option<Vec<u32>>,
+        model_delta: f64,
+    ) -> bool {
+        match (stale_counts, self.workload.ppr_counts()) {
+            (Some(stale), Some(fresh)) => {
+                let recovered = recover_deleted_items_exact(&stale, &fresh);
+                let mut expected: Vec<u32> = self
+                    .workload
+                    .datum_items(datum)
+                    .map_or_else(Vec::new, <[u32]>::to_vec);
+                expected.sort_unstable();
+                expected.dedup();
+                recovered == expected
+            }
+            _ => model_delta.is_finite(),
+        }
     }
 
     /// Execute one UPDATE/FORGET through the middleware, then bill its
@@ -280,6 +467,16 @@ impl DeviceSim {
         self.bill(cost.giga_ops, 0, out); // pages were already accessed via mw
         // interactive governors sample utilization each quantum
         self.governor.tick(TRAIN_UTIL);
+    }
+
+    /// Bill `swaps` page swaps as I/O stall time (flash page-in, CPU
+    /// near-idle, mem/IO active) and return the stall seconds — the one
+    /// stall-billing rule, shared by the round epilogue and targeted
+    /// FORGETs so the two paths cannot drift.
+    fn bill_swap_stalls(&mut self, swaps: u64) -> f64 {
+        let stall = swaps as f64 * SWAP_STALL_S;
+        self.meter.accumulate(stall, self.governor.step(), STALL_UTIL);
+        stall
     }
 
     fn bill(&mut self, giga_ops: f64, extra_pages: u64, out: &mut LocalOutcome) {
@@ -459,6 +656,106 @@ mod tests {
         // churn visits both states within 300 steps (see
         // availability_churn_rejoins), so the EWMA is strictly interior
         assert!(s.avail_ewma > 0.0 && s.avail_ewma < 1.0, "ewma {}", s.avail_ewma);
+    }
+
+    #[test]
+    fn targeted_forget_serves_bills_and_audits() {
+        let mut d = device(Replacement::ThetaLru { theta: 0.3 }, Policy::DealAggressive);
+        d.run_round(Scheme::Deal, 10, 0.3); // absorbs 0..10, θ-forgets 0..3
+        let before_battery = d.battery().level_uah();
+        let retained = d.retained();
+        let ack = d.forget_datum(7, 5);
+        assert_eq!(ack.status, ForgetStatus::Served);
+        assert_eq!(ack.request, 7);
+        assert_eq!(ack.datum, 5);
+        assert!(ack.time_s > 0.0, "FORGET is billed virtual time");
+        assert!(ack.energy_uah > 0.0, "FORGET drains energy");
+        assert!(d.battery().level_uah() < before_battery);
+        // the low-dim signature may or may not move for one datum; the
+        // counts-exact audit is the authoritative change witness
+        assert!(ack.model_delta >= 0.0 && ack.model_delta.is_finite());
+        assert!(ack.audit_pass, "exact PPR recovery must confirm the deletion");
+        assert_eq!(d.retained(), retained - 1);
+        // idempotence: the datum is gone now
+        let again = d.forget_datum(8, 5);
+        assert_eq!(again.status, ForgetStatus::AlreadyGone);
+        assert_eq!(again.energy_uah, 0.0);
+        // the θ-LRU rotation already claimed datum 2
+        assert_eq!(d.forget_datum(9, 2).status, ForgetStatus::AlreadyGone);
+    }
+
+    #[test]
+    fn pre_arrival_deletion_tombstones_and_skips_ingest() {
+        let mut a = device(Replacement::Lru, Policy::Interactive);
+        let mut b = device(Replacement::Lru, Policy::Interactive);
+        // Eq. 1 end to end: absorb-then-forget (a) must bit-equal
+        // never-absorb (b) — forget(update(m, d), d) == m
+        let out_a = a.run_round(Scheme::NewFl, 10, 0.0);
+        assert_eq!(out_a.new_items, 10);
+        let ack = a.forget_datum(0, 3);
+        assert_eq!(ack.status, ForgetStatus::Served);
+        let t = b.forget_datum(0, 3);
+        assert_eq!(t.status, ForgetStatus::Tombstoned);
+        assert_eq!(t.energy_uah, 0.0, "pre-ingest deletion is unbilled");
+        let out_b = b.run_round(Scheme::NewFl, 10, 0.0);
+        assert_eq!(out_b.new_items, 9, "tombstoned datum never ingested");
+        assert_eq!(a.retained(), b.retained());
+        assert_eq!(
+            a.workload().signature(),
+            b.workload().signature(),
+            "Eq. 1: forget(update(m,d),d) == m, bit-exact for PPR"
+        );
+        // the ack's signature is the same Eq. 1 witness
+        assert_eq!(ack.signature, b.workload().signature());
+    }
+
+    #[test]
+    fn guard_vetoes_aggressive_and_drifted_forgets() {
+        let mut d = device(Replacement::Lru, Policy::Interactive);
+        d.run_round(Scheme::NewFl, 10, 0.0);
+        // retained 10/10; forgetting one more would leave 9/10 < 0.99
+        d.configure_guard(0.99, f64::INFINITY);
+        let ack = d.forget_datum(0, 4);
+        assert_eq!(
+            ack.status,
+            ForgetStatus::Denied(crate::learn::recovery::ForgetDenied::TooAggressive)
+        );
+        assert_eq!(ack.energy_uah, 0.0, "denied commands are unbilled");
+        assert_eq!(d.retained(), 10, "nothing was forgotten");
+        // drift ceiling below any observable delta ⇒ DriftTooHigh
+        d.configure_guard(0.0, -1.0);
+        let ack2 = d.forget_datum(1, 4);
+        assert_eq!(
+            ack2.status,
+            ForgetStatus::Denied(crate::learn::recovery::ForgetDenied::DriftTooHigh)
+        );
+        // restoring sane thresholds lets the FORGET through
+        d.configure_guard(0.0, f64::INFINITY);
+        assert_eq!(d.forget_datum(2, 4).status, ForgetStatus::Served);
+    }
+
+    #[test]
+    fn theta_rotation_skips_targeted_holes() {
+        let mut d = device(Replacement::ThetaLru { theta: 0.3 }, Policy::DealAggressive);
+        d.run_round(Scheme::Deal, 10, 0.0); // absorb 0..10, no θ-forget
+        // punch a hole right where the θ scan starts
+        assert_eq!(d.forget_datum(0, 0).status, ForgetStatus::Served);
+        assert_eq!(d.forget_datum(1, 1).status, ForgetStatus::Served);
+        let out = d.run_round(Scheme::Deal, 10, 0.3);
+        // θ-forget must rotate out items 2, 3, 4 — not re-forget 0/1
+        assert_eq!(out.forgotten_items, 3);
+        assert_eq!(d.retained(), 10 - 2 + 10 - 3);
+        assert_eq!(d.forget_datum(2, 2).status, ForgetStatus::AlreadyGone);
+        assert_eq!(d.forget_datum(3, 5).status, ForgetStatus::Served);
+    }
+
+    #[test]
+    fn out_of_shard_deletion_resolves_already_gone() {
+        let mut d = device(Replacement::Lru, Policy::Interactive);
+        let n = d.shard_len();
+        let ack = d.forget_datum(0, n + 10);
+        assert_eq!(ack.status, ForgetStatus::AlreadyGone);
+        assert!(ack.audit_pass);
     }
 
     #[test]

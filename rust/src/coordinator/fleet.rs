@@ -8,6 +8,7 @@ use super::scheme::{Aggregation, Scheme};
 use super::server::{Federation, FederationConfig};
 use super::shard::ShardedTransport;
 use super::transport::{SyncTransport, ThreadedTransport, Transport, TransportKind};
+use super::unlearn::UnlearnConfig;
 use super::workload::{ModelKind, Workload};
 use crate::bandit::{
     ContextFree, ContextualSelector, LinUcb, SelectAll, SelectorConfig, SelectorKind,
@@ -65,6 +66,20 @@ pub struct FleetConfig {
     /// on|off`). Off ⇒ every context is neutral; CSB-F is bit-identical
     /// either way.
     pub features: bool,
+    /// GDPR deletion requests per round (`deal run --deletions <rate>`).
+    /// 0.0 (the default) keeps the unlearning subsystem inert and the
+    /// round path bit-identical to a pre-unlearning federation.
+    pub deletion_rate: f64,
+    /// Deletion SLO in rounds: a request pending this long forces its
+    /// device into S(k) (`deal run --deletion-slo <rounds>`).
+    pub deletion_slo: u64,
+    /// Forget-guard floor: the retained fraction a targeted FORGET must
+    /// leave on the device (§III-D "level of forgetness" tracking).
+    pub guard_min_retained: f64,
+    /// Forget-guard drift ceiling: a device whose model delta exceeds
+    /// this denies targeted FORGETs (retrain instead of downdating a
+    /// degraded model). `INFINITY` (the default) never triggers.
+    pub guard_max_drift: f64,
 }
 
 impl Default for FleetConfig {
@@ -89,6 +104,10 @@ impl Default for FleetConfig {
             aggregation: None,
             selector: SelectorKind::Csbf,
             features: true,
+            deletion_rate: 0.0,
+            deletion_slo: 5,
+            guard_min_retained: 0.05,
+            guard_max_drift: f64::INFINITY,
         }
     }
 }
@@ -138,6 +157,7 @@ pub fn build_devices(cfg: &FleetConfig) -> Vec<DeviceSim> {
                 wl,
                 cfg.seed.wrapping_mul(0x9E3779B9) + i as u64,
             );
+            dev.configure_guard(cfg.guard_min_retained, cfg.guard_max_drift);
             dev.prefill(prefill);
             dev
         })
@@ -230,6 +250,15 @@ pub fn build(cfg: &FleetConfig) -> Federation {
         theta: cfg.theta,
         aggregation: cfg.aggregation,
         features: cfg.features,
+        unlearn: UnlearnConfig {
+            rate: cfg.deletion_rate,
+            slo_rounds: cfg.deletion_slo,
+            // the stream's RNG is independent of the fleet seed stream
+            // (device RNGs must never see deletion traffic), but derived
+            // from it so experiments stay one-seed reproducible
+            seed: cfg.seed.wrapping_mul(0x5851_F42D_4C95_7F2D) ^ 0x6DDA_11CE,
+            ..UnlearnConfig::default()
+        },
         ..FederationConfig::default()
     };
     Federation::with_contextual_selector(transport, selector, fed_cfg)

@@ -26,15 +26,31 @@
 //!   aggregator merging per-shard round results on the shared virtual
 //!   clock. Semantics-preserving: any shard count is bit-identical to
 //!   the flat path at a fixed seed
+//! - [`unlearn`] — the targeted-unlearning subsystem (§III-D / Fig. 1,
+//!   the GDPR deletion path): an [`UnlearnQueue`] of deletion requests
+//!   feeds rounds with [`ForgetCommand`]s addressed to the devices
+//!   holding the victims' data; every transport carries commands out and
+//!   [`ForgetAck`]s back on the virtual clock (the shard root routes to
+//!   the owning shard and merges acks); devices resolve them with an
+//!   id-addressable decremental FORGET through the middleware, vetted by
+//!   the [`crate::learn::recovery::ForgetGuard`] and audited post-op
+//!   with the recovery attack. The engine enforces the **Eq. 1 contract
+//!   end to end**: after a served FORGET of datum d, the owning device's
+//!   model bit-equals one that absorbed everything except d
+//!   (`forget(update(m, d), d) == m` — `rust/tests/unlearn_equivalence.rs`),
+//!   and an SLO wake-override forces devices with overdue deletions into
+//!   S(k) without touching selector state
 //! - [`server`] — the [`Federation`] engine: selection (driving a
 //!   [`crate::bandit::ContextualSelector`] with the fleet's latest
 //!   telemetry — CSB-F rides the context-free adapter, LinUCB consumes
-//!   the features), aggregation (majority/TTL cut, wait-all, or
-//!   buffered-async crediting of stragglers δ rounds late), rewards,
-//!   convergence (§III-A/B)
+//!   the features; deletion-overdue devices are woken past the bandit),
+//!   aggregation (majority/TTL cut, wait-all, or buffered-async
+//!   crediting of stragglers δ rounds late), rewards, convergence
+//!   (§III-A/B), and deletion-SLO accounting in [`FederationStats`]
 //! - [`fleet`] — experiment builder used by benches and examples
 //!   (`FleetConfig::selector` / `FleetConfig::features` pick the
-//!   selection algorithm and gate the telemetry pipeline)
+//!   selection algorithm and gate the telemetry pipeline;
+//!   `FleetConfig::deletion_rate` turns on the deletion stream)
 
 pub mod device;
 pub mod fleet;
@@ -42,6 +58,7 @@ pub mod scheme;
 pub mod server;
 pub mod shard;
 pub mod transport;
+pub mod unlearn;
 pub mod workload;
 
 pub use device::{DeviceSim, LocalOutcome};
@@ -52,5 +69,9 @@ pub use shard::ShardedTransport;
 pub use transport::{
     ProbeReport, RoundJob, ShardSummary, SyncTransport, ThreadedTransport, Transport,
     TransportKind, WorkerReply,
+};
+pub use unlearn::{
+    DeletionRequest, ForgetAck, ForgetCommand, ForgetStatus, UnlearnConfig,
+    UnlearnQueue, UnlearnStats,
 };
 pub use workload::{ModelKind, Workload};

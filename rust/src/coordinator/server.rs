@@ -16,6 +16,7 @@
 use super::device::{DeviceSim, LocalOutcome};
 use super::scheme::{Aggregation, Scheme};
 use super::transport::{RoundJob, ShardSummary, SyncTransport, Transport};
+use super::unlearn::{UnlearnConfig, UnlearnQueue, UnlearnStats};
 use crate::bandit::{ContextFree, ContextualSelector, Selector};
 use crate::power::DeviceSnapshot;
 use crate::util::stats::Summary;
@@ -42,6 +43,11 @@ pub struct FederationConfig {
     /// selectors degenerate to context-free behaviour; context-free
     /// selectors (CSB-F) are bit-identical either way.
     pub features: bool,
+    /// Targeted-unlearning subsystem (`deal run --deletions <rate>`):
+    /// the GDPR deletion-request stream and its SLO. The default is
+    /// inert (rate 0) and leaves the round path bit-identical to the
+    /// pre-unlearning engine.
+    pub unlearn: UnlearnConfig,
 }
 
 impl Default for FederationConfig {
@@ -55,6 +61,7 @@ impl Default for FederationConfig {
             convergence_streak: 2,
             aggregation: None,
             features: true,
+            unlearn: UnlearnConfig::default(),
         }
     }
 }
@@ -77,6 +84,12 @@ pub struct RoundRecord {
     pub reward: f64,
     /// Replies that beat the TTL this round.
     pub in_time: usize,
+    /// Deletion requests completed this round (targeted FORGET acks
+    /// credited on the virtual clock — they never extend the round cut).
+    pub forgets: usize,
+    /// Σ energy of this round's targeted FORGET ops (µAh), kept apart
+    /// from `energy_uah` so the forget energy share is reportable.
+    pub forget_energy_uah: f64,
 }
 
 /// A straggler reply buffered by `AsyncBuffered` aggregation, waiting
@@ -116,6 +129,8 @@ pub struct Federation {
     pub rounds: Vec<RoundRecord>,
     /// stragglers awaiting credit (AsyncBuffered only)
     pending: Vec<PendingReply>,
+    /// GDPR deletion queue + SLO books (inert unless configured or fed)
+    unlearn: UnlearnQueue,
 }
 
 impl Federation {
@@ -151,6 +166,7 @@ impl Federation {
         cfg: FederationConfig,
     ) -> Self {
         let n = transport.n_devices();
+        let unlearn = UnlearnQueue::new(cfg.unlearn.clone());
         Federation {
             cfg,
             transport,
@@ -165,6 +181,7 @@ impl Federation {
             latest_snapshot: vec![DeviceSnapshot::NEUTRAL; n],
             rounds: Vec::new(),
             pending: Vec::new(),
+            unlearn,
         }
     }
 
@@ -216,9 +233,36 @@ impl Federation {
         &self.latest_snapshot[i]
     }
 
+    /// The unlearning subsystem's queue: deletion-SLO books plus the
+    /// per-request resolution log (the audit trail).
+    pub fn unlearn(&self) -> &UnlearnQueue {
+        &self.unlearn
+    }
+
+    /// Submit one GDPR deletion request — forget local datum index
+    /// `datum` from `device`'s live model. The request is scheduled
+    /// into a subsequent round as a [`ForgetCommand`](super::unlearn::ForgetCommand)
+    /// once the device is selected (or SLO-woken). Returns the request
+    /// id for the audit trail.
+    pub fn submit_deletion(&mut self, device: usize, datum: usize) -> u64 {
+        let n = self.n_devices();
+        assert!(device < n, "deletion target device {device} out of range (n={n})");
+        self.unlearn.submit(device, datum, self.round)
+    }
+
     /// Run one federated round; returns its record.
     pub fn run_round(&mut self) -> RoundRecord {
         self.round += 1;
+        // 0. GDPR deletion-request arrivals: the configured stream
+        // feeds the unlearn queue. Inert (no RNG draw, no work) when
+        // the deletion subsystem is off — the whole unlearning path
+        // must leave empty-stream runs bit-identical.
+        if self.unlearn.config().rate > 0.0 {
+            let transport = &*self.transport;
+            let n = transport.n_devices();
+            self.unlearn
+                .generate(self.round, n, |i| transport.shard_len(i));
+        }
         // 1. availability G(k), probed through the transport — each
         // online device reports its telemetry snapshot, so the context
         // table stays fresh even for idle-but-online devices
@@ -233,9 +277,9 @@ impl Federation {
         // devices by their telemetry; select-all schemes take the
         // availability vector by move (no per-round clone at
         // n_devices ≫ 10³)
+        let available: Vec<usize> = probes.iter().map(|&(i, _)| i).collect();
         let selected: Vec<usize> = if self.cfg.scheme.uses_selection() {
-            let available: Vec<usize> = probes.iter().map(|&(i, _)| i).collect();
-            if self.selector.wants_context() {
+            let mut chosen = if self.selector.wants_context() {
                 let snapshots: Vec<DeviceSnapshot> =
                     available.iter().map(|&i| self.latest_snapshot[i]).collect();
                 self.selector.select(&available, &snapshots)
@@ -243,12 +287,52 @@ impl Federation {
                 // context-free selector: skip the O(n_available)
                 // snapshot gather on the hot path
                 self.selector.select(&available, &[])
+            };
+            // 2b. deletion-SLO wake-override: a device holding a
+            // request past its deadline joins S(k) even if the bandit
+            // would let it sleep. This lives in the engine, not the
+            // selector — CSB-F/LinUCB state is untouched, so selection
+            // is bit-identical whenever the deletion stream is empty.
+            if self.unlearn.is_active() {
+                for d in self.unlearn.overdue_devices(self.round) {
+                    // `available` ascends (probe contract)
+                    if available.binary_search(&d).is_ok() && !chosen.contains(&d) {
+                        chosen.push(d);
+                        self.unlearn.note_wakeup();
+                    }
+                }
             }
+            chosen
         } else {
-            probes.into_iter().map(|(i, _)| i).collect()
+            // select-all: every online device (overdue ones included)
+            // is already in S(k); take the availability vector by move
+            available
         };
         for &i in &selected {
             self.device_selected[i] += 1;
+        }
+        // 2c. targeted unlearning: queued deletion requests owned by
+        // S(k) members go out as ForgetCommands through the transport;
+        // acks come back merged on the virtual clock and are credited
+        // *without* extending the round's aggregation cut (deletion
+        // traffic never stalls rounds — the SLO override above is what
+        // bounds its latency instead). Guard-denied commands re-enter
+        // the queue; audits ride the acks.
+        let mut forgets = 0usize;
+        let mut forget_energy = 0.0f64;
+        if self.unlearn.is_active() {
+            let commands = self.unlearn.schedule(&selected);
+            if !commands.is_empty() {
+                let acks = self.transport.execute_forgets(&commands);
+                for a in &acks {
+                    self.device_energy_uah[a.device] += a.energy_uah;
+                    forget_energy += a.energy_uah;
+                    if a.status.completes() {
+                        forgets += 1;
+                    }
+                    self.unlearn.resolve(a, self.round);
+                }
+            }
         }
         // 3. PUB → local training → SUB, replies sorted by (time, id),
         // each carrying the device's post-round snapshot
@@ -382,6 +466,8 @@ impl Federation {
             mean_accuracy: if acc.count() == 0 { 0.0 } else { acc.mean() },
             reward: reward_q,
             in_time,
+            forgets,
+            forget_energy_uah: forget_energy,
         };
         self.rounds.push(rec.clone());
         rec
@@ -433,7 +519,8 @@ impl Federation {
 
     /// Aggregates over all completed rounds.
     pub fn stats(&self) -> FederationStats {
-        let total_energy: f64 = self.rounds.iter().map(|r| r.energy_uah).sum();
+        let train_energy: f64 = self.rounds.iter().map(|r| r.energy_uah).sum();
+        let forget_energy: f64 = self.rounds.iter().map(|r| r.forget_energy_uah).sum();
         let total_time: f64 = self.rounds.iter().map(|r| r.round_time_s).sum();
         let last_acc = self
             .rounds
@@ -441,18 +528,18 @@ impl Federation {
             .rev()
             .find(|r| r.mean_accuracy > 0.0)
             .map_or(0.0, |r| r.mean_accuracy);
-        let conv: Vec<f64> = self
-            .convergence_time_s
-            .iter()
-            .filter_map(|c| *c)
-            .collect();
+        let conv: Vec<f64> = self.convergence_time_s.iter().copied().flatten().collect();
         FederationStats {
             rounds: self.rounds.len(),
             total_time_s: total_time,
-            total_energy_uah: total_energy,
+            // targeted FORGET energy is real energy; with an empty
+            // deletion stream the addend is exactly 0.0, so the total
+            // stays bit-identical to the pre-unlearning engine
+            total_energy_uah: train_energy + forget_energy,
             final_accuracy: last_acc,
             converged_devices: conv.len(),
             convergence_times_s: conv,
+            unlearn: self.unlearn.stats(),
         }
     }
 }
@@ -466,6 +553,8 @@ pub struct FederationStats {
     pub final_accuracy: f64,
     pub converged_devices: usize,
     pub convergence_times_s: Vec<f64>,
+    /// Deletion-SLO metrics (all zero for empty deletion streams).
+    pub unlearn: UnlearnStats,
 }
 
 #[cfg(test)]
@@ -716,6 +805,106 @@ mod tests {
         let by_counts: u64 = fed.selection_counts().iter().sum();
         let by_records: u64 = fed.rounds.iter().map(|r| r.selected as u64).sum();
         assert_eq!(by_counts, by_records);
+    }
+
+    #[test]
+    fn submitted_deletion_is_served_and_accounted() {
+        // select-all scheme: the owner joins every round it is online,
+        // so the request is served as soon as churn allows
+        let mut f = small_federation(Scheme::NewFl);
+        let id = f.submit_deletion(0, 1); // datum 1 is prefilled ⇒ absorbed
+        let mut served_round = None;
+        for _ in 0..30 {
+            let rec = f.run_round();
+            if rec.forgets > 0 {
+                assert!(rec.forget_energy_uah > 0.0, "served FORGET is billed");
+                served_round = Some(rec.round);
+                break;
+            }
+        }
+        assert!(served_round.is_some(), "deletion not served in 30 rounds");
+        let s = f.stats();
+        assert_eq!(s.unlearn.submitted, 1);
+        assert_eq!(s.unlearn.served, 1);
+        assert_eq!(s.unlearn.pending, 0);
+        assert_eq!(s.unlearn.guard_denials, 0);
+        assert_eq!(s.unlearn.audit_failures, 0);
+        assert!(s.unlearn.forget_energy_uah > 0.0);
+        // energy conservation: totals = train + forget, also mirrored
+        // in the per-device books
+        let train: f64 = f.rounds.iter().map(|r| r.energy_uah).sum();
+        assert!(s.total_energy_uah > train);
+        let log = f.unlearn().log();
+        assert_eq!(log.len(), 1);
+        assert_eq!(log[0].request, id);
+        assert!(log[0].status.completes());
+        assert!(log[0].audit_pass, "post-ack audit must confirm the deletion");
+        assert!(!log[0].signature.is_empty());
+    }
+
+    #[test]
+    fn deletion_stream_flows_and_books_balance() {
+        let mut cfg = small_cfg(Scheme::Deal);
+        cfg.deletion_rate = 1.0;
+        cfg.deletion_slo = 3;
+        let mut f = fleet::build(&cfg);
+        f.run(20);
+        let u = f.stats().unlearn;
+        assert_eq!(u.submitted, 20, "rate 1.0 ⇒ one request per round");
+        assert!(u.served > 0, "stream requests must get served");
+        assert_eq!(
+            u.served + u.pending as u64,
+            u.submitted,
+            "every request is either served or still pending"
+        );
+        assert!(u.rounds_to_forget_p50 <= u.rounds_to_forget_p99);
+        assert_eq!(u.audit_failures, 0, "audits must pass: {u:?}");
+    }
+
+    #[test]
+    fn slo_override_wakes_devices_the_bandit_ignores() {
+        // m=1 over 8 devices: the bandit alone cannot cover a deletion
+        // on every device within the SLO — the engine's wake-override
+        // must force the stragglers in
+        let mut cfg = small_cfg(Scheme::Deal);
+        cfg.m = 1;
+        cfg.deletion_slo = 2;
+        let mut f = fleet::build(&cfg);
+        for d in 0..f.n_devices() {
+            f.submit_deletion(d, 1);
+        }
+        let mut rounds = 0;
+        while f.unlearn().pending() > 0 && rounds < 40 {
+            f.run_round();
+            rounds += 1;
+        }
+        let u = f.stats().unlearn;
+        assert_eq!(u.served, 8, "all deletions served: {u:?}");
+        assert!(
+            u.overdue_wakeups > 0,
+            "m=1 cannot reach 8 owners within SLO 2 without wakeups: {u:?}"
+        );
+        // the wake-override bypasses m, so some round exceeded it
+        assert!(
+            f.rounds.iter().any(|r| r.selected > 1),
+            "no round shows an override past m"
+        );
+    }
+
+    #[test]
+    fn inert_unlearn_config_leaves_round_path_untouched() {
+        // the engine-level guarantee behind the golden/equivalence
+        // suites: a default (rate-0) unlearn config changes nothing
+        let mut plain = small_federation(Scheme::Deal);
+        let mut wired = small_federation(Scheme::Deal);
+        for _ in 0..6 {
+            let a = plain.run_round();
+            let b = wired.run_round();
+            assert_eq!(a, b);
+            assert_eq!(a.forgets, 0);
+            assert_eq!(a.forget_energy_uah, 0.0);
+        }
+        assert_eq!(plain.stats().unlearn, UnlearnStats::default());
     }
 
     #[test]

@@ -30,6 +30,7 @@ use super::transport::{
     RoundJob, ShardSummary, SyncTransport, ThreadedTransport, Transport, TransportKind,
     WorkerReply,
 };
+use super::unlearn::{sort_acks, ForgetAck, ForgetCommand};
 use crate::power::DeviceProfile;
 
 /// Cumulative counters per shard; device ranges live in `bounds` (one
@@ -45,6 +46,8 @@ struct ShardCounters {
     compute_s: f64,
     battery_frac_sum: f64,
     peak_gflops_sum: f64,
+    forgets: u64,
+    forget_energy_uah: f64,
 }
 
 /// One shard leader. Held concretely (not as `Box<dyn Transport>`) so
@@ -198,6 +201,58 @@ impl Transport for ShardedTransport {
         merged
     }
 
+    fn execute_forgets(&mut self, commands: &[ForgetCommand]) -> Vec<ForgetAck> {
+        // bucket deletion traffic by owning shard, rebasing device ids
+        // into each leader's local space
+        let mut per_shard: Vec<Vec<ForgetCommand>> =
+            vec![Vec::new(); self.leaders.len()];
+        for &c in commands {
+            let s = self.shard_of(c.device);
+            per_shard[s].push(ForgetCommand {
+                request: c.request,
+                device: c.device - self.bounds[s],
+                datum: c.datum,
+            });
+        }
+        // phase 1: dispatch to every threaded leader before awaiting
+        // anyone — deletion traffic overlaps across shards like rounds
+        let mut pinged: Vec<Vec<usize>> = vec![Vec::new(); self.leaders.len()];
+        for (s, cmds) in per_shard.iter().enumerate() {
+            if cmds.is_empty() {
+                continue;
+            }
+            if let Leader::Threaded(t) = &mut self.leaders[s] {
+                pinged[s] = t.dispatch_forgets(cmds);
+            }
+        }
+        // phase 2: run sync leaders / collect threaded acks, merge on
+        // the shared virtual clock
+        let mut merged: Vec<ForgetAck> = Vec::with_capacity(commands.len());
+        for (s, cmds) in per_shard.iter().enumerate() {
+            if cmds.is_empty() {
+                continue;
+            }
+            let base = self.bounds[s];
+            let acks = match &mut self.leaders[s] {
+                Leader::Sync(t) => t.execute_forgets(cmds),
+                Leader::Threaded(t) => t.collect_forgets(&pinged[s]),
+            };
+            let sum = &mut self.counters[s];
+            for a in &acks {
+                if a.status.completes() {
+                    sum.forgets += 1;
+                }
+                sum.forget_energy_uah += a.energy_uah;
+            }
+            merged.extend(acks.into_iter().map(|mut a| {
+                a.device += base;
+                a
+            }));
+        }
+        sort_acks(&mut merged);
+        merged
+    }
+
     fn n_devices(&self) -> usize {
         *self.bounds.last().unwrap()
     }
@@ -205,6 +260,11 @@ impl Transport for ShardedTransport {
     fn profile(&self, i: usize) -> &DeviceProfile {
         let s = self.shard_of(i);
         self.leaders[s].as_transport().profile(i - self.bounds[s])
+    }
+
+    fn shard_len(&self, i: usize) -> usize {
+        let s = self.shard_of(i);
+        self.leaders[s].as_transport().shard_len(i - self.bounds[s])
     }
 
     fn kind(&self) -> TransportKind {
@@ -233,6 +293,8 @@ impl Transport for ShardedTransport {
                 compute_s: c.compute_s,
                 battery_frac_sum: c.battery_frac_sum,
                 peak_gflops_sum: c.peak_gflops_sum,
+                forgets: c.forgets,
+                forget_energy_uah: c.forget_energy_uah,
             })
             .collect()
     }
@@ -377,6 +439,42 @@ mod tests {
             r1.iter().chain(&r2).map(|r| r.snapshot.battery_frac).sum();
         let shard_battery: f64 = sums.iter().map(|s| s.battery_frac_sum).sum();
         assert!((merged_battery - shard_battery).abs() < 1e-12);
+    }
+
+    #[test]
+    fn forget_routing_matches_flat_and_counts_per_shard() {
+        use crate::coordinator::unlearn::{ForgetCommand, ForgetStatus};
+        let mut flat = SyncTransport::new(fleet(9));
+        let mut sharded = ShardedTransport::new(fleet(9), 3, TransportKind::Sync);
+        let j = job(1);
+        let selected = [0usize, 1, 2, 3, 4, 5, 6, 7, 8];
+        flat.execute(&selected, j);
+        sharded.execute(&selected, j);
+        // deletion traffic spanning all three shards (datums past the
+        // θ-LRU prefix the Deal round just rotated out)
+        let commands = [
+            ForgetCommand { request: 0, device: 8, datum: 3 },
+            ForgetCommand { request: 1, device: 0, datum: 4 },
+            ForgetCommand { request: 2, device: 4, datum: 5 },
+        ];
+        let want = flat.execute_forgets(&commands);
+        let got = sharded.execute_forgets(&commands);
+        assert_eq!(want, got, "root merge must be bit-identical to flat");
+        assert!(got.iter().all(|a| a.status == ForgetStatus::Served));
+        // the root's per-shard books saw one completion each
+        let sums = sharded.shard_summaries();
+        assert!(sums.iter().all(|s| s.forgets == 1), "{sums:?}");
+        let ack_energy: f64 = got.iter().map(|a| a.energy_uah).sum();
+        let shard_energy: f64 = sums.iter().map(|s| s.forget_energy_uah).sum();
+        assert!((ack_energy - shard_energy).abs() < 1e-9);
+        // global ids survive the rebase round-trip
+        let mut ids: Vec<usize> = got.iter().map(|a| a.device).collect();
+        ids.sort_unstable();
+        assert_eq!(ids, vec![0, 4, 8]);
+        // shard_len routes through leaders
+        for i in 0..9 {
+            assert_eq!(flat.shard_len(i), sharded.shard_len(i));
+        }
     }
 
     #[test]

@@ -34,6 +34,7 @@ use std::thread::JoinHandle;
 
 use super::device::{DeviceSim, LocalOutcome};
 use super::scheme::Scheme;
+use super::unlearn::{sort_acks, ForgetAck, ForgetCommand};
 use crate::power::{DeviceProfile, DeviceSnapshot};
 
 /// Job published to the selected workers for one round (the PUB half of
@@ -113,6 +114,11 @@ pub struct ShardSummary {
     pub battery_frac_sum: f64,
     /// … and Σ peak GFLOPS (÷ `replies` ⇒ mean compute capacity).
     pub peak_gflops_sum: f64,
+    /// Deletion requests completed by this shard's devices (served,
+    /// tombstoned or already-gone acks merged by the root).
+    pub forgets: u64,
+    /// Σ energy of this shard's targeted FORGET ops (µAh).
+    pub forget_energy_uah: f64,
 }
 
 /// The server's view of its worker fabric.
@@ -129,11 +135,22 @@ pub trait Transport {
     /// the virtual times.
     fn execute(&mut self, selected: &[usize], job: RoundJob) -> Vec<WorkerReply>;
 
+    /// PUB targeted FORGET `commands` to the owning workers (the
+    /// unlearning pipeline's deletion path) and collect every
+    /// [`ForgetAck`], sorted on the virtual clock by
+    /// (time, device, request) — the same determinism contract as
+    /// [`Transport::execute`], so acks are bit-identical across fabrics.
+    fn execute_forgets(&mut self, commands: &[ForgetCommand]) -> Vec<ForgetAck>;
+
     /// Fleet size.
     fn n_devices(&self) -> usize;
 
     /// Static profile of worker `i` (reward budgets, reporting).
     fn profile(&self, i: usize) -> &DeviceProfile;
+
+    /// Training items held by worker `i`'s shard (the deletion stream
+    /// draws datum indices below this).
+    fn shard_len(&self, i: usize) -> usize;
 
     /// Transport kind, for reporting. Sharded transports report their
     /// *inner* kind; use [`Transport::describe`] for the full topology.
@@ -235,12 +252,31 @@ impl Transport for SyncTransport {
         replies
     }
 
+    fn execute_forgets(&mut self, commands: &[ForgetCommand]) -> Vec<ForgetAck> {
+        let mut acks: Vec<ForgetAck> = commands
+            .iter()
+            .map(|c| {
+                let mut a = self.devices[c.device].forget_datum(c.request, c.datum);
+                // acks ride in the *transport's* id space (like
+                // WorkerReply.device), so a shard root can rebase them
+                a.device = c.device;
+                a
+            })
+            .collect();
+        sort_acks(&mut acks);
+        acks
+    }
+
     fn n_devices(&self) -> usize {
         self.devices.len()
     }
 
     fn profile(&self, i: usize) -> &DeviceProfile {
         self.devices[i].profile()
+    }
+
+    fn shard_len(&self, i: usize) -> usize {
+        self.devices[i].shard_len()
     }
 
     fn kind(&self) -> TransportKind {
@@ -259,6 +295,9 @@ enum Ctl {
     Job { job: RoundJob, members: Vec<usize> },
     /// Availability probe for G(k) over the worker's whole slice.
     Probe,
+    /// Targeted FORGET commands for devices this worker owns (global
+    /// ids; the worker rebases by its slice start).
+    Forget { commands: Vec<ForgetCommand> },
     Stop,
 }
 
@@ -266,6 +305,7 @@ enum Ctl {
 enum Reply {
     Outcomes { worker: usize, outcomes: Vec<WorkerReply> },
     Online { worker: usize, online: Vec<ProbeReport> },
+    Acks { worker: usize, acks: Vec<ForgetAck> },
 }
 
 /// One worker endpoint.
@@ -285,6 +325,8 @@ pub struct ThreadedTransport {
     inbox: Receiver<Reply>,
     /// Profiles captured before the devices move into their threads.
     profiles: Vec<DeviceProfile>,
+    /// Shard sizes captured before the devices move into their threads.
+    shard_lens: Vec<usize>,
     /// Owning worker per device id.
     owner: Vec<usize>,
 }
@@ -311,6 +353,7 @@ impl ThreadedTransport {
         let workers = workers.clamp(1, n.max(1));
         let profiles: Vec<DeviceProfile> =
             devices.iter().map(|d| d.profile().clone()).collect();
+        let shard_lens: Vec<usize> = devices.iter().map(DeviceSim::shard_len).collect();
         let bounds = partition_bounds(n, workers);
         let mut owner = vec![0usize; n];
         let chunks = partition_chunks(devices, &bounds);
@@ -332,7 +375,7 @@ impl ThreadedTransport {
                 Endpoint { tx, handle: Some(handle) }
             })
             .collect();
-        ThreadedTransport { endpoints, inbox, profiles, owner }
+        ThreadedTransport { endpoints, inbox, profiles, shard_lens, owner }
     }
 
     /// Worker-thread count (≤ n_devices).
@@ -362,9 +405,9 @@ impl ThreadedTransport {
             match self.inbox.recv_timeout(std::time::Duration::from_millis(200)) {
                 Ok(r) => {
                     let w = match &r {
-                        Reply::Outcomes { worker, .. } | Reply::Online { worker, .. } => {
-                            *worker
-                        }
+                        Reply::Outcomes { worker, .. }
+                        | Reply::Online { worker, .. }
+                        | Reply::Acks { worker, .. } => *worker,
                     };
                     got[w] = true;
                     replies.push(r);
@@ -372,10 +415,10 @@ impl ThreadedTransport {
                 Err(std::sync::mpsc::RecvTimeoutError::Timeout) => {
                     for &w in expected {
                         let dead = !got[w]
-                            && self.endpoints[w]
-                                .handle
-                                .as_ref()
-                                .map_or(true, |h| h.is_finished());
+                            && match &self.endpoints[w].handle {
+                                Some(h) => h.is_finished(),
+                                None => true,
+                            };
                         if dead {
                             panic!(
                                 "deal worker thread {w} died before replying \
@@ -423,11 +466,51 @@ impl ThreadedTransport {
             .into_iter()
             .flat_map(|r| match r {
                 Reply::Outcomes { outcomes, .. } => outcomes,
-                Reply::Online { .. } => unreachable!("probe reply to a job"),
+                Reply::Online { .. } | Reply::Acks { .. } => {
+                    unreachable!("non-job reply to a job")
+                }
             })
             .collect();
         sort_replies(&mut replies);
         replies
+    }
+
+    /// Fire targeted FORGET commands at the owning workers without
+    /// waiting; returns the pinged worker ids for
+    /// [`Self::collect_forgets`]. Split out so a shard root can fan
+    /// deletion traffic across all its leaders before blocking.
+    pub(crate) fn dispatch_forgets(&mut self, commands: &[ForgetCommand]) -> Vec<usize> {
+        let mut per_worker: Vec<Vec<ForgetCommand>> =
+            vec![Vec::new(); self.endpoints.len()];
+        for &c in commands {
+            per_worker[self.owner[c.device]].push(c);
+        }
+        let mut pinged = Vec::new();
+        for (w, cmds) in per_worker.into_iter().enumerate() {
+            if cmds.is_empty() {
+                continue;
+            }
+            pinged.push(w);
+            let _ = self.endpoints[w].tx.send(Ctl::Forget { commands: cmds });
+        }
+        pinged
+    }
+
+    /// Collect the acks owed by a prior [`Self::dispatch_forgets`],
+    /// sorted on the virtual clock by (time, device, request).
+    pub(crate) fn collect_forgets(&mut self, pinged: &[usize]) -> Vec<ForgetAck> {
+        let mut acks: Vec<ForgetAck> = self
+            .collect_from(pinged)
+            .into_iter()
+            .flat_map(|r| match r {
+                Reply::Acks { acks, .. } => acks,
+                Reply::Outcomes { .. } | Reply::Online { .. } => {
+                    unreachable!("non-ack reply to a forget batch")
+                }
+            })
+            .collect();
+        sort_acks(&mut acks);
+        acks
     }
 
     /// Fire an availability probe at every worker without waiting.
@@ -446,7 +529,9 @@ impl ThreadedTransport {
             .into_iter()
             .flat_map(|r| match r {
                 Reply::Online { online, .. } => online,
-                Reply::Outcomes { .. } => unreachable!("job reply to a probe"),
+                Reply::Outcomes { .. } | Reply::Acks { .. } => {
+                    unreachable!("non-probe reply to a probe")
+                }
             })
             .collect();
         online.sort_unstable_by_key(|&(i, _)| i);
@@ -490,6 +575,20 @@ fn worker_loop(
                     break;
                 }
             }
+            Ok(Ctl::Forget { commands }) => {
+                let acks: Vec<ForgetAck> = commands
+                    .into_iter()
+                    .map(|c| {
+                        let mut a =
+                            devices[c.device - start].forget_datum(c.request, c.datum);
+                        a.device = c.device; // transport id space, as replies
+                        a
+                    })
+                    .collect();
+                if out.send(Reply::Acks { worker, acks }).is_err() {
+                    break;
+                }
+            }
             Ok(Ctl::Stop) | Err(_) => break,
         }
     }
@@ -512,12 +611,21 @@ impl Transport for ThreadedTransport {
         self.collect_jobs(&pinged)
     }
 
+    fn execute_forgets(&mut self, commands: &[ForgetCommand]) -> Vec<ForgetAck> {
+        let pinged = self.dispatch_forgets(commands);
+        self.collect_forgets(&pinged)
+    }
+
     fn n_devices(&self) -> usize {
         self.profiles.len()
     }
 
     fn profile(&self, i: usize) -> &DeviceProfile {
         &self.profiles[i]
+    }
+
+    fn shard_len(&self, i: usize) -> usize {
+        self.shard_lens[i]
     }
 
     fn kind(&self) -> TransportKind {
@@ -710,6 +818,43 @@ mod tests {
         for i in 0..4 {
             assert_eq!(sync.profile(i).name, thr.profile(i).name);
             assert_eq!(sync.profile(i).battery_uah, thr.profile(i).battery_uah);
+        }
+    }
+
+    #[test]
+    fn forget_acks_bit_identical_across_fabrics() {
+        use crate::coordinator::unlearn::{ForgetCommand, ForgetStatus};
+        // same fleet/seed, same round + forget traffic: acks must agree
+        // per-entry on every fabric (the round-reply contract, extended
+        // to the unlearning path)
+        let mut sync = SyncTransport::new(fleet(6));
+        let mut thr = ThreadedTransport::spawn_batched(fleet(6), 3);
+        let j = job(1, Scheme::NewFl, 8, 0.0);
+        sync.execute(&[0, 1, 2, 3, 4, 5], j);
+        thr.execute(&[0, 1, 2, 3, 4, 5], j);
+        let commands = [
+            ForgetCommand { request: 0, device: 4, datum: 2 },
+            ForgetCommand { request: 1, device: 0, datum: 5 },
+            ForgetCommand { request: 2, device: 0, datum: 5 }, // dup → AlreadyGone
+        ];
+        let a = sync.execute_forgets(&commands);
+        let b = thr.execute_forgets(&commands);
+        assert_eq!(a.len(), 3);
+        assert_eq!(a, b, "acks must merge identically on either fabric");
+        for ack in &a {
+            assert!(matches!(
+                ack.status,
+                ForgetStatus::Served | ForgetStatus::AlreadyGone
+            ));
+        }
+        assert_eq!(
+            a.iter().filter(|k| k.status == ForgetStatus::Served).count(),
+            2
+        );
+        // shard_len rides both fabrics identically
+        for i in 0..6 {
+            assert_eq!(sync.shard_len(i), thr.shard_len(i));
+            assert!(sync.shard_len(i) > 0);
         }
     }
 

@@ -1,0 +1,609 @@
+//! Targeted unlearning as a first-class subsystem (paper §III-D, Fig. 1):
+//! GDPR deletion requests flow coordinator → transports → a targeted
+//! FORGET on the device holding the victim's datum.
+//!
+//! The paper's privacy claim is that DEAL *deletes specific users' data*
+//! from live models via decremental FORGET — not merely that it rotates
+//! out the oldest θ·batch items. This module supplies the machinery the
+//! claim needs end to end:
+//!
+//! - [`DeletionRequest`] — one GDPR request addressed at (device, datum),
+//!   stamped with the round it entered the queue and an SLO deadline.
+//! - [`UnlearnQueue`] — the coordinator-side queue: generates a
+//!   deterministic request stream at a configured rate (or accepts
+//!   external submissions, e.g. replayed from a
+//!   [`crate::data::events::EventLog`]), schedules requests into rounds
+//!   as [`ForgetCommand`]s addressed to selected devices, and keeps the
+//!   SLO books (served counts, rounds-to-forget percentiles, guard
+//!   denials, forget-energy share).
+//! - [`ForgetCommand`] / [`ForgetAck`] — the PUB/SUB protocol pair every
+//!   [`Transport`](super::transport::Transport) carries: commands out to
+//!   the owning worker (the shard root routes to the owning shard), acks
+//!   back merged on the virtual clock in the same deterministic
+//!   (virtual-time, device, request) order as round replies.
+//! - [`ForgetStatus`] — how the device resolved a command: a billed
+//!   decremental FORGET through the middleware (`CPU_Freq(-1)`, θ-LRU —
+//!   exactly Alg. 1), a pre-ingest tombstone, an already-gone no-op, or
+//!   a [`ForgetGuard`](crate::learn::recovery::ForgetGuard) veto (the
+//!   engine re-queues denied requests and surfaces the denial in stats).
+//!
+//! Acks are credited *asynchronously on the virtual clock*: a FORGET's
+//! virtual latency and energy ride the ack and land in the round record,
+//! but never extend the round's aggregation cut (cf. the buffered-async
+//! crediting of straggler replies — "Energy Minimization for Federated
+//! Asynchronous Learning…", PAPERS.md). Rounds are never stalled by
+//! deletion traffic; the SLO wake-override in the engine is what bounds
+//! deletion latency instead.
+
+use crate::learn::recovery::ForgetDenied;
+use crate::util::rng::Rng;
+use crate::util::stats::percentile;
+use std::collections::VecDeque;
+
+/// One GDPR deletion request: forget `datum` (the arrival-stream index
+/// within the device's shard) from `device`'s live model.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct DeletionRequest {
+    /// Queue-assigned id (audit trail).
+    pub id: u64,
+    /// Global device id holding the victim's datum.
+    pub device: usize,
+    /// Local datum index within the device's shard (arrival order).
+    pub datum: usize,
+    /// Round at which the request entered the queue.
+    pub submitted_round: u64,
+}
+
+/// A FORGET command published to one worker for one queued request.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct ForgetCommand {
+    /// Originating request id.
+    pub request: u64,
+    /// Global device id (the shard root rebases this when routing).
+    pub device: usize,
+    /// Local datum index within the device's shard.
+    pub datum: usize,
+}
+
+/// How a device resolved a [`ForgetCommand`].
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum ForgetStatus {
+    /// The datum was absorbed; a decremental FORGET executed through the
+    /// middleware (billed time/energy ride the ack).
+    Served,
+    /// The datum had not arrived yet: tombstoned, so the arrival loop
+    /// drops it before it ever reaches the model (GDPR served pre-ingest,
+    /// no model op, no bill).
+    Tombstoned,
+    /// The datum was already out of the model (θ-LRU rotation or an
+    /// earlier request) — trivially served.
+    AlreadyGone,
+    /// The [`ForgetGuard`](crate::learn::recovery::ForgetGuard) vetoed
+    /// the FORGET; the engine re-queues the request.
+    Denied(ForgetDenied),
+}
+
+impl ForgetStatus {
+    /// Does this status complete the originating request?
+    pub fn completes(&self) -> bool {
+        !matches!(self, ForgetStatus::Denied(_))
+    }
+}
+
+/// One worker's reply to a [`ForgetCommand`].
+#[derive(Debug, Clone, PartialEq)]
+pub struct ForgetAck {
+    pub request: u64,
+    /// Global device id (rebased by the shard root on the way up).
+    pub device: usize,
+    pub datum: usize,
+    pub status: ForgetStatus,
+    /// Virtual seconds the FORGET op took (compute + swap stalls; 0 for
+    /// unbilled resolutions).
+    pub time_s: f64,
+    /// Energy the FORGET drew (µAh; 0 for unbilled resolutions).
+    pub energy_uah: f64,
+    /// L2 delta of the model signature caused by the forget (0 when the
+    /// model did not change).
+    pub model_delta: f64,
+    /// Post-ack audit verdict: did the stale-vs-fresh recovery attack
+    /// confirm exactly the victim datum's trace leaving the model?
+    /// (Exact counts-diff for PPR via
+    /// [`recover_deleted_items_exact`](crate::learn::recovery::recover_deleted_items_exact);
+    /// a finite-downdate signature check for the other models.)
+    pub audit_pass: bool,
+    /// The device's post-resolution model signature — the engine's audit
+    /// input and the deletion-equivalence tests' Eq. 1 witness.
+    pub signature: Vec<f64>,
+}
+
+/// Deterministic ack order shared by every transport: virtual time first
+/// (`total_cmp` — a NaN can never abort a round), then device, then
+/// request id. The shard root re-sorts its merged acks under the same
+/// order, so acks are bit-identical across fabrics.
+pub fn sort_acks(acks: &mut [ForgetAck]) {
+    acks.sort_by(|a, b| {
+        a.time_s
+            .total_cmp(&b.time_s)
+            .then(a.device.cmp(&b.device))
+            .then(a.request.cmp(&b.request))
+    });
+}
+
+/// Configuration of the deletion-request stream and its SLO.
+#[derive(Debug, Clone, PartialEq)]
+pub struct UnlearnConfig {
+    /// Expected deletion requests per round (`deal run --deletions`).
+    /// 0.0 (the default) disables the stream entirely: no RNG is drawn,
+    /// no commands are scheduled, and the engine is bit-identical to the
+    /// pre-unlearning round path.
+    pub rate: f64,
+    /// SLO deadline in rounds: a request pending this long forces its
+    /// device into S(k) (the engine's sleeping-arm wake-override).
+    pub slo_rounds: u64,
+    /// Max commands dispatched per round (deletion traffic shaping).
+    pub max_per_round: usize,
+    /// Seed of the stream's own RNG (independent of the fleet seed so
+    /// deletion traffic never perturbs device RNG streams).
+    pub seed: u64,
+}
+
+impl Default for UnlearnConfig {
+    fn default() -> Self {
+        UnlearnConfig { rate: 0.0, slo_rounds: 5, max_per_round: 8, seed: 0x6DDA_11CE }
+    }
+}
+
+/// Aggregate deletion-SLO metrics, reported inside
+/// [`FederationStats`](super::server::FederationStats).
+#[derive(Debug, Clone, PartialEq, Default)]
+pub struct UnlearnStats {
+    /// Requests that entered the queue (stream + external submissions).
+    pub submitted: u64,
+    /// Requests completed (served, tombstoned, or already gone).
+    pub served: u64,
+    /// Requests still queued or awaiting a reachable device.
+    pub pending: usize,
+    /// Commands vetoed by the device-side forget guard (re-queued).
+    pub guard_denials: u64,
+    /// Served requests whose post-ack audit failed.
+    pub audit_failures: u64,
+    /// Devices force-selected past the bandit because a pending request
+    /// blew its SLO deadline.
+    pub overdue_wakeups: u64,
+    /// Median rounds from submission to completion (0 when none served).
+    pub rounds_to_forget_p50: f64,
+    /// p99 rounds from submission to completion (0 when none served).
+    pub rounds_to_forget_p99: f64,
+    /// Σ energy drawn by targeted FORGET ops (µAh) — divide by the
+    /// stats' total energy for the forget energy share.
+    pub forget_energy_uah: f64,
+}
+
+/// Audit-trail record for one completed (or denied) command resolution.
+#[derive(Debug, Clone, PartialEq)]
+pub struct ServedRecord {
+    pub request: u64,
+    pub device: usize,
+    pub datum: usize,
+    pub status: ForgetStatus,
+    pub submitted_round: u64,
+    /// Round the resolving ack was credited.
+    pub resolved_round: u64,
+    pub model_delta: f64,
+    pub audit_pass: bool,
+    /// Post-resolution model signature (the Eq. 1 witness).
+    pub signature: Vec<f64>,
+}
+
+/// The coordinator-side deletion queue + SLO books.
+#[derive(Debug)]
+pub struct UnlearnQueue {
+    cfg: UnlearnConfig,
+    rng: Rng,
+    /// Fractional-rate accumulator: `rate` requests per round on
+    /// average, deterministically (no RNG draw for the count).
+    carry: f64,
+    next_id: u64,
+    pending: VecDeque<DeletionRequest>,
+    submitted: u64,
+    served: u64,
+    guard_denials: u64,
+    audit_failures: u64,
+    overdue_wakeups: u64,
+    rounds_to_forget: Vec<f64>,
+    forget_energy_uah: f64,
+    log: Vec<ServedRecord>,
+}
+
+impl UnlearnQueue {
+    pub fn new(cfg: UnlearnConfig) -> Self {
+        let seed = cfg.seed;
+        UnlearnQueue {
+            cfg,
+            rng: Rng::new(seed),
+            carry: 0.0,
+            next_id: 0,
+            pending: VecDeque::new(),
+            submitted: 0,
+            served: 0,
+            guard_denials: 0,
+            audit_failures: 0,
+            overdue_wakeups: 0,
+            rounds_to_forget: Vec::new(),
+            forget_energy_uah: 0.0,
+            log: Vec::new(),
+        }
+    }
+
+    pub fn config(&self) -> &UnlearnConfig {
+        &self.cfg
+    }
+
+    /// Is the subsystem live — a stream configured or requests queued?
+    /// `false` means the engine skips every unlearning step, keeping the
+    /// round path bit-identical to the pre-unlearning engine.
+    pub fn is_active(&self) -> bool {
+        self.cfg.rate > 0.0 || !self.pending.is_empty()
+    }
+
+    /// Externally submit one deletion request (e.g. a GDPR request
+    /// replayed from an event log); returns its id.
+    pub fn submit(&mut self, device: usize, datum: usize, round: u64) -> u64 {
+        let id = self.next_id;
+        self.next_id += 1;
+        self.submitted += 1;
+        self.pending.push_back(DeletionRequest {
+            id,
+            device,
+            datum,
+            submitted_round: round,
+        });
+        id
+    }
+
+    /// Draw this round's stream arrivals: on average `rate` requests per
+    /// round via a deterministic fractional accumulator; each request
+    /// targets a uniformly random (device, datum) — deleting data that
+    /// has already rotated out is legitimate GDPR traffic and resolves
+    /// as [`ForgetStatus::AlreadyGone`].
+    pub fn generate<F: Fn(usize) -> usize>(
+        &mut self,
+        round: u64,
+        n_devices: usize,
+        shard_len: F,
+    ) {
+        if self.cfg.rate <= 0.0 || n_devices == 0 {
+            return;
+        }
+        self.carry += self.cfg.rate;
+        while self.carry >= 1.0 {
+            self.carry -= 1.0;
+            let device = self.rng.below(n_devices);
+            let len = shard_len(device);
+            if len == 0 {
+                continue;
+            }
+            let datum = self.rng.below(len);
+            self.submit(device, datum, round);
+        }
+    }
+
+    /// Devices holding a request past its SLO deadline — the engine
+    /// force-selects these (when online) regardless of the bandit.
+    pub fn overdue_devices(&self, round: u64) -> Vec<usize> {
+        let mut out: Vec<usize> = self
+            .pending
+            .iter()
+            .filter(|r| round.saturating_sub(r.submitted_round) >= self.cfg.slo_rounds)
+            .map(|r| r.device)
+            .collect();
+        out.sort_unstable();
+        out.dedup();
+        out
+    }
+
+    /// Record one SLO wake-override actually applied by the engine.
+    pub fn note_wakeup(&mut self) {
+        self.overdue_wakeups += 1;
+    }
+
+    /// Pop up to `max_per_round` pending requests addressed to devices
+    /// in `selected` (FIFO — oldest requests first) as this round's
+    /// command batch. Popped requests are in flight; the engine resolves
+    /// every ack the same round, re-queuing denials via [`Self::resolve`].
+    pub fn schedule(&mut self, selected: &[usize]) -> Vec<ForgetCommand> {
+        if self.pending.is_empty() {
+            return Vec::new();
+        }
+        let mut commands = Vec::new();
+        let mut kept = VecDeque::with_capacity(self.pending.len());
+        while let Some(req) = self.pending.pop_front() {
+            if commands.len() < self.cfg.max_per_round && selected.contains(&req.device) {
+                commands.push(ForgetCommand {
+                    request: req.id,
+                    device: req.device,
+                    datum: req.datum,
+                });
+                // in-flight requests keep their submission stamp in the
+                // log via resolve(); stash it in `kept` only on denial
+                self.log.push(ServedRecord {
+                    request: req.id,
+                    device: req.device,
+                    datum: req.datum,
+                    status: ForgetStatus::AlreadyGone, // placeholder until resolve()
+                    submitted_round: req.submitted_round,
+                    resolved_round: 0,
+                    model_delta: 0.0,
+                    audit_pass: true,
+                    signature: Vec::new(),
+                });
+            } else {
+                kept.push_back(req);
+            }
+        }
+        self.pending = kept;
+        commands
+    }
+
+    /// Credit one ack: SLO bookkeeping, energy, audit verdict; denied
+    /// requests re-enter the queue at their original submission-order
+    /// position (oldest-first priority) with their submission stamp.
+    pub fn resolve(&mut self, ack: &ForgetAck, round: u64) {
+        let rec = self
+            .log
+            .iter_mut()
+            .rev()
+            .find(|r| r.request == ack.request)
+            .expect("ack for a request never scheduled");
+        rec.status = ack.status;
+        rec.resolved_round = round;
+        rec.model_delta = ack.model_delta;
+        rec.audit_pass = ack.audit_pass;
+        rec.signature = ack.signature.clone();
+        let submitted_round = rec.submitted_round;
+        self.forget_energy_uah += ack.energy_uah;
+        if ack.status.completes() {
+            self.served += 1;
+            self.rounds_to_forget
+                .push(round.saturating_sub(submitted_round) as f64);
+            if !ack.audit_pass {
+                self.audit_failures += 1;
+            }
+        } else {
+            self.guard_denials += 1;
+            // the denial record stays in the log as history; the request
+            // itself re-enters the queue at its original submission
+            // position (ids are assigned in submission order, so this
+            // keeps the queue globally oldest-first even when several
+            // denials resolve in one round)
+            let pos = self
+                .pending
+                .iter()
+                .position(|r| r.id > ack.request)
+                .unwrap_or(self.pending.len());
+            self.pending.insert(
+                pos,
+                DeletionRequest {
+                    id: ack.request,
+                    device: ack.device,
+                    datum: ack.datum,
+                    submitted_round,
+                },
+            );
+        }
+    }
+
+    /// Requests still pending.
+    pub fn pending(&self) -> usize {
+        self.pending.len()
+    }
+
+    /// Full resolution log (denials included), in scheduling order.
+    pub fn log(&self) -> &[ServedRecord] {
+        &self.log
+    }
+
+    /// Aggregate SLO metrics.
+    pub fn stats(&self) -> UnlearnStats {
+        let (p50, p99) = if self.rounds_to_forget.is_empty() {
+            (0.0, 0.0)
+        } else {
+            (
+                percentile(&self.rounds_to_forget, 50.0),
+                percentile(&self.rounds_to_forget, 99.0),
+            )
+        };
+        UnlearnStats {
+            submitted: self.submitted,
+            served: self.served,
+            pending: self.pending.len(),
+            guard_denials: self.guard_denials,
+            audit_failures: self.audit_failures,
+            overdue_wakeups: self.overdue_wakeups,
+            rounds_to_forget_p50: p50,
+            rounds_to_forget_p99: p99,
+            forget_energy_uah: self.forget_energy_uah,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn ack(request: u64, device: usize, status: ForgetStatus) -> ForgetAck {
+        ForgetAck {
+            request,
+            device,
+            datum: 0,
+            status,
+            time_s: 0.0,
+            energy_uah: 1.5,
+            model_delta: 0.1,
+            audit_pass: true,
+            signature: vec![1.0],
+        }
+    }
+
+    #[test]
+    fn inert_config_stays_inactive_and_draws_nothing() {
+        let mut q = UnlearnQueue::new(UnlearnConfig::default());
+        assert!(!q.is_active());
+        q.generate(1, 8, |_| 100);
+        assert_eq!(q.pending(), 0);
+        assert_eq!(q.stats(), UnlearnStats::default());
+        assert!(q.schedule(&[0, 1, 2]).is_empty());
+    }
+
+    #[test]
+    fn rate_accumulates_fractionally() {
+        let cfg = UnlearnConfig { rate: 0.5, ..Default::default() };
+        let mut q = UnlearnQueue::new(cfg);
+        for round in 1..=8 {
+            q.generate(round, 4, |_| 50);
+        }
+        // 0.5/round over 8 rounds ⇒ exactly 4 requests
+        assert_eq!(q.stats().submitted, 4);
+        for r in &q.pending {
+            assert!(r.device < 4);
+            assert!(r.datum < 50);
+        }
+    }
+
+    #[test]
+    fn schedule_targets_selected_devices_fifo() {
+        let mut q = UnlearnQueue::new(UnlearnConfig::default());
+        q.submit(0, 5, 1);
+        q.submit(2, 7, 1);
+        q.submit(0, 9, 2);
+        let cmds = q.schedule(&[0]);
+        assert_eq!(cmds.len(), 2, "both device-0 requests go out");
+        assert_eq!(cmds[0].datum, 5, "FIFO order");
+        assert_eq!(cmds[1].datum, 9);
+        assert_eq!(q.pending(), 1, "device 2's request waits");
+    }
+
+    #[test]
+    fn max_per_round_caps_the_batch() {
+        let cfg = UnlearnConfig { max_per_round: 2, ..Default::default() };
+        let mut q = UnlearnQueue::new(cfg);
+        for d in 0..5 {
+            q.submit(0, d, 1);
+        }
+        assert_eq!(q.schedule(&[0]).len(), 2);
+        assert_eq!(q.pending(), 3);
+    }
+
+    #[test]
+    fn resolve_completes_and_tracks_slo() {
+        let mut q = UnlearnQueue::new(UnlearnConfig::default());
+        q.submit(1, 3, 2);
+        let cmds = q.schedule(&[1]);
+        q.resolve(&ack(cmds[0].request, 1, ForgetStatus::Served), 6);
+        let s = q.stats();
+        assert_eq!(s.served, 1);
+        assert_eq!(s.pending, 0);
+        assert_eq!(s.rounds_to_forget_p50, 4.0);
+        assert_eq!(s.rounds_to_forget_p99, 4.0);
+        assert!((s.forget_energy_uah - 1.5).abs() < 1e-12);
+        assert_eq!(q.log().len(), 1);
+        assert_eq!(q.log()[0].resolved_round, 6);
+    }
+
+    #[test]
+    fn multiple_denials_requeue_in_submission_order() {
+        let mut q = UnlearnQueue::new(UnlearnConfig::default());
+        q.submit(1, 3, 1); // id 0, oldest
+        q.submit(1, 4, 2); // id 1
+        q.submit(2, 9, 3); // id 2, different device — stays queued
+        let cmds = q.schedule(&[1]);
+        assert_eq!(cmds.len(), 2);
+        // both denied, resolved in ack order (oldest first): the queue
+        // must come back globally oldest-first, with the undispatched
+        // id-2 request behind both
+        for c in &cmds {
+            q.resolve(
+                &ack(c.request, 1, ForgetStatus::Denied(ForgetDenied::Empty)),
+                4,
+            );
+        }
+        let retry = q.schedule(&[1, 2]);
+        let ids: Vec<u64> = retry.iter().map(|c| c.request).collect();
+        assert_eq!(ids, vec![0, 1, 2], "submission order must survive denials");
+    }
+
+    #[test]
+    fn denied_requests_requeue_at_the_front_with_original_stamp() {
+        let mut q = UnlearnQueue::new(UnlearnConfig::default());
+        q.submit(1, 3, 2); // the victim
+        q.submit(1, 4, 3);
+        let cmds = q.schedule(&[1]);
+        assert_eq!(cmds.len(), 2);
+        q.resolve(
+            &ack(cmds[0].request, 1, ForgetStatus::Denied(ForgetDenied::TooAggressive)),
+            5,
+        );
+        q.resolve(&ack(cmds[1].request, 1, ForgetStatus::Served), 5);
+        let s = q.stats();
+        assert_eq!(s.guard_denials, 1);
+        assert_eq!(s.served, 1);
+        assert_eq!(s.pending, 1);
+        // retry preserves the original submission stamp, so its
+        // eventual rounds-to-forget reflects true latency
+        let retry = q.schedule(&[1]);
+        assert_eq!(retry.len(), 1);
+        assert_eq!(retry[0].datum, 3);
+        q.resolve(&ack(retry[0].request, 1, ForgetStatus::Served), 9);
+        // samples are [2, 7] rounds: interpolated p50 = 4.5, and the
+        // retried request's true 7-round latency dominates the tail
+        let s = q.stats();
+        assert!((s.rounds_to_forget_p50 - 4.5).abs() < 1e-12, "{s:?}");
+        assert!(s.rounds_to_forget_p99 > 6.0, "{s:?}");
+    }
+
+    #[test]
+    fn overdue_devices_past_slo_deadline() {
+        let cfg = UnlearnConfig { slo_rounds: 3, ..Default::default() };
+        let mut q = UnlearnQueue::new(cfg);
+        q.submit(4, 0, 10);
+        q.submit(2, 0, 12);
+        q.submit(4, 1, 12);
+        assert!(q.overdue_devices(11).is_empty());
+        assert_eq!(q.overdue_devices(13), vec![4]);
+        assert_eq!(q.overdue_devices(15), vec![2, 4]);
+        assert!(q.is_active(), "queued requests keep the subsystem live");
+    }
+
+    #[test]
+    fn sort_acks_orders_by_time_device_request() {
+        let mk = |request, device, time_s| ForgetAck {
+            request,
+            device,
+            datum: 0,
+            status: ForgetStatus::Served,
+            time_s,
+            energy_uah: 0.0,
+            model_delta: 0.0,
+            audit_pass: true,
+            signature: Vec::new(),
+        };
+        let mut acks = vec![
+            mk(3, 1, 0.5),
+            mk(1, 2, 0.1),
+            mk(2, 1, 0.1),
+            mk(0, 1, f64::NAN),
+        ];
+        sort_acks(&mut acks);
+        let order: Vec<u64> = acks.iter().map(|a| a.request).collect();
+        assert_eq!(order, vec![2, 1, 3, 0], "NaN sorts last under total_cmp");
+    }
+
+    #[test]
+    fn tombstone_and_already_gone_complete() {
+        assert!(ForgetStatus::Served.completes());
+        assert!(ForgetStatus::Tombstoned.completes());
+        assert!(ForgetStatus::AlreadyGone.completes());
+        assert!(!ForgetStatus::Denied(ForgetDenied::Empty).completes());
+    }
+}

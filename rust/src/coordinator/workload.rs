@@ -166,6 +166,27 @@ impl Workload {
         }
     }
 
+    /// The PPR model's interaction-count vector v (None for the other
+    /// models) — the §III-D recovery attack's exact fingerprint, used by
+    /// the post-FORGET audit to prove a deleted datum's trace left the
+    /// live model.
+    pub fn ppr_counts(&self) -> Option<Vec<u32>> {
+        match self {
+            Workload::Ppr { model, .. } => Some(model.counts().to_vec()),
+            _ => None,
+        }
+    }
+
+    /// Item set of training datum `i` (PPR histories only) — what the
+    /// exact recovery attack is expected to flag after that datum is
+    /// forgotten.
+    pub fn datum_items(&self, i: usize) -> Option<&[u32]> {
+        match self {
+            Workload::Ppr { train, .. } => train.get(i).map(Vec::as_slice),
+            _ => None,
+        }
+    }
+
     /// Model-state pages (θ-LRU capacity sizing).
     pub fn state_pages(&self) -> u64 {
         match self {

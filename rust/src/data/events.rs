@@ -74,6 +74,36 @@ impl EventLog {
     }
 }
 
+/// A GDPR deletion request against the event stream: at `time`, `user`
+/// invokes their right to be forgotten. Consumed by
+/// `examples/gdpr_forget.rs` and replayable into a live federation via
+/// [`Federation::submit_deletion`](crate::coordinator::Federation::submit_deletion)
+/// (the `coordinator::unlearn` pipeline).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct GdprRequest {
+    /// Request arrival time, on the event log's clock.
+    pub time: u64,
+    /// The user asking to be forgotten.
+    pub user: u32,
+}
+
+/// Sample `count` distinct-user GDPR deletion requests over the log's
+/// time span (deterministic in `seed`), arrival-ordered. Requests land
+/// after the last event — the paper's Fig. 1 scenario deletes from an
+/// already-trained model.
+pub fn gdpr_requests(log: &EventLog, seed: u64, count: usize) -> Vec<GdprRequest> {
+    let mut rng = Rng::new(seed ^ 0x6D_F0_26_E7);
+    let count = count.min(log.users);
+    let users = rng.sample_indices(log.users, count);
+    let t0 = log.events.last().map_or(0, |e| e.time);
+    let mut out: Vec<GdprRequest> = users
+        .into_iter()
+        .map(|u| GdprRequest { time: t0 + 1 + rng.below(1000) as u64, user: u as u32 })
+        .collect();
+    out.sort_by_key(|r| (r.time, r.user));
+    out
+}
+
 /// Generate an event log: `cohorts` groups of users, each cohort drawing
 /// from a shared Zipf slice of the catalogue, so same-cohort users have
 /// high Jaccard similarity (≈the paper's 0.8–0.97 examples) and
@@ -171,6 +201,29 @@ mod tests {
         assert_eq!(l.user_jaccard(&[1, 2, 3], &[1, 2, 3]), 1.0);
         assert_eq!(l.user_jaccard(&[1, 2], &[3, 4]), 0.0);
         assert_eq!(l.user_jaccard(&[], &[]), 0.0);
+    }
+
+    #[test]
+    fn gdpr_requests_distinct_ordered_and_post_log() {
+        let l = log();
+        let reqs = gdpr_requests(&l, 9, 10);
+        assert_eq!(reqs.len(), 10);
+        let last_event = l.events.last().unwrap().time;
+        let mut users: Vec<u32> = reqs.iter().map(|r| r.user).collect();
+        users.sort_unstable();
+        users.dedup();
+        assert_eq!(users.len(), 10, "requests target distinct users");
+        for w in reqs.windows(2) {
+            assert!((w[0].time, w[0].user) <= (w[1].time, w[1].user));
+        }
+        for r in &reqs {
+            assert!(r.time > last_event, "deletions arrive after training");
+            assert!((r.user as usize) < l.users);
+        }
+        // deterministic in the seed
+        assert_eq!(reqs, gdpr_requests(&l, 9, 10));
+        // count clamps to the user population
+        assert_eq!(gdpr_requests(&l, 1, 10_000).len(), l.users);
     }
 
     #[test]

@@ -37,6 +37,22 @@
 //!   (`--selector linucb`) that scores workers by their telemetry
 //!   (heterogeneity-aware selection à la AutoFL); `--features off`
 //!   blanks the telemetry without touching round semantics.
+//!   **Unlearning is end-to-end**: a GDPR deletion-request stream
+//!   ([`coordinator::unlearn`], `deal run --deletions <rate>`, or
+//!   requests replayed from [`data::events`]) feeds an
+//!   [`coordinator::UnlearnQueue`]; the engine schedules
+//!   [`coordinator::ForgetCommand`]s to the devices holding the
+//!   victims' data (an SLO wake-override forces overdue owners into
+//!   S(k) past the bandit, selector state untouched); every transport
+//!   routes commands to the owning worker/shard and merges
+//!   [`coordinator::ForgetAck`]s on the virtual clock; devices execute
+//!   the id-addressable decremental FORGET through the same middleware
+//!   as training (`CPU_Freq(-1)`, θ-LRU — Alg. 1), vetted by the
+//!   [`learn::recovery::ForgetGuard`] and audited post-op with the
+//!   §III-D recovery attack, enforcing the Eq. 1 contract
+//!   `forget(update(m, d), d) == m` end to end; deletion-SLO metrics
+//!   (served, rounds-to-forget p50/p99, guard denials, forget energy
+//!   share) land in [`coordinator::FederationStats`].
 //!   Below the engine sit the device/power simulation, the decremental
 //!   learner engines, and the bench harness.
 //! - L2/L1 (python/, build-time only): JAX graphs + Pallas kernels,
@@ -55,7 +71,15 @@
 //!   fixed seed must produce bit-identical [`coordinator::FederationStats`]
 //!   across sync/threaded transports, any worker-batch size, and any
 //!   shard count (shards ∈ {1, 2, 4} are pinned). Touch the round path
-//!   and these fail first.
+//!   and these fail first. An empty deletion stream must also leave the
+//!   stats bit-identical to the pre-unlearning engine.
+//! - **Unlearning** (`cargo test --test unlearn_equivalence`): the
+//!   Eq. 1 deletion contract across all three transports — a served
+//!   FORGET of datum d leaves the owner's model bit-equal to one that
+//!   absorbed everything except d, `recover_deleted_items` on
+//!   stale-vs-fresh fleet states flags only d's owner, and the
+//!   federated [`learn::recovery::ForgetGuard`] vetoes hold under
+//!   randomized configs.
 //! - **Properties** (`cargo test --test prop_selector`): randomized
 //!   invariants for the CSB-F *and* LinUCB selectors on the in-tree
 //!   harness ([`util::prop`]) — |S(k)| ≤ m, sleeping devices never

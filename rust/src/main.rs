@@ -57,6 +57,8 @@ fn cmd_run(args: Vec<String>) -> i32 {
         .flag("theta", "0.3", "forget degree θ")
         .flag("ttl", "30.0", "round TTL T̈ (virtual seconds)")
         .flag("lambda", "1.0", "recency discount λ for delayed rewards (async aggregation)")
+        .flag("deletions", "0.0", "GDPR deletion requests per round (0 = off)")
+        .flag("deletion-slo", "5", "deletion SLO (rounds) before a device is force-woken")
         .flag("scale", "0.05", "dataset scale (0,1]")
         .flag("seed", "1", "experiment seed")
         .switch("quiet", "suppress per-round lines");
@@ -138,6 +140,28 @@ fn cmd_run(args: Vec<String>) -> i32 {
             return 2;
         }
     };
+    let deletion_rate = match a.get_f64("deletions") {
+        Ok(r) if r >= 0.0 => r,
+        Ok(r) => {
+            eprintln!("error: flag --deletions: {r} must be ≥ 0");
+            return 2;
+        }
+        Err(e) => {
+            eprintln!("error: {e}");
+            return 2;
+        }
+    };
+    let deletion_slo = match a.get_u64("deletion-slo") {
+        Ok(s) if s >= 1 => s,
+        Ok(_) => {
+            eprintln!("error: flag --deletion-slo: must be ≥ 1 round");
+            return 2;
+        }
+        Err(e) => {
+            eprintln!("error: {e}");
+            return 2;
+        }
+    };
     let cfg = FleetConfig {
         n_devices,
         dataset,
@@ -154,6 +178,8 @@ fn cmd_run(args: Vec<String>) -> i32 {
         aggregation,
         selector,
         features,
+        deletion_rate,
+        deletion_slo,
         ..FleetConfig::default()
     };
     let rounds = a.get_usize("rounds").unwrap();
@@ -199,6 +225,28 @@ fn cmd_run(args: Vec<String>) -> i32 {
             String::new()
         }
     );
+    let u = &stats.unlearn;
+    if u.submitted > 0 {
+        let share = if stats.total_energy_uah > 0.0 {
+            100.0 * u.forget_energy_uah / stats.total_energy_uah
+        } else {
+            0.0
+        };
+        println!(
+            "deletion SLO: {} submitted, {} served ({} pending), rounds-to-forget \
+             p50 {:.1} p99 {:.1}, {} guard denials, {} audit failures, {} SLO wakeups, \
+             forget energy {} ({share:.2}% of total)",
+            u.submitted,
+            u.served,
+            u.pending,
+            u.rounds_to_forget_p50,
+            u.rounds_to_forget_p99,
+            u.guard_denials,
+            u.audit_failures,
+            u.overdue_wakeups,
+            fmt_uah(u.forget_energy_uah),
+        );
+    }
     let summaries = fed.shard_summaries();
     if !summaries.is_empty() {
         println!("per-shard (root aggregator):");
@@ -213,13 +261,15 @@ fn cmd_run(args: Vec<String>) -> i32 {
             };
             println!(
                 "  shard {:>2}: devices {:>5}..{:<5}  jobs {:>4}  replies {:>6}  \
-                 energy {}  capacity {mean_bat:.0}%bat/{mean_gflops:.1}gflops",
+                 energy {}  capacity {mean_bat:.0}%bat/{mean_gflops:.1}gflops  \
+                 forgets {:>4}",
                 s.shard,
                 s.start,
                 s.end,
                 s.jobs,
                 s.replies,
-                fmt_uah(s.energy_uah)
+                fmt_uah(s.energy_uah),
+                s.forgets
             );
         }
     }

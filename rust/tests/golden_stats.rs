@@ -22,19 +22,21 @@ use std::path::PathBuf;
 const ROUNDS: usize = 12;
 
 /// Configurations pinned by the snapshot, with stable labels: every
-/// aggregation policy on the CSB-F path, plus the LinUCB contextual
-/// path (its telemetry-fed selection is part of the round semantics
-/// now, so it must not drift either).
-fn policies() -> Vec<(&'static str, Aggregation, SelectorKind)> {
+/// aggregation policy on the CSB-F path, the LinUCB contextual path
+/// (its telemetry-fed selection is part of the round semantics now, so
+/// it must not drift either), and the targeted-unlearning pipeline
+/// under a live deletion stream (rate in requests/round).
+fn policies() -> Vec<(&'static str, Aggregation, SelectorKind, f64)> {
     vec![
-        ("waitall", Aggregation::WaitAll, SelectorKind::Csbf),
-        ("majority", Aggregation::Majority, SelectorKind::Csbf),
-        ("async2", Aggregation::AsyncBuffered { staleness: 2 }, SelectorKind::Csbf),
-        ("linucb-majority", Aggregation::Majority, SelectorKind::LinUcb),
+        ("waitall", Aggregation::WaitAll, SelectorKind::Csbf, 0.0),
+        ("majority", Aggregation::Majority, SelectorKind::Csbf, 0.0),
+        ("async2", Aggregation::AsyncBuffered { staleness: 2 }, SelectorKind::Csbf, 0.0),
+        ("linucb-majority", Aggregation::Majority, SelectorKind::LinUcb, 0.0),
+        ("unlearn-majority", Aggregation::Majority, SelectorKind::Csbf, 0.75),
     ]
 }
 
-fn build(agg: Aggregation, selector: SelectorKind) -> Federation {
+fn build(agg: Aggregation, selector: SelectorKind, deletion_rate: f64) -> Federation {
     fleet::build(&FleetConfig {
         n_devices: 10,
         dataset: Dataset::Housing,
@@ -46,21 +48,28 @@ fn build(agg: Aggregation, selector: SelectorKind) -> Federation {
         seed: 2121,
         aggregation: Some(agg),
         selector,
+        deletion_rate,
+        deletion_slo: 2,
         ..FleetConfig::default()
     })
 }
 
 /// One canonical line per policy: every float as raw bits (hex), plus
-/// the human-readable value for reviewable diffs.
+/// the human-readable value for reviewable diffs. The deletion-SLO
+/// books ride every line (all zeros for empty streams), so a semantic
+/// drift in the unlearning path fails as loudly as one in aggregation.
 fn snapshot_line(name: &str, s: &FederationStats) -> String {
     let conv: Vec<String> = s
         .convergence_times_s
         .iter()
         .map(|t| format!("{:016x}", t.to_bits()))
         .collect();
+    let u = &s.unlearn;
     format!(
         "{name} rounds={} time={:016x}({:.6}) energy={:016x}({:.6}) \
-         acc={:016x}({:.6}) converged={} conv=[{}]",
+         acc={:016x}({:.6}) converged={} conv=[{}] \
+         unlearn[sub={} served={} pend={} deny={} badaudit={} wake={} \
+         p50={:016x}({:.1}) p99={:016x}({:.1}) fe={:016x}({:.6})]",
         s.rounds,
         s.total_time_s.to_bits(),
         s.total_time_s,
@@ -69,7 +78,19 @@ fn snapshot_line(name: &str, s: &FederationStats) -> String {
         s.final_accuracy.to_bits(),
         s.final_accuracy,
         s.converged_devices,
-        conv.join(",")
+        conv.join(","),
+        u.submitted,
+        u.served,
+        u.pending,
+        u.guard_denials,
+        u.audit_failures,
+        u.overdue_wakeups,
+        u.rounds_to_forget_p50.to_bits(),
+        u.rounds_to_forget_p50,
+        u.rounds_to_forget_p99.to_bits(),
+        u.rounds_to_forget_p99,
+        u.forget_energy_uah.to_bits(),
+        u.forget_energy_uah,
     )
 }
 
@@ -80,8 +101,8 @@ fn golden_path() -> PathBuf {
 
 fn current_snapshot() -> String {
     let mut lines: Vec<String> = Vec::new();
-    for (name, agg, selector) in policies() {
-        let stats = build(agg, selector).run(ROUNDS);
+    for (name, agg, selector, deletion_rate) in policies() {
+        let stats = build(agg, selector, deletion_rate).run(ROUNDS);
         lines.push(snapshot_line(name, &stats));
     }
     lines.join("\n") + "\n"
@@ -131,12 +152,29 @@ fn policies_produce_distinct_round_semantics() {
     // sanity that the snapshot actually distinguishes the policies: on
     // the same fleet/seed the majority cut must close rounds no later
     // than wait-all
-    let w = build(Aggregation::WaitAll, SelectorKind::Csbf).run(ROUNDS);
-    let m = build(Aggregation::Majority, SelectorKind::Csbf).run(ROUNDS);
+    let w = build(Aggregation::WaitAll, SelectorKind::Csbf, 0.0).run(ROUNDS);
+    let m = build(Aggregation::Majority, SelectorKind::Csbf, 0.0).run(ROUNDS);
     assert!(
         m.total_time_s <= w.total_time_s + 1e-9,
         "majority cut closed later than wait-all: {} vs {}",
         m.total_time_s,
         w.total_time_s
     );
+}
+
+#[test]
+fn unlearn_line_actually_exercises_the_deletion_path() {
+    // the new golden line is only worth pinning if its stream flows:
+    // requests must be submitted, served, and billed at this seed
+    let s = build(Aggregation::Majority, SelectorKind::Csbf, 0.75).run(ROUNDS);
+    assert!(s.unlearn.submitted > 0, "deletion stream produced nothing");
+    assert!(s.unlearn.served > 0, "no deletion was served: {:?}", s.unlearn);
+    assert_eq!(
+        s.unlearn.served + s.unlearn.pending as u64,
+        s.unlearn.submitted,
+        "SLO books must balance"
+    );
+    // and the empty-stream lines stay exactly empty
+    let clean = build(Aggregation::Majority, SelectorKind::Csbf, 0.0).run(ROUNDS);
+    assert_eq!(clean.unlearn, deal::coordinator::UnlearnStats::default());
 }

@@ -68,6 +68,7 @@ fn assert_bit_identical(a: &FederationStats, b: &FederationStats, ctx: &str) {
     for (x, y) in a.convergence_times_s.iter().zip(&b.convergence_times_s) {
         assert_eq!(x.to_bits(), y.to_bits(), "{ctx}: convergence time");
     }
+    assert_eq!(a.unlearn, b.unlearn, "{ctx}: deletion-SLO books");
 }
 
 #[test]
@@ -327,6 +328,51 @@ fn linucb_stats_bit_identical_across_transports_and_shards() {
             "linucb {} shards={shards}: per-round records",
             transport.name()
         );
+    }
+}
+
+#[test]
+fn empty_deletion_stream_is_bit_identical_to_pre_unlearn_engine() {
+    // the unlearning pipeline's do-no-harm contract: wiring the
+    // subsystem with an inert (rate-0) stream must not move a single
+    // bit of any stats — selection, rewards, energy, convergence — on
+    // any fabric. This is the regression fence for the pre-PR golden
+    // lines.
+    for (transport, shards) in [
+        (TransportKind::Sync, 1usize),
+        (TransportKind::Threaded, 1),
+        (TransportKind::Sync, 3),
+    ] {
+        let mk = |deletion_slo: u64| {
+            fleet::build(&FleetConfig {
+                n_devices: 10,
+                dataset: Dataset::Housing,
+                scale: 0.4,
+                scheme: Scheme::Deal,
+                seed: 33,
+                transport,
+                shards,
+                deletion_rate: 0.0,
+                deletion_slo,
+                ..FleetConfig::default()
+            })
+        };
+        // different inert configs must be indistinguishable
+        let mut plain = mk(5);
+        let mut wired = mk(1);
+        let a = plain.run(12);
+        let b = wired.run(12);
+        assert_bit_identical(
+            &a,
+            &b,
+            &format!("inert deletion stream, {} shards={shards}", transport.name()),
+        );
+        assert_eq!(plain.rounds, wired.rounds, "per-round records");
+        assert_eq!(a.unlearn, deal::coordinator::UnlearnStats::default());
+        for r in &plain.rounds {
+            assert_eq!(r.forgets, 0);
+            assert_eq!(r.forget_energy_uah, 0.0);
+        }
     }
 }
 
