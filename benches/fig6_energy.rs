@@ -1,22 +1,30 @@
 //! Fig. 6 — energy consumed during training per scheme and CPU frequency
-//! (Honor profile), same panel grid as Fig. 3.
+//! (Honor profile), same panel grid as Fig. 3 — **plus the headline**:
+//! the fleet power-state ledger behind the paper's 75.6–82.4% claim.
+//! Conventional FL keeps the whole fleet idle-awake between training
+//! bursts; DEAL parks unselected workers in deep sleep. The headline
+//! table runs the default fleet under every `FleetMode` and reports the
+//! per-state breakdown (train / idle-awake / sleep / wake / forget),
+//! which must sum to the fleet total *exactly*, and the savings ratio
+//! vs the all-awake baseline, which must land ≥ 50% (self-checked).
 //!
-//! Paper shape: energy decreases with lower CPU frequency for every
-//! scheme; DEAL saves e.g. 3687.1µAh vs Original on movielens, ~300µAh
-//! on jester, ~110,000µAh on phishing (kNN), 17,908.1µAh on covtype
-//! (MNB), 77,497.6µAh on YearPredictionMSD, only 6.7µAh on housing
-//! (too small to matter).
+//! Paper shape (panels): energy decreases with lower CPU frequency for
+//! every scheme; DEAL saves e.g. 3687.1µAh vs Original on movielens,
+//! ~300µAh on jester, ~110,000µAh on phishing (kNN), 17,908.1µAh on
+//! covtype (MNB), 77,497.6µAh on YearPredictionMSD, only 6.7µAh on
+//! housing (too small to matter).
 //!
 //!     cargo bench --bench fig6_energy
 
 mod common;
 
 use common::{banner, dataset_scale, measure_rounds};
-use deal::coordinator::fleet::{build_devices, FleetConfig};
-use deal::coordinator::{ModelKind, Scheme};
+use deal::coordinator::fleet::{self, build_devices, FleetConfig};
+use deal::coordinator::{FederationStats, ModelKind, Scheme};
 use deal::data::Dataset;
 use deal::power::governor::Policy;
 use deal::power::profile::honor;
+use deal::power::{FleetMode, ALL_FLEET_MODES};
 use deal::util::tables::{fmt_uah, Table};
 
 const PANELS: [(&str, Option<ModelKind>, &[Dataset]); 4] = [
@@ -88,7 +96,6 @@ fn main() {
         &["scheme", "fleet energy", "vs DEAL"],
     );
     let fleet_energy = |scheme: Scheme| {
-        use deal::coordinator::fleet;
         let cfg = FleetConfig {
             n_devices: 16,
             dataset: Dataset::Movielens,
@@ -112,4 +119,80 @@ fn main() {
     }
     print!("{}", fleet_table.render());
     println!("\n(per-dataset scales shrink absolute µAh; shape = ordering + savings growth with dataset size)");
+
+    // ------------------------------------------------------------------
+    // Headline: the fleet power-state ledger. `deal run --mode allawake`
+    // vs `--mode deal` on the default fleet — the whole-fleet footprint
+    // by state and the savings ratio behind the 75.6–82.4% claim.
+    // ------------------------------------------------------------------
+    println!();
+    let run_mode = |mode: FleetMode| -> FederationStats {
+        let cfg = FleetConfig {
+            seed: 5,
+            mode: Some(mode),
+            ..FleetConfig::default()
+        };
+        fleet::build(&cfg).run(10)
+    };
+    let mut headline = Table::new(
+        "Fig. 6 (headline) — fleet ledger, default fleet (16 devices, m=4, 10 rounds, 60s period)",
+        &[
+            "mode", "train", "idle-awake", "sleep", "wake", "forget", "fleet total",
+            "mean round s", "savings",
+        ],
+    );
+    let mut by_mode = Vec::new();
+    for mode in ALL_FLEET_MODES {
+        let s = run_mode(mode);
+        let b = s.fleet;
+        // conservation: the printed breakdown must sum to the total
+        // exactly — not approximately
+        let sum = b.train_uah + b.idle_uah + b.sleep_uah + b.wake_uah + b.forget_uah;
+        assert_eq!(
+            sum.to_bits(),
+            b.total_uah().to_bits(),
+            "{}: breakdown does not sum to the fleet total",
+            mode.name()
+        );
+        headline.row([
+            mode.name().to_string(),
+            fmt_uah(b.train_uah),
+            fmt_uah(b.idle_uah),
+            fmt_uah(b.sleep_uah),
+            fmt_uah(b.wake_uah),
+            fmt_uah(b.forget_uah),
+            fmt_uah(b.total_uah()),
+            format!("{:.3}", s.total_time_s / s.rounds as f64),
+            format!("{:.1}%", 100.0 * s.savings_vs_allawake),
+        ]);
+        by_mode.push((mode, s));
+    }
+    print!("{}", headline.render());
+    let deal_stats = &by_mode[0].1;
+    let awake_stats = &by_mode[1].1;
+    // measured headline: DEAL's fleet footprint vs the *actually run*
+    // all-awake fleet (same seed), alongside the emulated baseline the
+    // engine reports per-run
+    let measured = 1.0 - deal_stats.fleet.total_uah() / awake_stats.fleet.total_uah();
+    println!(
+        "\nheadline: DEAL fleet {} vs all-awake fleet {} → {:.1}% savings measured \
+         ({:.1}% vs emulated baseline; paper reports 75.6–82.4%)",
+        fmt_uah(deal_stats.fleet.total_uah()),
+        fmt_uah(awake_stats.fleet.total_uah()),
+        100.0 * measured,
+        100.0 * deal_stats.savings_vs_allawake,
+    );
+    assert!(
+        measured >= 0.5,
+        "measured fleet savings {measured:.3} below the paper's ballpark (≥ 50%)"
+    );
+    assert!(
+        deal_stats.savings_vs_allawake >= 0.5,
+        "emulated-baseline savings {:.3} below the paper's ballpark (≥ 50%)",
+        deal_stats.savings_vs_allawake
+    );
+    assert_eq!(
+        awake_stats.savings_vs_allawake, 0.0,
+        "the all-awake fleet must be its own baseline"
+    );
 }

@@ -255,6 +255,7 @@ mod tests {
     use crate::bandit::{RoundRobinSelector, SleepingBandit};
 
     fn snap(cap: f64) -> DeviceSnapshot {
+        use crate::power::PowerState;
         DeviceSnapshot {
             battery_frac: cap,
             ladder_step: (cap * 7.0) as usize,
@@ -264,6 +265,14 @@ mod tests {
             cache_resident_frac: cap,
             swap_ewma: 300.0 * (1.0 - cap),
             avail_ewma: cap,
+            plugged: cap >= 0.5,
+            state: if cap < 0.25 {
+                PowerState::DeepSleep
+            } else if cap < 0.75 {
+                PowerState::Idle
+            } else {
+                PowerState::Awake
+            },
         }
     }
 

@@ -23,7 +23,10 @@ use crate::learn::traits::Middleware;
 use crate::memsim::{PageCache, Replacement};
 use crate::power::governor::Policy;
 use crate::power::profile::ComponentState;
-use crate::power::{Battery, DeviceProfile, DeviceSnapshot, EnergyMeter, Governor};
+use crate::power::state::{state_current_ua, wake_cost, ChargePlan};
+use crate::power::{
+    Battery, DeviceProfile, DeviceSnapshot, EnergyMeter, FleetMode, Governor, PowerState,
+};
 use crate::util::rng::Rng;
 
 /// Per-swap I/O stall (s): flash page-in plus fault handling.
@@ -62,6 +65,34 @@ pub struct LocalOutcome {
     pub accuracy: f64,
     /// L2 delta of the model signature vs the previous round.
     pub model_delta: f64,
+}
+
+/// One device's row of the fleet power-state ledger for a clock
+/// advance ([`DeviceSim::step_idle`]): the park-state floor billed over
+/// the idle window, any wake transition, any charge received, and the
+/// AllAwake counterfactual the savings ratio is computed against.
+#[derive(Debug, Clone, Copy, PartialEq, Default)]
+pub struct IdleOutcome {
+    /// Device id in the transport's id space (shard roots rebase it,
+    /// like [`super::transport::WorkerReply::device`]).
+    pub device: usize,
+    /// State the device was parked in for this window.
+    pub state: PowerState,
+    /// Idle-awake / kernel-idle floor energy billed (µAh).
+    pub idle_uah: f64,
+    /// Deep-sleep floor energy billed (µAh).
+    pub sleep_uah: f64,
+    /// Wake-transition energy billed (µAh).
+    pub wake_uah: f64,
+    /// Wake transitions billed this window (0 or 1).
+    pub wakes: u64,
+    /// Wake latency spent (s).
+    pub wake_s: f64,
+    /// Charge added by plugged sessions this window (µAh, post-clamp).
+    pub charged_uah: f64,
+    /// What the same idle window would have cost at the idle-awake
+    /// floor — the per-device AllAwake baseline term.
+    pub awake_equiv_uah: f64,
 }
 
 /// Lifecycle of one shard item on the device (targeted unlearning needs
@@ -109,6 +140,24 @@ pub struct DeviceSim {
     online: bool,
     p_drop: f64,
     p_join: f64,
+    /// Fleet power state between rounds (the ledger's billing target).
+    power_state: PowerState,
+    /// Set when training pulled the device out of deep sleep; consumed
+    /// by the next [`DeviceSim::step_idle`], which bills the transition.
+    woke: bool,
+    /// Virtual wall clock of the fleet ledger (s since experiment start).
+    ledger_clock_s: f64,
+    /// Busy seconds of the current round window (training + comm +
+    /// targeted FORGETs), consumed by the next clock advance so the
+    /// idle remainder is not double-billed.
+    last_busy_s: f64,
+    /// Deterministic plug/unplug schedule (`None` = charging disabled —
+    /// the bit-preserving default; the plan runs its own RNG stream, so
+    /// enabling it never perturbs `self.rng`).
+    charge_plan: Option<ChargePlan>,
+    /// Battery hit the low-water mark and has not recovered past the
+    /// rejoin threshold yet (hysteresis — see [`Battery::can_rejoin`]).
+    drained: bool,
     /// Telemetry EWMAs for [`DeviceSnapshot`]: recent availability and
     /// swaps/round. Pure bookkeeping — never read by the simulation
     /// itself, so they cannot perturb outcomes.
@@ -150,9 +199,28 @@ impl DeviceSim {
             online: true,
             p_drop: 0.05,
             p_join: 0.5,
+            power_state: PowerState::Awake,
+            woke: false,
+            ledger_clock_s: 0.0,
+            last_busy_s: 0.0,
+            charge_plan: None,
+            drained: false,
             avail_ewma: 1.0,
             swap_ewma: 0.0,
         }
+    }
+
+    /// Enable deterministic plug/unplug charging sessions for this
+    /// device, scheduled by an RNG stream of its own (`seed`): the
+    /// training/availability RNG never sees charging traffic, so
+    /// no-charging runs stay bit-identical.
+    pub fn enable_charging(&mut self, seed: u64) {
+        self.charge_plan = Some(ChargePlan::new(seed, self.battery.capacity_uah()));
+    }
+
+    /// Fleet power state the device is currently parked in.
+    pub fn power_state(&self) -> PowerState {
+        self.power_state
     }
 
     pub fn profile(&self) -> &DeviceProfile {
@@ -210,9 +278,19 @@ impl DeviceSim {
     }
 
     /// Availability step: device may drop (network outage) or rejoin; a
-    /// drained battery forces sleep (paper §III-B: G(k) dynamics).
+    /// drained battery forces sleep (paper §III-B: G(k) dynamics). The
+    /// drained latch only clears once the battery recharges past the
+    /// [`Battery::can_rejoin`] hysteresis band — so with charging
+    /// sessions a dead battery is no longer a dead end, and without
+    /// them the latch never clears (bit-identical to the old behaviour:
+    /// no RNG is drawn while drained).
     pub fn step_availability(&mut self) -> bool {
         if !self.battery.can_train() {
+            self.drained = true;
+        } else if self.drained && self.battery.can_rejoin() {
+            self.drained = false;
+        }
+        if self.drained {
             self.online = false;
         } else {
             self.online = if self.online {
@@ -245,12 +323,21 @@ impl DeviceSim {
                 / self.cache.capacity() as f64,
             swap_ewma: self.swap_ewma,
             avail_ewma: self.avail_ewma,
+            plugged: self.charge_plan.as_ref().is_some_and(ChargePlan::plugged),
+            state: self.power_state,
         }
     }
 
     /// Run one local training round under `scheme`; `new_count` items
     /// arrive, θ = `theta` of the arriving volume is forgotten (DEAL).
     pub fn run_round(&mut self, scheme: Scheme, new_count: usize, theta: f64) -> LocalOutcome {
+        // fleet ledger: training pulls the device to full power; if it
+        // was in deep sleep, the next clock advance bills the wake
+        // transition (latency + resume energy)
+        if self.power_state == PowerState::DeepSleep {
+            self.woke = true;
+        }
+        self.power_state = PowerState::Training;
         self.meter.reset();
         self.cache.begin_round();
         let swaps_before = self.cache.stats().swaps;
@@ -324,6 +411,9 @@ impl DeviceSim {
         out.compute_s += stall;
         out.energy_uah = self.meter.total_uah();
         self.battery.drain(out.energy_uah);
+        // the round window is busy time the next clock advance must not
+        // re-bill as idle
+        self.last_busy_s += out.time_s;
         self.swap_ewma += SWAP_EWMA_W * (out.swaps as f64 - self.swap_ewma);
 
         // --- convergence probe
@@ -408,6 +498,9 @@ impl DeviceSim {
                         time_s = op.time_s + stall;
                         energy_uah = self.meter.total_uah();
                         self.battery.drain(energy_uah);
+                        // FORGET work piggybacks the round window; it is
+                        // busy time for the fleet ledger all the same
+                        self.last_busy_s += time_s;
                         // audit epilogue: stale-vs-fresh recovery attack
                         let fresh_sig = self.workload.signature();
                         model_delta = signature_delta(&stale_sig, &fresh_sig);
@@ -428,6 +521,50 @@ impl DeviceSim {
             audit_pass,
             signature: self.workload.signature(),
         }
+    }
+
+    /// Advance this device's ledger clock by `dt_s` at the close of a
+    /// round: bill the [`FleetMode::park_state`] floor over the idle
+    /// window (the round's busy time, already billed by
+    /// [`Self::run_round`]/[`Self::forget_datum`] on the meter, is
+    /// subtracted for `selected` devices), bill a wake transition if
+    /// training pulled the device out of deep sleep, and run the
+    /// charging schedule. Everything is a pure function of this
+    /// device's own state — no cross-device arithmetic — so the fleet
+    /// ledger is bit-identical however the fleet is batched or sharded.
+    pub fn step_idle(&mut self, dt_s: f64, mode: FleetMode, selected: bool) -> IdleOutcome {
+        let mut out = IdleOutcome { device: self.id, ..IdleOutcome::default() };
+        let busy = std::mem::take(&mut self.last_busy_s);
+        let mut win = if selected { (dt_s - busy).max(0.0) } else { dt_s };
+        // the AllAwake counterfactual: the same idle window billed at
+        // the idle-awake floor (what conventional FL would have drained)
+        out.awake_equiv_uah =
+            state_current_ua(&self.profile, PowerState::Awake) * win / 3600.0;
+        if std::mem::take(&mut self.woke) {
+            // waking a deep sleeper into S(k) — whether the bandit
+            // chose it or the unlearn SLO override forced it — costs
+            // the profile-derived transition
+            let (lat, uah) = wake_cost(&self.profile);
+            out.wakes = 1;
+            out.wake_s = lat;
+            out.wake_uah = uah;
+            self.battery.drain(uah);
+            win = (win - lat).max(0.0);
+        }
+        let park = mode.park_state();
+        self.power_state = park;
+        out.state = park;
+        let floor_uah = state_current_ua(&self.profile, park) * win / 3600.0;
+        match park {
+            PowerState::DeepSleep => out.sleep_uah = floor_uah,
+            _ => out.idle_uah = floor_uah,
+        }
+        self.battery.drain(floor_uah);
+        if let Some(plan) = &mut self.charge_plan {
+            out.charged_uah = plan.advance(self.ledger_clock_s, dt_s, &mut self.battery);
+        }
+        self.ledger_clock_s += dt_s;
+        out
     }
 
     /// Post-FORGET audit: is the victim datum's trace verifiably out of
@@ -756,6 +893,112 @@ mod tests {
         let ack = d.forget_datum(0, n + 10);
         assert_eq!(ack.status, ForgetStatus::AlreadyGone);
         assert!(ack.audit_pass);
+    }
+
+    #[test]
+    fn step_idle_bills_park_state_floor_and_tracks_modes() {
+        let mut d = device(Replacement::Lru, Policy::Interactive);
+        let before = d.battery().level_uah();
+        let sleep = d.step_idle(60.0, FleetMode::DealSleep, false);
+        assert_eq!(sleep.state, PowerState::DeepSleep);
+        assert!(sleep.sleep_uah > 0.0);
+        assert_eq!(sleep.idle_uah, 0.0);
+        assert_eq!(sleep.wakes, 0);
+        assert!(d.battery().level_uah() < before);
+        assert_eq!(d.power_state(), PowerState::DeepSleep);
+        // the AllAwake counterfactual dwarfs the sleep floor
+        assert!(sleep.awake_equiv_uah > 10.0 * sleep.sleep_uah);
+        // same window idle-awake: strictly more than sleeping, equal to
+        // its own counterfactual (savings are exactly zero all-awake)
+        let mut a = device(Replacement::Lru, Policy::Interactive);
+        let awake = a.step_idle(60.0, FleetMode::AllAwake, false);
+        assert_eq!(awake.state, PowerState::Awake);
+        assert!(awake.idle_uah > sleep.sleep_uah);
+        assert_eq!(awake.idle_uah.to_bits(), awake.awake_equiv_uah.to_bits());
+        // kernel-forced idle sits strictly between
+        let mut k = device(Replacement::Lru, Policy::Interactive);
+        let kernel = k.step_idle(60.0, FleetMode::KernelForced, false);
+        assert_eq!(kernel.state, PowerState::Idle);
+        assert!(kernel.idle_uah > sleep.sleep_uah);
+        assert!(kernel.idle_uah < awake.idle_uah);
+    }
+
+    #[test]
+    fn waking_a_deep_sleeper_bills_the_transition_once() {
+        let mut d = device(Replacement::ThetaLru { theta: 0.3 }, Policy::DealAggressive);
+        d.step_idle(60.0, FleetMode::DealSleep, false); // parked DeepSleep
+        let out = d.run_round(Scheme::Deal, 5, 0.3);
+        let idle = d.step_idle(60.0, FleetMode::DealSleep, true);
+        assert_eq!(idle.wakes, 1, "deep sleeper pulled into S(k) must wake");
+        assert!(idle.wake_uah > 0.0);
+        assert!(idle.wake_s > 0.0);
+        // busy window subtracted: the idle remainder is under the period
+        let full_sleep =
+            d.step_idle(60.0, FleetMode::DealSleep, false).sleep_uah;
+        assert!(idle.sleep_uah < full_sleep, "busy window not subtracted");
+        let _ = out;
+        // not selected next round: no second wake billed
+        let again = d.step_idle(60.0, FleetMode::DealSleep, false);
+        assert_eq!(again.wakes, 0);
+        // an awake fleet never bills wake transitions
+        let mut a = device(Replacement::Lru, Policy::Interactive);
+        a.step_idle(60.0, FleetMode::AllAwake, false);
+        a.run_round(Scheme::NewFl, 5, 0.0);
+        assert_eq!(a.step_idle(60.0, FleetMode::AllAwake, true).wakes, 0);
+    }
+
+    #[test]
+    fn drained_device_rejoins_after_recharging_past_threshold() {
+        let mut d = device(Replacement::Lru, Policy::Interactive);
+        // drained with no charging: the old dead end — offline forever
+        d.battery.drain(d.battery.level_uah());
+        for _ in 0..20 {
+            assert!(!d.step_availability(), "drained device must stay offline");
+        }
+        // recharge to 10% — trainable but inside the hysteresis band
+        d.battery.charge(0.10 * d.battery.capacity_uah());
+        assert!(!d.step_availability(), "rejoin threshold not reached yet");
+        // past the rejoin threshold the latch clears and churn resumes
+        d.battery.charge(0.15 * d.battery.capacity_uah());
+        let mut rejoined = false;
+        for _ in 0..64 {
+            if d.step_availability() {
+                rejoined = true;
+                break;
+            }
+        }
+        assert!(rejoined, "recharged device never rejoined availability");
+    }
+
+    #[test]
+    fn charging_sessions_refill_a_drained_device() {
+        let mut d = device(Replacement::Lru, Policy::Interactive);
+        d.enable_charging(99);
+        d.battery.drain(d.battery.level_uah());
+        assert!(!d.step_availability());
+        // walk the ledger clock until a plug session lands (first plug
+        // arrives within 4 virtual hours; sessions charge at 0.5C)
+        let mut charged = 0.0;
+        for _ in 0..40 {
+            charged += d.step_idle(900.0, FleetMode::DealSleep, false).charged_uah;
+        }
+        assert!(charged > 0.0, "no plug session in 10 virtual hours");
+        assert!(d.battery().fraction() > 0.0);
+        // snapshot telemetry reflects the plan's plugged bit
+        let s = d.snapshot();
+        assert_eq!(s.plugged, d.charge_plan.as_ref().unwrap().plugged());
+    }
+
+    #[test]
+    fn step_idle_without_charging_draws_no_rng() {
+        // the ledger must never perturb the availability/training RNG:
+        // a twin device that never steps the ledger sees the same stream
+        let mut a = device(Replacement::Lru, Policy::Interactive);
+        let mut b = device(Replacement::Lru, Policy::Interactive);
+        for _ in 0..50 {
+            a.step_idle(60.0, FleetMode::DealSleep, false);
+            assert_eq!(a.step_availability(), b.step_availability());
+        }
     }
 
     #[test]

@@ -18,6 +18,7 @@ use crate::data::synth::{self, Data, Dataset};
 use crate::memsim::Replacement;
 use crate::power::governor::Policy;
 use crate::power::profile::table1_profiles;
+use crate::power::FleetMode;
 
 /// Everything needed to stand up an experiment.
 #[derive(Debug, Clone)]
@@ -80,6 +81,20 @@ pub struct FleetConfig {
     /// this denies targeted FORGETs (retrain instead of downdating a
     /// degraded model). `INFINITY` (the default) never triggers.
     pub guard_max_drift: f64,
+    /// Fleet power policy (`deal run --mode deal|allawake|kernel`);
+    /// `None` derives from the scheme — DEAL sleeps unselected workers,
+    /// baselines emulate conventional FL's all-awake fleet.
+    /// `KernelForced` additionally pins the governor to `Powersave`
+    /// (unless `policy` overrides it) — cheap, at the TTL/SLO's expense.
+    pub mode: Option<FleetMode>,
+    /// Deterministic plug/unplug charging sessions per device
+    /// (`deal run --charging on`). Off by default — the no-charging
+    /// path must stay bit-identical, and each plan runs its own RNG
+    /// stream so enabling it never perturbs training RNG.
+    pub charging: bool,
+    /// Virtual round period (s) the fleet ledger bills idle floors
+    /// over (`deal run --period`).
+    pub round_period_s: f64,
 }
 
 impl Default for FleetConfig {
@@ -108,6 +123,9 @@ impl Default for FleetConfig {
             deletion_slo: 5,
             guard_min_retained: 0.05,
             guard_max_drift: f64::INFINITY,
+            mode: None,
+            charging: false,
+            round_period_s: 60.0,
         }
     }
 }
@@ -135,8 +153,11 @@ pub fn build_devices(cfg: &FleetConfig) -> Vec<DeviceSim> {
     let rows = data.rows();
     let shards = synth::shard_indices(rows, cfg.n_devices);
     let profiles = table1_profiles();
-    let policy = cfg.policy.unwrap_or(match cfg.scheme {
-        Scheme::Deal => Policy::DealAggressive,
+    let policy = cfg.policy.unwrap_or(match (cfg.mode, cfg.scheme) {
+        // kernel-forced powersave: the ladder floor is pinned fleet-wide
+        // — the paper's "at the SLO's expense" configuration
+        (Some(FleetMode::KernelForced), _) => Policy::Powersave,
+        (_, Scheme::Deal) => Policy::DealAggressive,
         _ => Policy::Interactive,
     });
     let replacement = match cfg.scheme {
@@ -158,6 +179,16 @@ pub fn build_devices(cfg: &FleetConfig) -> Vec<DeviceSim> {
                 cfg.seed.wrapping_mul(0x9E3779B9) + i as u64,
             );
             dev.configure_guard(cfg.guard_min_retained, cfg.guard_max_drift);
+            if cfg.charging {
+                // per-device plug/unplug stream, derived from the fleet
+                // seed but independent of the training RNG streams
+                dev.enable_charging(
+                    cfg.seed
+                        .wrapping_mul(0xD1B5_4A32_D192_ED03)
+                        .wrapping_add(i as u64)
+                        ^ 0xC4A6_1ED6,
+                );
+            }
             dev.prefill(prefill);
             dev
         })
@@ -259,6 +290,8 @@ pub fn build(cfg: &FleetConfig) -> Federation {
             seed: cfg.seed.wrapping_mul(0x5851_F42D_4C95_7F2D) ^ 0x6DDA_11CE,
             ..UnlearnConfig::default()
         },
+        mode: cfg.mode,
+        round_period_s: cfg.round_period_s,
         ..FederationConfig::default()
     };
     Federation::with_contextual_selector(transport, selector, fed_cfg)

@@ -47,10 +47,26 @@
 //!   aggregation (majority/TTL cut, wait-all, or buffered-async
 //!   crediting of stragglers δ rounds late), rewards, convergence
 //!   (§III-A/B), and deletion-SLO accounting in [`FederationStats`]
+//! - **The fleet power-state ledger** (PR 5): at the close of every
+//!   round the engine broadcasts a [`ClockTick`] through
+//!   [`Transport::advance_clock`] — one batched message per worker —
+//!   and *every* device bills its [`crate::power::PowerState`] floor
+//!   over the round period via `DeviceSim::step_idle` (selected
+//!   devices bill only their idle remainder; deep sleepers pulled into
+//!   S(k), by the bandit or the unlearn SLO wake-override, pay a
+//!   profile-derived wake transition; plugged charging sessions refill
+//!   batteries and drained devices rejoin availability). The
+//!   [`crate::power::FleetMode`] policy (`deal run --mode`) chooses the
+//!   parking state — DEAL's deep sleep, conventional FL's idle-awake
+//!   emulation, or kernel-forced powersave — and
+//!   [`FederationStats::fleet`] reports the whole-fleet footprint by
+//!   state plus the savings ratio vs the AllAwake baseline (the
+//!   paper's 75.6–82.4% headline)
 //! - [`fleet`] — experiment builder used by benches and examples
 //!   (`FleetConfig::selector` / `FleetConfig::features` pick the
 //!   selection algorithm and gate the telemetry pipeline;
-//!   `FleetConfig::deletion_rate` turns on the deletion stream)
+//!   `FleetConfig::deletion_rate` turns on the deletion stream;
+//!   `FleetConfig::{mode, charging, round_period_s}` drive the ledger)
 
 pub mod device;
 pub mod fleet;
@@ -61,14 +77,14 @@ pub mod transport;
 pub mod unlearn;
 pub mod workload;
 
-pub use device::{DeviceSim, LocalOutcome};
+pub use device::{DeviceSim, IdleOutcome, LocalOutcome};
 pub use fleet::FleetConfig;
 pub use scheme::{Aggregation, Scheme};
 pub use server::{Federation, FederationConfig, FederationStats};
 pub use shard::ShardedTransport;
 pub use transport::{
-    ProbeReport, RoundJob, ShardSummary, SyncTransport, ThreadedTransport, Transport,
-    TransportKind, WorkerReply,
+    ClockTick, ProbeReport, RoundJob, ShardSummary, SyncTransport, ThreadedTransport,
+    Transport, TransportKind, WorkerReply,
 };
 pub use unlearn::{
     DeletionRequest, ForgetAck, ForgetCommand, ForgetStatus, UnlearnConfig,

@@ -15,10 +15,10 @@
 
 use super::device::{DeviceSim, LocalOutcome};
 use super::scheme::{Aggregation, Scheme};
-use super::transport::{RoundJob, ShardSummary, SyncTransport, Transport};
+use super::transport::{ClockTick, RoundJob, ShardSummary, SyncTransport, Transport};
 use super::unlearn::{UnlearnConfig, UnlearnQueue, UnlearnStats};
 use crate::bandit::{ContextFree, ContextualSelector, Selector};
-use crate::power::DeviceSnapshot;
+use crate::power::{DeviceSnapshot, FleetEnergyBreakdown, FleetMode};
 use crate::util::stats::Summary;
 
 /// Federation configuration.
@@ -48,6 +48,16 @@ pub struct FederationConfig {
     /// inert (rate 0) and leaves the round path bit-identical to the
     /// pre-unlearning engine.
     pub unlearn: UnlearnConfig,
+    /// Fleet power policy (`deal run --mode`); `None` derives from the
+    /// scheme — DEAL parks unselected workers in deep sleep, the
+    /// baselines emulate conventional FL's all-awake fleet.
+    pub mode: Option<FleetMode>,
+    /// Virtual wall-clock period of one round (s): the window the fleet
+    /// ledger bills idle floors over (max'd with the round's own span
+    /// when a straggler round runs longer). The paper's premise is that
+    /// rounds are minutes apart while training is a burst — this is
+    /// where the all-awake drain actually accrues.
+    pub round_period_s: f64,
 }
 
 impl Default for FederationConfig {
@@ -62,6 +72,8 @@ impl Default for FederationConfig {
             aggregation: None,
             features: true,
             unlearn: UnlearnConfig::default(),
+            mode: None,
+            round_period_s: 60.0,
         }
     }
 }
@@ -90,6 +102,21 @@ pub struct RoundRecord {
     /// Σ energy of this round's targeted FORGET ops (µAh), kept apart
     /// from `energy_uah` so the forget energy share is reportable.
     pub forget_energy_uah: f64,
+    /// Fleet ledger, idle-awake/kernel-idle floors billed this round
+    /// window (µAh) — every device, selected or not.
+    pub fleet_idle_uah: f64,
+    /// Fleet ledger, deep-sleep floors billed this round window (µAh).
+    pub fleet_sleep_uah: f64,
+    /// Fleet ledger, wake-transition energy billed this round (µAh).
+    pub fleet_wake_uah: f64,
+    /// Wake transitions billed (deep sleepers pulled into S(k)).
+    pub wake_transitions: u64,
+    /// Charge added by plugged sessions this round window (µAh).
+    pub charged_uah: f64,
+    /// The same round window with every idle device billed at the
+    /// idle-awake floor — the AllAwake baseline term the savings ratio
+    /// accrues against.
+    pub allawake_equiv_uah: f64,
 }
 
 /// A straggler reply buffered by `AsyncBuffered` aggregation, waiting
@@ -214,6 +241,16 @@ impl Federation {
         self.cfg
             .aggregation
             .unwrap_or_else(|| self.cfg.scheme.default_aggregation())
+    }
+
+    /// The fleet power policy in force: the config override, or the
+    /// scheme default — DEAL sleeps unselected workers (§III-B), the
+    /// baselines emulate conventional FL's all-awake fleet.
+    pub fn fleet_mode(&self) -> FleetMode {
+        self.cfg.mode.unwrap_or(match self.cfg.scheme {
+            Scheme::Deal => FleetMode::DealSleep,
+            Scheme::Original | Scheme::NewFl => FleetMode::AllAwake,
+        })
     }
 
     /// Stragglers currently buffered and not yet credited.
@@ -457,6 +494,30 @@ impl Federation {
             }
         }
         self.clock_s += round_time;
+        // 7. fleet ledger: advance every device's power-state clock
+        // over the round period — selected devices bill only their idle
+        // remainder, everyone else the mode's park-state floor; wake
+        // transitions (bandit- or SLO-woken deep sleepers alike) and
+        // charging sessions land here. Reports come back ascending by
+        // device id on every fabric, and the fold below keeps that
+        // order, so the ledger is bit-identical across transports,
+        // batch sizes and shard counts.
+        let tick = ClockTick {
+            dt_s: self.cfg.round_period_s.max(round_time),
+            mode: self.fleet_mode(),
+        };
+        let ledger = self.transport.advance_clock(tick, &selected);
+        let (mut idle, mut sleep, mut wake) = (0.0f64, 0.0f64, 0.0f64);
+        let (mut charged, mut awake_equiv) = (0.0f64, 0.0f64);
+        let mut wakes = 0u64;
+        for r in &ledger {
+            idle += r.idle_uah;
+            sleep += r.sleep_uah;
+            wake += r.wake_uah;
+            charged += r.charged_uah;
+            awake_equiv += r.awake_equiv_uah;
+            wakes += r.wakes;
+        }
         let rec = RoundRecord {
             round: self.round,
             available: n_available,
@@ -468,6 +529,12 @@ impl Federation {
             in_time,
             forgets,
             forget_energy_uah: forget_energy,
+            fleet_idle_uah: idle,
+            fleet_sleep_uah: sleep,
+            fleet_wake_uah: wake,
+            wake_transitions: wakes,
+            charged_uah: charged,
+            allawake_equiv_uah: awake_equiv,
         };
         self.rounds.push(rec.clone());
         rec
@@ -529,6 +596,34 @@ impl Federation {
             .find(|r| r.mean_accuracy > 0.0)
             .map_or(0.0, |r| r.mean_accuracy);
         let conv: Vec<f64> = self.convergence_time_s.iter().copied().flatten().collect();
+        // fleet energy ledger: the whole-fleet footprint by power state,
+        // plus the emulated AllAwake baseline (same training, every idle
+        // window billed at the idle-awake floor). Under AllAwake mode
+        // the actual idle billing *is* the baseline term, so the
+        // savings ratio is exactly 0.0 there.
+        let fleet = FleetEnergyBreakdown {
+            train_uah: train_energy,
+            idle_uah: self.rounds.iter().map(|r| r.fleet_idle_uah).sum(),
+            sleep_uah: self.rounds.iter().map(|r| r.fleet_sleep_uah).sum(),
+            wake_uah: self.rounds.iter().map(|r| r.fleet_wake_uah).sum(),
+            forget_uah: forget_energy,
+        };
+        // the baseline sums in the same shape as `fleet.total_uah()`
+        // (train, idle, sleep, wake, forget), so under AllAwake mode —
+        // where the idle billing bit-equals the counterfactual — the
+        // savings ratio is exactly 0.0, not 0.0-plus-rounding
+        let allawake_baseline_uah = FleetEnergyBreakdown {
+            idle_uah: self.rounds.iter().map(|r| r.allawake_equiv_uah).sum(),
+            sleep_uah: 0.0,
+            wake_uah: 0.0,
+            ..fleet
+        }
+        .total_uah();
+        let savings_vs_allawake = if allawake_baseline_uah > 0.0 {
+            1.0 - fleet.total_uah() / allawake_baseline_uah
+        } else {
+            0.0
+        };
         FederationStats {
             rounds: self.rounds.len(),
             total_time_s: total_time,
@@ -540,6 +635,11 @@ impl Federation {
             converged_devices: conv.len(),
             convergence_times_s: conv,
             unlearn: self.unlearn.stats(),
+            fleet,
+            allawake_baseline_uah,
+            savings_vs_allawake,
+            wake_transitions: self.rounds.iter().map(|r| r.wake_transitions).sum(),
+            charged_uah: self.rounds.iter().map(|r| r.charged_uah).sum(),
         }
     }
 }
@@ -549,12 +649,28 @@ impl Federation {
 pub struct FederationStats {
     pub rounds: usize,
     pub total_time_s: f64,
+    /// *Active* device energy: training + targeted FORGETs (the
+    /// per-reply meter totals). The whole-fleet footprint, idle floors
+    /// included, is [`Self::fleet`].
     pub total_energy_uah: f64,
     pub final_accuracy: f64,
     pub converged_devices: usize,
     pub convergence_times_s: Vec<f64>,
     /// Deletion-SLO metrics (all zero for empty deletion streams).
     pub unlearn: UnlearnStats,
+    /// Fleet-wide energy by power state; `fleet.total_uah()` is exactly
+    /// the sum of its train/idle/sleep/wake/forget buckets.
+    pub fleet: FleetEnergyBreakdown,
+    /// The emulated conventional-FL footprint: same training, every
+    /// idle window billed at the idle-awake floor.
+    pub allawake_baseline_uah: f64,
+    /// `1 − fleet.total_uah() / allawake_baseline_uah` — the paper's
+    /// headline ratio (75.6–82.4% in their testbed).
+    pub savings_vs_allawake: f64,
+    /// Wake transitions billed across the run.
+    pub wake_transitions: u64,
+    /// Charge received from plugged sessions across the run (µAh).
+    pub charged_uah: f64,
 }
 
 #[cfg(test)]
@@ -905,6 +1021,108 @@ mod tests {
             assert_eq!(a.forget_energy_uah, 0.0);
         }
         assert_eq!(plain.stats().unlearn, UnlearnStats::default());
+    }
+
+    #[test]
+    fn fleet_mode_defaults_follow_scheme() {
+        assert_eq!(small_federation(Scheme::Deal).fleet_mode(), FleetMode::DealSleep);
+        assert_eq!(small_federation(Scheme::Original).fleet_mode(), FleetMode::AllAwake);
+        assert_eq!(small_federation(Scheme::NewFl).fleet_mode(), FleetMode::AllAwake);
+        let mut cfg = small_cfg(Scheme::Deal);
+        cfg.mode = Some(FleetMode::KernelForced);
+        assert_eq!(fleet::build(&cfg).fleet_mode(), FleetMode::KernelForced);
+    }
+
+    #[test]
+    fn fleet_breakdown_sums_exactly_and_tracks_modes() {
+        let mut f = small_federation(Scheme::Deal);
+        let s = f.run(8);
+        let b = &s.fleet;
+        // conservation: the total is the exact sum of the buckets, and
+        // the buckets re-sum from the per-round records bit-for-bit
+        assert_eq!(
+            b.total_uah().to_bits(),
+            (b.train_uah + b.idle_uah + b.sleep_uah + b.wake_uah + b.forget_uah)
+                .to_bits()
+        );
+        let idle: f64 = f.rounds.iter().map(|r| r.fleet_idle_uah).sum();
+        let sleep: f64 = f.rounds.iter().map(|r| r.fleet_sleep_uah).sum();
+        assert_eq!(idle.to_bits(), b.idle_uah.to_bits());
+        assert_eq!(sleep.to_bits(), b.sleep_uah.to_bits());
+        // DEAL parks in deep sleep: sleep floor accrues, idle never
+        assert!(b.sleep_uah > 0.0);
+        assert_eq!(b.idle_uah, 0.0);
+        assert_eq!(b.train_uah.to_bits(), s.total_energy_uah.to_bits());
+        // deep sleepers re-selected after round 1 pay wake transitions
+        assert!(s.wake_transitions > 0, "no wake was ever billed");
+        assert!(b.wake_uah > 0.0);
+    }
+
+    #[test]
+    fn allawake_mode_is_its_own_baseline_and_dealsleep_saves_big() {
+        let mut awake_cfg = small_cfg(Scheme::Deal);
+        awake_cfg.mode = Some(FleetMode::AllAwake);
+        let mut awake = fleet::build(&awake_cfg);
+        let sa = awake.run(8);
+        // all-awake: idle billing IS the baseline term — savings exactly 0
+        assert_eq!(sa.savings_vs_allawake, 0.0);
+        let equiv: f64 = awake.rounds.iter().map(|r| r.allawake_equiv_uah).sum();
+        assert_eq!(sa.fleet.idle_uah.to_bits(), equiv.to_bits());
+        assert_eq!(sa.wake_transitions, 0, "an awake fleet never wakes");
+        // the same fleet under DEAL's sleep policy: the headline claim —
+        // the fleet footprint collapses vs the all-awake baseline
+        let mut deal = small_federation(Scheme::Deal);
+        let sd = deal.run(8);
+        assert!(
+            sd.savings_vs_allawake >= 0.5,
+            "savings {} below the paper's ballpark",
+            sd.savings_vs_allawake
+        );
+        assert!(sd.fleet.total_uah() < sd.allawake_baseline_uah);
+    }
+
+    #[test]
+    fn kernel_forced_idles_between_sleep_and_awake() {
+        let run_mode = |mode: FleetMode| {
+            let mut cfg = small_cfg(Scheme::Deal);
+            cfg.mode = Some(mode);
+            fleet::build(&cfg).run(6)
+        };
+        let sleep = run_mode(FleetMode::DealSleep);
+        let kernel = run_mode(FleetMode::KernelForced);
+        let awake = run_mode(FleetMode::AllAwake);
+        // kernel-forced bills shallow idle: dearer than deep sleep,
+        // cheaper than the awake floor (training energy differs too —
+        // powersave pins the ladder — so compare the idle buckets)
+        assert!(kernel.fleet.idle_uah > sleep.fleet.sleep_uah);
+        assert!(kernel.fleet.idle_uah < awake.fleet.idle_uah);
+        assert_eq!(kernel.wake_transitions, 0, "shallow idle resumes for free");
+        // ...and the SLO expense: powersave training is slower
+        let kernel_time: f64 = kernel.total_time_s;
+        assert!(
+            kernel_time >= sleep.total_time_s,
+            "powersave rounds should not run faster: {kernel_time} vs {}",
+            sleep.total_time_s
+        );
+    }
+
+    #[test]
+    fn round_period_floor_bills_idle_windows() {
+        // a tiny period degenerates to the round's own span — the
+        // ledger never bills a window shorter than the round
+        let mut cfg = small_cfg(Scheme::Deal);
+        cfg.round_period_s = 1e-9;
+        let mut f = fleet::build(&cfg);
+        let rec = f.run_round();
+        assert!(rec.fleet_sleep_uah >= 0.0);
+        let mut cfg2 = small_cfg(Scheme::Deal);
+        cfg2.round_period_s = 3600.0;
+        let mut g = fleet::build(&cfg2);
+        let rec2 = g.run_round();
+        assert!(
+            rec2.fleet_sleep_uah > rec.fleet_sleep_uah,
+            "longer period must bill more idle floor"
+        );
     }
 
     #[test]

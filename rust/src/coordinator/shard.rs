@@ -24,11 +24,11 @@
 //!   aggregate selection fraction meets Σᵢ∈shard rᵢ — enforced by
 //!   `rust/tests/prop_selector.rs`.
 
-use super::device::DeviceSim;
+use super::device::{DeviceSim, IdleOutcome};
 use super::transport::{
-    default_workers, partition_bounds, partition_chunks, sort_replies, ProbeReport,
-    RoundJob, ShardSummary, SyncTransport, ThreadedTransport, Transport, TransportKind,
-    WorkerReply,
+    default_workers, partition_bounds, partition_chunks, sort_replies, ClockTick,
+    ProbeReport, RoundJob, ShardSummary, SyncTransport, ThreadedTransport, Transport,
+    TransportKind, WorkerReply,
 };
 use super::unlearn::{sort_acks, ForgetAck, ForgetCommand};
 use crate::power::DeviceProfile;
@@ -48,6 +48,9 @@ struct ShardCounters {
     peak_gflops_sum: f64,
     forgets: u64,
     forget_energy_uah: f64,
+    idle_uah: f64,
+    sleep_uah: f64,
+    wake_uah: f64,
 }
 
 /// One shard leader. Held concretely (not as `Box<dyn Transport>`) so
@@ -253,6 +256,45 @@ impl Transport for ShardedTransport {
         merged
     }
 
+    fn advance_clock(&mut self, tick: ClockTick, selected: &[usize]) -> Vec<IdleOutcome> {
+        // bucket the selected set by owning shard, rebased local
+        let mut per_shard: Vec<Vec<usize>> = vec![Vec::new(); self.leaders.len()];
+        for &g in selected {
+            let s = self.shard_of(g);
+            per_shard[s].push(g - self.bounds[s]);
+        }
+        // phase 1: tick every threaded leader before awaiting anyone —
+        // idle billing overlaps across shards like round jobs
+        for (s, leader) in self.leaders.iter_mut().enumerate() {
+            if let Leader::Threaded(t) = leader {
+                t.dispatch_clock(tick, &per_shard[s]);
+            }
+        }
+        // phase 2: run sync leaders / collect threaded rows, keeping
+        // per-shard idle/sleep/wake energy in the root's books; shard
+        // bases ascend and each leader reports ascending local ids, so
+        // the concatenation is already globally ascending
+        let mut merged: Vec<IdleOutcome> = Vec::with_capacity(self.n_devices());
+        for s in 0..self.leaders.len() {
+            let base = self.bounds[s];
+            let reports = match &mut self.leaders[s] {
+                Leader::Sync(t) => t.advance_clock(tick, &per_shard[s]),
+                Leader::Threaded(t) => t.collect_clock(),
+            };
+            let sum = &mut self.counters[s];
+            for r in &reports {
+                sum.idle_uah += r.idle_uah;
+                sum.sleep_uah += r.sleep_uah;
+                sum.wake_uah += r.wake_uah;
+            }
+            merged.extend(reports.into_iter().map(|mut r| {
+                r.device += base;
+                r
+            }));
+        }
+        merged
+    }
+
     fn n_devices(&self) -> usize {
         *self.bounds.last().unwrap()
     }
@@ -295,6 +337,9 @@ impl Transport for ShardedTransport {
                 peak_gflops_sum: c.peak_gflops_sum,
                 forgets: c.forgets,
                 forget_energy_uah: c.forget_energy_uah,
+                idle_uah: c.idle_uah,
+                sleep_uah: c.sleep_uah,
+                wake_uah: c.wake_uah,
             })
             .collect()
     }
@@ -475,6 +520,41 @@ mod tests {
         for i in 0..9 {
             assert_eq!(flat.shard_len(i), sharded.shard_len(i));
         }
+    }
+
+    #[test]
+    fn clock_advance_matches_flat_and_books_per_shard_ledger() {
+        use crate::power::FleetMode;
+        let tick = ClockTick { dt_s: 90.0, mode: FleetMode::DealSleep };
+        let mut flat = SyncTransport::new(fleet(9));
+        let mut sharded = ShardedTransport::new(fleet(9), 3, TransportKind::Sync);
+        let mut threaded_inner = ShardedTransport::new(fleet(9), 3, TransportKind::Threaded);
+        let selected = [0usize, 4, 8];
+        for round in 1..=3u64 {
+            flat.execute(&selected, job(round));
+            sharded.execute(&selected, job(round));
+            threaded_inner.execute(&selected, job(round));
+            let want = flat.advance_clock(tick, &selected);
+            let got = sharded.advance_clock(tick, &selected);
+            let got_thr = threaded_inner.advance_clock(tick, &selected);
+            assert_eq!(want, got, "round {round}: sharded ledger diverged");
+            assert_eq!(want, got_thr, "round {round}: threaded-inner ledger diverged");
+            // globally ascending ids survive the rebase
+            for w in got.windows(2) {
+                assert!(w[0].device < w[1].device);
+            }
+        }
+        // the root's per-shard ledger books re-sum to the merged rows
+        let rows = flat.advance_clock(tick, &selected);
+        let sums = sharded.shard_summaries();
+        let _ = sharded.advance_clock(tick, &selected);
+        let sums2 = sharded.shard_summaries();
+        let row_sleep: f64 = rows.iter().map(|r| r.sleep_uah).sum();
+        let booked: f64 = sums2.iter().map(|s| s.sleep_uah).sum::<f64>()
+            - sums.iter().map(|s| s.sleep_uah).sum::<f64>();
+        assert!((row_sleep - booked).abs() < 1e-9, "{row_sleep} vs {booked}");
+        assert!(sums2.iter().all(|s| s.sleep_uah > 0.0));
+        assert!(sums2.iter().all(|s| s.idle_uah == 0.0), "deal mode never idles awake");
     }
 
     #[test]

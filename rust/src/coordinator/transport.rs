@@ -32,10 +32,10 @@
 use std::sync::mpsc::{channel, Receiver, Sender};
 use std::thread::JoinHandle;
 
-use super::device::{DeviceSim, LocalOutcome};
+use super::device::{DeviceSim, IdleOutcome, LocalOutcome};
 use super::scheme::Scheme;
 use super::unlearn::{sort_acks, ForgetAck, ForgetCommand};
-use crate::power::{DeviceProfile, DeviceSnapshot};
+use crate::power::{DeviceProfile, DeviceSnapshot, FleetMode};
 
 /// Job published to the selected workers for one round (the PUB half of
 /// the paper's PUB/SUB round protocol).
@@ -47,6 +47,20 @@ pub struct RoundJob {
     pub arrivals: usize,
     /// DEAL forget degree θ.
     pub theta: f64,
+}
+
+/// One fleet-clock advance broadcast at the close of a round: *every*
+/// device — selected or not, online or not — bills its power-state
+/// floor (and charging schedule) over the same `dt_s` window under the
+/// fleet `mode`. Batched like [`RoundJob`]s: one message per worker,
+/// so billing 10⁴ idle devices stays O(workers) messages per round.
+#[derive(Debug, Clone, Copy)]
+pub struct ClockTick {
+    /// Window length (virtual s): the round period, or the round's own
+    /// span when a straggler round ran longer.
+    pub dt_s: f64,
+    /// Fleet power policy choosing each device's parking state.
+    pub mode: FleetMode,
 }
 
 /// Which transport a fleet is built over.
@@ -119,6 +133,13 @@ pub struct ShardSummary {
     pub forgets: u64,
     /// Σ energy of this shard's targeted FORGET ops (µAh).
     pub forget_energy_uah: f64,
+    /// Σ idle-awake / kernel-idle floor energy billed to this shard by
+    /// the fleet ledger (µAh).
+    pub idle_uah: f64,
+    /// Σ deep-sleep floor energy billed to this shard (µAh).
+    pub sleep_uah: f64,
+    /// Σ wake-transition energy billed to this shard (µAh).
+    pub wake_uah: f64,
 }
 
 /// The server's view of its worker fabric.
@@ -141,6 +162,16 @@ pub trait Transport {
     /// (time, device, request) — the same determinism contract as
     /// [`Transport::execute`], so acks are bit-identical across fabrics.
     fn execute_forgets(&mut self, commands: &[ForgetCommand]) -> Vec<ForgetAck>;
+
+    /// Advance the fleet ledger: every device bills its power-state
+    /// floor (wake transitions and charging sessions included) over the
+    /// tick's window via [`DeviceSim::step_idle`]. `selected` names the
+    /// devices whose round busy-time must be subtracted from the idle
+    /// window. Reports return **ascending by device id** — each
+    /// device's billing is a pure function of its own state, and the
+    /// caller folds the reports in id order, so the ledger is
+    /// bit-identical across fabrics, batch sizes and shard counts.
+    fn advance_clock(&mut self, tick: ClockTick, selected: &[usize]) -> Vec<IdleOutcome>;
 
     /// Fleet size.
     fn n_devices(&self) -> usize;
@@ -267,6 +298,22 @@ impl Transport for SyncTransport {
         acks
     }
 
+    fn advance_clock(&mut self, tick: ClockTick, selected: &[usize]) -> Vec<IdleOutcome> {
+        let mut is_selected = vec![false; self.devices.len()];
+        for &i in selected {
+            is_selected[i] = true;
+        }
+        self.devices
+            .iter_mut()
+            .enumerate()
+            .map(|(i, d)| {
+                let mut r = d.step_idle(tick.dt_s, tick.mode, is_selected[i]);
+                r.device = i; // transport id space, like WorkerReply
+                r
+            })
+            .collect()
+    }
+
     fn n_devices(&self) -> usize {
         self.devices.len()
     }
@@ -298,6 +345,9 @@ enum Ctl {
     /// Targeted FORGET commands for devices this worker owns (global
     /// ids; the worker rebases by its slice start).
     Forget { commands: Vec<ForgetCommand> },
+    /// Fleet-clock advance over the worker's whole slice; `selected`
+    /// lists the slice members whose busy window the round billed.
+    Clock { tick: ClockTick, selected: Vec<usize> },
     Stop,
 }
 
@@ -306,6 +356,7 @@ enum Reply {
     Outcomes { worker: usize, outcomes: Vec<WorkerReply> },
     Online { worker: usize, online: Vec<ProbeReport> },
     Acks { worker: usize, acks: Vec<ForgetAck> },
+    Ledger { worker: usize, reports: Vec<IdleOutcome> },
 }
 
 /// One worker endpoint.
@@ -407,7 +458,8 @@ impl ThreadedTransport {
                     let w = match &r {
                         Reply::Outcomes { worker, .. }
                         | Reply::Online { worker, .. }
-                        | Reply::Acks { worker, .. } => *worker,
+                        | Reply::Acks { worker, .. }
+                        | Reply::Ledger { worker, .. } => *worker,
                     };
                     got[w] = true;
                     replies.push(r);
@@ -466,9 +518,7 @@ impl ThreadedTransport {
             .into_iter()
             .flat_map(|r| match r {
                 Reply::Outcomes { outcomes, .. } => outcomes,
-                Reply::Online { .. } | Reply::Acks { .. } => {
-                    unreachable!("non-job reply to a job")
-                }
+                _ => unreachable!("non-job reply to a job"),
             })
             .collect();
         sort_replies(&mut replies);
@@ -504,13 +554,41 @@ impl ThreadedTransport {
             .into_iter()
             .flat_map(|r| match r {
                 Reply::Acks { acks, .. } => acks,
-                Reply::Outcomes { .. } | Reply::Online { .. } => {
-                    unreachable!("non-ack reply to a forget batch")
-                }
+                _ => unreachable!("non-ack reply to a forget batch"),
             })
             .collect();
         sort_acks(&mut acks);
         acks
+    }
+
+    /// Fire a fleet-clock advance at every worker without waiting —
+    /// one message per worker carrying its slice's selected members.
+    /// Split out so a shard root can tick all its leaders before any
+    /// of them blocks on replies.
+    pub(crate) fn dispatch_clock(&mut self, tick: ClockTick, selected: &[usize]) {
+        let mut members: Vec<Vec<usize>> = vec![Vec::new(); self.endpoints.len()];
+        for &i in selected {
+            members[self.owner[i]].push(i);
+        }
+        for (ep, m) in self.endpoints.iter().zip(members) {
+            let _ = ep.tx.send(Ctl::Clock { tick, selected: m });
+        }
+    }
+
+    /// Collect the ledger rows owed by a prior [`Self::dispatch_clock`],
+    /// ascending by device id.
+    pub(crate) fn collect_clock(&mut self) -> Vec<IdleOutcome> {
+        let all: Vec<usize> = (0..self.endpoints.len()).collect();
+        let mut reports: Vec<IdleOutcome> = self
+            .collect_from(&all)
+            .into_iter()
+            .flat_map(|r| match r {
+                Reply::Ledger { reports, .. } => reports,
+                _ => unreachable!("non-ledger reply to a clock tick"),
+            })
+            .collect();
+        reports.sort_unstable_by_key(|r| r.device);
+        reports
     }
 
     /// Fire an availability probe at every worker without waiting.
@@ -529,9 +607,7 @@ impl ThreadedTransport {
             .into_iter()
             .flat_map(|r| match r {
                 Reply::Online { online, .. } => online,
-                Reply::Outcomes { .. } | Reply::Acks { .. } => {
-                    unreachable!("non-probe reply to a probe")
-                }
+                _ => unreachable!("non-probe reply to a probe"),
             })
             .collect();
         online.sort_unstable_by_key(|&(i, _)| i);
@@ -589,6 +665,27 @@ fn worker_loop(
                     break;
                 }
             }
+            Ok(Ctl::Clock { tick, selected }) => {
+                // O(1) membership over the slice (select-all schemes
+                // make |selected| ≈ slice_len — no linear scans here)
+                let mut is_selected = vec![false; devices.len()];
+                for &g in &selected {
+                    is_selected[g - start] = true;
+                }
+                let reports: Vec<IdleOutcome> = devices
+                    .iter_mut()
+                    .enumerate()
+                    .map(|(j, d)| {
+                        let mut r =
+                            d.step_idle(tick.dt_s, tick.mode, is_selected[j]);
+                        r.device = start + j; // transport id space, as replies
+                        r
+                    })
+                    .collect();
+                if out.send(Reply::Ledger { worker, reports }).is_err() {
+                    break;
+                }
+            }
             Ok(Ctl::Stop) | Err(_) => break,
         }
     }
@@ -614,6 +711,11 @@ impl Transport for ThreadedTransport {
     fn execute_forgets(&mut self, commands: &[ForgetCommand]) -> Vec<ForgetAck> {
         let pinged = self.dispatch_forgets(commands);
         self.collect_forgets(&pinged)
+    }
+
+    fn advance_clock(&mut self, tick: ClockTick, selected: &[usize]) -> Vec<IdleOutcome> {
+        self.dispatch_clock(tick, selected);
+        self.collect_clock()
     }
 
     fn n_devices(&self) -> usize {
@@ -856,6 +958,47 @@ mod tests {
             assert_eq!(sync.shard_len(i), thr.shard_len(i));
             assert!(sync.shard_len(i) > 0);
         }
+    }
+
+    #[test]
+    fn advance_clock_bills_every_device_identically_across_fabrics() {
+        use crate::power::PowerState;
+        let tick = ClockTick { dt_s: 60.0, mode: FleetMode::DealSleep };
+        let mut sync = SyncTransport::new(fleet(7));
+        let mut batched: Vec<ThreadedTransport> = [1usize, 3, 7]
+            .into_iter()
+            .map(|w| ThreadedTransport::spawn_batched(fleet(7), w))
+            .collect();
+        for round in 1..=3u64 {
+            let selected = [1usize, 4, 6];
+            let j = job(round, Scheme::Deal, 4, 0.3);
+            let want_replies = sync.execute(&selected, j);
+            let want = sync.advance_clock(tick, &selected);
+            // every device got a ledger row, ascending, parked deep
+            assert_eq!(want.len(), 7);
+            for (i, r) in want.iter().enumerate() {
+                assert_eq!(r.device, i);
+                assert_eq!(r.state, PowerState::DeepSleep);
+                assert!(r.sleep_uah > 0.0);
+            }
+            for t in &mut batched {
+                let replies = t.execute(&selected, j);
+                assert_eq!(replies.len(), want_replies.len());
+                let got = t.advance_clock(tick, &selected);
+                assert_eq!(got, want, "workers={} round {round}", t.workers());
+            }
+        }
+    }
+
+    #[test]
+    fn advance_clock_subtracts_busy_windows_only_for_selected() {
+        let tick = ClockTick { dt_s: 120.0, mode: FleetMode::AllAwake };
+        let mut t = SyncTransport::new(fleet(3));
+        t.execute(&[1], job(1, Scheme::NewFl, 6, 0.0));
+        let rows = t.advance_clock(tick, &[1]);
+        // the selected device's idle window is shorter → less floor
+        assert!(rows[1].idle_uah < rows[0].idle_uah);
+        assert_eq!(rows[0].idle_uah.to_bits(), rows[2].idle_uah.to_bits());
     }
 
     #[test]

@@ -13,6 +13,7 @@ use deal::data::events::generate_events;
 use deal::data::Dataset;
 use deal::learn::recovery;
 use deal::power::profile::table1_profiles;
+use deal::power::FleetMode;
 use deal::runtime::{Engine, Registry, Tensor};
 use deal::util::cli::Cli;
 use deal::util::tables::{fmt_uah, Table};
@@ -50,6 +51,13 @@ fn cmd_run(args: Vec<String>) -> i32 {
         )
         .flag("selector", "csbf", "worker selection: csbf (context-free) | linucb (telemetry-fed)")
         .flag("features", "on", "on|off — feed device telemetry to the selector")
+        .flag(
+            "mode",
+            "auto",
+            "fleet power policy: deal (sleep unselected) | allawake | kernel (auto = scheme default)",
+        )
+        .flag("period", "60.0", "round period (virtual s) the fleet ledger bills over")
+        .flag("charging", "off", "on|off — deterministic plug/unplug charging sessions")
         .flag("devices", "16", "fleet size")
         .flag("shards", "1", "shard-leader count (>1 = sharded multi-federation runtime)")
         .flag("rounds", "20", "federated rounds")
@@ -119,6 +127,35 @@ fn cmd_run(args: Vec<String>) -> i32 {
             return 2;
         }
     };
+    let mode = match a.get("mode") {
+        "auto" => None,
+        m => match FleetMode::from_name(m) {
+            Some(m) => Some(m),
+            None => {
+                eprintln!("unknown --mode {m:?} (want deal|allawake|kernel)");
+                return 2;
+            }
+        },
+    };
+    let charging = match a.get("charging") {
+        "on" | "true" | "1" => true,
+        "off" | "false" | "0" => false,
+        other => {
+            eprintln!("unknown --charging value {other:?} (want on|off)");
+            return 2;
+        }
+    };
+    let round_period_s = match a.get_f64("period") {
+        Ok(p) if p >= 0.0 => p,
+        Ok(p) => {
+            eprintln!("error: flag --period: {p} must be ≥ 0");
+            return 2;
+        }
+        Err(e) => {
+            eprintln!("error: {e}");
+            return 2;
+        }
+    };
     let (n_devices, shards) = match (
         a.get_usize_nonzero("devices"),
         a.get_usize_nonzero("shards"),
@@ -180,6 +217,9 @@ fn cmd_run(args: Vec<String>) -> i32 {
         features,
         deletion_rate,
         deletion_slo,
+        mode,
+        charging,
+        round_period_s,
         ..FleetConfig::default()
     };
     let rounds = a.get_usize("rounds").unwrap();
@@ -188,7 +228,7 @@ fn cmd_run(args: Vec<String>) -> i32 {
     let mut fed = fleet::build(&cfg);
     println!(
         "federation: {} devices, {} on {}, scheme {}, transport {}, aggregation {}, \
-         selector {} (features {})",
+         selector {} (features {}), mode {} (period {:.0}s, charging {})",
         cfg.n_devices,
         cfg.model.map_or("auto", |m| m.name()),
         dataset.name(),
@@ -197,6 +237,9 @@ fn cmd_run(args: Vec<String>) -> i32 {
         fed.aggregation().name(),
         selector.name(),
         if features { "on" } else { "off" },
+        fed.fleet_mode().name(),
+        cfg.round_period_s,
+        if charging { "on" } else { "off" },
     );
     for _ in 0..rounds {
         let rec = fed.run_round();
@@ -224,6 +267,21 @@ fn cmd_run(args: Vec<String>) -> i32 {
         } else {
             String::new()
         }
+    );
+    let b = &stats.fleet;
+    println!(
+        "fleet ledger ({}): train {} + idle-awake {} + sleep {} + wake {} ({} wakes) \
+         + forget {} = {}; charged {}; savings vs all-awake {:.1}%",
+        fed.fleet_mode().name(),
+        fmt_uah(b.train_uah),
+        fmt_uah(b.idle_uah),
+        fmt_uah(b.sleep_uah),
+        fmt_uah(b.wake_uah),
+        stats.wake_transitions,
+        fmt_uah(b.forget_uah),
+        fmt_uah(b.total_uah()),
+        fmt_uah(stats.charged_uah),
+        100.0 * stats.savings_vs_allawake,
     );
     let u = &stats.unlearn;
     if u.submitted > 0 {
@@ -261,14 +319,17 @@ fn cmd_run(args: Vec<String>) -> i32 {
             };
             println!(
                 "  shard {:>2}: devices {:>5}..{:<5}  jobs {:>4}  replies {:>6}  \
-                 energy {}  capacity {mean_bat:.0}%bat/{mean_gflops:.1}gflops  \
-                 forgets {:>4}",
+                 energy {}  idle {}  sleep {}  wake {}  \
+                 capacity {mean_bat:.0}%bat/{mean_gflops:.1}gflops  forgets {:>4}",
                 s.shard,
                 s.start,
                 s.end,
                 s.jobs,
                 s.replies,
                 fmt_uah(s.energy_uah),
+                fmt_uah(s.idle_uah),
+                fmt_uah(s.sleep_uah),
+                fmt_uah(s.wake_uah),
                 s.forgets
             );
         }

@@ -1,8 +1,11 @@
-//! Battery model: capacity, drain, drop-out.
+//! Battery model: capacity, drain, recharge, drop-out.
 //!
 //! A drained device violates the round TTL and is treated as "sleeping"
 //! by the global layer (it leaves the sleeping-bandit availability set
-//! G(k) — paper §III-B).
+//! G(k) — paper §III-B). With charging sessions enabled
+//! ([`super::state::ChargePlan`]) a drained device recharges and — once
+//! past the [`Battery::can_rejoin`] hysteresis band — rejoins
+//! availability instead of being a dead end.
 
 /// Battery state of one simulated device.
 #[derive(Debug, Clone)]
@@ -60,6 +63,13 @@ impl Battery {
     pub fn can_train(&self) -> bool {
         self.fraction() > self.low_water_frac
     }
+
+    /// A drained device only returns to availability once recharged past
+    /// this threshold — 3× the low-water mark, so a device hovering at
+    /// the training floor cannot flap online/offline every round.
+    pub fn can_rejoin(&self) -> bool {
+        self.fraction() > 3.0 * self.low_water_frac
+    }
 }
 
 #[cfg(test)]
@@ -94,6 +104,19 @@ mod tests {
         let mut b = Battery::with_level(100.0, 0.5);
         b.charge(500.0);
         assert_eq!(b.level_uah(), 100.0);
+    }
+
+    #[test]
+    fn rejoin_band_sits_above_low_water() {
+        let mut b = Battery::new(100.0);
+        b.drain(97.0); // 3% — below low water
+        assert!(!b.can_train());
+        assert!(!b.can_rejoin());
+        b.charge(7.0); // 10% — trainable, but inside the hysteresis band
+        assert!(b.can_train());
+        assert!(!b.can_rejoin());
+        b.charge(10.0); // 20% — past 3× low water
+        assert!(b.can_rejoin());
     }
 
     #[test]

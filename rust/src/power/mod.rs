@@ -1,8 +1,27 @@
 //! Device power simulation substrate: Table I profiles, DVFS governors,
 //! the paper's Eq. 2 energy integrator and Eq. 3 completion-time model,
-//! a battery with training drop-out, and the per-device telemetry
+//! a battery with training drop-out **and recharge sessions**, the
+//! fleet power-state machine ([`state`]), and the per-device telemetry
 //! snapshot ([`telemetry::DeviceSnapshot`]) that carries this layer's
 //! state up to the selection layer.
+//!
+//! Power-state / ledger flow (PR 5):
+//!
+//! ```text
+//!   profile ──► state_current_ua(state) ─┐   floors per PowerState
+//!   governor ─► EnergyMeter ────────────┐│   (DeepSleep<Idle<Awake<Training)
+//!                                       ▼▼
+//!        DeviceSim ── run_round ──► train/forget energy (meter, Eq. 2)
+//!            │
+//!            └── step_idle(dt) ──► park-state floor + wake_cost()
+//!                 │  ChargePlan      transitions + charge sessions
+//!                 │  (own RNG)       → Battery::charge / drain
+//!                 ▼
+//!            IdleOutcome ──► Transport::advance_clock (O(workers) msgs,
+//!                 reports ascending by id) ──► Federation fleet ledger
+//!                 ──► FleetEnergyBreakdown{train,idle,sleep,wake,forget}
+//!                     + savings vs the AllAwake baseline (FleetMode)
+//! ```
 //!
 //! Substitution note (DESIGN.md §2): the paper measured real phones with
 //! a Monsoon power monitor; this module computes the same quantities from
@@ -13,10 +32,14 @@ pub mod battery;
 pub mod energy;
 pub mod governor;
 pub mod profile;
+pub mod state;
 pub mod telemetry;
 
 pub use battery::Battery;
 pub use energy::EnergyMeter;
 pub use governor::{Governor, Policy};
 pub use profile::{table1_profiles, DeviceProfile};
+pub use state::{
+    FleetEnergyBreakdown, FleetMode, PowerState, ALL_FLEET_MODES, ALL_POWER_STATES,
+};
 pub use telemetry::DeviceSnapshot;

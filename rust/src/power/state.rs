@@ -1,0 +1,375 @@
+//! Fleet power states and the energy ledger's billing rules — the
+//! substrate behind the paper's headline claim (75.6–82.4% less energy
+//! footprint): conventional FL "keeps all devices awake while draining
+//! expensive battery power", DEAL lets unselected workers drop into
+//! kernel low-power states.
+//!
+//! This module defines *what an idle device costs*: a [`PowerState`]
+//! per device, profile-derived floor currents per state
+//! ([`state_current_ua`]), profile-derived wake-transition costs
+//! ([`wake_cost`]: resume latency + resume/radio-reattach energy), the
+//! fleet-wide policy choosing the parking state ([`FleetMode`]),
+//! deterministic plug/unplug charging sessions ([`ChargePlan`] — each
+//! device's schedule runs off its own RNG stream, so enabling charging
+//! never perturbs the training RNG), and the fleet ledger's reporting
+//! shape ([`FleetEnergyBreakdown`]).
+//!
+//! Billing itself happens in `coordinator::device::DeviceSim::step_idle`
+//! on the virtual clock; transports batch it fleet-wide via
+//! `Transport::advance_clock`.
+
+use super::battery::Battery;
+use super::profile::DeviceProfile;
+use crate::util::rng::Rng;
+
+/// Kernel power state of one device between (and during) rounds,
+/// ordered by draw: `DeepSleep < Idle < Awake < Training`.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, PartialOrd, Ord, Hash, Default)]
+pub enum PowerState {
+    /// Suspend-to-RAM: components at their sleep floors, CPU in
+    /// retention. Waking from here costs a [`wake_cost`] transition.
+    DeepSleep,
+    /// Kernel low-power idle (doze): shallow enough to resume
+    /// instantly, no wake transition billed.
+    Idle,
+    /// Awake but not training: CPU idle floor + components idle — the
+    /// drain conventional FL pays on every non-participating device.
+    /// (The default: fleets boot awake, before any parking policy.)
+    #[default]
+    Awake,
+    /// Local training in flight (billed by the `EnergyMeter`, not by
+    /// the state floor — [`state_current_ua`] reports a ceiling).
+    Training,
+}
+
+pub const ALL_POWER_STATES: [PowerState; 4] = [
+    PowerState::DeepSleep,
+    PowerState::Idle,
+    PowerState::Awake,
+    PowerState::Training,
+];
+
+impl PowerState {
+    pub fn name(&self) -> &'static str {
+        match self {
+            PowerState::DeepSleep => "deepsleep",
+            PowerState::Idle => "idle",
+            PowerState::Awake => "awake",
+            PowerState::Training => "training",
+        }
+    }
+
+    /// Telemetry feature ∈ [0, 1], monotone in readiness: a more-awake
+    /// device engages with less wake latency/energy.
+    pub fn awakeness(&self) -> f64 {
+        match self {
+            PowerState::DeepSleep => 0.0,
+            PowerState::Idle => 1.0 / 3.0,
+            PowerState::Awake => 2.0 / 3.0,
+            PowerState::Training => 1.0,
+        }
+    }
+}
+
+/// Fleet-wide power policy: where the engine parks devices outside
+/// their training window (`deal run --mode`).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum FleetMode {
+    /// DEAL (§III-B): unselected workers drop to [`PowerState::DeepSleep`];
+    /// waking one into S(k) bills a [`wake_cost`] transition (the
+    /// unlearn SLO wake-override pays it too).
+    DealSleep,
+    /// Emulate conventional FL: every device sits idle-awake the whole
+    /// round period — the baseline behind the paper's 75.6–82.4% claim.
+    AllAwake,
+    /// Kernel-forced powersave: devices park in shallow [`PowerState::Idle`]
+    /// and train with the governor pinned at the ladder floor
+    /// (`Policy::Powersave` via `fleet::build`) — cheap, but rounds
+    /// slow down and the TTL/SLO pays for it.
+    KernelForced,
+}
+
+pub const ALL_FLEET_MODES: [FleetMode; 3] =
+    [FleetMode::DealSleep, FleetMode::AllAwake, FleetMode::KernelForced];
+
+impl FleetMode {
+    pub fn name(&self) -> &'static str {
+        match self {
+            FleetMode::DealSleep => "deal",
+            FleetMode::AllAwake => "allawake",
+            FleetMode::KernelForced => "kernel",
+        }
+    }
+
+    pub fn from_name(s: &str) -> Option<FleetMode> {
+        match s.to_ascii_lowercase().as_str() {
+            "deal" | "dealsleep" | "sleep" => Some(FleetMode::DealSleep),
+            "allawake" | "all-awake" | "awake" => Some(FleetMode::AllAwake),
+            "kernel" | "kernelforced" | "kernel-forced" | "powersave" => {
+                Some(FleetMode::KernelForced)
+            }
+            _ => None,
+        }
+    }
+
+    /// The state a device is parked in outside its training window.
+    pub fn park_state(&self) -> PowerState {
+        match self {
+            FleetMode::DealSleep => PowerState::DeepSleep,
+            FleetMode::AllAwake => PowerState::Awake,
+            FleetMode::KernelForced => PowerState::Idle,
+        }
+    }
+}
+
+/// CPU leakage retained in suspend (fraction of the idle floor).
+const CPU_SLEEP_FRAC: f64 = 0.01;
+/// CPU leakage in kernel low-power idle.
+const CPU_IDLE_FRAC: f64 = 0.3;
+/// Component duty cycle in doze above the sleep floor (periodic
+/// maintenance windows keep radios briefly reachable).
+const DOZE_DUTY_FRAC: f64 = 0.2;
+
+/// Floor current (µA) of `state` for a device profile — the per-state
+/// integrand the fleet ledger bills while no training is in flight.
+/// Monotone: `DeepSleep < Idle < Awake < Training` (the profile tests
+/// pin `active ≥ idle ≥ sleep` per component).
+pub fn state_current_ua(p: &DeviceProfile, state: PowerState) -> f64 {
+    let sleep_floor: f64 = p.components.iter().map(|c| c.sleep_ua).sum();
+    let idle_floor: f64 = p.components.iter().map(|c| c.idle_ua).sum();
+    match state {
+        PowerState::DeepSleep => CPU_SLEEP_FRAC * p.cpu_idle_ua + sleep_floor,
+        PowerState::Idle => {
+            CPU_IDLE_FRAC * p.cpu_idle_ua
+                + sleep_floor
+                + DOZE_DUTY_FRAC * (idle_floor - sleep_floor)
+        }
+        PowerState::Awake => p.cpu_idle_ua + idle_floor,
+        // ceiling, for reporting only: real training is billed by the
+        // EnergyMeter at the governor's actual ladder step
+        PowerState::Training => {
+            p.cpu_current_ua(p.n_freq_steps() - 1, 1.0) + idle_floor
+        }
+    }
+}
+
+/// Resume-from-suspend latency (s) of a `DeepSleep → Training` wake.
+pub const WAKE_LATENCY_S: f64 = 0.4;
+/// Radio reattach burst after resume (s at the radio's active draw).
+const RESYNC_S: f64 = 0.2;
+
+/// Profile-derived wake-transition cost: `(latency_s, energy_uah)` —
+/// the resume window billed at the awake floor plus the radio-reattach
+/// burst. Paid whenever a deep-sleeping device is pulled into S(k).
+pub fn wake_cost(p: &DeviceProfile) -> (f64, f64) {
+    let radio = p
+        .components
+        .iter()
+        .find(|c| c.name == "radio")
+        .map_or(0.0, |c| c.active_ua);
+    let uah = (WAKE_LATENCY_S * state_current_ua(p, PowerState::Awake)
+        + RESYNC_S * radio)
+        / 3600.0;
+    (WAKE_LATENCY_S, uah)
+}
+
+/// Full charge from empty takes this long (0.5C — a phone on a slow
+/// charger overnight).
+const CHARGE_HOURS: f64 = 2.0;
+/// Unplugged session duration bounds (s).
+const UNPLUG_MIN_S: f64 = 1_800.0;
+const UNPLUG_MAX_S: f64 = 14_400.0;
+/// Plugged session duration bounds (s).
+const PLUG_MIN_S: f64 = 1_200.0;
+const PLUG_MAX_S: f64 = 5_400.0;
+
+/// Deterministic plug/unplug schedule for one device, driven by its own
+/// RNG stream on the ledger's virtual clock. While plugged the battery
+/// charges at a constant rate (clamped at capacity); `Battery::charge`
+/// finally runs, and a recharged device clears its drained latch and
+/// rejoins availability (see `DeviceSim::step_availability`).
+#[derive(Debug, Clone)]
+pub struct ChargePlan {
+    rng: Rng,
+    plugged: bool,
+    /// Ledger time (s) at which the current session flips.
+    next_flip_s: f64,
+    /// Charge current while plugged (µA).
+    rate_ua: f64,
+}
+
+impl ChargePlan {
+    /// Everyone starts unplugged; the first plug lands within
+    /// [`UNPLUG_MIN_S`], [`UNPLUG_MAX_S`]).
+    pub fn new(seed: u64, battery_capacity_uah: f64) -> Self {
+        let mut rng = Rng::new(seed);
+        let first = rng.range_f64(UNPLUG_MIN_S, UNPLUG_MAX_S);
+        ChargePlan {
+            rng,
+            plugged: false,
+            next_flip_s: first,
+            rate_ua: battery_capacity_uah / CHARGE_HOURS,
+        }
+    }
+
+    /// Is the device on the charger right now (telemetry feature)?
+    pub fn plugged(&self) -> bool {
+        self.plugged
+    }
+
+    /// Walk the schedule over `[now_s, now_s + dt_s)`, charging the
+    /// battery during plugged segments; returns the charge actually
+    /// added (µAh, after the capacity clamp).
+    pub fn advance(&mut self, now_s: f64, dt_s: f64, battery: &mut Battery) -> f64 {
+        let end = now_s + dt_s;
+        let mut t = now_s;
+        let mut added = 0.0;
+        while self.next_flip_s <= end {
+            let seg = self.next_flip_s - t;
+            if self.plugged && seg > 0.0 {
+                let before = battery.level_uah();
+                battery.charge(self.rate_ua * seg / 3600.0);
+                added += battery.level_uah() - before;
+            }
+            t = self.next_flip_s;
+            self.plugged = !self.plugged;
+            let dur = if self.plugged {
+                self.rng.range_f64(PLUG_MIN_S, PLUG_MAX_S)
+            } else {
+                self.rng.range_f64(UNPLUG_MIN_S, UNPLUG_MAX_S)
+            };
+            self.next_flip_s = t + dur;
+        }
+        if self.plugged && end > t {
+            let before = battery.level_uah();
+            battery.charge(self.rate_ua * (end - t) / 3600.0);
+            added += battery.level_uah() - before;
+        }
+        added
+    }
+}
+
+/// Fleet-wide energy ledger by power state (µAh), reported in
+/// `FederationStats`. [`Self::total_uah`] is the exact sum of the five
+/// buckets — the conservation law the fig6 bench asserts.
+#[derive(Debug, Clone, Copy, PartialEq, Default)]
+pub struct FleetEnergyBreakdown {
+    /// Local training + PUB/SUB windows (the per-reply meter totals).
+    pub train_uah: f64,
+    /// Idle-awake / kernel-idle floors ([`PowerState::Awake`] and
+    /// [`PowerState::Idle`] parking).
+    pub idle_uah: f64,
+    /// Deep-sleep floors ([`PowerState::DeepSleep`] parking).
+    pub sleep_uah: f64,
+    /// Wake transitions (resume + radio reattach).
+    pub wake_uah: f64,
+    /// Targeted FORGET ops (the unlearning pipeline).
+    pub forget_uah: f64,
+}
+
+impl FleetEnergyBreakdown {
+    /// Total fleet energy — by construction exactly the sum of the
+    /// buckets, so "breakdown sums to total" can never drift.
+    pub fn total_uah(&self) -> f64 {
+        self.train_uah + self.idle_uah + self.sleep_uah + self.wake_uah + self.forget_uah
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::power::profile::{honor, table1_profiles};
+
+    #[test]
+    fn state_floors_are_ordered_for_every_profile() {
+        for p in table1_profiles() {
+            let mut prev = -1.0;
+            for s in ALL_POWER_STATES {
+                let cur = state_current_ua(&p, s);
+                assert!(cur > prev, "{}: {} floor not above previous", p.name, s.name());
+                prev = cur;
+            }
+        }
+    }
+
+    #[test]
+    fn awakeness_monotone_with_state_order() {
+        for w in ALL_POWER_STATES.windows(2) {
+            assert!(w[0] < w[1]);
+            assert!(w[0].awakeness() < w[1].awakeness());
+        }
+    }
+
+    #[test]
+    fn mode_names_roundtrip_and_park_states() {
+        for m in ALL_FLEET_MODES {
+            assert_eq!(FleetMode::from_name(m.name()), Some(m));
+        }
+        assert_eq!(FleetMode::from_name("powersave"), Some(FleetMode::KernelForced));
+        assert_eq!(FleetMode::from_name("bogus"), None);
+        assert_eq!(FleetMode::DealSleep.park_state(), PowerState::DeepSleep);
+        assert_eq!(FleetMode::AllAwake.park_state(), PowerState::Awake);
+        assert_eq!(FleetMode::KernelForced.park_state(), PowerState::Idle);
+    }
+
+    #[test]
+    fn wake_cost_is_positive_and_profile_scaled() {
+        let (lat, uah) = wake_cost(&honor());
+        assert_eq!(lat, WAKE_LATENCY_S);
+        assert!(uah > 0.0);
+        // a wake is far cheaper than an hour awake
+        assert!(uah < state_current_ua(&honor(), PowerState::Awake));
+    }
+
+    #[test]
+    fn charge_plan_is_deterministic_per_seed() {
+        let mut a = ChargePlan::new(7, 1000.0);
+        let mut b = ChargePlan::new(7, 1000.0);
+        let mut ba = Battery::with_level(1000.0, 0.1);
+        let mut bb = Battery::with_level(1000.0, 0.1);
+        let mut got_a = 0.0;
+        let mut got_b = 0.0;
+        for k in 0..40 {
+            got_a += a.advance(k as f64 * 900.0, 900.0, &mut ba);
+            got_b += b.advance(k as f64 * 900.0, 900.0, &mut bb);
+        }
+        assert_eq!(got_a.to_bits(), got_b.to_bits());
+        assert_eq!(ba.level_uah().to_bits(), bb.level_uah().to_bits());
+    }
+
+    #[test]
+    fn charge_plan_charges_only_while_plugged_and_clamps() {
+        let mut plan = ChargePlan::new(3, 1000.0);
+        let mut bat = Battery::with_level(1000.0, 0.05);
+        // nothing charges before the first plug event
+        let early = plan.advance(0.0, UNPLUG_MIN_S * 0.5, &mut bat);
+        assert_eq!(early, 0.0);
+        assert!(!plan.plugged());
+        // a long horizon must cross plug sessions and refill the battery
+        let mut added = early;
+        let mut t = UNPLUG_MIN_S * 0.5;
+        for _ in 0..200 {
+            added += plan.advance(t, 900.0, &mut bat);
+            t += 900.0;
+        }
+        assert!(added > 0.0, "no charging across {t}s");
+        assert!(bat.level_uah() <= bat.capacity_uah());
+        // clamp: charge credited never exceeds headroom
+        assert!(added <= 1000.0 - 0.05 * 1000.0 + 1e-9);
+    }
+
+    #[test]
+    fn breakdown_total_is_exact_sum() {
+        let b = FleetEnergyBreakdown {
+            train_uah: 0.1,
+            idle_uah: 0.2,
+            sleep_uah: 0.3,
+            wake_uah: 0.4,
+            forget_uah: 0.5,
+        };
+        assert_eq!(
+            b.total_uah().to_bits(),
+            (0.1 + 0.2 + 0.3 + 0.4 + 0.5f64).to_bits()
+        );
+    }
+}

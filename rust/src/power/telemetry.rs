@@ -23,6 +23,8 @@ const GFLOPS_CEIL: f64 = 24.0;
 /// cache-health feature.
 const SWAP_SCALE: f64 = 100.0;
 
+use super::state::PowerState;
+
 /// Telemetry snapshot of one device, taken at probe time (idle but
 /// online) or right after a local round (attached to the reply).
 #[derive(Debug, Clone, Copy, PartialEq)]
@@ -45,11 +47,16 @@ pub struct DeviceSnapshot {
     /// Recent availability (EWMA of the online indicator) ∈ [0, 1] —
     /// churn history.
     pub avail_ewma: f64,
+    /// On the charger right now (its [`super::state::ChargePlan`]
+    /// session is plugged) — a plugged device trains for free.
+    pub plugged: bool,
+    /// Fleet power state the device is parked in (ledger view).
+    pub state: PowerState,
 }
 
 impl DeviceSnapshot {
     /// Context dimensionality of [`Self::features`].
-    pub const N_FEATURES: usize = 7;
+    pub const N_FEATURES: usize = 9;
 
     /// Neutral snapshot: what the selection layer sees for a device it
     /// has no telemetry for yet, and for every device when the feature
@@ -65,11 +72,14 @@ impl DeviceSnapshot {
         cache_resident_frac: 0.0,
         swap_ewma: 0.0,
         avail_ewma: 1.0,
+        plugged: false,
+        state: PowerState::Awake,
     };
 
-    /// The LinUCB context vector: a bias term plus six telemetry
+    /// The LinUCB context vector: a bias term plus eight telemetry
     /// features, each normalized to [0, 1] and oriented so that *more
-    /// capacity ⇒ larger value* (swap pressure enters inverted). A
+    /// capacity ⇒ larger value* (swap pressure enters inverted; plugged
+    /// means energy is free; awakeness means no wake latency). A
     /// snapshot that dominates another componentwise therefore yields a
     /// componentwise-larger context — the monotonicity the selection
     /// property tests lean on.
@@ -88,6 +98,8 @@ impl DeviceSnapshot {
             self.cache_resident_frac.clamp(0.0, 1.0),
             1.0 / (1.0 + self.swap_ewma.max(0.0) / SWAP_SCALE),
             self.avail_ewma.clamp(0.0, 1.0),
+            if self.plugged { 1.0 } else { 0.0 },
+            self.state.awakeness(),
         ]
     }
 }
@@ -112,6 +124,8 @@ mod tests {
             cache_resident_frac: 0.9,
             swap_ewma: 100.0,
             avail_ewma: 0.95,
+            plugged: true,
+            state: PowerState::Training,
         }
     }
 
@@ -138,6 +152,8 @@ mod tests {
             cache_resident_frac: 0.3,
             swap_ewma: 250.0,
             avail_ewma: 0.5,
+            plugged: false,
+            state: PowerState::DeepSleep,
         };
         let hi = snap();
         for (a, b) in hi.features().iter().zip(lo.features()) {
@@ -170,5 +186,24 @@ mod tests {
             assert!((0.0..=1.0).contains(v), "feature {i} = {v}");
         }
         assert_eq!(f[2], 1.0, "ladder step clamps to the ladder top");
+    }
+
+    #[test]
+    fn plugged_and_state_features_ride_the_context() {
+        let mut s = DeviceSnapshot::NEUTRAL;
+        assert_eq!(s.features()[7], 0.0, "neutral is unplugged");
+        assert!((s.features()[8] - 2.0 / 3.0).abs() < 1e-12, "neutral is awake");
+        s.plugged = true;
+        s.state = PowerState::DeepSleep;
+        assert_eq!(s.features()[7], 1.0);
+        assert_eq!(s.features()[8], 0.0);
+        // awakeness climbs with the state order
+        let mut prev = -1.0;
+        for st in crate::power::ALL_POWER_STATES {
+            s.state = st;
+            let v = s.features()[8];
+            assert!(v > prev, "{} awakeness not increasing", st.name());
+            prev = v;
+        }
     }
 }

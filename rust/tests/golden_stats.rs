@@ -17,6 +17,7 @@ use deal::bandit::SelectorKind;
 use deal::coordinator::fleet::{self, FleetConfig};
 use deal::coordinator::{Aggregation, Federation, FederationStats, Scheme};
 use deal::data::Dataset;
+use deal::power::FleetMode;
 use std::path::PathBuf;
 
 const ROUNDS: usize = 12;
@@ -24,19 +25,38 @@ const ROUNDS: usize = 12;
 /// Configurations pinned by the snapshot, with stable labels: every
 /// aggregation policy on the CSB-F path, the LinUCB contextual path
 /// (its telemetry-fed selection is part of the round semantics now, so
-/// it must not drift either), and the targeted-unlearning pipeline
-/// under a live deletion stream (rate in requests/round).
-fn policies() -> Vec<(&'static str, Aggregation, SelectorKind, f64)> {
+/// it must not drift either), the targeted-unlearning pipeline under a
+/// live deletion stream (rate in requests/round), and the all-awake
+/// fleet emulation (`None` mode = the scheme default, DealSleep).
+fn policies() -> Vec<(&'static str, Aggregation, SelectorKind, f64, Option<FleetMode>)> {
     vec![
-        ("waitall", Aggregation::WaitAll, SelectorKind::Csbf, 0.0),
-        ("majority", Aggregation::Majority, SelectorKind::Csbf, 0.0),
-        ("async2", Aggregation::AsyncBuffered { staleness: 2 }, SelectorKind::Csbf, 0.0),
-        ("linucb-majority", Aggregation::Majority, SelectorKind::LinUcb, 0.0),
-        ("unlearn-majority", Aggregation::Majority, SelectorKind::Csbf, 0.75),
+        ("waitall", Aggregation::WaitAll, SelectorKind::Csbf, 0.0, None),
+        ("majority", Aggregation::Majority, SelectorKind::Csbf, 0.0, None),
+        (
+            "async2",
+            Aggregation::AsyncBuffered { staleness: 2 },
+            SelectorKind::Csbf,
+            0.0,
+            None,
+        ),
+        ("linucb-majority", Aggregation::Majority, SelectorKind::LinUcb, 0.0, None),
+        ("unlearn-majority", Aggregation::Majority, SelectorKind::Csbf, 0.75, None),
+        (
+            "allawake-majority",
+            Aggregation::Majority,
+            SelectorKind::Csbf,
+            0.0,
+            Some(FleetMode::AllAwake),
+        ),
     ]
 }
 
-fn build(agg: Aggregation, selector: SelectorKind, deletion_rate: f64) -> Federation {
+fn build(
+    agg: Aggregation,
+    selector: SelectorKind,
+    deletion_rate: f64,
+    mode: Option<FleetMode>,
+) -> Federation {
     fleet::build(&FleetConfig {
         n_devices: 10,
         dataset: Dataset::Housing,
@@ -50,6 +70,7 @@ fn build(agg: Aggregation, selector: SelectorKind, deletion_rate: f64) -> Federa
         selector,
         deletion_rate,
         deletion_slo: 2,
+        mode,
         ..FleetConfig::default()
     })
 }
@@ -91,6 +112,22 @@ fn snapshot_line(name: &str, s: &FederationStats) -> String {
         u.rounds_to_forget_p99,
         u.forget_energy_uah.to_bits(),
         u.forget_energy_uah,
+    ) + &format!(
+        " fleet[idle={:016x}({:.6}) sleep={:016x}({:.6}) wake={:016x}({:.6}) \
+         wakes={} chg={:016x}({:.6}) base={:016x}({:.6}) save={:016x}({:.6})]",
+        s.fleet.idle_uah.to_bits(),
+        s.fleet.idle_uah,
+        s.fleet.sleep_uah.to_bits(),
+        s.fleet.sleep_uah,
+        s.fleet.wake_uah.to_bits(),
+        s.fleet.wake_uah,
+        s.wake_transitions,
+        s.charged_uah.to_bits(),
+        s.charged_uah,
+        s.allawake_baseline_uah.to_bits(),
+        s.allawake_baseline_uah,
+        s.savings_vs_allawake.to_bits(),
+        s.savings_vs_allawake,
     )
 }
 
@@ -101,8 +138,8 @@ fn golden_path() -> PathBuf {
 
 fn current_snapshot() -> String {
     let mut lines: Vec<String> = Vec::new();
-    for (name, agg, selector, deletion_rate) in policies() {
-        let stats = build(agg, selector, deletion_rate).run(ROUNDS);
+    for (name, agg, selector, deletion_rate, mode) in policies() {
+        let stats = build(agg, selector, deletion_rate, mode).run(ROUNDS);
         lines.push(snapshot_line(name, &stats));
     }
     lines.join("\n") + "\n"
@@ -152,8 +189,8 @@ fn policies_produce_distinct_round_semantics() {
     // sanity that the snapshot actually distinguishes the policies: on
     // the same fleet/seed the majority cut must close rounds no later
     // than wait-all
-    let w = build(Aggregation::WaitAll, SelectorKind::Csbf, 0.0).run(ROUNDS);
-    let m = build(Aggregation::Majority, SelectorKind::Csbf, 0.0).run(ROUNDS);
+    let w = build(Aggregation::WaitAll, SelectorKind::Csbf, 0.0, None).run(ROUNDS);
+    let m = build(Aggregation::Majority, SelectorKind::Csbf, 0.0, None).run(ROUNDS);
     assert!(
         m.total_time_s <= w.total_time_s + 1e-9,
         "majority cut closed later than wait-all: {} vs {}",
@@ -166,7 +203,7 @@ fn policies_produce_distinct_round_semantics() {
 fn unlearn_line_actually_exercises_the_deletion_path() {
     // the new golden line is only worth pinning if its stream flows:
     // requests must be submitted, served, and billed at this seed
-    let s = build(Aggregation::Majority, SelectorKind::Csbf, 0.75).run(ROUNDS);
+    let s = build(Aggregation::Majority, SelectorKind::Csbf, 0.75, None).run(ROUNDS);
     assert!(s.unlearn.submitted > 0, "deletion stream produced nothing");
     assert!(s.unlearn.served > 0, "no deletion was served: {:?}", s.unlearn);
     assert_eq!(
@@ -175,6 +212,33 @@ fn unlearn_line_actually_exercises_the_deletion_path() {
         "SLO books must balance"
     );
     // and the empty-stream lines stay exactly empty
-    let clean = build(Aggregation::Majority, SelectorKind::Csbf, 0.0).run(ROUNDS);
+    let clean = build(Aggregation::Majority, SelectorKind::Csbf, 0.0, None).run(ROUNDS);
     assert_eq!(clean.unlearn, deal::coordinator::UnlearnStats::default());
+}
+
+#[test]
+fn allawake_line_actually_exercises_the_awake_fleet() {
+    // the new golden line is only worth pinning if its ledger genuinely
+    // differs: the awake fleet bills idle-awake floors (its own
+    // baseline, savings exactly 0), the default DealSleep line sleeps
+    // and saves in the paper's ballpark
+    let awake = build(
+        Aggregation::Majority,
+        SelectorKind::Csbf,
+        0.0,
+        Some(FleetMode::AllAwake),
+    )
+    .run(ROUNDS);
+    assert!(awake.fleet.idle_uah > 0.0);
+    assert_eq!(awake.fleet.sleep_uah, 0.0);
+    assert_eq!(awake.savings_vs_allawake, 0.0);
+    let deal = build(Aggregation::Majority, SelectorKind::Csbf, 0.0, None).run(ROUNDS);
+    assert!(deal.fleet.sleep_uah > 0.0);
+    assert_eq!(deal.fleet.idle_uah, 0.0);
+    assert!(
+        deal.savings_vs_allawake > 0.5,
+        "DealSleep savings {} out of the paper's ballpark",
+        deal.savings_vs_allawake
+    );
+    assert!(deal.fleet.total_uah() < awake.fleet.total_uah());
 }

@@ -21,13 +21,14 @@
 //!   equal reward history, is selected at least as often.
 
 use deal::bandit::{LinUcb, SelectorConfig, SleepingBandit};
-use deal::power::DeviceSnapshot;
+use deal::power::{DeviceSnapshot, PowerState};
 use deal::prop_assert;
 use deal::util::prop::check;
 
 /// A snapshot whose every capacity axis sits at `cap` ∈ [0, 1] —
 /// larger `cap` dominates smaller componentwise (swap pressure is
-/// inverted inside `features()`).
+/// inverted inside `features()`; plugged/state thresholds are monotone
+/// in `cap`).
 fn snap_at(cap: f64) -> DeviceSnapshot {
     DeviceSnapshot {
         battery_frac: cap,
@@ -38,6 +39,16 @@ fn snap_at(cap: f64) -> DeviceSnapshot {
         cache_resident_frac: cap,
         swap_ewma: 300.0 * (1.0 - cap),
         avail_ewma: cap,
+        plugged: cap >= 0.5,
+        state: if cap < 0.25 {
+            PowerState::DeepSleep
+        } else if cap < 0.5 {
+            PowerState::Idle
+        } else if cap < 0.75 {
+            PowerState::Awake
+        } else {
+            PowerState::Training
+        },
     }
 }
 
@@ -265,6 +276,52 @@ fn linucb_higher_capacity_with_equal_rewards_is_selected_at_least_as_often() {
         prop_assert!(
             counts[1] >= counts[0],
             "high-capacity device selected less: lo={} hi={} (caps {lo_cap:.2}/{hi_cap:.2})",
+            counts[0],
+            counts[1]
+        );
+        Ok(())
+    });
+}
+
+#[test]
+fn linucb_plugged_devices_selected_at_least_as_often_as_unplugged_twins() {
+    // the power-state ledger's selection promise: a plugged-in device
+    // (training is free — the charger pays) must not be selected less
+    // than an otherwise-identical unplugged one under equal rewards.
+    // Same empirical argument as the capacity-monotonicity test above:
+    // the contexts differ in exactly one coordinate (the plugged
+    // feature), so the plugged context dominates componentwise — at
+    // cold start the larger norm wins the exploration bonus outright,
+    // and thereafter the shared fit keeps its score weakly ahead.
+    check(0x97D6, 10, |g| {
+        let cap = g.f64_in(0.1, 0.9);
+        let reward = g.f64_in(0.2, 0.8);
+        let mut unplugged = snap_at(cap);
+        unplugged.plugged = false;
+        let mut plugged = snap_at(cap);
+        plugged.plugged = true;
+        // plugged at the HIGHER id, so the id tie-break works against
+        // it — the preference must come from the context alone
+        let snaps = [unplugged, plugged];
+        let cfg = SelectorConfig {
+            m: 1,
+            min_fraction: 0.0,
+            gamma: 1.0,
+            alpha: g.f64_in(0.3, 2.0),
+            ..Default::default()
+        };
+        let mut b = LinUcb::new(2, cfg);
+        let mut counts = [0u64; 2];
+        for _ in 0..300 {
+            let chosen = b.select(&[0, 1], &snaps);
+            for &c in &chosen {
+                counts[c] += 1;
+                b.observe(c, reward, &snaps[c]);
+            }
+        }
+        prop_assert!(
+            counts[1] >= counts[0],
+            "plugged device selected less: unplugged={} plugged={} (cap {cap:.2})",
             counts[0],
             counts[1]
         );

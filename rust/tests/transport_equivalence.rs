@@ -14,6 +14,7 @@ use deal::coordinator::{
     SyncTransport, TransportKind,
 };
 use deal::data::Dataset;
+use deal::power::{FleetMode, ALL_FLEET_MODES};
 
 fn build(scheme: Scheme, transport: TransportKind, ttl_s: f64) -> Federation {
     build_sharded(scheme, transport, ttl_s, 1)
@@ -69,6 +70,45 @@ fn assert_bit_identical(a: &FederationStats, b: &FederationStats, ctx: &str) {
         assert_eq!(x.to_bits(), y.to_bits(), "{ctx}: convergence time");
     }
     assert_eq!(a.unlearn, b.unlearn, "{ctx}: deletion-SLO books");
+    // the fleet power-state ledger is part of the determinism contract:
+    // every bucket, the emulated baseline and the savings ratio must
+    // agree to the bit on any fabric
+    assert_eq!(
+        a.fleet.idle_uah.to_bits(),
+        b.fleet.idle_uah.to_bits(),
+        "{ctx}: fleet idle-awake energy"
+    );
+    assert_eq!(
+        a.fleet.sleep_uah.to_bits(),
+        b.fleet.sleep_uah.to_bits(),
+        "{ctx}: fleet sleep energy"
+    );
+    assert_eq!(
+        a.fleet.wake_uah.to_bits(),
+        b.fleet.wake_uah.to_bits(),
+        "{ctx}: fleet wake-transition energy"
+    );
+    assert_eq!(
+        a.fleet.total_uah().to_bits(),
+        b.fleet.total_uah().to_bits(),
+        "{ctx}: fleet total energy"
+    );
+    assert_eq!(
+        a.allawake_baseline_uah.to_bits(),
+        b.allawake_baseline_uah.to_bits(),
+        "{ctx}: all-awake baseline"
+    );
+    assert_eq!(
+        a.savings_vs_allawake.to_bits(),
+        b.savings_vs_allawake.to_bits(),
+        "{ctx}: savings ratio"
+    );
+    assert_eq!(a.wake_transitions, b.wake_transitions, "{ctx}: wake count");
+    assert_eq!(
+        a.charged_uah.to_bits(),
+        b.charged_uah.to_bits(),
+        "{ctx}: charge received"
+    );
 }
 
 #[test]
@@ -377,6 +417,112 @@ fn empty_deletion_stream_is_bit_identical_to_pre_unlearn_engine() {
 }
 
 #[test]
+fn fleet_ledger_bit_identical_across_fabrics_shards_and_modes() {
+    // the tentpole contract: the whole-fleet power-state ledger —
+    // every idle floor, wake transition and savings ratio — is
+    // bit-identical across all three transports and shards ∈ {1, 2, 4}
+    // under every FleetMode
+    for mode in ALL_FLEET_MODES {
+        let mk = |transport: TransportKind, shards: usize| {
+            fleet::build(&FleetConfig {
+                n_devices: 10,
+                dataset: Dataset::Housing,
+                scale: 0.4,
+                scheme: Scheme::Deal,
+                seed: 33,
+                transport,
+                shards,
+                mode: Some(mode),
+                ..FleetConfig::default()
+            })
+        };
+        let mut flat = mk(TransportKind::Sync, 1);
+        let base = flat.run(10);
+        // mode sanity on the reference run
+        match mode {
+            FleetMode::DealSleep => {
+                assert!(base.fleet.sleep_uah > 0.0, "deal mode never slept");
+                assert_eq!(base.fleet.idle_uah, 0.0);
+            }
+            FleetMode::AllAwake => {
+                assert!(base.fleet.idle_uah > 0.0);
+                assert_eq!(base.fleet.sleep_uah, 0.0);
+                assert_eq!(base.wake_transitions, 0);
+                assert_eq!(base.savings_vs_allawake, 0.0, "allawake is its own baseline");
+            }
+            FleetMode::KernelForced => {
+                assert!(base.fleet.idle_uah > 0.0);
+                assert_eq!(base.fleet.sleep_uah, 0.0);
+                assert_eq!(base.wake_transitions, 0, "shallow idle resumes free");
+            }
+        }
+        for (transport, shards) in [
+            (TransportKind::Threaded, 1usize),
+            (TransportKind::Sync, 2),
+            (TransportKind::Sync, 4),
+            (TransportKind::Threaded, 2),
+            (TransportKind::Threaded, 4),
+        ] {
+            let mut fed = mk(transport, shards);
+            let stats = fed.run(10);
+            let ctx = format!("{} {} shards={shards}", mode.name(), transport.name());
+            assert_bit_identical(&base, &stats, &ctx);
+            assert_eq!(flat.rounds, fed.rounds, "{ctx}: per-round records");
+            if shards > 1 {
+                // the root's per-shard ledger books re-sum to the totals
+                let sums = fed.shard_summaries();
+                let idle: f64 = sums.iter().map(|s| s.idle_uah).sum();
+                let sleep: f64 = sums.iter().map(|s| s.sleep_uah).sum();
+                let wake: f64 = sums.iter().map(|s| s.wake_uah).sum();
+                assert!((idle - stats.fleet.idle_uah).abs() < 1e-6, "{ctx}: idle books");
+                assert!((sleep - stats.fleet.sleep_uah).abs() < 1e-6, "{ctx}: sleep books");
+                assert!((wake - stats.fleet.wake_uah).abs() < 1e-6, "{ctx}: wake books");
+            }
+        }
+    }
+}
+
+#[test]
+fn charging_sessions_bit_identical_across_fabrics() {
+    // charging runs per-device RNG streams on the ledger clock — the
+    // schedule must unfold identically however the fleet is batched or
+    // sharded. A 1200 s period over 12 rounds crosses the first plug
+    // event of every device (plug lands within 4 virtual hours).
+    let mk = |transport: TransportKind, shards: usize| {
+        fleet::build(&FleetConfig {
+            n_devices: 10,
+            dataset: Dataset::Housing,
+            scale: 0.4,
+            scheme: Scheme::Deal,
+            seed: 33,
+            transport,
+            shards,
+            mode: Some(FleetMode::DealSleep),
+            charging: true,
+            round_period_s: 1200.0,
+            ..FleetConfig::default()
+        })
+    };
+    let mut flat = mk(TransportKind::Sync, 1);
+    let base = flat.run(12);
+    assert!(base.charged_uah > 0.0, "no device ever charged");
+    for (transport, shards) in [
+        (TransportKind::Threaded, 1usize),
+        (TransportKind::Sync, 4),
+        (TransportKind::Threaded, 2),
+    ] {
+        let mut fed = mk(transport, shards);
+        let stats = fed.run(12);
+        assert_bit_identical(
+            &base,
+            &stats,
+            &format!("charging {} shards={shards}", transport.name()),
+        );
+        assert_eq!(flat.rounds, fed.rounds, "charging per-round records");
+    }
+}
+
+#[test]
 fn transport_flags_parse() {
     assert_eq!(TransportKind::from_name("sync"), Some(TransportKind::Sync));
     assert_eq!(TransportKind::from_name("threaded"), Some(TransportKind::Threaded));
@@ -389,4 +535,8 @@ fn transport_flags_parse() {
     );
     assert_eq!(Aggregation::from_name("majority"), Some(Aggregation::Majority));
     assert_eq!(Aggregation::from_name("waitall"), Some(Aggregation::WaitAll));
+    assert_eq!(FleetMode::from_name("deal"), Some(FleetMode::DealSleep));
+    assert_eq!(FleetMode::from_name("allawake"), Some(FleetMode::AllAwake));
+    assert_eq!(FleetMode::from_name("kernel"), Some(FleetMode::KernelForced));
+    assert_eq!(FleetMode::from_name("afterburner"), None);
 }
