@@ -1,0 +1,246 @@
+//! Fleet-scaling sweep: eager vs lazy park-ledger round throughput,
+//! 10³ → 10⁶ devices (the PR 6 tentpole's proof-of-win).
+//!
+//! Uses the struct-of-arrays `ParkLedger` — the power half of a device
+//! at ~250 bytes — so million-device fleets fit in memory. Each round
+//! selects a small S(k), bills their training externally, and advances
+//! the fleet clock: the eager ledger sweeps all n devices, the lazy
+//! ledger steps O(selected) and defers the rest behind one window-log
+//! push. Reported per fleet size: rounds/sec for both modes, the
+//! speedup, and bytes/device.
+//!
+//!     cargo bench --bench fleet_scaling
+//!
+//! Env:
+//!   DEAL_BENCH_FAST=1       small fleets + short budgets (CI smoke)
+//!   DEAL_BENCH_JSON=path    write machine-readable results
+//!   DEAL_BENCH_BASELINE=p   compare lazy rounds/sec at 10⁴ devices to
+//!                           a committed BENCH_fastforward.json; exits 1
+//!                           on a >20% regression when the baseline was
+//!                           actually measured ("measured": true)
+
+mod common;
+
+use std::time::{Duration, Instant};
+
+use deal::coordinator::transport::{ClockTick, LedgerMode};
+use deal::coordinator::ParkLedger;
+use deal::power::profile::table1_profiles;
+use deal::power::FleetMode;
+use deal::util::bench::{json_f64, write_results_json, BenchResult};
+
+/// Allowed slowdown vs the committed baseline before the smoke fails.
+const REGRESSION_FRAC: f64 = 0.20;
+/// The fleet size the regression gate is pinned at.
+const GATE_N: usize = 10_000;
+
+fn fast() -> bool {
+    std::env::var("DEAL_BENCH_FAST").as_deref() == Ok("1")
+}
+
+fn build_ledger(n: usize, mode: LedgerMode) -> ParkLedger {
+    let profiles = table1_profiles();
+    let mut l = ParkLedger::new(&profiles, n, mode);
+    // every 8th device charges — enough to exercise the ChargePlan walk
+    // in both modes without dominating the floor-billing cost
+    for i in (0..n).step_by(8) {
+        l.enable_charging(i, 0xFEED ^ i as u64);
+    }
+    l
+}
+
+/// One federated round against the ledger: select m devices
+/// round-robin, bill their training, advance the clock.
+fn run_round(l: &mut ParkLedger, round: usize, m: usize) {
+    let n = l.n_devices();
+    let mut selected: Vec<usize> = (0..m).map(|j| (round * m + j) % n).collect();
+    selected.sort_unstable();
+    selected.dedup();
+    for &i in &selected {
+        l.begin_training(i);
+        l.add_busy(i, 3.0);
+        l.drain(i, 500.0);
+    }
+    let tick = ClockTick { dt_s: 60.0, mode: FleetMode::DealSleep };
+    l.advance_clock(tick, &selected);
+}
+
+/// Time-boxed throughput: rounds completed per wall second.
+fn measure(n: usize, mode: LedgerMode, budget: Duration) -> (f64, usize) {
+    let m = (n / 1000).clamp(4, 64);
+    let mut l = build_ledger(n, mode);
+    // one unmeasured round warms the columns
+    run_round(&mut l, 0, m);
+    let t0 = Instant::now();
+    let mut rounds = 0usize;
+    while t0.elapsed() < budget || rounds < 2 {
+        run_round(&mut l, rounds + 1, m);
+        rounds += 1;
+    }
+    let elapsed = t0.elapsed().as_secs_f64();
+    if mode == LedgerMode::Lazy {
+        // settle outside the measured window, but report it: deferred
+        // windows are not free, they are amortized to the stats read
+        let s0 = Instant::now();
+        l.settle_all();
+        println!(
+            "    settle_all(n={n}) after {rounds} rounds: {:.1} ms",
+            s0.elapsed().as_secs_f64() * 1e3
+        );
+    }
+    (rounds as f64 / elapsed, rounds)
+}
+
+/// Pull `"key": <number>` out of a JSON document (hand-rolled — the
+/// crate is dependency-free, and the baseline schema is ours).
+fn json_number(doc: &str, key: &str) -> Option<f64> {
+    let pat = format!("\"{key}\":");
+    let at = doc.find(&pat)? + pat.len();
+    let rest = doc[at..].trim_start();
+    let end = rest
+        .find(|c: char| !(c.is_ascii_digit() || ".-+eE".contains(c)))
+        .unwrap_or(rest.len());
+    rest[..end].parse().ok()
+}
+
+fn main() {
+    common::banner(
+        "fleet scaling — lazy analytic fast-forward vs eager per-tick ledger",
+        "a round should cost O(selected + woken), not O(n_devices)",
+    );
+    let fleets: &[usize] = if fast() {
+        &[1_000, 10_000]
+    } else {
+        &[1_000, 10_000, 100_000, 1_000_000]
+    };
+    let budget = if fast() {
+        Duration::from_millis(150)
+    } else {
+        Duration::from_millis(600)
+    };
+    println!(
+        "bytes/device (SoA columns): {}\n",
+        ParkLedger::bytes_per_device()
+    );
+
+    // bit-identity spot check before any timing: the two modes must
+    // agree to the bit on the books they are about to be raced on
+    {
+        let mut e = build_ledger(1_000, LedgerMode::Eager);
+        let mut l = build_ledger(1_000, LedgerMode::Lazy);
+        for r in 1..=25 {
+            run_round(&mut e, r, 4);
+            run_round(&mut l, r, 4);
+        }
+        l.settle_all();
+        let (te, tl) = (e.totals(), l.totals());
+        assert_eq!(
+            te.sleep_uah.to_bits(),
+            tl.sleep_uah.to_bits(),
+            "lazy ledger diverged from eager — benchmark void"
+        );
+        assert_eq!(te.charged_uah.to_bits(), tl.charged_uah.to_bits());
+        println!("bit-identity spot check (n=1000, 25 rounds): ok\n");
+    }
+
+    let mut results: Vec<BenchResult> = Vec::new();
+    let mut lazy_rps_gate = None;
+    let mut speedup_1e5 = None;
+    println!(
+        "{:>10} {:>14} {:>14} {:>9}",
+        "devices", "eager rds/s", "lazy rds/s", "speedup"
+    );
+    for &n in fleets {
+        // the eager sweep at 10⁶ devices is exactly the wall the lazy
+        // ledger removes; measuring it would spend the whole budget on
+        // the baseline, so the largest fleet is lazy-only
+        let eager_rps = if n <= 100_000 {
+            let (rps, _) = measure(n, LedgerMode::Eager, budget);
+            Some(rps)
+        } else {
+            None
+        };
+        let (lazy_rps, lazy_rounds) = measure(n, LedgerMode::Lazy, budget);
+        assert!(lazy_rounds >= 2, "lazy mode failed to complete rounds at n={n}");
+        if n == GATE_N {
+            lazy_rps_gate = Some(lazy_rps);
+        }
+        let speedup = eager_rps.map(|e| lazy_rps / e);
+        if n == 100_000 {
+            speedup_1e5 = speedup;
+        }
+        println!(
+            "{:>10} {:>14} {:>14} {:>9}",
+            n,
+            eager_rps.map_or("—".to_string(), |e| format!("{e:.1}")),
+            format!("{lazy_rps:.1}"),
+            speedup.map_or("—".to_string(), |s| format!("{s:.1}×")),
+        );
+        for (mode, rps) in [("eager", eager_rps), ("lazy", Some(lazy_rps))] {
+            if let Some(rps) = rps {
+                results.push(BenchResult {
+                    name: format!("{mode}/n={n}"),
+                    median: 1.0 / rps,
+                    mean: 1.0 / rps,
+                    std: 0.0,
+                    iters_per_sample: 1,
+                    samples: 1,
+                });
+            }
+        }
+    }
+    if let Some(s) = speedup_1e5 {
+        if s < 10.0 {
+            println!("\nwarning: lazy speedup at 10^5 devices is {s:.1}× (< 10× target)");
+        } else {
+            println!("\nlazy speedup at 10^5 devices: {s:.1}× (target ≥ 10×)");
+        }
+    }
+
+    let mut extra: Vec<(&str, String)> = vec![
+        ("measured", "true".to_string()),
+        (
+            "bytes_per_device",
+            ParkLedger::bytes_per_device().to_string(),
+        ),
+    ];
+    if let Some(rps) = lazy_rps_gate {
+        extra.push(("lazy_rps_1e4", json_f64(rps)));
+    }
+    if let Some(s) = speedup_1e5 {
+        extra.push(("speedup_1e5", json_f64(s)));
+    }
+    write_results_json("fleet_scaling", &results, &extra);
+
+    // --- regression gate vs the committed baseline
+    let Ok(path) = std::env::var("DEAL_BENCH_BASELINE") else {
+        return;
+    };
+    let Ok(doc) = std::fs::read_to_string(&path) else {
+        eprintln!("warning: baseline {path} unreadable — gate skipped");
+        return;
+    };
+    if !doc.contains("\"measured\":true") {
+        println!(
+            "baseline {path} is an unmeasured placeholder — gate informational only"
+        );
+        return;
+    }
+    let (Some(base), Some(now)) = (json_number(&doc, "lazy_rps_1e4"), lazy_rps_gate)
+    else {
+        eprintln!("warning: baseline {path} lacks lazy_rps_1e4 — gate skipped");
+        return;
+    };
+    let floor = base * (1.0 - REGRESSION_FRAC);
+    if now < floor {
+        eprintln!(
+            "FAIL: lazy rounds/sec at n={GATE_N} regressed: {now:.1} < {floor:.1} \
+             (baseline {base:.1}, tolerance {REGRESSION_FRAC})"
+        );
+        std::process::exit(1);
+    }
+    println!(
+        "regression gate ok: {now:.1} rounds/sec at n={GATE_N} \
+         (baseline {base:.1}, floor {floor:.1})"
+    );
+}

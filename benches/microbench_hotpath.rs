@@ -15,12 +15,13 @@ use deal::learn::mat::Mat;
 use deal::learn::tikhonov::{Observation, Tikhonov};
 use deal::learn::{DecrementalModel, NullMiddleware, Ppr};
 use deal::memsim::{PageCache, Replacement};
-use deal::util::bench::from_env;
+use deal::util::bench::{from_env, write_results_json};
 use deal::util::rng::Rng;
 
 fn main() {
     println!("== hot-path microbenches (set DEAL_BENCH_FAST=1 for quick runs) ==");
     let b = from_env();
+    let mut results = Vec::new();
     let mut rng = Rng::new(7);
 
     // --- PPR update/forget at movielens scale (I=1682)
@@ -39,11 +40,11 @@ fn main() {
     let mut ppr = Ppr::fit(items, 10, &histories);
     let mut mw = NullMiddleware;
     let extra = histories.pop().unwrap();
-    b.run("ppr_update_forget_roundtrip(I=1682,h=40)", || {
+    results.push(b.run("ppr_update_forget_roundtrip(I=1682,h=40)", || {
         ppr.update(&extra, &mut mw);
         ppr.forget(&extra, &mut mw);
-    });
-    b.run("ppr_predict_top10(I=1682)", || ppr.predict(&extra, 10));
+    }));
+    results.push(b.run("ppr_predict_top10(I=1682)", || ppr.predict(&extra, 10)));
 
     // --- QR rank-one at d=32 (the paper's 26d² op)
     let mut g = Mat::zeros(32, 32);
@@ -53,18 +54,18 @@ fn main() {
     let mut qr = QrFactor::decompose(&g);
     let u: Vec<f64> = (0..32).map(|_| rng.normal()).collect();
     let neg: Vec<f64> = u.iter().map(|x| -x).collect();
-    b.run("qr_rank1_update+downdate(d=32)", || {
+    results.push(b.run("qr_rank1_update+downdate(d=32)", || {
         qr.rank1_update(&u, &u);
         qr.rank1_update(&neg, &u);
-    });
+    }));
 
     // --- Tikhonov full step (z axpy + QR + solve)
     let mut tik = Tikhonov::new(32, 1.0);
     let obs = Observation { m: (0..32).map(|_| rng.normal()).collect(), r: 0.5 };
-    b.run("tikhonov_update+forget(d=32)", || {
+    results.push(b.run("tikhonov_update+forget(d=32)", || {
         tik.update(&obs, &mut mw);
         tik.forget(&obs, &mut mw);
-    });
+    }));
 
     // --- bandit selection at fleet scale
     let mut bandit = SleepingBandit::new(
@@ -72,18 +73,18 @@ fn main() {
         SelectorConfig { m: 50, min_fraction: 0.01, gamma: 20.0, ..Default::default() },
     );
     let avail: Vec<usize> = (0..500).step_by(2).collect();
-    b.run("bandit_select(n=500,m=50)", || bandit.select(&avail));
+    results.push(b.run("bandit_select(n=500,m=50)", || bandit.select(&avail)));
 
     // --- θ-LRU access stream
     let mut cache = PageCache::new(1500, Replacement::ThetaLru { theta: 0.3 });
     cache.begin_round();
     let pages: Vec<u64> = (0..4096).map(|_| rng.below(4000) as u64).collect();
     let mut i = 0;
-    b.run("theta_lru_access(cap=1500)", || {
+    results.push(b.run("theta_lru_access(cap=1500)", || {
         let p = pages[i & 4095];
         i += 1;
         cache.access(p)
-    });
+    }));
 
     // --- threaded-transport round-trip (PUB/SUB worker fabric)
     {
@@ -99,13 +100,13 @@ fn main() {
         };
         let mut transport = ThreadedTransport::spawn(build_devices(&cfg));
         let mut round = 0u64;
-        b.run("transport_round_trip(4 workers)", || {
+        results.push(b.run("transport_round_trip(4 workers)", || {
             round += 1;
             transport.execute(
                 &[0, 1, 2, 3],
                 RoundJob { round, scheme: Scheme::NewFl, arrivals: 0, theta: 0.0 },
             )
-        });
+        }));
     }
 
     // --- PJRT artifact dispatch (skipped without artifacts)
@@ -117,10 +118,12 @@ fn main() {
         engine.prepare("tikhonov_predict").unwrap();
         let h = Tensor::vec(vec![1.0; 32]);
         let x = Tensor::matrix(8, 32, vec![0.5; 256]);
-        b.run("pjrt_dispatch(tikhonov_predict)", || {
+        results.push(b.run("pjrt_dispatch(tikhonov_predict)", || {
             engine.call("tikhonov_predict", &[h.clone(), x.clone()]).unwrap()
-        });
+        }));
     } else {
         println!("pjrt_dispatch: skipped (run `make artifacts`)");
     }
+
+    write_results_json("microbench_hotpath", &results, &[]);
 }

@@ -23,7 +23,7 @@ use crate::learn::traits::Middleware;
 use crate::memsim::{PageCache, Replacement};
 use crate::power::governor::Policy;
 use crate::power::profile::ComponentState;
-use crate::power::state::{state_current_ua, wake_cost, ChargePlan};
+use crate::power::state::{state_current_ua, wake_cost, ChargePlan, ALL_FLEET_MODES};
 use crate::power::{
     Battery, DeviceProfile, DeviceSnapshot, EnergyMeter, FleetMode, Governor, PowerState,
 };
@@ -95,6 +95,33 @@ pub struct IdleOutcome {
     pub awake_equiv_uah: f64,
 }
 
+/// Cumulative fleet-ledger account of one device: every field is a
+/// per-device *sequential* fold of that device's own
+/// [`DeviceSim::step_idle`] outcomes, accumulated inside `step_idle`
+/// itself. Because the lazy ledger replays exactly the same window
+/// sequence through `step_idle` that the eager ledger billed tick by
+/// tick, these rows are bit-identical in both modes — they are the
+/// quantity the lazy/eager bit-identity contract is stated on (the
+/// per-round `RoundRecord` fleet sums are partial under the lazy
+/// ledger; see `coordinator::transport`).
+#[derive(Debug, Clone, Copy, PartialEq, Default)]
+pub struct LedgerRow {
+    /// Device id in the transport's id space (shard roots rebase it).
+    pub device: usize,
+    /// Idle-awake / kernel-idle floor energy billed to date (µAh).
+    pub idle_uah: f64,
+    /// Deep-sleep floor energy billed to date (µAh).
+    pub sleep_uah: f64,
+    /// Wake-transition energy billed to date (µAh).
+    pub wake_uah: f64,
+    /// Wake transitions billed to date.
+    pub wakes: u64,
+    /// Charge received from plugged sessions to date (µAh, post-clamp).
+    pub charged_uah: f64,
+    /// AllAwake counterfactual for the same idle windows (µAh).
+    pub awake_equiv_uah: f64,
+}
+
 /// Lifecycle of one shard item on the device (targeted unlearning needs
 /// id-addressable state, not just the contiguous [oldest, arrived)
 /// window the θ-LRU rotation maintains).
@@ -163,6 +190,12 @@ pub struct DeviceSim {
     /// itself, so they cannot perturb outcomes.
     avail_ewma: f64,
     swap_ewma: f64,
+    /// Lazy fleet ledger: index into the transport's shared window log
+    /// of the first clock tick this device has *not* billed yet. The
+    /// eager ledger keeps it pinned at the log head.
+    window_ptr: usize,
+    /// Cumulative ledger account (folded inside [`Self::step_idle`]).
+    acc: LedgerRow,
 }
 
 impl DeviceSim {
@@ -207,6 +240,8 @@ impl DeviceSim {
             drained: false,
             avail_ewma: 1.0,
             swap_ewma: 0.0,
+            window_ptr: 0,
+            acc: LedgerRow::default(),
         }
     }
 
@@ -564,7 +599,90 @@ impl DeviceSim {
             out.charged_uah = plan.advance(self.ledger_clock_s, dt_s, &mut self.battery);
         }
         self.ledger_clock_s += dt_s;
+        // cumulative account: a per-device sequential fold of this
+        // device's own outcomes, so it is bit-identical whether the
+        // windows were billed eagerly tick by tick or replayed in one
+        // lazy settle (same call sequence either way)
+        self.acc.idle_uah += out.idle_uah;
+        self.acc.sleep_uah += out.sleep_uah;
+        self.acc.wake_uah += out.wake_uah;
+        self.acc.wakes += out.wakes;
+        self.acc.charged_uah += out.charged_uah;
+        self.acc.awake_equiv_uah += out.awake_equiv_uah;
         out
+    }
+
+    /// Cumulative ledger account of this device (see [`LedgerRow`]).
+    pub fn ledger_row(&self) -> LedgerRow {
+        LedgerRow { device: self.id, ..self.acc }
+    }
+
+    /// Position in the transport's shared window log up to which this
+    /// device has billed its idle windows (lazy ledger bookkeeping).
+    pub fn window_ptr(&self) -> usize {
+        self.window_ptr
+    }
+
+    pub fn set_window_ptr(&mut self, ptr: usize) {
+        self.window_ptr = ptr;
+    }
+
+    /// Lazy-ledger bound check: could settling the pending idle windows
+    /// (`pending_dt_by_mode`, seconds deferred per [`FleetMode`] in
+    /// [`ALL_FLEET_MODES`] order) change what [`Self::step_availability`]
+    /// observes? Deciding this without settling is what makes the
+    /// selection probe O(1) per parked device:
+    ///
+    /// - a live device only behaves differently if its battery could
+    ///   cross the [`Battery::can_train`] low-water mark, so we drain an
+    ///   *unclamped* park-floor integral (charging and the empty clamp
+    ///   only raise the true level — the bound stays a lower bound) and
+    ///   settle only when that lower bound reaches the mark;
+    /// - a drained device only behaves differently if charging could
+    ///   lift it past the [`Battery::can_rejoin`] hysteresis band, so we
+    ///   settle only when charging the *entire* window at full rate
+    ///   (an upper bound — real plans are plugged part-time) clears it;
+    /// - a drained device with no charge plan can never rejoin, and
+    ///   draws no RNG while drained, so its windows can defer forever.
+    ///
+    /// When the bound says "skip", the availability outcome, RNG stream
+    /// and telemetry EWMA are provably identical to the eager ledger's;
+    /// when it says "settle", the caller replays the windows first and
+    /// the outcome is identical by construction. A parked unsettled
+    /// device never carries a pending wake latch (a woken device is
+    /// settled eagerly the round it trains), so wake energy is absent
+    /// from the bound on purpose.
+    pub fn needs_availability_settle(&self, pending_dt_by_mode: [f64; 3]) -> bool {
+        let total: f64 = pending_dt_by_mode.iter().sum();
+        if total <= 0.0 {
+            return false;
+        }
+        // the per-mode pending totals come from prefix-sum differences
+        // in the transport's window log, so they carry a few ulps of
+        // rounding; widen the bound by a relative guard band many orders
+        // of magnitude larger than that error, so rounding can only make
+        // the check more conservative (an unnecessary settle), never an
+        // incorrect skip
+        const BOUND_SLACK: f64 = 1e-9;
+        let cap = self.battery.capacity_uah();
+        if !self.drained {
+            let mut drain_uah = 0.0;
+            for (mode, dt) in ALL_FLEET_MODES.iter().zip(pending_dt_by_mode) {
+                if dt > 0.0 {
+                    drain_uah +=
+                        state_current_ua(&self.profile, mode.park_state()) * dt / 3600.0;
+                }
+            }
+            self.battery.level_uah() - drain_uah * (1.0 + BOUND_SLACK)
+                <= self.battery.low_water_frac() * cap
+        } else if let Some(plan) = &self.charge_plan {
+            let ub = (self.battery.level_uah()
+                + plan.rate_ua() * total / 3600.0 * (1.0 + BOUND_SLACK))
+                .min(cap);
+            ub > self.battery.rejoin_level_uah()
+        } else {
+            false
+        }
     }
 
     /// Post-FORGET audit: is the victim datum's trace verifiably out of
@@ -987,6 +1105,71 @@ mod tests {
         // snapshot telemetry reflects the plan's plugged bit
         let s = d.snapshot();
         assert_eq!(s.plugged, d.charge_plan.as_ref().unwrap().plugged());
+    }
+
+    #[test]
+    fn lazy_fast_forward_rejoins_the_same_round_as_eager() {
+        // The hysteresis crossing inside a deferred multi-window span is
+        // the easy off-by-one: a drained device must rejoin at the SAME
+        // round whether its idle windows were billed tick by tick or
+        // fast-forwarded in one settle gated by the availability bound
+        // check. Twin devices, identical charging schedules, 40 virtual
+        // hours — several plug/unplug sessions each.
+        let mut eager = device(Replacement::Lru, Policy::Interactive);
+        let mut lazy = device(Replacement::Lru, Policy::Interactive);
+        eager.enable_charging(4242);
+        lazy.enable_charging(4242);
+        eager.battery.drain(eager.battery.level_uah());
+        lazy.battery.drain(lazy.battery.level_uah());
+
+        // deferred windows of the lazy twin, plus per-mode totals in
+        // ALL_FLEET_MODES order (what the transport's window log keeps)
+        let mut pending: Vec<(f64, FleetMode)> = Vec::new();
+        let mut pending_dt = [0.0f64; 3];
+        let mut eager_online = Vec::new();
+        let mut lazy_online = Vec::new();
+        let mut settles = 0usize;
+        for round in 0..160 {
+            // vary the period so windows straddle plug flips unevenly
+            let dt = 900.0 + 60.0 * (round % 3) as f64;
+            eager_online.push(eager.step_availability());
+            eager.step_idle(dt, FleetMode::DealSleep, false);
+
+            if lazy.needs_availability_settle(pending_dt) {
+                settles += 1;
+                for &(w, m) in &pending {
+                    lazy.step_idle(w, m, false);
+                }
+                pending.clear();
+                pending_dt = [0.0; 3];
+            }
+            lazy_online.push(lazy.step_availability());
+            pending.push((dt, FleetMode::DealSleep));
+            pending_dt[0] += dt;
+        }
+        assert_eq!(eager_online, lazy_online, "rejoin round drifted");
+        assert!(
+            eager_online.iter().any(|&o| o),
+            "charging never revived the drained device"
+        );
+        assert!(settles > 0, "bound check never fired across plug sessions");
+        assert!(
+            settles < 160,
+            "bound check settled every round — laziness is vacuous"
+        );
+        // final settle: the books and the battery agree to the bit
+        for &(w, m) in &pending {
+            lazy.step_idle(w, m, false);
+        }
+        assert_eq!(
+            eager.battery().level_uah().to_bits(),
+            lazy.battery().level_uah().to_bits()
+        );
+        assert_eq!(eager.ledger_row(), lazy.ledger_row());
+        assert_eq!(
+            eager.ledger_row().charged_uah.to_bits(),
+            lazy.ledger_row().charged_uah.to_bits()
+        );
     }
 
     #[test]

@@ -7,7 +7,9 @@ use super::device::DeviceSim;
 use super::scheme::{Aggregation, Scheme};
 use super::server::{Federation, FederationConfig};
 use super::shard::ShardedTransport;
-use super::transport::{SyncTransport, ThreadedTransport, Transport, TransportKind};
+use super::transport::{
+    LedgerMode, SyncTransport, ThreadedTransport, Transport, TransportKind,
+};
 use super::unlearn::UnlearnConfig;
 use super::workload::{ModelKind, Workload};
 use crate::bandit::{
@@ -95,6 +97,12 @@ pub struct FleetConfig {
     /// Virtual round period (s) the fleet ledger bills idle floors
     /// over (`deal run --period`).
     pub round_period_s: f64,
+    /// Fleet ledger billing strategy (`deal run --ledger eager|lazy`):
+    /// eager steps every device every round (reference semantics);
+    /// lazy fast-forwards parked devices analytically so a round costs
+    /// O(selected + woken). Settled per-device books are bit-identical
+    /// either way.
+    pub ledger: LedgerMode,
 }
 
 impl Default for FleetConfig {
@@ -126,6 +134,7 @@ impl Default for FleetConfig {
             mode: None,
             charging: false,
             round_period_s: 60.0,
+            ledger: LedgerMode::Eager,
         }
     }
 }
@@ -292,6 +301,7 @@ pub fn build(cfg: &FleetConfig) -> Federation {
         },
         mode: cfg.mode,
         round_period_s: cfg.round_period_s,
+        ledger: cfg.ledger,
         ..FederationConfig::default()
     };
     Federation::with_contextual_selector(transport, selector, fed_cfg)

@@ -1,0 +1,450 @@
+//! Struct-of-arrays fleet park ledger: the million-device substrate.
+//!
+//! A full [`DeviceSim`](super::device::DeviceSim) carries a workload,
+//! a page cache and model state — kilobytes per device, built for
+//! fleets of 10¹–10³. The scaling story of the lazy fleet ledger
+//! (10⁵–10⁷ parked devices billed in O(selected + woken) per round)
+//! needs only the *power* half of a device: park floors, battery
+//! level, wake latch, charge schedule, window pointer and the
+//! cumulative [`LedgerRow`]. [`ParkLedger`] stores exactly that, as
+//! flat columns (struct of arrays), at ~250 bytes per device — 10⁶
+//! devices fit comfortably in memory and the columns stream through
+//! cache on an eager sweep.
+//!
+//! The FP contract is the same bit-identity the transports enforce:
+//! [`ParkLedger::step_one`] replicates
+//! [`DeviceSim::step_idle`](super::device::DeviceSim::step_idle)
+//! operation for operation (same order, same operands — floors are
+//! precomputed but [`state_current_ua`] is deterministic per
+//! profile/state, and charging goes through
+//! [`ChargePlan::advance_free`], pinned bitwise against
+//! `ChargePlan::advance`). The `parity_with_device_sim` test drives a
+//! real `DeviceSim` and a one-device `ParkLedger` through the same
+//! schedule and asserts bit equality of books and battery.
+//!
+//! Lazy billing works exactly as in `coordinator::transport`: one
+//! shared [`WindowLog`] of clock ticks, a per-device pointer into it,
+//! settles replaying each deferred window through `step_one`. Eager
+//! and lazy ledgers therefore produce bit-identical per-device rows —
+//! `benches/fleet_scaling.rs` uses both modes of this struct for the
+//! 10³→10⁶ round-throughput sweep.
+
+use super::device::LedgerRow;
+use super::transport::{mode_ix, ClockTick, LedgerMode, WindowLog};
+use crate::power::state::{state_current_ua, wake_cost, ChargePlan, ALL_FLEET_MODES};
+use crate::power::{DeviceProfile, FleetMode, PowerState};
+
+/// Flat-column power ledger for a fleet of parked devices.
+pub struct ParkLedger {
+    mode: LedgerMode,
+    /// Park-state floor current (µA) per [`ALL_FLEET_MODES`] entry.
+    floor_ua: Vec<[f64; 3]>,
+    /// Idle-awake floor current (µA) — the AllAwake counterfactual rate.
+    awake_ua: Vec<f64>,
+    /// Wake-transition cost `(latency_s, energy_uah)`.
+    wake: Vec<(f64, f64)>,
+    capacity_uah: Vec<f64>,
+    level_uah: Vec<f64>,
+    /// Plug/unplug schedule (`None` = charging disabled).
+    plan: Vec<Option<ChargePlan>>,
+    /// Per-device ledger clock (s since experiment start).
+    clock_s: Vec<f64>,
+    /// Busy seconds of the current round window (training already
+    /// billed externally), consumed by the next clock advance.
+    busy_s: Vec<f64>,
+    /// Training pulled the device out of deep sleep; the next advance
+    /// bills the transition.
+    woke: Vec<bool>,
+    state: Vec<PowerState>,
+    /// First window-log tick not yet billed (lazy bookkeeping).
+    window_ptr: Vec<usize>,
+    acc: Vec<LedgerRow>,
+    log: WindowLog,
+}
+
+impl ParkLedger {
+    /// Stand up `n` devices cycling through `profiles` (the same
+    /// `profiles[i % len]` rotation `fleet::build_devices` uses), all
+    /// booting awake on a full battery.
+    pub fn new(profiles: &[DeviceProfile], n: usize, mode: LedgerMode) -> Self {
+        assert!(!profiles.is_empty(), "ParkLedger needs at least one profile");
+        let mut l = ParkLedger {
+            mode,
+            floor_ua: Vec::with_capacity(n),
+            awake_ua: Vec::with_capacity(n),
+            wake: Vec::with_capacity(n),
+            capacity_uah: Vec::with_capacity(n),
+            level_uah: Vec::with_capacity(n),
+            plan: Vec::with_capacity(n),
+            clock_s: vec![0.0; n],
+            busy_s: vec![0.0; n],
+            woke: vec![false; n],
+            state: vec![PowerState::Awake; n],
+            window_ptr: vec![0; n],
+            acc: Vec::with_capacity(n),
+            log: WindowLog::new(),
+        };
+        for i in 0..n {
+            let p = &profiles[i % profiles.len()];
+            let mut floors = [0.0; 3];
+            for (j, m) in ALL_FLEET_MODES.iter().enumerate() {
+                floors[j] = state_current_ua(p, m.park_state());
+            }
+            l.floor_ua.push(floors);
+            l.awake_ua.push(state_current_ua(p, PowerState::Awake));
+            l.wake.push(wake_cost(p));
+            l.capacity_uah.push(p.battery_uah);
+            l.level_uah.push(p.battery_uah);
+            l.plan.push(None);
+            l.acc.push(LedgerRow { device: i, ..LedgerRow::default() });
+        }
+        l
+    }
+
+    pub fn n_devices(&self) -> usize {
+        self.level_uah.len()
+    }
+
+    pub fn mode(&self) -> LedgerMode {
+        self.mode
+    }
+
+    pub fn level_uah(&self, i: usize) -> f64 {
+        self.level_uah[i]
+    }
+
+    pub fn power_state(&self, i: usize) -> PowerState {
+        self.state[i]
+    }
+
+    /// Resident column bytes per device — what the fleet-scaling bench
+    /// reports as bytes/device (the log is amortized across the fleet
+    /// and excluded).
+    pub fn bytes_per_device() -> usize {
+        std::mem::size_of::<[f64; 3]>()          // floor_ua
+            + std::mem::size_of::<f64>()         // awake_ua
+            + std::mem::size_of::<(f64, f64)>()  // wake
+            + 2 * std::mem::size_of::<f64>()     // capacity + level
+            + std::mem::size_of::<Option<ChargePlan>>()
+            + 2 * std::mem::size_of::<f64>()     // clock + busy
+            + 2                                  // woke + state
+            + std::mem::size_of::<usize>()       // window_ptr
+            + std::mem::size_of::<LedgerRow>()
+    }
+
+    /// Enable deterministic plug/unplug charging for device `i` (same
+    /// seeding contract as `DeviceSim::enable_charging`).
+    pub fn enable_charging(&mut self, i: usize, seed: u64) {
+        self.plan[i] = Some(ChargePlan::new(seed, self.capacity_uah[i]));
+    }
+
+    /// Device `i` is about to train this round: settle its deferred
+    /// windows (the wake latch must act on settled state), latch the
+    /// deep-sleep wake, and mark it busy. Mirrors the
+    /// `run_round` prologue of `DeviceSim`.
+    pub fn begin_training(&mut self, i: usize) {
+        self.settle(i);
+        if self.state[i] == PowerState::DeepSleep {
+            self.woke[i] = true;
+        }
+        self.state[i] = PowerState::Training;
+    }
+
+    /// Credit `s` busy seconds to device `i`'s current round window
+    /// (the next clock advance subtracts them from the idle billing).
+    pub fn add_busy(&mut self, i: usize, s: f64) {
+        self.busy_s[i] += s;
+    }
+
+    /// Drain externally billed energy (training/FORGET meter totals)
+    /// from device `i`'s battery — `Battery::drain` semantics (clamped
+    /// at empty).
+    pub fn drain(&mut self, i: usize, uah: f64) {
+        drain_level(&mut self.level_uah[i], uah);
+    }
+
+    /// Advance the fleet clock one round window. `selected` must be
+    /// ascending. Eager mode sweeps every device; lazy mode steps only
+    /// the selected set and defers everyone else behind one log push —
+    /// O(selected) work for the round.
+    pub fn advance_clock(&mut self, tick: ClockTick, selected: &[usize]) {
+        debug_assert!(selected.windows(2).all(|w| w[0] < w[1]));
+        match self.mode {
+            LedgerMode::Eager => {
+                let mut sel = selected.iter().peekable();
+                for i in 0..self.n_devices() {
+                    let is_sel = sel.next_if(|&&s| s == i).is_some();
+                    self.step_one(i, tick.dt_s, tick.mode, is_sel);
+                }
+            }
+            LedgerMode::Lazy => {
+                for &i in selected {
+                    self.settle(i);
+                    self.step_one(i, tick.dt_s, tick.mode, true);
+                    // past the tick about to be appended
+                    self.window_ptr[i] = self.log.len() + 1;
+                }
+                self.log.push(tick);
+            }
+        }
+    }
+
+    /// Replay device `i`'s deferred windows (no-op when current, and
+    /// always a no-op under the eager mode, whose log never grows).
+    pub fn settle(&mut self, i: usize) {
+        if self.window_ptr[i] >= self.log.len() {
+            return;
+        }
+        let ticks: Vec<ClockTick> = self.log.since(self.window_ptr[i]).to_vec();
+        for t in ticks {
+            self.step_one(i, t.dt_s, t.mode, false);
+        }
+        self.window_ptr[i] = self.log.len();
+    }
+
+    /// Fast-forward every device to the log head (the stats-read
+    /// trigger).
+    pub fn settle_all(&mut self) {
+        for i in 0..self.n_devices() {
+            self.settle(i);
+        }
+    }
+
+    /// Per-device cumulative rows, ascending device id. Call
+    /// [`Self::settle_all`] first under the lazy mode.
+    pub fn rows(&self) -> &[LedgerRow] {
+        &self.acc
+    }
+
+    /// Fleet totals: the flat ascending device-major fold of
+    /// [`Self::rows`] — the bit-identity quantity (`device` is 0).
+    pub fn totals(&self) -> LedgerRow {
+        let mut t = LedgerRow::default();
+        for r in &self.acc {
+            t.idle_uah += r.idle_uah;
+            t.sleep_uah += r.sleep_uah;
+            t.wake_uah += r.wake_uah;
+            t.wakes += r.wakes;
+            t.charged_uah += r.charged_uah;
+            t.awake_equiv_uah += r.awake_equiv_uah;
+        }
+        t
+    }
+
+    /// One idle window for device `i` — a line-for-line FP mirror of
+    /// `DeviceSim::step_idle` (same operation order, same operands),
+    /// which is what makes the SoA books bit-identical to a fleet of
+    /// real simulators.
+    fn step_one(&mut self, i: usize, dt_s: f64, mode: FleetMode, selected: bool) {
+        let busy = std::mem::take(&mut self.busy_s[i]);
+        let mut win = if selected { (dt_s - busy).max(0.0) } else { dt_s };
+        let awake_equiv = self.awake_ua[i] * win / 3600.0;
+        let mut wake_uah = 0.0;
+        let mut wakes = 0u64;
+        if std::mem::take(&mut self.woke[i]) {
+            let (lat, uah) = self.wake[i];
+            wakes = 1;
+            wake_uah = uah;
+            drain_level(&mut self.level_uah[i], uah);
+            win = (win - lat).max(0.0);
+        }
+        let park = mode.park_state();
+        self.state[i] = park;
+        let floor_uah = self.floor_ua[i][mode_ix(mode)] * win / 3600.0;
+        let (mut idle, mut sleep) = (0.0, 0.0);
+        match park {
+            PowerState::DeepSleep => sleep = floor_uah,
+            _ => idle = floor_uah,
+        }
+        drain_level(&mut self.level_uah[i], floor_uah);
+        let mut charged = 0.0;
+        if let Some(plan) = &mut self.plan[i] {
+            charged = plan.advance_free(
+                self.clock_s[i],
+                dt_s,
+                &mut self.level_uah[i],
+                self.capacity_uah[i],
+            );
+        }
+        self.clock_s[i] += dt_s;
+        let a = &mut self.acc[i];
+        a.idle_uah += idle;
+        a.sleep_uah += sleep;
+        a.wake_uah += wake_uah;
+        a.wakes += wakes;
+        a.charged_uah += charged;
+        a.awake_equiv_uah += awake_equiv;
+    }
+}
+
+/// `Battery::drain` on a bare level column: subtract, clamp at empty.
+fn drain_level(level_uah: &mut f64, uah: f64) {
+    debug_assert!(uah >= 0.0);
+    *level_uah -= uah;
+    if *level_uah <= 0.0 {
+        *level_uah = 0.0;
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coordinator::device::DeviceSim;
+    use crate::coordinator::scheme::Scheme;
+    use crate::coordinator::workload::Workload;
+    use crate::memsim::Replacement;
+    use crate::power::governor::Policy;
+    use crate::power::profile::{honor, table1_profiles};
+
+    fn sim_device() -> DeviceSim {
+        let data = match crate::data::synth::generate(
+            crate::data::Dataset::Movielens,
+            9,
+            0.08,
+        ) {
+            crate::data::Data::Ranking(d) => d,
+            _ => unreachable!(),
+        };
+        let idx: Vec<usize> = (0..60).collect();
+        let w = Workload::ppr_from(&data, &idx, 10);
+        DeviceSim::new(0, honor(), Policy::DealAggressive, Replacement::ThetaLru { theta: 0.3 }, w, 77)
+    }
+
+    #[test]
+    fn parity_with_device_sim() {
+        // a real simulator and a one-device SoA ledger driven through
+        // the same schedule must agree to the bit: books, battery,
+        // power state — across selected/parked rounds, wake latches,
+        // all three fleet modes and live charging sessions
+        let mut dev = sim_device();
+        let mut led = ParkLedger::new(&[honor()], 1, LedgerMode::Eager);
+        dev.enable_charging(5150);
+        led.enable_charging(0, 5150);
+        for round in 0..40usize {
+            let dt = 600.0 + 45.0 * (round % 4) as f64;
+            let mode = ALL_FLEET_MODES[(round / 5) % 3];
+            let selected = round % 3 == 0;
+            if selected {
+                let out = dev.run_round(Scheme::Deal, 5, 0.3);
+                led.begin_training(0);
+                led.add_busy(0, out.time_s);
+                led.drain(0, out.energy_uah);
+            }
+            let tick = ClockTick { dt_s: dt, mode };
+            let sel: &[usize] = if selected { &[0] } else { &[] };
+            let want = dev.step_idle(dt, mode, selected);
+            led.advance_clock(tick, sel);
+            assert_eq!(dev.power_state(), led.power_state(0), "round {round}");
+            let _ = want;
+        }
+        let want = dev.ledger_row();
+        let got = led.rows()[0];
+        assert_eq!(want.idle_uah.to_bits(), got.idle_uah.to_bits());
+        assert_eq!(want.sleep_uah.to_bits(), got.sleep_uah.to_bits());
+        assert_eq!(want.wake_uah.to_bits(), got.wake_uah.to_bits());
+        assert_eq!(want.wakes, got.wakes);
+        assert!(got.wakes > 0, "schedule never exercised the wake latch");
+        assert_eq!(want.charged_uah.to_bits(), got.charged_uah.to_bits());
+        assert!(got.charged_uah > 0.0, "schedule never exercised charging");
+        assert_eq!(want.awake_equiv_uah.to_bits(), got.awake_equiv_uah.to_bits());
+        assert_eq!(
+            dev.battery().level_uah().to_bits(),
+            led.level_uah(0).to_bits()
+        );
+    }
+
+    #[test]
+    fn lazy_matches_eager_bitwise() {
+        let profiles = table1_profiles();
+        let n = 16usize;
+        let mut eager = ParkLedger::new(&profiles, n, LedgerMode::Eager);
+        let mut lazy = ParkLedger::new(&profiles, n, LedgerMode::Lazy);
+        for i in (0..n).step_by(2) {
+            let seed = 0xC0FFEE ^ i as u64;
+            eager.enable_charging(i, seed);
+            lazy.enable_charging(i, seed);
+        }
+        for round in 0..60usize {
+            let dt = 900.0 + 120.0 * (round % 5) as f64;
+            let mode = ALL_FLEET_MODES[(round / 7) % 3];
+            let mut selected = vec![round % n, (round * 5 + 2) % n];
+            selected.sort_unstable();
+            selected.dedup();
+            for l in [&mut eager, &mut lazy] {
+                for &i in &selected {
+                    l.begin_training(i);
+                    l.add_busy(i, 2.5 + i as f64 * 0.125);
+                    l.drain(i, 400.0 + round as f64);
+                }
+                l.advance_clock(ClockTick { dt_s: dt, mode }, &selected);
+            }
+        }
+        lazy.settle_all();
+        for (a, b) in eager.rows().iter().zip(lazy.rows()) {
+            assert_eq!(a.device, b.device);
+            assert_eq!(a.idle_uah.to_bits(), b.idle_uah.to_bits(), "dev {}", a.device);
+            assert_eq!(a.sleep_uah.to_bits(), b.sleep_uah.to_bits(), "dev {}", a.device);
+            assert_eq!(a.wake_uah.to_bits(), b.wake_uah.to_bits(), "dev {}", a.device);
+            assert_eq!(a.wakes, b.wakes, "dev {}", a.device);
+            assert_eq!(
+                a.charged_uah.to_bits(),
+                b.charged_uah.to_bits(),
+                "dev {}",
+                a.device
+            );
+            assert_eq!(
+                a.awake_equiv_uah.to_bits(),
+                b.awake_equiv_uah.to_bits(),
+                "dev {}",
+                a.device
+            );
+        }
+        for i in 0..n {
+            assert_eq!(
+                eager.level_uah(i).to_bits(),
+                lazy.level_uah(i).to_bits(),
+                "battery diverged on device {i}"
+            );
+        }
+        let te = eager.totals();
+        let tl = lazy.totals();
+        assert_eq!(te.sleep_uah.to_bits(), tl.sleep_uah.to_bits());
+        assert_eq!(te.idle_uah.to_bits(), tl.idle_uah.to_bits());
+        assert!(te.wakes > 0, "no wake ever billed");
+        assert!(te.charged_uah > 0.0, "no charge ever credited");
+    }
+
+    #[test]
+    fn soa_stays_compact() {
+        // the scaling premise: a ledger device is ~two cache lines,
+        // not a kilobytes-scale DeviceSim
+        assert!(
+            ParkLedger::bytes_per_device() <= 320,
+            "bytes/device grew to {}",
+            ParkLedger::bytes_per_device()
+        );
+    }
+
+    #[test]
+    fn lazy_round_defers_everything_but_selected() {
+        let mut l = ParkLedger::new(&[honor()], 8, LedgerMode::Lazy);
+        let tick = ClockTick { dt_s: 60.0, mode: FleetMode::DealSleep };
+        for _ in 0..10 {
+            l.begin_training(3);
+            l.advance_clock(tick, &[3]);
+        }
+        // only the selected device has billed anything yet
+        for (i, r) in l.rows().iter().enumerate() {
+            if i == 3 {
+                assert!(r.sleep_uah > 0.0);
+            } else {
+                assert_eq!(r.sleep_uah, 0.0, "device {i} billed eagerly");
+                assert_eq!(r.awake_equiv_uah, 0.0);
+            }
+        }
+        l.settle_all();
+        for r in l.rows() {
+            assert!(r.sleep_uah > 0.0, "device {} unsettled", r.device);
+        }
+    }
+}

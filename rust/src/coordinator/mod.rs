@@ -62,14 +62,34 @@
 //!   [`FederationStats::fleet`] reports the whole-fleet footprint by
 //!   state plus the savings ratio vs the AllAwake baseline (the
 //!   paper's 75.6–82.4% headline)
+//! - **The lazy fleet ledger** (PR 6): the eager ledger's O(n)-per-round
+//!   sweep caps fleets near 10⁴ devices. [`transport::LedgerMode::Lazy`]
+//!   (`FleetConfig::ledger`) keeps one shared window log of
+//!   [`ClockTick`]s per fabric and a per-device pointer into it:
+//!   parked devices defer their billing behind a single log push and
+//!   are **analytically fast-forwarded** — the exact window sequence
+//!   replayed through `step_idle` — only on wake, on a selection probe
+//!   whose availability *bound check* (`DeviceSim::needs_availability_settle`:
+//!   floor-current energy integral vs the low-water mark, full-rate
+//!   charge upper bound vs the rejoin hysteresis) says the outcome
+//!   could change, or on a stats read ([`Federation::settle_fleet`]).
+//!   A round then costs O(selected + woken). The contract is
+//!   **bit-identity** on the per-device cumulative
+//!   [`device::LedgerRow`]s and their flat id-order fold — pinned by
+//!   `rust/tests/transport_equivalence.rs` across transports × shard
+//!   counts × fleet modes × charging. [`ledger::ParkLedger`] is the
+//!   struct-of-arrays embodiment for 10⁵–10⁷-device fleets
+//!   (`benches/fleet_scaling.rs`)
 //! - [`fleet`] — experiment builder used by benches and examples
 //!   (`FleetConfig::selector` / `FleetConfig::features` pick the
 //!   selection algorithm and gate the telemetry pipeline;
 //!   `FleetConfig::deletion_rate` turns on the deletion stream;
-//!   `FleetConfig::{mode, charging, round_period_s}` drive the ledger)
+//!   `FleetConfig::{mode, charging, round_period_s}` drive the ledger;
+//!   `FleetConfig::ledger` picks eager vs lazy billing)
 
 pub mod device;
 pub mod fleet;
+pub mod ledger;
 pub mod scheme;
 pub mod server;
 pub mod shard;
@@ -77,14 +97,15 @@ pub mod transport;
 pub mod unlearn;
 pub mod workload;
 
-pub use device::{DeviceSim, IdleOutcome, LocalOutcome};
+pub use device::{DeviceSim, IdleOutcome, LedgerRow, LocalOutcome};
 pub use fleet::FleetConfig;
+pub use ledger::ParkLedger;
 pub use scheme::{Aggregation, Scheme};
 pub use server::{Federation, FederationConfig, FederationStats};
 pub use shard::ShardedTransport;
 pub use transport::{
-    ClockTick, ProbeReport, RoundJob, ShardSummary, SyncTransport, ThreadedTransport,
-    Transport, TransportKind, WorkerReply,
+    ClockTick, LedgerCfg, LedgerMode, ProbeReport, RoundJob, ShardSummary,
+    SyncTransport, ThreadedTransport, Transport, TransportKind, WorkerReply,
 };
 pub use unlearn::{
     DeletionRequest, ForgetAck, ForgetCommand, ForgetStatus, UnlearnConfig,

@@ -15,7 +15,9 @@
 
 use super::device::{DeviceSim, LocalOutcome};
 use super::scheme::{Aggregation, Scheme};
-use super::transport::{ClockTick, RoundJob, ShardSummary, SyncTransport, Transport};
+use super::transport::{
+    ClockTick, LedgerCfg, LedgerMode, RoundJob, ShardSummary, SyncTransport, Transport,
+};
 use super::unlearn::{UnlearnConfig, UnlearnQueue, UnlearnStats};
 use crate::bandit::{ContextFree, ContextualSelector, Selector};
 use crate::power::{DeviceSnapshot, FleetEnergyBreakdown, FleetMode};
@@ -58,6 +60,17 @@ pub struct FederationConfig {
     /// rounds are minutes apart while training is a burst — this is
     /// where the all-awake drain actually accrues.
     pub round_period_s: f64,
+    /// Fleet ledger billing strategy (`deal run --ledger`). `Eager`
+    /// (the default) steps every device every round — the reference
+    /// semantics every golden/equivalence suite pins. `Lazy` defers
+    /// parked devices behind a shared window log and fast-forwards
+    /// them only on wake, selection probe or stats read, so a round
+    /// costs O(selected + woken) instead of O(n). The per-device
+    /// cumulative ledger rows are bit-identical either way (see
+    /// [`Self::settle_fleet`](Federation::settle_fleet)); the per-round
+    /// `fleet_*` fields of [`RoundRecord`] are *partial* under lazy —
+    /// they cover only the devices actually stepped that round.
+    pub ledger: LedgerMode,
 }
 
 impl Default for FederationConfig {
@@ -74,6 +87,7 @@ impl Default for FederationConfig {
             unlearn: UnlearnConfig::default(),
             mode: None,
             round_period_s: 60.0,
+            ledger: LedgerMode::Eager,
         }
     }
 }
@@ -103,7 +117,10 @@ pub struct RoundRecord {
     /// from `energy_uah` so the forget energy share is reportable.
     pub forget_energy_uah: f64,
     /// Fleet ledger, idle-awake/kernel-idle floors billed this round
-    /// window (µAh) — every device, selected or not.
+    /// window (µAh) — every device, selected or not. Under
+    /// [`LedgerMode::Lazy`] this and the other `fleet_*`/wake/charge
+    /// fields cover only the devices actually stepped this round;
+    /// exact cumulative totals come from [`Federation::settle_fleet`].
     pub fleet_idle_uah: f64,
     /// Fleet ledger, deep-sleep floors billed this round window (µAh).
     pub fleet_sleep_uah: f64,
@@ -158,6 +175,25 @@ pub struct Federation {
     pending: Vec<PendingReply>,
     /// GDPR deletion queue + SLO books (inert unless configured or fed)
     unlearn: UnlearnQueue,
+    /// Settled fleet-ledger totals from the last [`Self::settle_fleet`];
+    /// cleared whenever a round runs. When present, [`Self::stats`]
+    /// derives the fleet energy fields from these device-major totals
+    /// instead of the per-round records.
+    fleet_totals: Option<FleetLedgerTotals>,
+}
+
+/// Fleet-wide ledger totals folded device-major (flat ascending device
+/// id, one addend per device per bucket) from the transport's settled
+/// [`LedgerRow`](super::device::LedgerRow)s. This fold order is the
+/// bit-identity quantity shared by the eager and lazy ledgers.
+#[derive(Debug, Clone, Copy, Default)]
+struct FleetLedgerTotals {
+    idle_uah: f64,
+    sleep_uah: f64,
+    wake_uah: f64,
+    wakes: u64,
+    charged_uah: f64,
+    awake_equiv_uah: f64,
 }
 
 impl Federation {
@@ -188,12 +224,23 @@ impl Federation {
     /// Build over any transport with a [`ContextualSelector`] — the
     /// telemetry-fed path (`SelectorKind::LinUcb` in `fleet::build`).
     pub fn with_contextual_selector(
-        transport: Box<dyn Transport>,
+        mut transport: Box<dyn Transport>,
         selector: Box<dyn ContextualSelector>,
         cfg: FederationConfig,
     ) -> Self {
         let n = transport.n_devices();
         let unlearn = UnlearnQueue::new(cfg.unlearn.clone());
+        if cfg.ledger == LedgerMode::Lazy {
+            // contextual selectors score *current* telemetry, so lazy
+            // probes must settle every device before snapshotting;
+            // CSB-F never reads the snapshots and keeps full laziness.
+            // Only lazy configs touch the transport — eager fleets see
+            // zero new control messages.
+            transport.set_ledger(LedgerCfg {
+                mode: LedgerMode::Lazy,
+                fresh_telemetry: selector.wants_context() && cfg.features,
+            });
+        }
         Federation {
             cfg,
             transport,
@@ -209,6 +256,7 @@ impl Federation {
             rounds: Vec::new(),
             pending: Vec::new(),
             unlearn,
+            fleet_totals: None,
         }
     }
 
@@ -290,6 +338,9 @@ impl Federation {
     /// Run one federated round; returns its record.
     pub fn run_round(&mut self) -> RoundRecord {
         self.round += 1;
+        // any previously settled fleet totals go stale the moment a
+        // new round bills more windows
+        self.fleet_totals = None;
         // 0. GDPR deletion-request arrivals: the configured stream
         // feeds the unlearn queue. Inert (no RNG draw, no work) when
         // the deletion subsystem is off — the whole unlearning path
@@ -565,7 +616,38 @@ impl Federation {
         for _ in 0..n {
             self.run_round();
         }
+        if self.cfg.ledger == LedgerMode::Lazy {
+            // drain every deferred window so the returned stats carry
+            // the full fleet footprint, not the partial per-round sums
+            self.settle_fleet();
+        }
         self.stats()
+    }
+
+    /// Fast-forward every deferred idle window and fold the fleet's
+    /// cumulative per-device ledger rows into whole-run totals.
+    ///
+    /// This is the lazy ledger's stats-read trigger — and the
+    /// **bit-identity anchor**: the rows are accumulated per device by
+    /// the same `step_idle` calls in either [`LedgerMode`], and the
+    /// fold here walks them flat in ascending device id, so eager and
+    /// lazy federations (any transport, any shard count) produce
+    /// bit-identical totals. Subsequent [`Self::stats`] calls report
+    /// fleet energy from these totals until the next round invalidates
+    /// them. Valid (and a no-op beyond the fold) under the eager
+    /// ledger too.
+    pub fn settle_fleet(&mut self) {
+        let rows = self.transport.collect_ledger();
+        let mut t = FleetLedgerTotals::default();
+        for r in &rows {
+            t.idle_uah += r.idle_uah;
+            t.sleep_uah += r.sleep_uah;
+            t.wake_uah += r.wake_uah;
+            t.wakes += r.wakes;
+            t.charged_uah += r.charged_uah;
+            t.awake_equiv_uah += r.awake_equiv_uah;
+        }
+        self.fleet_totals = Some(t);
     }
 
     /// Reward Xᵢ(k) ∈ [0,1]: the paper's objective blend — latency
@@ -600,12 +682,25 @@ impl Federation {
         // plus the emulated AllAwake baseline (same training, every idle
         // window billed at the idle-awake floor). Under AllAwake mode
         // the actual idle billing *is* the baseline term, so the
-        // savings ratio is exactly 0.0 there.
+        // savings ratio is exactly 0.0 there. When `settle_fleet` has
+        // run (always, at the end of a lazy `run`) the idle buckets
+        // come from its device-major totals — the lazy/eager
+        // bit-identity quantity — instead of the per-round records,
+        // which are partial under the lazy ledger.
         let fleet = FleetEnergyBreakdown {
             train_uah: train_energy,
-            idle_uah: self.rounds.iter().map(|r| r.fleet_idle_uah).sum(),
-            sleep_uah: self.rounds.iter().map(|r| r.fleet_sleep_uah).sum(),
-            wake_uah: self.rounds.iter().map(|r| r.fleet_wake_uah).sum(),
+            idle_uah: match &self.fleet_totals {
+                Some(t) => t.idle_uah,
+                None => self.rounds.iter().map(|r| r.fleet_idle_uah).sum(),
+            },
+            sleep_uah: match &self.fleet_totals {
+                Some(t) => t.sleep_uah,
+                None => self.rounds.iter().map(|r| r.fleet_sleep_uah).sum(),
+            },
+            wake_uah: match &self.fleet_totals {
+                Some(t) => t.wake_uah,
+                None => self.rounds.iter().map(|r| r.fleet_wake_uah).sum(),
+            },
             forget_uah: forget_energy,
         };
         // the baseline sums in the same shape as `fleet.total_uah()`
@@ -613,7 +708,10 @@ impl Federation {
         // where the idle billing bit-equals the counterfactual — the
         // savings ratio is exactly 0.0, not 0.0-plus-rounding
         let allawake_baseline_uah = FleetEnergyBreakdown {
-            idle_uah: self.rounds.iter().map(|r| r.allawake_equiv_uah).sum(),
+            idle_uah: match &self.fleet_totals {
+                Some(t) => t.awake_equiv_uah,
+                None => self.rounds.iter().map(|r| r.allawake_equiv_uah).sum(),
+            },
             sleep_uah: 0.0,
             wake_uah: 0.0,
             ..fleet
@@ -638,8 +736,14 @@ impl Federation {
             fleet,
             allawake_baseline_uah,
             savings_vs_allawake,
-            wake_transitions: self.rounds.iter().map(|r| r.wake_transitions).sum(),
-            charged_uah: self.rounds.iter().map(|r| r.charged_uah).sum(),
+            wake_transitions: match &self.fleet_totals {
+                Some(t) => t.wakes,
+                None => self.rounds.iter().map(|r| r.wake_transitions).sum(),
+            },
+            charged_uah: match &self.fleet_totals {
+                Some(t) => t.charged_uah,
+                None => self.rounds.iter().map(|r| r.charged_uah).sum(),
+            },
         }
     }
 }
@@ -1123,6 +1227,53 @@ mod tests {
             rec2.fleet_sleep_uah > rec.fleet_sleep_uah,
             "longer period must bill more idle floor"
         );
+    }
+
+    #[test]
+    fn lazy_ledger_stats_match_settled_eager() {
+        // eager reference, settled so stats read the device-major fold
+        let mut eager = small_federation(Scheme::Deal);
+        eager.run(8);
+        eager.settle_fleet();
+        let se = eager.stats();
+        // lazy run(): auto-settles, same fold, bit-identical fleet books
+        let mut cfg = small_cfg(Scheme::Deal);
+        cfg.ledger = LedgerMode::Lazy;
+        let mut lazy = fleet::build(&cfg);
+        let sl = lazy.run(8);
+        assert_eq!(se.fleet.idle_uah.to_bits(), sl.fleet.idle_uah.to_bits());
+        assert_eq!(se.fleet.sleep_uah.to_bits(), sl.fleet.sleep_uah.to_bits());
+        assert_eq!(se.fleet.wake_uah.to_bits(), sl.fleet.wake_uah.to_bits());
+        assert_eq!(se.fleet.train_uah.to_bits(), sl.fleet.train_uah.to_bits());
+        assert_eq!(se.wake_transitions, sl.wake_transitions);
+        assert_eq!(se.charged_uah.to_bits(), sl.charged_uah.to_bits());
+        assert_eq!(
+            se.allawake_baseline_uah.to_bits(),
+            sl.allawake_baseline_uah.to_bits()
+        );
+        assert_eq!(
+            se.savings_vs_allawake.to_bits(),
+            sl.savings_vs_allawake.to_bits()
+        );
+        // the training side never depended on the ledger mode
+        assert_eq!(se.total_energy_uah.to_bits(), sl.total_energy_uah.to_bits());
+        assert_eq!(se.total_time_s.to_bits(), sl.total_time_s.to_bits());
+    }
+
+    #[test]
+    fn lazy_allawake_savings_stay_exactly_zero() {
+        let mut cfg = small_cfg(Scheme::Deal);
+        cfg.mode = Some(FleetMode::AllAwake);
+        cfg.ledger = LedgerMode::Lazy;
+        let mut f = fleet::build(&cfg);
+        let s = f.run(6);
+        // device-major fold: every window adds bitwise-equal idle and
+        // awake-equivalent terms, so the ratio is exactly 0.0
+        assert_eq!(s.savings_vs_allawake, 0.0);
+        assert_eq!(s.fleet.total_uah().to_bits(), s.allawake_baseline_uah.to_bits());
+        assert_eq!(s.fleet.sleep_uah, 0.0);
+        assert_eq!(s.fleet.wake_uah, 0.0);
+        assert_eq!(s.wake_transitions, 0);
     }
 
     #[test]

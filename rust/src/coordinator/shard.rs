@@ -24,11 +24,11 @@
 //!   aggregate selection fraction meets Σᵢ∈shard rᵢ — enforced by
 //!   `rust/tests/prop_selector.rs`.
 
-use super::device::{DeviceSim, IdleOutcome};
+use super::device::{DeviceSim, IdleOutcome, LedgerRow};
 use super::transport::{
     default_workers, partition_bounds, partition_chunks, sort_replies, ClockTick,
-    ProbeReport, RoundJob, ShardSummary, SyncTransport, ThreadedTransport, Transport,
-    TransportKind, WorkerReply,
+    LedgerCfg, ProbeReport, RoundJob, ShardSummary, SyncTransport, ThreadedTransport,
+    Transport, TransportKind, WorkerReply,
 };
 use super::unlearn::{sort_acks, ForgetAck, ForgetCommand};
 use crate::power::DeviceProfile;
@@ -48,6 +48,11 @@ struct ShardCounters {
     peak_gflops_sum: f64,
     forgets: u64,
     forget_energy_uah: f64,
+    // Idle billing booked through `advance_clock` rows. Under
+    // `LedgerMode::Lazy` these under-report: deferred windows settle
+    // through probe/execute/collect_ledger paths that bypass the
+    // advance_clock booking below. Exact per-device energy under lazy
+    // comes from `collect_ledger`, not from these shard counters.
     idle_uah: f64,
     sleep_uah: f64,
     wake_uah: f64,
@@ -288,6 +293,42 @@ impl Transport for ShardedTransport {
                 sum.wake_uah += r.wake_uah;
             }
             merged.extend(reports.into_iter().map(|mut r| {
+                r.device += base;
+                r
+            }));
+        }
+        merged
+    }
+
+    fn set_ledger(&mut self, cfg: LedgerCfg) {
+        for leader in &mut self.leaders {
+            match leader {
+                Leader::Sync(t) => t.set_ledger(cfg),
+                Leader::Threaded(t) => t.set_ledger(cfg),
+            }
+        }
+    }
+
+    fn collect_ledger(&mut self) -> Vec<LedgerRow> {
+        // phase 1: fire the settle-and-report at every threaded leader
+        // so shards drain their deferred windows concurrently
+        for leader in &mut self.leaders {
+            if let Leader::Threaded(t) = leader {
+                t.dispatch_collect_ledger();
+            }
+        }
+        // phase 2: walk shards in id order and rebase; each leader
+        // reports ascending local ids and shard bases ascend, so the
+        // concatenation is already globally ascending — the flat
+        // device-major fold order the bit-identity contract needs
+        let mut merged: Vec<LedgerRow> = Vec::with_capacity(self.n_devices());
+        for (s, leader) in self.leaders.iter_mut().enumerate() {
+            let base = self.bounds[s];
+            let rows = match leader {
+                Leader::Sync(t) => t.collect_ledger(),
+                Leader::Threaded(t) => t.collect_ledger_rows(),
+            };
+            merged.extend(rows.into_iter().map(|mut r| {
                 r.device += base;
                 r
             }));
@@ -555,6 +596,55 @@ mod tests {
         assert!((row_sleep - booked).abs() < 1e-9, "{row_sleep} vs {booked}");
         assert!(sums2.iter().all(|s| s.sleep_uah > 0.0));
         assert!(sums2.iter().all(|s| s.idle_uah == 0.0), "deal mode never idles awake");
+    }
+
+    #[test]
+    fn sharded_lazy_ledger_matches_flat_lazy() {
+        use crate::coordinator::transport::LedgerMode;
+        use crate::power::FleetMode;
+        let lazy = LedgerCfg { mode: LedgerMode::Lazy, fresh_telemetry: false };
+        let tick = ClockTick { dt_s: 150.0, mode: FleetMode::DealSleep };
+        let mut flat = SyncTransport::new(fleet(9));
+        flat.set_ledger(lazy);
+        let mut variants = vec![
+            ShardedTransport::new(fleet(9), 2, TransportKind::Sync),
+            ShardedTransport::new(fleet(9), 4, TransportKind::Sync),
+            ShardedTransport::new(fleet(9), 3, TransportKind::Threaded),
+        ];
+        for v in &mut variants {
+            v.set_ledger(lazy);
+        }
+        let selected = [1usize, 4, 7];
+        for round in 1..=5u64 {
+            let want_p = flat.probe();
+            let want_r = flat.execute(&selected, job(round));
+            let want_c = flat.advance_clock(tick, &selected);
+            for v in &mut variants {
+                assert_eq!(want_p, v.probe(), "round {round} probe");
+                let got_r = v.execute(&selected, job(round));
+                for (ra, rb) in want_r.iter().zip(&got_r) {
+                    assert_eq!(ra.device, rb.device);
+                    assert_eq!(ra.outcome.time_s.to_bits(), rb.outcome.time_s.to_bits());
+                }
+                // lazy advance_clock only reports the woken set
+                assert_eq!(want_c, v.advance_clock(tick, &selected), "round {round}");
+            }
+        }
+        let want = flat.collect_ledger();
+        assert_eq!(want.len(), 9);
+        for v in &mut variants {
+            let got = v.collect_ledger();
+            assert_eq!(want.len(), got.len(), "{}", v.describe());
+            for (a, b) in want.iter().zip(&got) {
+                assert_eq!(a.device, b.device);
+                assert_eq!(a.idle_uah.to_bits(), b.idle_uah.to_bits());
+                assert_eq!(a.sleep_uah.to_bits(), b.sleep_uah.to_bits());
+                assert_eq!(a.wake_uah.to_bits(), b.wake_uah.to_bits());
+                assert_eq!(a.wakes, b.wakes);
+                assert_eq!(a.charged_uah.to_bits(), b.charged_uah.to_bits());
+                assert_eq!(a.awake_equiv_uah.to_bits(), b.awake_equiv_uah.to_bits());
+            }
+        }
     }
 
     #[test]

@@ -28,11 +28,38 @@
 //! any shard count produces bit-identical
 //! [`FederationStats`](super::server::FederationStats) for the same
 //! seed, regardless of wall-clock thread scheduling.
+//!
+//! # Lazy fleet ledger (analytic fast-forward)
+//!
+//! The eager ledger bills *every* device on *every* clock tick — O(n)
+//! per round, which caps fleets near 10⁴ devices. Under
+//! [`LedgerMode::Lazy`] a transport instead appends each tick to a
+//! shared [`WindowLog`] (per transport, or per worker thread) and bills
+//! a parked device only when something observes it: selection/training
+//! ([`Transport::execute`] settles first), a deletion
+//! ([`Transport::execute_forgets`]), an availability probe whose
+//! battery bound-check says the pending windows could flip the
+//! [`DeviceSim::step_availability`] outcome
+//! ([`DeviceSim::needs_availability_settle`] — O(1) per device), or a
+//! stats read ([`Transport::collect_ledger`], which settles the whole
+//! fleet). A round therefore costs O(selected + woken) device steps.
+//!
+//! **Bit-identity contract.** Settling replays each deferred window as
+//! its own [`DeviceSim::step_idle`] call, in log order — never merged
+//! (`c·(dt₁+dt₂) ≠ c·dt₁ + c·dt₂` in floating point, and the battery
+//! clamp and charge-plan RNG walk are per-window). Each device thus
+//! sees the *identical* `step_idle` call sequence in both modes, so its
+//! cumulative [`LedgerRow`] and every training-path outcome are
+//! bit-identical. The identity is stated on per-device rows and their
+//! flat id-order fold (`Federation::settle_fleet`) — the per-round
+//! `RoundRecord` fleet sums are *partial* under the lazy ledger (only
+//! settled devices have billed), which is the price of not touching
+//! O(n) devices per round.
 
 use std::sync::mpsc::{channel, Receiver, Sender};
 use std::thread::JoinHandle;
 
-use super::device::{DeviceSim, IdleOutcome, LocalOutcome};
+use super::device::{DeviceSim, IdleOutcome, LedgerRow, LocalOutcome};
 use super::scheme::Scheme;
 use super::unlearn::{sort_acks, ForgetAck, ForgetCommand};
 use crate::power::{DeviceProfile, DeviceSnapshot, FleetMode};
@@ -61,6 +88,120 @@ pub struct ClockTick {
     pub dt_s: f64,
     /// Fleet power policy choosing each device's parking state.
     pub mode: FleetMode,
+}
+
+/// How the fleet ledger bills parked devices.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash, Default)]
+pub enum LedgerMode {
+    /// Bill every device on every clock tick (the reference path — the
+    /// default, and what every pinned-number test runs against).
+    #[default]
+    Eager,
+    /// Defer parked devices' windows in a [`WindowLog`] and settle them
+    /// only on wake, probe bound-check, or stats read — O(selected +
+    /// woken) per round, bit-identical per-device books (see the module
+    /// docs).
+    Lazy,
+}
+
+impl LedgerMode {
+    pub fn name(&self) -> &'static str {
+        match self {
+            LedgerMode::Eager => "eager",
+            LedgerMode::Lazy => "lazy",
+        }
+    }
+
+    pub fn from_name(s: &str) -> Option<LedgerMode> {
+        match s.to_ascii_lowercase().as_str() {
+            "eager" => Some(LedgerMode::Eager),
+            "lazy" | "fastforward" | "fast-forward" => Some(LedgerMode::Lazy),
+            _ => None,
+        }
+    }
+}
+
+/// Fleet-ledger configuration pushed to a transport (and its workers)
+/// before the first round.
+#[derive(Debug, Clone, Copy, PartialEq, Default)]
+pub struct LedgerCfg {
+    pub mode: LedgerMode,
+    /// Settle every device on every probe so telemetry snapshots are
+    /// always current. Required when the selection layer *reads*
+    /// context (LinUCB); the context-free default keeps full laziness —
+    /// stale snapshots flow to `latest_snapshot` but nothing consumes
+    /// them, and no stats derive from them.
+    pub fresh_telemetry: bool,
+}
+
+/// Shared log of clock ticks a lazy transport has broadcast: one per
+/// [`Transport::advance_clock`], with cumulative per-mode dt prefix
+/// sums so a device's pending idle time is an O(1) difference. Each
+/// device holds only a `window_ptr` into this log — deferring a parked
+/// device costs *zero* per-device work per round.
+#[derive(Debug, Clone)]
+pub(crate) struct WindowLog {
+    ticks: Vec<ClockTick>,
+    /// `cum[i][m]` = Σ dt_s of `ticks[..i]` under mode index `m`
+    /// ([`mode_ix`]); len = ticks.len() + 1.
+    cum: Vec<[f64; 3]>,
+}
+
+/// Index of a [`FleetMode`] in the window log's per-mode columns —
+/// `ALL_FLEET_MODES` order, matching what
+/// [`DeviceSim::needs_availability_settle`] expects.
+pub(crate) fn mode_ix(mode: FleetMode) -> usize {
+    match mode {
+        FleetMode::DealSleep => 0,
+        FleetMode::AllAwake => 1,
+        FleetMode::KernelForced => 2,
+    }
+}
+
+impl WindowLog {
+    pub(crate) fn new() -> Self {
+        WindowLog { ticks: Vec::new(), cum: vec![[0.0; 3]] }
+    }
+
+    pub(crate) fn push(&mut self, tick: ClockTick) {
+        let mut c = *self.cum.last().expect("cum seeded at construction");
+        c[mode_ix(tick.mode)] += tick.dt_s;
+        self.ticks.push(tick);
+        self.cum.push(c);
+    }
+
+    pub(crate) fn len(&self) -> usize {
+        self.ticks.len()
+    }
+
+    /// The ticks a device at `ptr` has not billed yet, in broadcast
+    /// order.
+    pub(crate) fn since(&self, ptr: usize) -> &[ClockTick] {
+        &self.ticks[ptr..]
+    }
+
+    /// Pending idle seconds per mode for a device at `ptr` (an O(1)
+    /// prefix-sum difference — approximate to a few ulps, which the
+    /// bound check's guard band absorbs).
+    pub(crate) fn pending(&self, ptr: usize) -> [f64; 3] {
+        let last = self.cum[self.ticks.len()];
+        let at = self.cum[ptr];
+        [last[0] - at[0], last[1] - at[1], last[2] - at[2]]
+    }
+}
+
+/// Replay every window a device has deferred, one [`DeviceSim::step_idle`]
+/// call per original tick (never merged — see the module docs), then
+/// advance its pointer to the log head. No-op for an up-to-date (or
+/// eager) device.
+pub(crate) fn settle_device(d: &mut DeviceSim, log: &WindowLog) {
+    if d.window_ptr() >= log.len() {
+        return;
+    }
+    for t in log.since(d.window_ptr()) {
+        d.step_idle(t.dt_s, t.mode, false);
+    }
+    d.set_window_ptr(log.len());
 }
 
 /// Which transport a fleet is built over.
@@ -187,6 +328,23 @@ pub trait Transport {
     /// *inner* kind; use [`Transport::describe`] for the full topology.
     fn kind(&self) -> TransportKind;
 
+    /// Configure the fleet ledger (lazy vs eager billing). Must be
+    /// called before the first round — transports do not support
+    /// switching modes mid-run. The default is a no-op: a transport
+    /// that ignores it simply stays on the eager reference path.
+    fn set_ledger(&mut self, cfg: LedgerCfg) {
+        let _ = cfg;
+    }
+
+    /// Settle every deferred idle window and return the per-device
+    /// *cumulative* ledger rows, ascending by device id — the quantity
+    /// the lazy/eager bit-identity contract is stated on. Works in both
+    /// modes (eager devices simply have nothing pending). The default
+    /// returns no rows, matching the default no-op [`Self::set_ledger`].
+    fn collect_ledger(&mut self) -> Vec<LedgerRow> {
+        Vec::new()
+    }
+
     /// Human-readable topology (e.g. `threaded`, `sharded×8(sync)`).
     fn describe(&self) -> String {
         self.kind().name().to_string()
@@ -249,20 +407,55 @@ pub(crate) fn partition_chunks(
 /// pass per round (batched by construction).
 pub struct SyncTransport {
     devices: Vec<DeviceSim>,
+    ledger: LedgerCfg,
+    /// Deferred clock ticks (lazy ledger; stays empty when eager).
+    log: WindowLog,
+    /// Device ids trained/forgotten since the last clock tick — they
+    /// carry busy time and a possible wake latch, so the next
+    /// [`Transport::advance_clock`] must step them eagerly.
+    touched: Vec<usize>,
 }
 
 impl SyncTransport {
     pub fn new(devices: Vec<DeviceSim>) -> Self {
-        SyncTransport { devices }
+        SyncTransport {
+            devices,
+            ledger: LedgerCfg::default(),
+            log: WindowLog::new(),
+            touched: Vec::new(),
+        }
     }
 
     pub fn devices(&self) -> &[DeviceSim] {
         &self.devices
     }
+
+    fn lazy(&self) -> bool {
+        self.ledger.mode == LedgerMode::Lazy
+    }
 }
 
 impl Transport for SyncTransport {
     fn probe(&mut self) -> Vec<ProbeReport> {
+        if self.lazy() {
+            // O(n) RNG stepping is inherent to the availability chain,
+            // but the *billing* stays O(1) per device: settle only when
+            // the pending windows could flip the availability outcome
+            // (or when a context-reading selector needs fresh telemetry)
+            let log = &self.log;
+            let fresh = self.ledger.fresh_telemetry;
+            return self
+                .devices
+                .iter_mut()
+                .enumerate()
+                .filter_map(|(i, d)| {
+                    if fresh || d.needs_availability_settle(log.pending(d.window_ptr())) {
+                        settle_device(d, log);
+                    }
+                    d.step_availability().then(|| (i, d.snapshot()))
+                })
+                .collect();
+        }
         self.devices
             .iter_mut()
             .enumerate()
@@ -271,6 +464,15 @@ impl Transport for SyncTransport {
     }
 
     fn execute(&mut self, selected: &[usize], job: RoundJob) -> Vec<WorkerReply> {
+        if self.lazy() {
+            // settle before training: run_round reads power_state (the
+            // wake latch) and drains the battery, so stale windows must
+            // be replayed first — restoring the eager call order
+            for &i in selected {
+                settle_device(&mut self.devices[i], &self.log);
+                self.touched.push(i);
+            }
+        }
         let mut replies: Vec<WorkerReply> = selected
             .iter()
             .map(|&i| {
@@ -284,6 +486,12 @@ impl Transport for SyncTransport {
     }
 
     fn execute_forgets(&mut self, commands: &[ForgetCommand]) -> Vec<ForgetAck> {
+        if self.lazy() {
+            for c in commands {
+                settle_device(&mut self.devices[c.device], &self.log);
+                self.touched.push(c.device);
+            }
+        }
         let mut acks: Vec<ForgetAck> = commands
             .iter()
             .map(|c| {
@@ -299,6 +507,30 @@ impl Transport for SyncTransport {
     }
 
     fn advance_clock(&mut self, tick: ClockTick, selected: &[usize]) -> Vec<IdleOutcome> {
+        if self.lazy() {
+            // step only the devices that trained/forgot this round —
+            // everyone else defers by a single shared log push, with
+            // zero per-device work
+            let mut stepped: Vec<usize> =
+                selected.iter().copied().chain(self.touched.drain(..)).collect();
+            stepped.sort_unstable();
+            stepped.dedup();
+            let mut sel: Vec<usize> = selected.to_vec();
+            sel.sort_unstable();
+            let mut rows = Vec::with_capacity(stepped.len());
+            for &i in &stepped {
+                let d = &mut self.devices[i];
+                settle_device(d, &self.log);
+                let mut r =
+                    d.step_idle(tick.dt_s, tick.mode, sel.binary_search(&i).is_ok());
+                r.device = i;
+                // the current tick is billed directly; point past it
+                d.set_window_ptr(self.log.len() + 1);
+                rows.push(r);
+            }
+            self.log.push(tick);
+            return rows;
+        }
         let mut is_selected = vec![false; self.devices.len()];
         for &i in selected {
             is_selected[i] = true;
@@ -308,6 +540,24 @@ impl Transport for SyncTransport {
             .enumerate()
             .map(|(i, d)| {
                 let mut r = d.step_idle(tick.dt_s, tick.mode, is_selected[i]);
+                r.device = i; // transport id space, like WorkerReply
+                r
+            })
+            .collect()
+    }
+
+    fn set_ledger(&mut self, cfg: LedgerCfg) {
+        self.ledger = cfg;
+    }
+
+    fn collect_ledger(&mut self) -> Vec<LedgerRow> {
+        let log = &self.log;
+        self.devices
+            .iter_mut()
+            .enumerate()
+            .map(|(i, d)| {
+                settle_device(d, log);
+                let mut r = d.ledger_row();
                 r.device = i; // transport id space, like WorkerReply
                 r
             })
@@ -348,6 +598,13 @@ enum Ctl {
     /// Fleet-clock advance over the worker's whole slice; `selected`
     /// lists the slice members whose busy window the round billed.
     Clock { tick: ClockTick, selected: Vec<usize> },
+    /// Configure the worker's fleet ledger (broadcast before round 1;
+    /// no reply — the per-worker channel is FIFO, so it lands before
+    /// any subsequent operation).
+    SetLedger(LedgerCfg),
+    /// Settle every deferred window and reply the worker slice's
+    /// cumulative [`LedgerRow`]s.
+    CollectLedger,
     Stop,
 }
 
@@ -357,6 +614,7 @@ enum Reply {
     Online { worker: usize, online: Vec<ProbeReport> },
     Acks { worker: usize, acks: Vec<ForgetAck> },
     Ledger { worker: usize, reports: Vec<IdleOutcome> },
+    Rows { worker: usize, rows: Vec<LedgerRow> },
 }
 
 /// One worker endpoint.
@@ -459,7 +717,8 @@ impl ThreadedTransport {
                         Reply::Outcomes { worker, .. }
                         | Reply::Online { worker, .. }
                         | Reply::Acks { worker, .. }
-                        | Reply::Ledger { worker, .. } => *worker,
+                        | Reply::Ledger { worker, .. }
+                        | Reply::Rows { worker, .. } => *worker,
                     };
                     got[w] = true;
                     replies.push(r);
@@ -591,6 +850,31 @@ impl ThreadedTransport {
         reports
     }
 
+    /// Fire a ledger collect at every worker without waiting. Split out
+    /// so a shard root can settle all its leaders before any of them
+    /// blocks on replies.
+    pub(crate) fn dispatch_collect_ledger(&mut self) {
+        for ep in &self.endpoints {
+            let _ = ep.tx.send(Ctl::CollectLedger);
+        }
+    }
+
+    /// Collect the cumulative rows owed by a prior
+    /// [`Self::dispatch_collect_ledger`], ascending by device id.
+    pub(crate) fn collect_ledger_rows(&mut self) -> Vec<LedgerRow> {
+        let all: Vec<usize> = (0..self.endpoints.len()).collect();
+        let mut rows: Vec<LedgerRow> = self
+            .collect_from(&all)
+            .into_iter()
+            .flat_map(|r| match r {
+                Reply::Rows { rows, .. } => rows,
+                _ => unreachable!("non-row reply to a ledger collect"),
+            })
+            .collect();
+        rows.sort_unstable_by_key(|r| r.device);
+        rows
+    }
+
     /// Fire an availability probe at every worker without waiting.
     pub(crate) fn dispatch_probe(&mut self) {
         for ep in &self.endpoints {
@@ -624,13 +908,28 @@ fn worker_loop(
     rx: Receiver<Ctl>,
     out: Sender<Reply>,
 ) {
+    // lazy-ledger state, one set per worker thread: the shared window
+    // log covers exactly this slice (the root broadcasts every tick to
+    // every worker), `touched` tracks local indices trained/forgotten
+    // since the last tick
+    let mut ledger = LedgerCfg::default();
+    let mut log = WindowLog::new();
+    let mut touched: Vec<usize> = Vec::new();
     loop {
         match rx.recv() {
+            Ok(Ctl::SetLedger(cfg)) => {
+                ledger = cfg;
+            }
             Ok(Ctl::Job { job, members }) => {
                 let outcomes: Vec<WorkerReply> = members
                     .into_iter()
                     .map(|i| {
                         let d = &mut devices[i - start];
+                        if ledger.mode == LedgerMode::Lazy {
+                            // settle before training (eager call order)
+                            settle_device(d, &log);
+                            touched.push(i - start);
+                        }
                         let outcome = d.run_round(job.scheme, job.arrivals, job.theta);
                         WorkerReply { device: i, outcome, snapshot: d.snapshot() }
                     })
@@ -640,10 +939,20 @@ fn worker_loop(
                 }
             }
             Ok(Ctl::Probe) => {
+                let lazy = ledger.mode == LedgerMode::Lazy;
+                let fresh = ledger.fresh_telemetry;
                 let online: Vec<ProbeReport> = devices
                     .iter_mut()
                     .enumerate()
                     .filter_map(|(j, d)| {
+                        if lazy
+                            && (fresh
+                                || d.needs_availability_settle(
+                                    log.pending(d.window_ptr()),
+                                ))
+                        {
+                            settle_device(d, &log);
+                        }
                         d.step_availability().then(|| (start + j, d.snapshot()))
                     })
                     .collect();
@@ -655,8 +964,12 @@ fn worker_loop(
                 let acks: Vec<ForgetAck> = commands
                     .into_iter()
                     .map(|c| {
-                        let mut a =
-                            devices[c.device - start].forget_datum(c.request, c.datum);
+                        let d = &mut devices[c.device - start];
+                        if ledger.mode == LedgerMode::Lazy {
+                            settle_device(d, &log);
+                            touched.push(c.device - start);
+                        }
+                        let mut a = d.forget_datum(c.request, c.datum);
                         a.device = c.device; // transport id space, as replies
                         a
                     })
@@ -666,23 +979,71 @@ fn worker_loop(
                 }
             }
             Ok(Ctl::Clock { tick, selected }) => {
-                // O(1) membership over the slice (select-all schemes
-                // make |selected| ≈ slice_len — no linear scans here)
-                let mut is_selected = vec![false; devices.len()];
-                for &g in &selected {
-                    is_selected[g - start] = true;
+                let reports: Vec<IdleOutcome> = if ledger.mode == LedgerMode::Lazy {
+                    // O(selected + touched) for this slice; the rest of
+                    // the slice defers by the single log push below
+                    let mut stepped: Vec<usize> = selected
+                        .iter()
+                        .map(|&g| g - start)
+                        .chain(touched.drain(..))
+                        .collect();
+                    stepped.sort_unstable();
+                    stepped.dedup();
+                    let mut sel: Vec<usize> =
+                        selected.iter().map(|&g| g - start).collect();
+                    sel.sort_unstable();
+                    let rows = stepped
+                        .iter()
+                        .map(|&j| {
+                            let d = &mut devices[j];
+                            settle_device(d, &log);
+                            let mut r = d.step_idle(
+                                tick.dt_s,
+                                tick.mode,
+                                sel.binary_search(&j).is_ok(),
+                            );
+                            r.device = start + j; // transport id space
+                            // the current tick is billed directly
+                            d.set_window_ptr(log.len() + 1);
+                            r
+                        })
+                        .collect();
+                    log.push(tick);
+                    rows
+                } else {
+                    // O(1) membership over the slice (select-all schemes
+                    // make |selected| ≈ slice_len — no linear scans here)
+                    let mut is_selected = vec![false; devices.len()];
+                    for &g in &selected {
+                        is_selected[g - start] = true;
+                    }
+                    devices
+                        .iter_mut()
+                        .enumerate()
+                        .map(|(j, d)| {
+                            let mut r =
+                                d.step_idle(tick.dt_s, tick.mode, is_selected[j]);
+                            r.device = start + j; // transport id space, as replies
+                            r
+                        })
+                        .collect()
+                };
+                if out.send(Reply::Ledger { worker, reports }).is_err() {
+                    break;
                 }
-                let reports: Vec<IdleOutcome> = devices
+            }
+            Ok(Ctl::CollectLedger) => {
+                let rows: Vec<LedgerRow> = devices
                     .iter_mut()
                     .enumerate()
                     .map(|(j, d)| {
-                        let mut r =
-                            d.step_idle(tick.dt_s, tick.mode, is_selected[j]);
-                        r.device = start + j; // transport id space, as replies
+                        settle_device(d, &log);
+                        let mut r = d.ledger_row();
+                        r.device = start + j; // transport id space
                         r
                     })
                     .collect();
-                if out.send(Reply::Ledger { worker, reports }).is_err() {
+                if out.send(Reply::Rows { worker, rows }).is_err() {
                     break;
                 }
             }
@@ -716,6 +1077,19 @@ impl Transport for ThreadedTransport {
     fn advance_clock(&mut self, tick: ClockTick, selected: &[usize]) -> Vec<IdleOutcome> {
         self.dispatch_clock(tick, selected);
         self.collect_clock()
+    }
+
+    fn set_ledger(&mut self, cfg: LedgerCfg) {
+        // per-worker FIFO channels: the broadcast lands before any
+        // subsequent operation on every worker
+        for ep in &self.endpoints {
+            let _ = ep.tx.send(Ctl::SetLedger(cfg));
+        }
+    }
+
+    fn collect_ledger(&mut self) -> Vec<LedgerRow> {
+        self.dispatch_collect_ledger();
+        self.collect_ledger_rows()
     }
 
     fn n_devices(&self) -> usize {
@@ -999,6 +1373,138 @@ mod tests {
         // the selected device's idle window is shorter → less floor
         assert!(rows[1].idle_uah < rows[0].idle_uah);
         assert_eq!(rows[0].idle_uah.to_bits(), rows[2].idle_uah.to_bits());
+    }
+
+    #[test]
+    fn window_log_prefix_sums_track_modes() {
+        let mut log = WindowLog::new();
+        assert_eq!(log.pending(0), [0.0; 3]);
+        log.push(ClockTick { dt_s: 60.0, mode: FleetMode::DealSleep });
+        log.push(ClockTick { dt_s: 90.0, mode: FleetMode::AllAwake });
+        log.push(ClockTick { dt_s: 30.0, mode: FleetMode::DealSleep });
+        log.push(ClockTick { dt_s: 10.0, mode: FleetMode::KernelForced });
+        assert_eq!(log.len(), 4);
+        assert_eq!(log.pending(0), [90.0, 90.0, 10.0]);
+        assert_eq!(log.pending(2), [30.0, 0.0, 10.0]);
+        assert_eq!(log.pending(4), [0.0; 3]);
+        assert_eq!(log.since(2).len(), 2);
+        assert_eq!(log.since(2)[0].dt_s, 30.0);
+    }
+
+    #[test]
+    fn lazy_sync_ledger_is_bit_identical_and_o_selected() {
+        let mut eager = SyncTransport::new(fleet(6));
+        let mut lazy = SyncTransport::new(fleet(6));
+        lazy.set_ledger(LedgerCfg { mode: LedgerMode::Lazy, fresh_telemetry: false });
+        let tick = ClockTick { dt_s: 60.0, mode: FleetMode::DealSleep };
+        for round in 1..=6u64 {
+            let j = job(round, Scheme::Deal, 4, 0.3);
+            let sel = [1usize, 4];
+            // availability decisions must agree even though the lazy
+            // fleet's batteries are mostly unsettled
+            let pe: Vec<usize> = eager.probe().iter().map(|p| p.0).collect();
+            let pl: Vec<usize> = lazy.probe().iter().map(|p| p.0).collect();
+            assert_eq!(pe, pl, "round {round} online set drifted");
+            let a = eager.execute(&sel, j);
+            let b = lazy.execute(&sel, j);
+            for (ra, rb) in a.iter().zip(&b) {
+                assert_eq!(ra.device, rb.device);
+                assert_eq!(ra.outcome.time_s.to_bits(), rb.outcome.time_s.to_bits());
+                assert_eq!(
+                    ra.outcome.energy_uah.to_bits(),
+                    rb.outcome.energy_uah.to_bits()
+                );
+            }
+            let re = eager.advance_clock(tick, &sel);
+            let rl = lazy.advance_clock(tick, &sel);
+            assert_eq!(re.len(), 6, "eager bills the whole fleet");
+            assert_eq!(rl.len(), sel.len(), "lazy bills O(selected + woken)");
+            // the rows the lazy tick does return are the eager rows
+            for r in &rl {
+                let e = &re[r.device];
+                assert_eq!(r.sleep_uah.to_bits(), e.sleep_uah.to_bits());
+                assert_eq!(r.wake_uah.to_bits(), e.wake_uah.to_bits());
+                assert_eq!(r.wakes, e.wakes);
+            }
+        }
+        // stats-read: settle everyone; cumulative books must agree to
+        // the bit, device by device
+        let er = eager.collect_ledger();
+        let lr = lazy.collect_ledger();
+        assert_eq!(er.len(), 6);
+        for (a, b) in er.iter().zip(&lr) {
+            assert_eq!(a.device, b.device);
+            assert_eq!(a.idle_uah.to_bits(), b.idle_uah.to_bits());
+            assert_eq!(a.sleep_uah.to_bits(), b.sleep_uah.to_bits());
+            assert_eq!(a.wake_uah.to_bits(), b.wake_uah.to_bits());
+            assert_eq!(a.wakes, b.wakes);
+            assert_eq!(a.charged_uah.to_bits(), b.charged_uah.to_bits());
+            assert_eq!(a.awake_equiv_uah.to_bits(), b.awake_equiv_uah.to_bits());
+        }
+        // batteries themselves agree after the settle
+        for (a, b) in eager.devices().iter().zip(lazy.devices()) {
+            assert_eq!(
+                a.battery().level_uah().to_bits(),
+                b.battery().level_uah().to_bits()
+            );
+        }
+    }
+
+    #[test]
+    fn lazy_threaded_ledger_matches_lazy_sync() {
+        let cfg = LedgerCfg { mode: LedgerMode::Lazy, fresh_telemetry: false };
+        let mut sync = SyncTransport::new(fleet(7));
+        sync.set_ledger(cfg);
+        let mut batched: Vec<ThreadedTransport> = [1usize, 3, 7]
+            .into_iter()
+            .map(|w| {
+                let mut t = ThreadedTransport::spawn_batched(fleet(7), w);
+                t.set_ledger(cfg);
+                t
+            })
+            .collect();
+        let tick = ClockTick { dt_s: 60.0, mode: FleetMode::DealSleep };
+        for round in 1..=4u64 {
+            let j = job(round, Scheme::Deal, 4, 0.3);
+            let sel = [0usize, 2, 5, 6];
+            let want_online = sync.probe();
+            let want_replies = sync.execute(&sel, j);
+            let want_rows = sync.advance_clock(tick, &sel);
+            assert_eq!(want_rows.len(), sel.len());
+            for t in &mut batched {
+                let online = t.probe();
+                assert_eq!(
+                    online.iter().map(|p| p.0).collect::<Vec<_>>(),
+                    want_online.iter().map(|p| p.0).collect::<Vec<_>>(),
+                    "workers={} round {round}",
+                    t.workers()
+                );
+                let replies = t.execute(&sel, j);
+                for (ra, rb) in want_replies.iter().zip(&replies) {
+                    assert_eq!(ra.device, rb.device);
+                    assert_eq!(
+                        ra.outcome.energy_uah.to_bits(),
+                        rb.outcome.energy_uah.to_bits()
+                    );
+                }
+                let rows = t.advance_clock(tick, &sel);
+                assert_eq!(rows, want_rows, "workers={} round {round}", t.workers());
+            }
+        }
+        let want = sync.collect_ledger();
+        for t in &mut batched {
+            assert_eq!(t.collect_ledger(), want, "workers={}", t.workers());
+        }
+    }
+
+    #[test]
+    fn ledger_mode_names_roundtrip() {
+        for m in [LedgerMode::Eager, LedgerMode::Lazy] {
+            assert_eq!(LedgerMode::from_name(m.name()), Some(m));
+        }
+        assert_eq!(LedgerMode::from_name("fastforward"), Some(LedgerMode::Lazy));
+        assert_eq!(LedgerMode::from_name("bogus"), None);
+        assert_eq!(LedgerMode::default(), LedgerMode::Eager);
     }
 
     #[test]

@@ -8,7 +8,7 @@
 
 use deal::bandit::SelectorKind;
 use deal::coordinator::fleet::{self, FleetConfig};
-use deal::coordinator::{Aggregation, ModelKind, Scheme, TransportKind};
+use deal::coordinator::{Aggregation, LedgerMode, ModelKind, Scheme, TransportKind};
 use deal::data::events::generate_events;
 use deal::data::Dataset;
 use deal::learn::recovery;
@@ -58,6 +58,11 @@ fn cmd_run(args: Vec<String>) -> i32 {
         )
         .flag("period", "60.0", "round period (virtual s) the fleet ledger bills over")
         .flag("charging", "off", "on|off — deterministic plug/unplug charging sessions")
+        .flag(
+            "ledger",
+            "eager",
+            "eager|lazy — fleet billing: lazy fast-forwards parked devices on observation",
+        )
         .flag("devices", "16", "fleet size")
         .flag("shards", "1", "shard-leader count (>1 = sharded multi-federation runtime)")
         .flag("rounds", "20", "federated rounds")
@@ -145,6 +150,13 @@ fn cmd_run(args: Vec<String>) -> i32 {
             return 2;
         }
     };
+    let ledger = match LedgerMode::from_name(a.get("ledger")) {
+        Some(l) => l,
+        None => {
+            eprintln!("unknown --ledger value {:?} (want eager|lazy)", a.get("ledger"));
+            return 2;
+        }
+    };
     let round_period_s = match a.get_f64("period") {
         Ok(p) if p >= 0.0 => p,
         Ok(p) => {
@@ -220,6 +232,7 @@ fn cmd_run(args: Vec<String>) -> i32 {
         mode,
         charging,
         round_period_s,
+        ledger,
         ..FleetConfig::default()
     };
     let rounds = a.get_usize("rounds").unwrap();
@@ -228,7 +241,7 @@ fn cmd_run(args: Vec<String>) -> i32 {
     let mut fed = fleet::build(&cfg);
     println!(
         "federation: {} devices, {} on {}, scheme {}, transport {}, aggregation {}, \
-         selector {} (features {}), mode {} (period {:.0}s, charging {})",
+         selector {} (features {}), mode {} (period {:.0}s, charging {}, ledger {})",
         cfg.n_devices,
         cfg.model.map_or("auto", |m| m.name()),
         dataset.name(),
@@ -240,6 +253,7 @@ fn cmd_run(args: Vec<String>) -> i32 {
         fed.fleet_mode().name(),
         cfg.round_period_s,
         if charging { "on" } else { "off" },
+        ledger.name(),
     );
     for _ in 0..rounds {
         let rec = fed.run_round();
@@ -254,6 +268,11 @@ fn cmd_run(args: Vec<String>) -> i32 {
                 fmt_uah(rec.energy_uah)
             );
         }
+    }
+    if ledger == LedgerMode::Lazy {
+        // flush every deferred window so the fleet-ledger summary below
+        // reports settled (eager-bit-identical) books
+        fed.settle_fleet();
     }
     let stats = fed.stats();
     println!(

@@ -41,6 +41,21 @@ impl Battery {
         self.level_uah / self.capacity_uah
     }
 
+    /// The low-water fraction below which [`Self::can_train`] refuses —
+    /// exposed so the lazy fleet ledger can bound-check whether a
+    /// deferred idle window could possibly cross the threshold without
+    /// actually settling the device.
+    pub fn low_water_frac(&self) -> f64 {
+        self.low_water_frac
+    }
+
+    /// The rejoin threshold (µAh) a drained device must recharge past
+    /// ([`Self::can_rejoin`]'s hysteresis band), for the same lazy
+    /// bound checks.
+    pub fn rejoin_level_uah(&self) -> f64 {
+        3.0 * self.low_water_frac * self.capacity_uah
+    }
+
     /// Drain by a measured charge; returns false if the battery hit empty
     /// (the drain is clamped).
     pub fn drain(&mut self, uah: f64) -> bool {

@@ -23,6 +23,23 @@
 //!                     + savings vs the AllAwake baseline (FleetMode)
 //! ```
 //!
+//! Lazy fast-forward (PR 6): the flow above is the **eager** ledger —
+//! every device bills every tick. Under the lazy ledger
+//! (`coordinator::transport::LedgerMode::Lazy`) a parked device's
+//! ticks accumulate in a shared window log and are replayed through
+//! the *same* `step_idle` calls only when something observes the
+//! device: a wake into S(k), a selection probe whose bound check
+//! (park-floor drain integral vs [`Battery::low_water_frac`];
+//! [`state::ChargePlan::rate_ua`] × window vs
+//! [`Battery::rejoin_level_uah`]) says availability could flip, or a
+//! stats read. Because the per-window FP arithmetic is replayed — not
+//! merged into one closed-form product, which would round differently
+//! — the per-device cumulative books are **bit-identical** in both
+//! modes; that contract is pinned by `rust/tests/transport_equivalence.rs`
+//! and the `ChargePlan::advance_free` bitwise test below. The
+//! struct-of-arrays `coordinator::ledger::ParkLedger` carries the same
+//! math to 10⁵–10⁷-device fleets.
+//!
 //! Substitution note (DESIGN.md §2): the paper measured real phones with
 //! a Monsoon power monitor; this module computes the same quantities from
 //! the paper's own published models, so scheme-vs-scheme comparisons are

@@ -217,6 +217,19 @@ impl ChargePlan {
         self.plugged
     }
 
+    /// Ledger time (s) of the next plug/unplug flip — the next-event
+    /// boundary the lazy fleet ledger schedules around.
+    pub fn next_flip_s(&self) -> f64 {
+        self.next_flip_s
+    }
+
+    /// Charge current while plugged (µA) — exposed so the lazy ledger
+    /// can upper-bound how far a deferred window could recharge a
+    /// drained device without walking the schedule.
+    pub fn rate_ua(&self) -> f64 {
+        self.rate_ua
+    }
+
     /// Walk the schedule over `[now_s, now_s + dt_s)`, charging the
     /// battery during plugged segments; returns the charge actually
     /// added (µAh, after the capacity clamp).
@@ -244,6 +257,47 @@ impl ChargePlan {
             let before = battery.level_uah();
             battery.charge(self.rate_ua * (end - t) / 3600.0);
             added += battery.level_uah() - before;
+        }
+        added
+    }
+
+    /// [`Self::advance`] against a bare level instead of a [`Battery`] —
+    /// the struct-of-arrays fleet ledger (`coordinator::ledger`) stores
+    /// battery levels as a flat `f64` column and cannot hand out
+    /// `&mut Battery`. Bit-identical to `advance` by construction: the
+    /// same segment walk, the same charge arithmetic
+    /// (`(level + µAh).min(capacity)`), the same post-clamp credit
+    /// (pinned by `advance_free_matches_advance_bitwise`).
+    pub fn advance_free(
+        &mut self,
+        now_s: f64,
+        dt_s: f64,
+        level_uah: &mut f64,
+        capacity_uah: f64,
+    ) -> f64 {
+        let end = now_s + dt_s;
+        let mut t = now_s;
+        let mut added = 0.0;
+        while self.next_flip_s <= end {
+            let seg = self.next_flip_s - t;
+            if self.plugged && seg > 0.0 {
+                let before = *level_uah;
+                *level_uah = (*level_uah + self.rate_ua * seg / 3600.0).min(capacity_uah);
+                added += *level_uah - before;
+            }
+            t = self.next_flip_s;
+            self.plugged = !self.plugged;
+            let dur = if self.plugged {
+                self.rng.range_f64(PLUG_MIN_S, PLUG_MAX_S)
+            } else {
+                self.rng.range_f64(UNPLUG_MIN_S, UNPLUG_MAX_S)
+            };
+            self.next_flip_s = t + dur;
+        }
+        if self.plugged && end > t {
+            let before = *level_uah;
+            *level_uah = (*level_uah + self.rate_ua * (end - t) / 3600.0).min(capacity_uah);
+            added += *level_uah - before;
         }
         added
     }
@@ -356,6 +410,34 @@ mod tests {
         assert!(bat.level_uah() <= bat.capacity_uah());
         // clamp: charge credited never exceeds headroom
         assert!(added <= 1000.0 - 0.05 * 1000.0 + 1e-9);
+    }
+
+    #[test]
+    fn advance_free_matches_advance_bitwise() {
+        // advance_free is the SoA ledger's charging path; any FP
+        // divergence from advance breaks the lazy/eager bit-identity
+        // contract, so agreement must be exact, not approximate.
+        let mut plan = ChargePlan::new(11, 1000.0);
+        let mut free = ChargePlan::new(11, 1000.0);
+        let mut bat = Battery::with_level(1000.0, 0.07);
+        let mut level = bat.level_uah();
+        let mut t = 0.0;
+        for k in 0..300 {
+            // irregular windows so segments straddle flips both ways
+            let dt = 300.0 + 137.0 * (k % 7) as f64;
+            let a = plan.advance(t, dt, &mut bat);
+            let b = free.advance_free(t, dt, &mut level, 1000.0);
+            assert_eq!(a.to_bits(), b.to_bits(), "credit diverged at k={k}");
+            assert_eq!(
+                bat.level_uah().to_bits(),
+                level.to_bits(),
+                "level diverged at k={k}"
+            );
+            assert_eq!(plan.plugged(), free.plugged());
+            assert_eq!(plan.next_flip_s().to_bits(), free.next_flip_s().to_bits());
+            t += dt;
+        }
+        assert!(level > 0.07 * 1000.0, "schedule never charged in 300 windows");
     }
 
     #[test]

@@ -33,6 +33,96 @@ impl BenchResult {
             self.iters_per_sample,
         )
     }
+
+    /// One machine-readable JSON object (hand-rolled — the crate is
+    /// dependency-free by design, so no serde).
+    pub fn json(&self) -> String {
+        format!(
+            "{{\"name\":{},\"median_s\":{},\"mean_s\":{},\"std_s\":{},\
+             \"iters_per_sample\":{},\"samples\":{}}}",
+            json_escape(&self.name),
+            json_f64(self.median),
+            json_f64(self.mean),
+            json_f64(self.std),
+            self.iters_per_sample,
+            self.samples,
+        )
+    }
+}
+
+/// Serialize an f64 as valid JSON (JSON has no NaN/∞ — map them to null).
+pub fn json_f64(x: f64) -> String {
+    if x.is_finite() {
+        // ryu-style shortest would be nicer; {:?} round-trips exactly
+        format!("{x:?}")
+    } else {
+        "null".to_string()
+    }
+}
+
+/// Minimal JSON string escape (quotes, backslash, control chars).
+pub fn json_escape(s: &str) -> String {
+    let mut out = String::with_capacity(s.len() + 2);
+    out.push('"');
+    for c in s.chars() {
+        match c {
+            '"' => out.push_str("\\\""),
+            '\\' => out.push_str("\\\\"),
+            '\n' => out.push_str("\\n"),
+            '\r' => out.push_str("\\r"),
+            '\t' => out.push_str("\\t"),
+            c if (c as u32) < 0x20 => out.push_str(&format!("\\u{:04x}", c as u32)),
+            c => out.push(c),
+        }
+    }
+    out.push('"');
+    out
+}
+
+/// Write a benchmark-results JSON document to the path named by the
+/// `DEAL_BENCH_JSON` env var, if set: `{"bench": <name>, "results":
+/// [<BenchResult::json>...], "extra": {<extra key-value pairs>}}`.
+/// `extra` values must already be valid JSON fragments. Returns the
+/// path written, or `None` when the env var is unset.
+pub fn write_results_json(
+    bench: &str,
+    results: &[BenchResult],
+    extra: &[(&str, String)],
+) -> Option<String> {
+    let path = std::env::var("DEAL_BENCH_JSON").ok()?;
+    if path.is_empty() {
+        return None;
+    }
+    let mut doc = String::new();
+    doc.push_str("{\"bench\":");
+    doc.push_str(&json_escape(bench));
+    doc.push_str(",\"results\":[");
+    for (i, r) in results.iter().enumerate() {
+        if i > 0 {
+            doc.push(',');
+        }
+        doc.push_str(&r.json());
+    }
+    doc.push_str("],\"extra\":{");
+    for (i, (k, v)) in extra.iter().enumerate() {
+        if i > 0 {
+            doc.push(',');
+        }
+        doc.push_str(&json_escape(k));
+        doc.push(':');
+        doc.push_str(v);
+    }
+    doc.push_str("}}\n");
+    match std::fs::write(&path, doc) {
+        Ok(()) => {
+            println!("bench results written to {path}");
+            Some(path)
+        }
+        Err(e) => {
+            eprintln!("warning: could not write {path}: {e}");
+            None
+        }
+    }
 }
 
 /// Benchmark runner with configurable budget.
@@ -132,6 +222,34 @@ mod tests {
         let r = b.run("sum", || (0..100u64).sum::<u64>());
         assert!(r.median > 0.0);
         assert!(r.median < 1e-3, "100-element sum should be fast");
+    }
+
+    #[test]
+    fn json_output_is_wellformed() {
+        let r = BenchResult {
+            name: "round/\"lazy\"\t10^4".to_string(),
+            median: 1.5e-3,
+            mean: 2.0e-3,
+            std: f64::NAN,
+            iters_per_sample: 7,
+            samples: 3,
+        };
+        let j = r.json();
+        assert!(j.starts_with('{') && j.ends_with('}'));
+        assert!(j.contains("\\\"lazy\\\""), "quote not escaped: {j}");
+        assert!(j.contains("\\t"), "tab not escaped: {j}");
+        assert!(j.contains("\"std_s\":null"), "NaN must map to null: {j}");
+        assert!(j.contains("\"median_s\":0.0015"), "{j}");
+        assert!(j.contains("\"iters_per_sample\":7"));
+    }
+
+    #[test]
+    fn json_f64_roundtrips_and_rejects_nonfinite() {
+        assert_eq!(json_f64(0.1), "0.1");
+        assert_eq!(json_f64(f64::INFINITY), "null");
+        assert_eq!(json_f64(f64::NEG_INFINITY), "null");
+        let x: f64 = json_f64(123.456e-7).parse().unwrap();
+        assert_eq!(x.to_bits(), 123.456e-7f64.to_bits());
     }
 
     #[test]
