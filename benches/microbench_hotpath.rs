@@ -9,14 +9,34 @@
 
 mod common;
 
-use deal::bandit::{SelectorConfig, SleepingBandit};
+use deal::bandit::{LinUcb, SelectorConfig, SleepingBandit};
 use deal::learn::qr::QrFactor;
 use deal::learn::mat::Mat;
 use deal::learn::tikhonov::{Observation, Tikhonov};
 use deal::learn::{DecrementalModel, NullMiddleware, Ppr};
 use deal::memsim::{PageCache, Replacement};
-use deal::util::bench::{from_env, write_results_json};
+use deal::power::DeviceSnapshot;
+use deal::util::bench::{from_env, json_f64, write_results_json};
 use deal::util::rng::Rng;
+
+/// Allowed slowdown vs the committed baseline before the smoke fails.
+const REGRESSION_FRAC: f64 = 0.20;
+
+fn fast() -> bool {
+    std::env::var("DEAL_BENCH_FAST").as_deref() == Ok("1")
+}
+
+/// Pull `"key": <number>` out of a JSON document (hand-rolled — the
+/// crate is dependency-free, and the baseline schema is ours).
+fn json_number(doc: &str, key: &str) -> Option<f64> {
+    let pat = format!("\"{key}\":");
+    let at = doc.find(&pat)? + pat.len();
+    let rest = doc[at..].trim_start();
+    let end = rest
+        .find(|c: char| !(c.is_ascii_digit() || ".-+eE".contains(c)))
+        .unwrap_or(rest.len());
+    rest[..end].parse().ok()
+}
 
 fn main() {
     println!("== hot-path microbenches (set DEAL_BENCH_FAST=1 for quick runs) ==");
@@ -67,6 +87,36 @@ fn main() {
         tik.forget(&obs, &mut mw);
     }));
 
+    // --- blocked mat kernels (4-row panels, allocation-free `_into`)
+    {
+        let d = 64;
+        let mut m = Mat::zeros(d, d);
+        let mut krng = Rng::new(11);
+        for i in 0..d {
+            for j in 0..d {
+                m[(i, j)] = krng.normal();
+            }
+        }
+        let x: Vec<f64> = (0..d).map(|_| krng.normal()).collect();
+        let mut y = Vec::new();
+        results.push(b.run("matvec_into(64x64)", || m.matvec_into(&x, &mut y)));
+        results.push(b.run("tmatvec_into(64x64)", || m.tmatvec_into(&x, &mut y)));
+    }
+
+    // --- LinUCB contextual scoring at fleet scale (scratch-buffer path:
+    //     select scores every available arm through one reused A⁻¹x)
+    {
+        let n = 10_000;
+        let mut lin = LinUcb::new(
+            n,
+            SelectorConfig { m: 64, min_fraction: 0.0, gamma: 1.0, ..Default::default() },
+        );
+        let avail: Vec<usize> = (0..n).collect();
+        let snaps: Vec<DeviceSnapshot> = vec![DeviceSnapshot::NEUTRAL; n];
+        results.push(b.run("linucb_select(n=10000,m=64)", || lin.select(&avail, &snaps)));
+        results.push(b.run("linucb_observe(d=9)", || lin.observe(0, 0.5, &snaps[0])));
+    }
+
     // --- bandit selection at fleet scale
     let mut bandit = SleepingBandit::new(
         500,
@@ -109,6 +159,34 @@ fn main() {
         }));
     }
 
+    // --- full engine round step at fleet scale: the PR 7 tentpole's
+    //     headline number (RoundArena + blocked kernels + lazy ledger,
+    //     so a steady-state round is O(selected + woken) with reused
+    //     buffers). Fast mode shrinks the fleet — the 10⁴-device gate
+    //     metric is only emitted when the full size actually ran.
+    let mut round_rps_1e4 = None;
+    {
+        use deal::coordinator::fleet::{build as build_fleet, FleetConfig};
+        use deal::coordinator::{LedgerMode, Scheme};
+        let n_devices = if fast() { 1_000 } else { 10_000 };
+        let cfg = FleetConfig {
+            n_devices,
+            dataset: deal::data::Dataset::Housing,
+            scale: 0.3,
+            scheme: Scheme::Deal,
+            seed: 5,
+            ledger: LedgerMode::Lazy,
+            ..FleetConfig::default()
+        };
+        let mut fed = build_fleet(&cfg);
+        let name = format!("federation_round(n={n_devices},lazy)");
+        let res = b.run(&name, || fed.run_round());
+        if n_devices == 10_000 {
+            round_rps_1e4 = Some(1.0 / res.median);
+        }
+        results.push(res);
+    }
+
     // --- PJRT artifact dispatch (skipped without artifacts)
     if let Ok(mut engine) = deal::runtime::Registry::load("artifacts")
         .map_err(|e| e.to_string())
@@ -125,5 +203,42 @@ fn main() {
         println!("pjrt_dispatch: skipped (run `make artifacts`)");
     }
 
-    write_results_json("microbench_hotpath", &results, &[]);
+    let mut extra: Vec<(&str, String)> = vec![("measured", "true".to_string())];
+    if let Some(rps) = round_rps_1e4 {
+        extra.push(("round_rps_1e4", json_f64(rps)));
+    }
+    write_results_json("microbench_hotpath", &results, &extra);
+
+    // --- regression gate vs the committed BENCH_hotpath.json baseline
+    // (informational until the baseline carries "measured": true)
+    let Ok(path) = std::env::var("DEAL_BENCH_BASELINE") else {
+        return;
+    };
+    let Ok(doc) = std::fs::read_to_string(&path) else {
+        eprintln!("warning: baseline {path} unreadable — gate skipped");
+        return;
+    };
+    if !doc.contains("\"measured\":true") {
+        println!("baseline {path} is an unmeasured placeholder — gate informational only");
+        return;
+    }
+    let (Some(base), Some(now)) = (json_number(&doc, "round_rps_1e4"), round_rps_1e4)
+    else {
+        eprintln!(
+            "warning: baseline {path} or this run lacks round_rps_1e4 — gate skipped"
+        );
+        return;
+    };
+    let floor = base * (1.0 - REGRESSION_FRAC);
+    if now < floor {
+        eprintln!(
+            "FAIL: federation rounds/sec at n=10000 regressed: {now:.1} < {floor:.1} \
+             (baseline {base:.1}, tolerance {REGRESSION_FRAC})"
+        );
+        std::process::exit(1);
+    }
+    println!(
+        "regression gate ok: {now:.1} rounds/sec at n=10000 \
+         (baseline {base:.1}, floor {floor:.1})"
+    );
 }

@@ -120,6 +120,12 @@ pub struct LinUcb {
     /// Per-arm selection counts (diagnostics/benches).
     selections: Vec<u64>,
     round: u64,
+    /// Reusable A⁻¹x scratch — `select` scores every available arm each
+    /// round, so per-score allocation would be O(n_available) heap
+    /// traffic at the 10⁴-device scale target.
+    scratch_ax: Vec<f64>,
+    /// Reusable (score, arm) buffer handed to `top_m_into`.
+    scratch_weighted: Vec<(f64, usize)>,
 }
 
 impl LinUcb {
@@ -137,6 +143,8 @@ impl LinUcb {
             theta: vec![0.0; d],
             selections: vec![0; n],
             round: 0,
+            scratch_ax: Vec::new(),
+            scratch_weighted: Vec::new(),
         }
     }
 
@@ -159,11 +167,19 @@ impl LinUcb {
 
     /// UCB score of one context: θᵀx + α·√(xᵀA⁻¹x).
     pub fn score(&self, snapshot: &DeviceSnapshot) -> f64 {
+        let mut ax = Vec::new();
+        self.score_via(snapshot, &mut ax)
+    }
+
+    /// [`Self::score`] with a caller-provided A⁻¹x buffer — the select
+    /// hot path scores every available arm per round through one reused
+    /// scratch. Same kernels, same FP order: bit-identical to `score`.
+    fn score_via(&self, snapshot: &DeviceSnapshot, ax: &mut Vec<f64>) -> f64 {
         let x = snapshot.features();
-        let ax = self.a_inv.matvec(&x);
+        self.a_inv.matvec_into(&x, ax);
         // xᵀA⁻¹x ≥ 0 in exact arithmetic (A⁻¹ is PSD); clamp the
         // float residue so sqrt can never produce NaN
-        let var = dot(&x, &ax).max(0.0);
+        let var = dot(&x, &ax[..]).max(0.0);
         dot(&self.theta, &x) + self.cfg.alpha * var.sqrt()
     }
 
@@ -174,12 +190,19 @@ impl LinUcb {
     pub fn select(&mut self, available: &[usize], snapshots: &[DeviceSnapshot]) -> Vec<usize> {
         debug_assert_eq!(available.len(), snapshots.len(), "snapshot/arm misalignment");
         self.round += 1;
-        let weighted: Vec<(f64, usize)> = available
-            .iter()
-            .zip(snapshots)
-            .map(|(&i, s)| (self.score(s), i))
-            .collect();
-        let chosen = super::top_m(weighted, self.cfg.m);
+        let mut ax = std::mem::take(&mut self.scratch_ax);
+        let mut weighted = std::mem::take(&mut self.scratch_weighted);
+        weighted.clear();
+        weighted.extend(
+            available
+                .iter()
+                .zip(snapshots)
+                .map(|(&i, s)| (self.score_via(s, &mut ax), i)),
+        );
+        let mut chosen = Vec::new();
+        super::top_m_into(&mut weighted, self.cfg.m, &mut chosen);
+        self.scratch_ax = ax;
+        self.scratch_weighted = weighted;
         for &i in &chosen {
             if let Some(c) = self.selections.get_mut(i) {
                 *c += 1;
@@ -193,15 +216,20 @@ impl LinUcb {
     pub fn observe(&mut self, _arm: usize, reward: f64, snapshot: &DeviceSnapshot) {
         let r = reward.clamp(0.0, 1.0);
         let x = snapshot.features();
-        let ax = self.a_inv.matvec(&x);
+        let mut ax = std::mem::take(&mut self.scratch_ax);
+        self.a_inv.matvec_into(&x, &mut ax);
         // (A + xxᵀ)⁻¹ = A⁻¹ − (A⁻¹x)(A⁻¹x)ᵀ / (1 + xᵀA⁻¹x); the
         // denominator is ≥ 1, so the update is numerically tame
         let denom = 1.0 + dot(&x, &ax);
         self.a_inv.rank1_acc(-1.0 / denom, &ax, &ax);
+        self.scratch_ax = ax;
         for (bj, xj) in self.b.iter_mut().zip(&x) {
             *bj += r * xj;
         }
-        self.theta = self.a_inv.matvec(&self.b);
+        // θ = A⁻¹b into the retained buffer
+        let mut theta = std::mem::take(&mut self.theta);
+        self.a_inv.matvec_into(&self.b, &mut theta);
+        self.theta = theta;
     }
 
     /// Late reward: recency-discounted by the shared λ^delay rule

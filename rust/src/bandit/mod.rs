@@ -27,8 +27,19 @@ pub use ucb::{discount_delayed, ArmEstimate};
 /// deterministically instead of aborting), and m = 0 selects nobody,
 /// so |S| ≤ m holds for *every* m.
 pub(crate) fn top_m(mut weighted: Vec<(f64, usize)>, m: usize) -> Vec<usize> {
+    let mut out = Vec::new();
+    top_m_into(&mut weighted, m, &mut out);
+    out
+}
+
+/// In-place [`top_m`]: truncates `weighted` to the selected entries
+/// (retaining its capacity for reuse across rounds) and writes the arm
+/// ids into `out`, cleared first. Same comparator and the same
+/// select-nth + sort path, so the selection is identical to `top_m`.
+pub(crate) fn top_m_into(weighted: &mut Vec<(f64, usize)>, m: usize, out: &mut Vec<usize>) {
+    out.clear();
     if m == 0 || weighted.is_empty() {
-        return Vec::new();
+        return;
     }
     let cmp =
         |a: &(f64, usize), b: &(f64, usize)| b.0.total_cmp(&a.0).then(a.1.cmp(&b.1));
@@ -38,7 +49,7 @@ pub(crate) fn top_m(mut weighted: Vec<(f64, usize)>, m: usize) -> Vec<usize> {
         weighted.truncate(m);
     }
     weighted.sort_by(cmp);
-    weighted.into_iter().map(|(_, i)| i).collect()
+    out.extend(weighted.iter().map(|&(_, i)| i));
 }
 
 #[cfg(test)]

@@ -191,15 +191,15 @@ impl ParkLedger {
 
     /// Replay device `i`'s deferred windows (no-op when current, and
     /// always a no-op under the eager mode, whose log never grows).
+    /// Ticks are `Copy`, so the replay walks the log by index — no
+    /// per-settle buffer (this runs once per parked device touched).
     pub fn settle(&mut self, i: usize) {
-        if self.window_ptr[i] >= self.log.len() {
-            return;
-        }
-        let ticks: Vec<ClockTick> = self.log.since(self.window_ptr[i]).to_vec();
-        for t in ticks {
+        let end = self.log.len();
+        for k in self.window_ptr[i]..end {
+            let t = self.log.since(k)[0];
             self.step_one(i, t.dt_s, t.mode, false);
         }
-        self.window_ptr[i] = self.log.len();
+        self.window_ptr[i] = end;
     }
 
     /// Fast-forward every device to the log head (the stats-read

@@ -80,6 +80,29 @@
 //!   counts × fleet modes × charging. [`ledger::ParkLedger`] is the
 //!   struct-of-arrays embodiment for 10⁵–10⁷-device fleets
 //!   (`benches/fleet_scaling.rs`)
+//! - **Hot path & allocation discipline** (PR 7): a steady-state round
+//!   reuses buffers instead of allocating them. The engine keeps a
+//!   `RoundArena` (availability ids, snapshot gather, due async
+//!   replies) inside [`Federation`]; [`SyncTransport`] carries its own
+//!   `advance_clock` scratch; [`crate::learn::qr::QrFactor`] /
+//!   [`crate::learn::tikhonov::Tikhonov`] / [`crate::bandit::LinUcb`]
+//!   solve and score through `_into` variants over reused vectors; and
+//!   the shard root merges per-shard results through reused buckets
+//!   with a pairwise fold. The dense kernels
+//!   ([`crate::learn::mat::Mat::matvec_into`] / `tmatvec_into`) run
+//!   blocked 4-row panels. The invariant throughout: **no float is
+//!   re-associated** — every per-device / per-arm accumulation keeps
+//!   its original fold order, so golden stats and the eager↔lazy /
+//!   cross-fabric bit-identity suites are unchanged
+//!   (`Federation::set_arena_enabled(false)` exists purely so the test
+//!   suite can pin arena-on == arena-off to the bit).
+//!   `benches/microbench_hotpath.rs` times the kernels, the LinUCB
+//!   scratch path, and a full 10⁴-device lazy round
+//!   (`BENCH_hotpath.json` carries the committed baseline; CI smokes
+//!   it). Per-shard [`ShardSummary`] power books are exact under the
+//!   lazy ledger: `collect_ledger` rebuilds each shard's idle/sleep/
+//!   wake µAh from the settled cumulative rows, so eager and lazy
+//!   books are bit-identical per shard, not just fleet-wide
 //! - [`fleet`] — experiment builder used by benches and examples
 //!   (`FleetConfig::selector` / `FleetConfig::features` pick the
 //!   selection algorithm and gate the telemetry pipeline;

@@ -134,6 +134,12 @@ pub struct RoundRecord {
     /// idle-awake floor — the AllAwake baseline term the savings ratio
     /// accrues against.
     pub allawake_equiv_uah: f64,
+    /// Whether the `fleet_*`/wake/charge columns above cover the whole
+    /// fleet. `true` under [`LedgerMode::Eager`] (every device billed
+    /// every round); `false` under [`LedgerMode::Lazy`], where the
+    /// columns cover only the devices actually stepped this round —
+    /// renderers must mark them partial (`deal run` prints `~`).
+    pub fleet_settled: bool,
 }
 
 /// A straggler reply buffered by `AsyncBuffered` aggregation, waiting
@@ -180,6 +186,27 @@ pub struct Federation {
     /// derives the fleet energy fields from these device-major totals
     /// instead of the per-round records.
     fleet_totals: Option<FleetLedgerTotals>,
+    /// Engine-side round arena (see [`RoundArena`]).
+    arena: RoundArena,
+    /// Arena on/off switch — `false` allocates fresh buffers every
+    /// round (the reference path the arena must stay bit-identical to).
+    arena_enabled: bool,
+}
+
+/// Reusable per-round buffers — the engine half of the round arena
+/// (each transport holds its own scratch for routing buckets, clock
+/// masks and reply merges). Steady-state rounds drain and refill these
+/// instead of reallocating; no content survives a round, so the arena
+/// cannot change results — `Federation::set_arena_enabled(false)`
+/// restores the allocate-per-round path bit-for-bit.
+#[derive(Debug, Default)]
+struct RoundArena {
+    /// availability ids G(k) (and, reclaimed at round end, S(k))
+    ids: Vec<usize>,
+    /// decision-time snapshots handed to a contextual selector
+    snapshots: Vec<DeviceSnapshot>,
+    /// buffered stragglers coming due this round
+    due: Vec<PendingReply>,
 }
 
 /// Fleet-wide ledger totals folded device-major (flat ascending device
@@ -257,7 +284,16 @@ impl Federation {
             pending: Vec::new(),
             unlearn,
             fleet_totals: None,
+            arena: RoundArena::default(),
+            arena_enabled: true,
         }
+    }
+
+    /// Toggle the engine-side [`RoundArena`] (default on). Off forces
+    /// fresh allocations every round — the reference path the arena is
+    /// pinned bit-identical to by `tests/transport_equivalence.rs`.
+    pub fn set_arena_enabled(&mut self, on: bool) {
+        self.arena_enabled = on;
     }
 
     pub fn n_devices(&self) -> usize {
@@ -364,13 +400,30 @@ impl Federation {
         // 2. selection S(k) — contextual selectors score the available
         // devices by their telemetry; select-all schemes take the
         // availability vector by move (no per-round clone at
-        // n_devices ≫ 10³)
-        let available: Vec<usize> = probes.iter().map(|&(i, _)| i).collect();
+        // n_devices ≫ 10³). Both O(n) gathers run through the arena.
+        let mut available = if self.arena_enabled {
+            let mut v = std::mem::take(&mut self.arena.ids);
+            v.clear();
+            v
+        } else {
+            Vec::new()
+        };
+        available.extend(probes.iter().map(|&(i, _)| i));
         let selected: Vec<usize> = if self.cfg.scheme.uses_selection() {
             let mut chosen = if self.selector.wants_context() {
-                let snapshots: Vec<DeviceSnapshot> =
-                    available.iter().map(|&i| self.latest_snapshot[i]).collect();
-                self.selector.select(&available, &snapshots)
+                let mut snapshots = if self.arena_enabled {
+                    let mut v = std::mem::take(&mut self.arena.snapshots);
+                    v.clear();
+                    v
+                } else {
+                    Vec::new()
+                };
+                snapshots.extend(available.iter().map(|&i| self.latest_snapshot[i]));
+                let c = self.selector.select(&available, &snapshots);
+                if self.arena_enabled {
+                    self.arena.snapshots = snapshots;
+                }
+                c
             } else {
                 // context-free selector: skip the O(n_available)
                 // snapshot gather on the hot path
@@ -390,10 +443,15 @@ impl Federation {
                     }
                 }
             }
+            // G(k) is done with — its buffer goes back to the arena
+            if self.arena_enabled {
+                self.arena.ids = std::mem::take(&mut available);
+            }
             chosen
         } else {
             // select-all: every online device (overdue ones included)
             // is already in S(k); take the availability vector by move
+            // (the buffer is reclaimed into the arena at round end)
             available
         };
         for &i in &selected {
@@ -461,18 +519,21 @@ impl Federation {
         let mut in_time = 0;
         // 5a. buffered stragglers coming due this round (AsyncBuffered)
         let round_now = self.round;
-        let due: Vec<PendingReply> = {
-            let mut due = Vec::new();
-            self.pending.retain(|p| {
-                if p.due_round <= round_now {
-                    due.push(p.clone());
-                    false
-                } else {
-                    true
-                }
-            });
-            due
+        let mut due = if self.arena_enabled {
+            let mut v = std::mem::take(&mut self.arena.due);
+            v.clear();
+            v
+        } else {
+            Vec::new()
         };
+        self.pending.retain(|p| {
+            if p.due_round <= round_now {
+                due.push(p.clone());
+                false
+            } else {
+                true
+            }
+        });
         for p in &due {
             let x = self.reward(p.device, &p.outcome);
             reward_q += x;
@@ -489,6 +550,10 @@ impl Federation {
                 acc.add(p.outcome.accuracy);
             }
             self.credit_device(p.device, &p.outcome);
+        }
+        if self.arena_enabled {
+            due.clear();
+            self.arena.due = due;
         }
         // 5b. this round's replies
         for r in &replies {
@@ -586,8 +651,17 @@ impl Federation {
             wake_transitions: wakes,
             charged_uah: charged,
             allawake_equiv_uah: awake_equiv,
+            fleet_settled: self.cfg.ledger == LedgerMode::Eager,
         };
         self.rounds.push(rec.clone());
+        // reclaim the larger of the S(k)/G(k) buffers for next round
+        // (select-all moved G(k) into `selected`, so this is where that
+        // capacity comes back)
+        if self.arena_enabled && selected.capacity() > self.arena.ids.capacity() {
+            let mut s = selected;
+            s.clear();
+            self.arena.ids = s;
+        }
         rec
     }
 

@@ -26,12 +26,131 @@
 
 use super::device::{DeviceSim, IdleOutcome, LedgerRow};
 use super::transport::{
-    default_workers, partition_bounds, partition_chunks, sort_replies, ClockTick,
-    LedgerCfg, ProbeReport, RoundJob, ShardSummary, SyncTransport, ThreadedTransport,
-    Transport, TransportKind, WorkerReply,
+    default_workers, partition_bounds, partition_chunks, ClockTick, LedgerCfg,
+    ProbeReport, RoundJob, ShardSummary, SyncTransport, ThreadedTransport, Transport,
+    TransportKind, WorkerReply,
 };
-use super::unlearn::{sort_acks, ForgetAck, ForgetCommand};
+use super::unlearn::{ForgetAck, ForgetCommand};
 use crate::power::DeviceProfile;
+
+/// Below this many total elements a reduction level is merged inline:
+/// spawning scoped threads costs more than a linear walk over a few
+/// hundred replies. Above it, pair merges run concurrently.
+const PAR_MERGE_MIN: usize = 4096;
+
+/// Merge two lists that are each sorted under `less` into one sorted
+/// list. `less` must be a **total order with no ties across the
+/// inputs** (our merge keys embed the unique device id), so the output
+/// is exactly the order `sort_by` would produce on the concatenation —
+/// element identity, not just value equality, is preserved.
+fn merge_two<T, F: Fn(&T, &T) -> bool>(a: Vec<T>, b: Vec<T>, less: &F) -> Vec<T> {
+    if a.is_empty() {
+        return b;
+    }
+    if b.is_empty() {
+        return a;
+    }
+    let mut out = Vec::with_capacity(a.len() + b.len());
+    let mut ia = a.into_iter().peekable();
+    let mut ib = b.into_iter().peekable();
+    loop {
+        match (ia.peek(), ib.peek()) {
+            (Some(x), Some(y)) => {
+                if less(y, x) {
+                    out.push(ib.next().unwrap());
+                } else {
+                    out.push(ia.next().unwrap());
+                }
+            }
+            (Some(_), None) => {
+                out.extend(ia);
+                break;
+            }
+            (None, _) => {
+                out.extend(ib);
+                break;
+            }
+        }
+    }
+    out
+}
+
+/// Fold K sorted per-shard lists into one sorted list by merging
+/// adjacent pairs until one remains — O(n·log K) comparisons instead
+/// of the O(n·log n) concat-and-resort, and each level's pair merges
+/// are independent, so large levels run on scoped threads. With a
+/// tie-free total order the result is identical to concat + `sort_by`
+/// (the root-merge bit-identity contract), regardless of whether a
+/// level merged inline or in parallel.
+fn merge_sorted_pairwise<T, F>(mut lists: Vec<Vec<T>>, less: &F) -> Vec<T>
+where
+    T: Send,
+    F: Fn(&T, &T) -> bool + Sync,
+{
+    lists.retain(|l| !l.is_empty());
+    if lists.is_empty() {
+        return Vec::new();
+    }
+    while lists.len() > 1 {
+        let total: usize = lists.iter().map(Vec::len).sum();
+        let mut pairs: Vec<(Vec<T>, Option<Vec<T>>)> =
+            Vec::with_capacity(lists.len().div_ceil(2));
+        let mut it = lists.into_iter();
+        while let Some(a) = it.next() {
+            pairs.push((a, it.next()));
+        }
+        let merge_pair = |(a, b): (Vec<T>, Option<Vec<T>>)| match b {
+            Some(b) => merge_two(a, b, less),
+            None => a,
+        };
+        lists = if pairs.len() >= 2 && total >= PAR_MERGE_MIN {
+            std::thread::scope(|sc| {
+                let handles: Vec<_> = pairs
+                    .into_iter()
+                    .map(|p| sc.spawn(move || merge_pair(p)))
+                    .collect();
+                handles.into_iter().map(|h| h.join().unwrap()).collect()
+            })
+        } else {
+            pairs.into_iter().map(merge_pair).collect()
+        };
+    }
+    lists.pop().unwrap()
+}
+
+/// The root merge's reply order: the shared virtual clock, device id
+/// breaking ties — the same key [`sort_replies`](super::transport::sort_replies)
+/// uses, and tie-free because a device replies at most once per round.
+fn reply_less(a: &WorkerReply, b: &WorkerReply) -> bool {
+    a.outcome
+        .time_s
+        .total_cmp(&b.outcome.time_s)
+        .then(a.device.cmp(&b.device))
+        .is_lt()
+}
+
+/// The root merge's ack order: the
+/// [`sort_acks`](super::unlearn::sort_acks) key, tie-free because
+/// (device, request) is unique per dispatch.
+fn ack_less(a: &ForgetAck, b: &ForgetAck) -> bool {
+    a.time_s
+        .total_cmp(&b.time_s)
+        .then(a.device.cmp(&b.device))
+        .then(a.request.cmp(&b.request))
+        .is_lt()
+}
+
+/// Hand `buf` out as `k` cleared buckets, keeping each bucket's
+/// capacity from previous rounds (the shard root's slice of the
+/// allocation-discipline story: steady-state rounds re-bucket into
+/// already-sized Vecs). Callers return the buckets via `mem::replace`
+/// style: `self.scratch_x = buckets`.
+fn take_buckets<T>(buf: &mut Vec<Vec<T>>, k: usize) -> Vec<Vec<T>> {
+    let mut b = std::mem::take(buf);
+    b.iter_mut().for_each(Vec::clear);
+    b.resize_with(k, Vec::new);
+    b
+}
 
 /// Cumulative counters per shard; device ranges live in `bounds` (one
 /// source of truth) and are joined in at `shard_summaries()` time.
@@ -48,11 +167,14 @@ struct ShardCounters {
     peak_gflops_sum: f64,
     forgets: u64,
     forget_energy_uah: f64,
-    // Idle billing booked through `advance_clock` rows. Under
-    // `LedgerMode::Lazy` these under-report: deferred windows settle
-    // through probe/execute/collect_ledger paths that bypass the
-    // advance_clock booking below. Exact per-device energy under lazy
-    // comes from `collect_ledger`, not from these shard counters.
+    // Idle billing. `advance_clock` books the incremental rows it sees
+    // (exact under `LedgerMode::Eager`, partial under `Lazy` where
+    // settles flow through probe/execute paths instead), and
+    // `collect_ledger` then **overwrites** these three with the
+    // device-major fold of the shard's cumulative `LedgerRow`s — the
+    // same rows in the same order in either mode, so after any settle
+    // (`Federation::settle_fleet`, a stats read, `deal run`'s summary)
+    // the books are exact and bit-identical eager↔lazy.
     idle_uah: f64,
     sleep_uah: f64,
     wake_uah: f64,
@@ -90,6 +212,15 @@ pub struct ShardedTransport {
     bounds: Vec<usize>,
     inner: TransportKind,
     counters: Vec<ShardCounters>,
+    /// Reusable per-shard bucket scratch (selection / clock routing):
+    /// cleared and handed out by [`take_buckets`] each call, so
+    /// steady-state rounds re-bucket into already-sized Vecs.
+    scratch_ids: Vec<Vec<usize>>,
+    /// Reusable per-shard pinged-worker scratch for the threaded
+    /// dispatch/collect split.
+    scratch_pinged: Vec<Vec<usize>>,
+    /// Reusable per-shard deletion-command buckets.
+    scratch_cmds: Vec<Vec<ForgetCommand>>,
 }
 
 impl ShardedTransport {
@@ -120,6 +251,9 @@ impl ShardedTransport {
             bounds,
             inner,
             counters: vec![ShardCounters::default(); k],
+            scratch_ids: Vec::new(),
+            scratch_pinged: Vec::new(),
+            scratch_cmds: Vec::new(),
         }
     }
 
@@ -160,14 +294,14 @@ impl Transport for ShardedTransport {
     fn execute(&mut self, selected: &[usize], job: RoundJob) -> Vec<WorkerReply> {
         // bucket the (weight-ordered) selection by owning shard,
         // preserving the server's dispatch order within each shard
-        let mut per_shard: Vec<Vec<usize>> = vec![Vec::new(); self.leaders.len()];
+        let mut per_shard = take_buckets(&mut self.scratch_ids, self.leaders.len());
         for &g in selected {
             let s = self.shard_of(g);
             per_shard[s].push(g - self.bounds[s]);
         }
         // phase 1: dispatch to every threaded leader before awaiting
         // anyone — shards overlap, round wall time = max over shards
-        let mut pinged: Vec<Vec<usize>> = vec![Vec::new(); self.leaders.len()];
+        let mut pinged = take_buckets(&mut self.scratch_pinged, self.leaders.len());
         for (s, locals) in per_shard.iter().enumerate() {
             if locals.is_empty() {
                 continue;
@@ -176,44 +310,46 @@ impl Transport for ShardedTransport {
                 pinged[s] = t.dispatch_jobs(locals, job);
             }
         }
-        // phase 2: run sync leaders / collect threaded replies, merge
-        let mut merged: Vec<WorkerReply> = Vec::with_capacity(selected.len());
+        // phase 2: run sync leaders / collect threaded replies; each
+        // leader's list is already (time, id)-sorted, so the root
+        // aggregation is a pairwise fold of sorted lists — identical
+        // order to the flat transport's concat-and-sort (the key is
+        // tie-free), at O(n·log K) instead of O(n·log n)
+        let mut sorted: Vec<Vec<WorkerReply>> =
+            Vec::with_capacity(self.leaders.len());
         for (s, locals) in per_shard.iter().enumerate() {
             if locals.is_empty() {
                 continue;
             }
             let base = self.bounds[s];
-            let replies = match &mut self.leaders[s] {
+            let mut replies = match &mut self.leaders[s] {
                 Leader::Sync(t) => t.execute(locals, job),
                 Leader::Threaded(t) => t.collect_jobs(&pinged[s]),
             };
             let sum = &mut self.counters[s];
             sum.jobs += 1;
             sum.replies += replies.len() as u64;
-            for r in &replies {
+            for r in &mut replies {
                 sum.energy_uah += r.outcome.energy_uah;
                 sum.compute_s += r.outcome.compute_s;
                 // aggregate capacity from the telemetry riding the reply
                 sum.battery_frac_sum += r.snapshot.battery_frac;
                 sum.peak_gflops_sum += r.snapshot.peak_gflops;
-            }
-            merged.extend(replies.into_iter().map(|mut r| {
+                // rebasing adds the same constant to every id in the
+                // shard, so the per-shard (time, id) order is unchanged
                 r.device += base;
-                r
-            }));
+            }
+            sorted.push(replies);
         }
-        // root aggregation: merge per-shard results on the shared
-        // virtual clock — the same (time, id) order a flat transport
-        // would have produced
-        sort_replies(&mut merged);
-        merged
+        self.scratch_ids = per_shard;
+        self.scratch_pinged = pinged;
+        merge_sorted_pairwise(sorted, &reply_less)
     }
 
     fn execute_forgets(&mut self, commands: &[ForgetCommand]) -> Vec<ForgetAck> {
         // bucket deletion traffic by owning shard, rebasing device ids
         // into each leader's local space
-        let mut per_shard: Vec<Vec<ForgetCommand>> =
-            vec![Vec::new(); self.leaders.len()];
+        let mut per_shard = take_buckets(&mut self.scratch_cmds, self.leaders.len());
         for &c in commands {
             let s = self.shard_of(c.device);
             per_shard[s].push(ForgetCommand {
@@ -224,7 +360,7 @@ impl Transport for ShardedTransport {
         }
         // phase 1: dispatch to every threaded leader before awaiting
         // anyone — deletion traffic overlaps across shards like rounds
-        let mut pinged: Vec<Vec<usize>> = vec![Vec::new(); self.leaders.len()];
+        let mut pinged = take_buckets(&mut self.scratch_pinged, self.leaders.len());
         for (s, cmds) in per_shard.iter().enumerate() {
             if cmds.is_empty() {
                 continue;
@@ -233,37 +369,37 @@ impl Transport for ShardedTransport {
                 pinged[s] = t.dispatch_forgets(cmds);
             }
         }
-        // phase 2: run sync leaders / collect threaded acks, merge on
-        // the shared virtual clock
-        let mut merged: Vec<ForgetAck> = Vec::with_capacity(commands.len());
+        // phase 2: run sync leaders / collect threaded acks; pairwise
+        // fold of the per-shard (time, device, request)-sorted lists on
+        // the shared virtual clock — identical to concat + sort_acks
+        let mut sorted: Vec<Vec<ForgetAck>> = Vec::with_capacity(self.leaders.len());
         for (s, cmds) in per_shard.iter().enumerate() {
             if cmds.is_empty() {
                 continue;
             }
             let base = self.bounds[s];
-            let acks = match &mut self.leaders[s] {
+            let mut acks = match &mut self.leaders[s] {
                 Leader::Sync(t) => t.execute_forgets(cmds),
                 Leader::Threaded(t) => t.collect_forgets(&pinged[s]),
             };
             let sum = &mut self.counters[s];
-            for a in &acks {
+            for a in &mut acks {
                 if a.status.completes() {
                     sum.forgets += 1;
                 }
                 sum.forget_energy_uah += a.energy_uah;
-            }
-            merged.extend(acks.into_iter().map(|mut a| {
                 a.device += base;
-                a
-            }));
+            }
+            sorted.push(acks);
         }
-        sort_acks(&mut merged);
-        merged
+        self.scratch_cmds = per_shard;
+        self.scratch_pinged = pinged;
+        merge_sorted_pairwise(sorted, &ack_less)
     }
 
     fn advance_clock(&mut self, tick: ClockTick, selected: &[usize]) -> Vec<IdleOutcome> {
         // bucket the selected set by owning shard, rebased local
-        let mut per_shard: Vec<Vec<usize>> = vec![Vec::new(); self.leaders.len()];
+        let mut per_shard = take_buckets(&mut self.scratch_ids, self.leaders.len());
         for &g in selected {
             let s = self.shard_of(g);
             per_shard[s].push(g - self.bounds[s]);
@@ -297,6 +433,7 @@ impl Transport for ShardedTransport {
                 r
             }));
         }
+        self.scratch_ids = per_shard;
         merged
     }
 
@@ -328,6 +465,21 @@ impl Transport for ShardedTransport {
                 Leader::Sync(t) => t.collect_ledger(),
                 Leader::Threaded(t) => t.collect_ledger_rows(),
             };
+            // true up the root's per-shard power books: the rows are
+            // cumulative and bit-identical in either ledger mode, so
+            // overwriting with their device-major fold makes the books
+            // exact — under Lazy the incremental advance_clock booking
+            // misses the settles that flow through probe/execute paths
+            let sum = &mut self.counters[s];
+            let (mut idle, mut sleep, mut wake) = (0.0f64, 0.0f64, 0.0f64);
+            for r in &rows {
+                idle += r.idle_uah;
+                sleep += r.sleep_uah;
+                wake += r.wake_uah;
+            }
+            sum.idle_uah = idle;
+            sum.sleep_uah = sleep;
+            sum.wake_uah = wake;
             merged.extend(rows.into_iter().map(|mut r| {
                 r.device += base;
                 r
@@ -653,5 +805,67 @@ mod tests {
         let replies = t.execute(&[], job(1));
         assert!(replies.is_empty());
         assert!(t.shard_summaries().iter().all(|s| s.jobs == 0));
+    }
+
+    #[test]
+    fn pairwise_merge_equals_concat_and_sort() {
+        // tie-free keyed lists of uneven sizes, including empties and a
+        // level big enough to take the threaded path
+        let less = |a: &(f64, usize), b: &(f64, usize)| {
+            a.0.total_cmp(&b.0).then(a.1.cmp(&b.1)).is_lt()
+        };
+        let mut id = 0usize;
+        let mut lists: Vec<Vec<(f64, usize)>> = Vec::new();
+        for (k, len) in [(3usize, 7usize), (1, 0), (5, 4000), (2, 13), (7, 9)] {
+            let mut l: Vec<(f64, usize)> = (0..len)
+                .map(|i| {
+                    id += 1;
+                    (((i * k + id) % 17) as f64 * 0.25, id)
+                })
+                .collect();
+            l.sort_by(|a, b| a.0.total_cmp(&b.0).then(a.1.cmp(&b.1)));
+            lists.push(l);
+        }
+        let mut want: Vec<(f64, usize)> = lists.concat();
+        want.sort_by(|a, b| a.0.total_cmp(&b.0).then(a.1.cmp(&b.1)));
+        let got = merge_sorted_pairwise(lists, &less);
+        assert_eq!(want, got);
+        assert!(
+            merge_sorted_pairwise::<(f64, usize), _>(vec![Vec::new()], &less)
+                .is_empty()
+        );
+    }
+
+    #[test]
+    fn collect_ledger_trues_per_shard_books_in_both_modes() {
+        use crate::coordinator::transport::LedgerMode;
+        use crate::power::FleetMode;
+        let tick = ClockTick { dt_s: 120.0, mode: FleetMode::DealSleep };
+        let selected = [0usize, 5];
+        let mut books = Vec::new();
+        for mode in [LedgerMode::Eager, LedgerMode::Lazy] {
+            let mut t = ShardedTransport::new(fleet(9), 3, TransportKind::Sync);
+            t.set_ledger(LedgerCfg { mode, fresh_telemetry: false });
+            for round in 1..=4u64 {
+                t.execute(&selected, job(round));
+                t.advance_clock(tick, &selected);
+            }
+            let rows = t.collect_ledger();
+            let sums = t.shard_summaries();
+            // exact: each shard's books equal the fold of its own rows
+            for s in &sums {
+                let sleep: f64 = rows[s.start..s.end].iter().map(|r| r.sleep_uah).sum();
+                let wake: f64 = rows[s.start..s.end].iter().map(|r| r.wake_uah).sum();
+                assert_eq!(s.sleep_uah.to_bits(), sleep.to_bits(), "{mode:?}");
+                assert_eq!(s.wake_uah.to_bits(), wake.to_bits(), "{mode:?}");
+            }
+            books.push(
+                sums.iter()
+                    .map(|s| (s.idle_uah.to_bits(), s.sleep_uah.to_bits(), s.wake_uah.to_bits()))
+                    .collect::<Vec<_>>(),
+            );
+        }
+        // and bit-identical across ledger modes after the settle
+        assert_eq!(books[0], books[1], "eager vs lazy shard books");
     }
 }

@@ -414,6 +414,13 @@ pub struct SyncTransport {
     /// carry busy time and a possible wake latch, so the next
     /// [`Transport::advance_clock`] must step them eagerly.
     touched: Vec<usize>,
+    /// Reusable [`Transport::advance_clock`] scratch (stepped-id list,
+    /// sorted selection, eager membership mask): cleared per tick so
+    /// steady-state rounds reuse already-sized buffers instead of
+    /// allocating fresh ones.
+    scratch_ids: Vec<usize>,
+    scratch_sel: Vec<usize>,
+    scratch_mask: Vec<bool>,
 }
 
 impl SyncTransport {
@@ -423,6 +430,9 @@ impl SyncTransport {
             ledger: LedgerCfg::default(),
             log: WindowLog::new(),
             touched: Vec::new(),
+            scratch_ids: Vec::new(),
+            scratch_sel: Vec::new(),
+            scratch_mask: Vec::new(),
         }
     }
 
@@ -510,12 +520,17 @@ impl Transport for SyncTransport {
         if self.lazy() {
             // step only the devices that trained/forgot this round —
             // everyone else defers by a single shared log push, with
-            // zero per-device work
-            let mut stepped: Vec<usize> =
-                selected.iter().copied().chain(self.touched.drain(..)).collect();
+            // zero per-device work. The id lists live in reusable
+            // scratch: taken out for the borrow, returned after.
+            let mut stepped = std::mem::take(&mut self.scratch_ids);
+            stepped.clear();
+            stepped.extend_from_slice(selected);
+            stepped.extend(self.touched.drain(..));
             stepped.sort_unstable();
             stepped.dedup();
-            let mut sel: Vec<usize> = selected.to_vec();
+            let mut sel = std::mem::take(&mut self.scratch_sel);
+            sel.clear();
+            sel.extend_from_slice(selected);
             sel.sort_unstable();
             let mut rows = Vec::with_capacity(stepped.len());
             for &i in &stepped {
@@ -529,13 +544,18 @@ impl Transport for SyncTransport {
                 rows.push(r);
             }
             self.log.push(tick);
+            self.scratch_ids = stepped;
+            self.scratch_sel = sel;
             return rows;
         }
-        let mut is_selected = vec![false; self.devices.len()];
+        let mut is_selected = std::mem::take(&mut self.scratch_mask);
+        is_selected.clear();
+        is_selected.resize(self.devices.len(), false);
         for &i in selected {
             is_selected[i] = true;
         }
-        self.devices
+        let rows: Vec<IdleOutcome> = self
+            .devices
             .iter_mut()
             .enumerate()
             .map(|(i, d)| {
@@ -543,7 +563,9 @@ impl Transport for SyncTransport {
                 r.device = i; // transport id space, like WorkerReply
                 r
             })
-            .collect()
+            .collect();
+        self.scratch_mask = is_selected;
+        rows
     }
 
     fn set_ledger(&mut self, cfg: LedgerCfg) {

@@ -5,6 +5,22 @@
 //! not a general linear-algebra crate — the batch-sized math runs through
 //! the AOT artifacts (runtime::engine); this type backs the small
 //! per-event updates where d ≤ ~100.
+//!
+//! # Hot-path kernels and the FP-order invariant
+//!
+//! The matvec kernels are blocked into 4-row panels over the flat
+//! row-major buffer: one pass over `x` feeds four independent
+//! accumulators (x loaded once per panel instead of once per row, and
+//! the rows autovectorize as independent lanes). The invariant every
+//! block respects: **blocking only ever crosses *independent* rows —
+//! a single row's dot product keeps its exact sequential summation
+//! order**. `matvec` ≡ per-row [`dot`] to the bit; `tmatvec` adds rows
+//! into `y` in ascending-row order per element, exactly as the scalar
+//! loop did. Federation stats are pinned bitwise across transports and
+//! golden files, so any reassociation here is a test failure, not a
+//! perf win. `matvec_into`/`tmatvec_into` are the allocation-free
+//! variants the round hot path (LinUCB scoring, Tikhonov solves) runs
+//! on.
 
 /// Dense row-major matrix.
 #[derive(Debug, Clone, PartialEq)]
@@ -54,25 +70,99 @@ impl Mat {
         &mut self.data[i * self.cols..(i + 1) * self.cols]
     }
 
+    /// Two distinct rows, mutably — the split borrow the Givens row
+    /// rotations need to touch a row *pair* without per-element index
+    /// arithmetic.
+    pub fn row_pair_mut(&mut self, i: usize, j: usize) -> (&mut [f64], &mut [f64]) {
+        assert_ne!(i, j, "row_pair_mut needs distinct rows");
+        let cols = self.cols;
+        if i < j {
+            let (lo, hi) = self.data.split_at_mut(j * cols);
+            (&mut lo[i * cols..(i + 1) * cols], &mut hi[..cols])
+        } else {
+            let (lo, hi) = self.data.split_at_mut(i * cols);
+            (&mut hi[..cols], &mut lo[j * cols..(j + 1) * cols])
+        }
+    }
+
     /// y = A x
     pub fn matvec(&self, x: &[f64]) -> Vec<f64> {
+        let mut y = Vec::new();
+        self.matvec_into(x, &mut y);
+        y
+    }
+
+    /// y = A x into a reusable buffer (cleared first) — the
+    /// allocation-free hot-path variant. Blocked over 4-row panels:
+    /// each row keeps its own accumulator and its exact sequential
+    /// [`dot`] order, so the result is bit-identical to the per-row
+    /// scalar loop.
+    pub fn matvec_into(&self, x: &[f64], y: &mut Vec<f64>) {
         assert_eq!(x.len(), self.cols);
-        (0..self.rows)
-            .map(|i| dot(self.row(i), x))
-            .collect()
+        y.clear();
+        y.reserve(self.rows);
+        let mut i = 0;
+        while i + 4 <= self.rows {
+            let base = i * self.cols;
+            let panel = &self.data[base..base + 4 * self.cols];
+            let (r0, rest) = panel.split_at(self.cols);
+            let (r1, rest) = rest.split_at(self.cols);
+            let (r2, r3) = rest.split_at(self.cols);
+            let mut acc = [0.0f64; 4];
+            for (k, &xk) in x.iter().enumerate() {
+                acc[0] += r0[k] * xk;
+                acc[1] += r1[k] * xk;
+                acc[2] += r2[k] * xk;
+                acc[3] += r3[k] * xk;
+            }
+            y.extend_from_slice(&acc);
+            i += 4;
+        }
+        for r in i..self.rows {
+            y.push(dot(self.row(r), x));
+        }
     }
 
     /// y = Aᵀ x
     pub fn tmatvec(&self, x: &[f64]) -> Vec<f64> {
+        let mut y = Vec::new();
+        self.tmatvec_into(x, &mut y);
+        y
+    }
+
+    /// y = Aᵀ x into a reusable buffer (cleared first). Blocked over
+    /// 4-row panels: each `y[j]` still receives its row contributions
+    /// in ascending-row order (separate `+=` per row, never a fused
+    /// sum), so the result is bit-identical to the row-at-a-time scalar
+    /// loop while reading `y` once per panel instead of once per row.
+    pub fn tmatvec_into(&self, x: &[f64], y: &mut Vec<f64>) {
         assert_eq!(x.len(), self.rows);
-        let mut y = vec![0.0; self.cols];
-        for i in 0..self.rows {
-            let xi = x[i];
-            for (yj, &aij) in y.iter_mut().zip(self.row(i)) {
+        y.clear();
+        y.resize(self.cols, 0.0);
+        let mut i = 0;
+        while i + 4 <= self.rows {
+            let base = i * self.cols;
+            let panel = &self.data[base..base + 4 * self.cols];
+            let (r0, rest) = panel.split_at(self.cols);
+            let (r1, rest) = rest.split_at(self.cols);
+            let (r2, r3) = rest.split_at(self.cols);
+            let (x0, x1, x2, x3) = (x[i], x[i + 1], x[i + 2], x[i + 3]);
+            for (j, yj) in y.iter_mut().enumerate() {
+                let mut t = *yj;
+                t += x0 * r0[j];
+                t += x1 * r1[j];
+                t += x2 * r2[j];
+                t += x3 * r3[j];
+                *yj = t;
+            }
+            i += 4;
+        }
+        for r in i..self.rows {
+            let xi = x[r];
+            for (yj, &aij) in y.iter_mut().zip(self.row(r)) {
                 *yj += xi * aij;
             }
         }
-        y
     }
 
     /// A += alpha · u vᵀ
@@ -223,5 +313,76 @@ mod tests {
     fn transpose_roundtrip() {
         let a = Mat::from_rows(&[vec![1.0, 2.0, 3.0], vec![4.0, 5.0, 6.0]]);
         assert_eq!(a.transpose().transpose(), a);
+    }
+
+    #[test]
+    fn row_pair_mut_splits_disjoint_rows() {
+        let mut m = Mat::from_rows(&[
+            vec![1.0, 2.0],
+            vec![3.0, 4.0],
+            vec![5.0, 6.0],
+        ]);
+        {
+            let (top, bot) = m.row_pair_mut(0, 2);
+            assert_eq!(top, &[1.0, 2.0]);
+            assert_eq!(bot, &[5.0, 6.0]);
+            top[0] = 9.0;
+            bot[1] = 8.0;
+        }
+        assert_eq!(m[(0, 0)], 9.0);
+        assert_eq!(m[(2, 1)], 8.0);
+        // reversed order returns (row_i, row_j) in call order
+        let (hi, lo) = m.row_pair_mut(2, 0);
+        assert_eq!(hi[1], 8.0);
+        assert_eq!(lo[0], 9.0);
+    }
+
+    /// The blocked panel kernels must be bit-identical to the scalar
+    /// row-at-a-time loops — the FP-order invariant every downstream
+    /// bit-pinned suite (golden stats, transport equivalence) rests on.
+    #[test]
+    fn blocked_kernels_bit_match_scalar_reference() {
+        use crate::util::rng::Rng;
+        let mut rng = Rng::new(41);
+        // sizes straddling the 4-row panel boundary, incl. degenerate
+        for (rows, cols) in [(1, 3), (3, 5), (4, 4), (5, 2), (9, 7), (12, 12)] {
+            let mut m = Mat::zeros(rows, cols);
+            for i in 0..rows {
+                for j in 0..cols {
+                    m[(i, j)] = rng.normal();
+                }
+            }
+            let x: Vec<f64> = (0..cols).map(|_| rng.normal()).collect();
+            let xt: Vec<f64> = (0..rows).map(|_| rng.normal()).collect();
+            // scalar references, written exactly as the pre-blocking loops
+            let want_mv: Vec<f64> = (0..rows).map(|i| dot(m.row(i), &x)).collect();
+            let mut want_tmv = vec![0.0; cols];
+            for i in 0..rows {
+                let xi = xt[i];
+                for (yj, &aij) in want_tmv.iter_mut().zip(m.row(i)) {
+                    *yj += xi * aij;
+                }
+            }
+            let got_mv = m.matvec(&x);
+            let got_tmv = m.tmatvec(&xt);
+            for (a, b) in want_mv.iter().zip(&got_mv) {
+                assert_eq!(a.to_bits(), b.to_bits(), "matvec {rows}x{cols}");
+            }
+            for (a, b) in want_tmv.iter().zip(&got_tmv) {
+                assert_eq!(a.to_bits(), b.to_bits(), "tmatvec {rows}x{cols}");
+            }
+            // the _into variants reuse a dirty buffer without residue
+            let mut buf = vec![f64::NAN; 64];
+            m.matvec_into(&x, &mut buf);
+            assert_eq!(buf.len(), rows);
+            for (a, b) in want_mv.iter().zip(&buf) {
+                assert_eq!(a.to_bits(), b.to_bits());
+            }
+            m.tmatvec_into(&xt, &mut buf);
+            assert_eq!(buf.len(), cols);
+            for (a, b) in want_tmv.iter().zip(&buf) {
+                assert_eq!(a.to_bits(), b.to_bits());
+            }
+        }
     }
 }

@@ -14,6 +14,10 @@ pub struct QrFactor {
     pub q: Mat,
     pub r: Mat,
     n: usize,
+    /// Reusable w = Qᵀu scratch for [`Self::rank1_update`] — the update
+    /// runs on every UPDATE/FORGET in the round hot path, so it must
+    /// not allocate.
+    w: Vec<f64>,
 }
 
 /// One Givens rotation (c, s) zeroing b in (a, b).
@@ -29,14 +33,17 @@ fn givens(a: f64, b: f64) -> (f64, f64) {
 
 /// Apply G = [[c, -s], [s, c]]ᵀ-style rotation to rows i, j of M from the
 /// left: row_i ← c·row_i − s·row_j ; row_j ← s·row_i + c·row_j.
+/// Operates on the two row slices directly (one split borrow per call
+/// instead of four index computations per element); the per-element
+/// arithmetic and ascending-k order are exactly the scalar loop's, so
+/// results are bit-identical.
 #[inline]
 fn rot_rows(m: &mut Mat, i: usize, j: usize, c: f64, s: f64, from_col: usize) {
-    let cols = m.cols();
-    for k in from_col..cols {
-        let a = m[(i, k)];
-        let b = m[(j, k)];
-        m[(i, k)] = c * a - s * b;
-        m[(j, k)] = s * a + c * b;
+    let (ri, rj) = m.row_pair_mut(i, j);
+    for (pa, pb) in ri[from_col..].iter_mut().zip(rj[from_col..].iter_mut()) {
+        let (a, b) = (*pa, *pb);
+        *pa = c * a - s * b;
+        *pb = s * a + c * b;
     }
 }
 
@@ -87,7 +94,7 @@ impl QrFactor {
                 r[(i, j)] = 0.0;
             }
         }
-        QrFactor { q: qt.transpose(), r, n }
+        QrFactor { q: qt.transpose(), r, n, w: Vec::new() }
     }
 
     pub fn dim(&self) -> usize {
@@ -105,8 +112,9 @@ impl QrFactor {
         let n = self.n;
         assert_eq!(u.len(), n);
         assert_eq!(v.len(), n);
-        // w = Qᵀ u
-        let mut w = self.q.tmatvec(u);
+        // w = Qᵀ u — into the reusable scratch (no allocation after warmup)
+        let mut w = std::mem::take(&mut self.w);
+        self.q.tmatvec_into(u, &mut w);
         // Sweep 1: rotations J(n-2)…J(0) zero w[n-1..1], turning R into
         // upper Hessenberg. Apply to w, R, and Qᵀ (we keep Q, so rotate
         // its columns — equivalent to rotating rows of Qᵀ).
@@ -129,27 +137,48 @@ impl QrFactor {
             self.r[(k + 1, k)] = 0.0;
             rot_cols(&mut self.q, k, k + 1, c, s);
         }
+        self.w = w;
     }
 
     /// Solve A x = b through the factorization: R x = Qᵀ b.
     pub fn solve(&self, b: &[f64]) -> Vec<f64> {
-        let qtb = self.q.tmatvec(b);
-        self.back_substitute(&qtb)
+        let mut qtb = Vec::new();
+        let mut x = Vec::new();
+        self.solve_into(b, &mut qtb, &mut x);
+        x
+    }
+
+    /// Allocation-free [`Self::solve`]: callers on the round hot path
+    /// pass reusable `qtb` (Qᵀb scratch) and `x` (solution) buffers.
+    /// Bit-identical to `solve` — same kernels, same FP order.
+    pub fn solve_into(&self, b: &[f64], qtb: &mut Vec<f64>, x: &mut Vec<f64>) {
+        self.q.tmatvec_into(b, qtb);
+        self.back_substitute_into(qtb, x);
     }
 
     /// Solve R x = y (back substitution).
     pub fn back_substitute(&self, y: &[f64]) -> Vec<f64> {
+        let mut x = Vec::new();
+        self.back_substitute_into(y, &mut x);
+        x
+    }
+
+    /// Allocation-free back substitution into a reusable buffer. Walks
+    /// each row of R as one slice; the subtraction order over j is the
+    /// scalar loop's ascending order, so results are bit-identical.
+    pub fn back_substitute_into(&self, y: &[f64], x: &mut Vec<f64>) {
         let n = self.n;
-        let mut x = vec![0.0; n];
+        x.clear();
+        x.resize(n, 0.0);
         for i in (0..n).rev() {
+            let ri = self.r.row(i);
             let mut s = y[i];
             for j in i + 1..n {
-                s -= self.r[(i, j)] * x[j];
+                s -= ri[j] * x[j];
             }
-            let d = self.r[(i, i)];
+            let d = ri[i];
             x[i] = if d.abs() > 1e-12 { s / d } else { 0.0 };
         }
-        x
     }
 
     /// ‖QᵀQ − I‖∞ — orthogonality drift diagnostic (recovery policy input).
@@ -159,13 +188,15 @@ impl QrFactor {
 }
 
 /// Rotate columns i, j of M from the right (col_i ← c·col_i − s·col_j …).
+/// One row-slice borrow per row instead of four indexed accesses; the
+/// arithmetic is unchanged, so results stay bit-identical.
 #[inline]
 fn rot_cols(m: &mut Mat, i: usize, j: usize, c: f64, s: f64) {
     for rix in 0..m.rows() {
-        let a = m[(rix, i)];
-        let b = m[(rix, j)];
-        m[(rix, i)] = c * a - s * b;
-        m[(rix, j)] = s * a + c * b;
+        let row = m.row_mut(rix);
+        let (a, b) = (row[i], row[j]);
+        row[i] = c * a - s * b;
+        row[j] = s * a + c * b;
     }
 }
 
@@ -267,6 +298,21 @@ mod tests {
         }
         assert!(f.orthogonality_error() < 1e-6, "drift {}", f.orthogonality_error());
         assert!(f.reconstruct().max_abs_diff(&a) < 1e-6);
+    }
+
+    #[test]
+    fn solve_into_reuses_dirty_buffers_bit_identically() {
+        let a = random_spd(7, 11);
+        let f = QrFactor::decompose(&a);
+        let b: Vec<f64> = (0..7).map(|i| (i as f64 * 0.7).cos()).collect();
+        let fresh = f.solve(&b);
+        let mut qtb = vec![f64::NAN; 32];
+        let mut x = vec![f64::NAN; 3];
+        f.solve_into(&b, &mut qtb, &mut x);
+        assert_eq!(x.len(), fresh.len());
+        for (got, want) in x.iter().zip(&fresh) {
+            assert_eq!(got.to_bits(), want.to_bits());
+        }
     }
 
     #[test]

@@ -27,6 +27,10 @@ pub struct Tikhonov {
     h: Vec<f64>,
     /// rows currently absorbed
     s: usize,
+    /// reusable ±m scratch for `step` (hot path: no per-op allocation)
+    scratch_u: Vec<f64>,
+    /// reusable Qᵀz scratch for the solve in `step`
+    scratch_qtz: Vec<f64>,
 }
 
 impl Tikhonov {
@@ -44,6 +48,8 @@ impl Tikhonov {
             qr: QrFactor::decompose(&g),
             h: vec![0.0; d],
             s: 0,
+            scratch_u: Vec::new(),
+            scratch_qtz: Vec::new(),
         }
     }
 
@@ -57,7 +63,16 @@ impl Tikhonov {
         let z = m.tmatvec(&r);
         let qr = QrFactor::decompose(&g);
         let h = qr.solve(&z);
-        Tikhonov { d, lambda, z, qr, h, s: data.len() }
+        Tikhonov {
+            d,
+            lambda,
+            z,
+            qr,
+            h,
+            s: data.len(),
+            scratch_u: Vec::new(),
+            scratch_qtz: Vec::new(),
+        }
     }
 
     pub fn dim(&self) -> usize {
@@ -111,11 +126,20 @@ impl Tikhonov {
         for (zi, &mi) in self.z.iter_mut().zip(&obs.m) {
             *zi += sign * mi * obs.r;
         }
-        // G ← G ± m mᵀ via rank-one QR (26d²)
-        let u: Vec<f64> = obs.m.iter().map(|&x| sign * x).collect();
+        // G ← G ± m mᵀ via rank-one QR (26d²); u = ±m goes through the
+        // reusable scratch so steady-state ops don't allocate
+        let mut u = std::mem::take(&mut self.scratch_u);
+        u.clear();
+        u.extend(obs.m.iter().map(|&x| sign * x));
         self.qr.rank1_update(&u, &obs.m);
-        // solve R h = Qᵀ z (3d²: matvec + back substitution)
-        self.h = self.qr.solve(&self.z);
+        self.scratch_u = u;
+        // solve R h = Qᵀ z (3d²: matvec + back substitution) into the
+        // retained h / Qᵀz buffers
+        let mut qtz = std::mem::take(&mut self.scratch_qtz);
+        let mut h = std::mem::take(&mut self.h);
+        self.qr.solve_into(&self.z, &mut qtz, &mut h);
+        self.scratch_qtz = qtz;
+        self.h = h;
         let d = self.d as f64;
         OpCost::new(2.0 * d + 30.0 * d * d, pages_for(self.d))
     }

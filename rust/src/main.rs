@@ -258,14 +258,20 @@ fn cmd_run(args: Vec<String>) -> i32 {
     for _ in 0..rounds {
         let rec = fed.run_round();
         if !quiet {
+            // under the lazy ledger the per-round fleet column covers
+            // only the devices stepped this round — the `~` marks it
+            // partial so it can't be read as an exact window total
+            // (settled totals follow in the fleet-ledger summary)
             println!(
-                "round {:>3}: avail {:>2}  selected {:>2}  in-time {:>2}  t={:>8.3}s  e={}",
+                "round {:>3}: avail {:>2}  selected {:>2}  in-time {:>2}  t={:>8.3}s  e={}  fleet={}{}",
                 rec.round,
                 rec.available,
                 rec.selected,
                 rec.in_time,
                 rec.round_time_s,
-                fmt_uah(rec.energy_uah)
+                fmt_uah(rec.energy_uah),
+                if rec.fleet_settled { "" } else { "~" },
+                fmt_uah(rec.fleet_idle_uah + rec.fleet_sleep_uah + rec.fleet_wake_uah),
             );
         }
     }
