@@ -9,6 +9,12 @@
 //! push. Reported per fleet size: rounds/sec for both modes, the
 //! speedup, and bytes/device.
 //!
+//! A second sweep drives the *full engine* — `Federation::run` over the
+//! columnar fleet store (`--fleet columnar --ledger lazy`), so probe,
+//! selection, training, hydration and billing are all on the clock —
+//! and reports engine rounds/sec per fleet size (`engine_rps_1e6` in
+//! the JSON at the 10⁶-device point).
+//!
 //!     cargo bench --bench fleet_scaling
 //!
 //! Env:
@@ -23,8 +29,10 @@ mod common;
 
 use std::time::{Duration, Instant};
 
+use deal::coordinator::fleet::{self, FleetConfig};
 use deal::coordinator::transport::{ClockTick, LedgerMode};
-use deal::coordinator::ParkLedger;
+use deal::coordinator::{Federation, FleetStoreKind, ParkLedger, Scheme};
+use deal::data::Dataset;
 use deal::power::profile::table1_profiles;
 use deal::power::FleetMode;
 use deal::util::bench::{json_f64, write_results_json, BenchResult};
@@ -89,6 +97,26 @@ fn measure(n: usize, mode: LedgerMode, budget: Duration) -> (f64, usize) {
         );
     }
     (rounds as f64 / elapsed, rounds)
+}
+
+/// A full federation over the columnar fleet store: the acceptance
+/// configuration (`deal run --fleet columnar --ledger lazy`) at fleet
+/// size n. Mnist is the big-fleet dataset; m scales like the
+/// ledger-only sweep so the hydrated working set stays comparable.
+fn build_engine(n: usize) -> Federation {
+    fleet::build(&FleetConfig {
+        n_devices: n,
+        dataset: Dataset::Mnist,
+        scale: 0.05,
+        scheme: Scheme::Deal,
+        m: (n / 1000).clamp(4, 64),
+        seed: 7,
+        charging: true,
+        round_period_s: 60.0,
+        ledger: LedgerMode::Lazy,
+        fleet: FleetStoreKind::Columnar,
+        ..FleetConfig::default()
+    })
 }
 
 /// Pull `"key": <number>` out of a JSON document (hand-rolled — the
@@ -197,6 +225,54 @@ fn main() {
         }
     }
 
+    // --- full-engine sweep: the same fleet sizes, but every round goes
+    // through `Federation::run_round` over the columnar store — probe,
+    // CSB-F selection, training the hydrated S(k), charging and lazy
+    // billing are all inside the measured window
+    println!("\nfull engine (columnar fleet store, lazy ledger):");
+    println!(
+        "{:>10} {:>11} {:>15} {:>8}",
+        "devices", "build (s)", "engine rds/s", "rounds"
+    );
+    let mut engine_rps_1e6 = None;
+    for &n in fleets {
+        let b0 = Instant::now();
+        let mut fed = build_engine(n);
+        let build_s = b0.elapsed().as_secs_f64();
+        // one unmeasured round warms the availability columns
+        fed.run_round();
+        let t0 = Instant::now();
+        let mut rounds = 0usize;
+        while t0.elapsed() < budget || rounds < 2 {
+            fed.run_round();
+            rounds += 1;
+        }
+        let rps = rounds as f64 / t0.elapsed().as_secs_f64();
+        // settle outside the window, but report it — deferred windows
+        // are amortized to the stats read, not free
+        let s0 = Instant::now();
+        fed.settle_fleet();
+        println!(
+            "{:>10} {:>11.2} {:>15.1} {:>8}   settle {:.1} ms",
+            n,
+            build_s,
+            rps,
+            rounds,
+            s0.elapsed().as_secs_f64() * 1e3
+        );
+        if n == 1_000_000 {
+            engine_rps_1e6 = Some(rps);
+        }
+        results.push(BenchResult {
+            name: format!("engine-columnar/n={n}"),
+            median: 1.0 / rps,
+            mean: 1.0 / rps,
+            std: 0.0,
+            iters_per_sample: 1,
+            samples: 1,
+        });
+    }
+
     let mut extra: Vec<(&str, String)> = vec![
         ("measured", "true".to_string()),
         (
@@ -209,6 +285,9 @@ fn main() {
     }
     if let Some(s) = speedup_1e5 {
         extra.push(("speedup_1e5", json_f64(s)));
+    }
+    if let Some(rps) = engine_rps_1e6 {
+        extra.push(("engine_rps_1e6", json_f64(rps)));
     }
     write_results_json("fleet_scaling", &results, &extra);
 

@@ -45,6 +45,23 @@ pub trait ContextualSelector {
     /// Pick S(k) ⊆ `available`, |S| ≤ m.
     fn select(&mut self, available: &[usize], snapshots: &[DeviceSnapshot]) -> Vec<usize>;
 
+    /// [`Self::select`] into a caller-owned buffer. The engine's
+    /// `RoundArena` hands the same `chosen` Vec back every round, so a
+    /// native override makes the steady-state selection step
+    /// allocation-free. Implementations must clear `out` before
+    /// writing — callers hand it back dirty. The default delegates to
+    /// `select` and copies: correct for any selector, identical
+    /// contents and order, just not allocation-free.
+    fn select_into(
+        &mut self,
+        available: &[usize],
+        snapshots: &[DeviceSnapshot],
+        out: &mut Vec<usize>,
+    ) {
+        out.clear();
+        out.extend(self.select(available, snapshots));
+    }
+
     /// Reward Xᵢ(k) for a selected arm, with the snapshot it replied
     /// under.
     fn observe(&mut self, arm: usize, reward: f64, snapshot: &DeviceSnapshot);
@@ -82,6 +99,20 @@ pub struct ContextFree(pub Box<dyn Selector>);
 impl ContextualSelector for ContextFree {
     fn select(&mut self, available: &[usize], _snapshots: &[DeviceSnapshot]) -> Vec<usize> {
         self.0.select(available)
+    }
+
+    fn select_into(
+        &mut self,
+        available: &[usize],
+        _snapshots: &[DeviceSnapshot],
+        out: &mut Vec<usize>,
+    ) {
+        // The context-free [`Selector`] trait returns by value, so the
+        // inner pick still allocates; what this override buys is the
+        // reuse of the engine's `chosen` buffer (its capacity survives
+        // the round) and skipping the default's double copy.
+        out.clear();
+        out.extend(self.0.select(available));
     }
 
     fn observe(&mut self, arm: usize, reward: f64, _snapshot: &DeviceSnapshot) {
@@ -188,6 +219,21 @@ impl LinUcb {
     /// [`top_m`](super::top_m) order); sleeping arms (absent from
     /// `available`) are never scored at all.
     pub fn select(&mut self, available: &[usize], snapshots: &[DeviceSnapshot]) -> Vec<usize> {
+        let mut chosen = Vec::new();
+        self.select_into(available, snapshots, &mut chosen);
+        chosen
+    }
+
+    /// [`Self::select`] into a caller-owned buffer — with the reused
+    /// score scratches this makes steady-state selection fully
+    /// allocation-free. Same scoring loop, same `top_m_into` fold:
+    /// bit-identical picks to `select`.
+    pub fn select_into(
+        &mut self,
+        available: &[usize],
+        snapshots: &[DeviceSnapshot],
+        out: &mut Vec<usize>,
+    ) {
         debug_assert_eq!(available.len(), snapshots.len(), "snapshot/arm misalignment");
         self.round += 1;
         let mut ax = std::mem::take(&mut self.scratch_ax);
@@ -199,16 +245,14 @@ impl LinUcb {
                 .zip(snapshots)
                 .map(|(&i, s)| (self.score_via(s, &mut ax), i)),
         );
-        let mut chosen = Vec::new();
-        super::top_m_into(&mut weighted, self.cfg.m, &mut chosen);
+        super::top_m_into(&mut weighted, self.cfg.m, out);
         self.scratch_ax = ax;
         self.scratch_weighted = weighted;
-        for &i in &chosen {
+        for &i in out.iter() {
             if let Some(c) = self.selections.get_mut(i) {
                 *c += 1;
             }
         }
-        chosen
     }
 
     /// Ridge update with the (context, reward) pair:
@@ -256,6 +300,15 @@ impl ContextualSelector for LinUcb {
     // — the same pattern as `Selector for SleepingBandit`.
     fn select(&mut self, available: &[usize], snapshots: &[DeviceSnapshot]) -> Vec<usize> {
         LinUcb::select(self, available, snapshots)
+    }
+
+    fn select_into(
+        &mut self,
+        available: &[usize],
+        snapshots: &[DeviceSnapshot],
+        out: &mut Vec<usize>,
+    ) {
+        LinUcb::select_into(self, available, snapshots, out)
     }
 
     fn observe(&mut self, arm: usize, reward: f64, snapshot: &DeviceSnapshot) {
@@ -319,6 +372,35 @@ mod tests {
             assert!(avail.contains(c));
         }
         assert!(b.select(&[], &[]).is_empty());
+    }
+
+    #[test]
+    fn select_into_reuses_dirty_buffers_and_matches_select() {
+        // the arena hands `out` back dirty every round; select_into
+        // must clear it and produce exactly what `select` returns
+        let mut a = LinUcb::new(10, cfg(3));
+        let mut b = LinUcb::new(10, cfg(3));
+        let avail = [0usize, 2, 3, 5, 8];
+        let caps = [0.1, 0.35, 0.6, 0.8, 0.95];
+        let snaps: Vec<DeviceSnapshot> = caps.iter().map(|&c| snap(c)).collect();
+        let mut out = vec![99usize; 7]; // dirty on entry
+        for _ in 0..3 {
+            a.select_into(&avail, &snaps, &mut out);
+            let chosen = b.select(&avail, &snaps);
+            assert_eq!(out, chosen);
+            for (j, &i) in avail.iter().enumerate() {
+                if out.contains(&i) {
+                    a.observe(i, 0.2 + 0.5 * caps[j], &snaps[j]);
+                    b.observe(i, 0.2 + 0.5 * caps[j], &snaps[j]);
+                }
+            }
+        }
+        assert_eq!(a.selection_counts(), b.selection_counts());
+        // the context-free adapter clears the dirty buffer too
+        let mut cf = ContextFree(Box::new(RoundRobinSelector::new(2)));
+        let mut out2 = vec![7usize; 4];
+        cf.select_into(&[0, 1, 2, 3], &[], &mut out2);
+        assert_eq!(out2, vec![0, 1]);
     }
 
     #[test]

@@ -38,9 +38,24 @@ const TRAIN_UTIL: f64 = 0.92;
 /// Radio seconds per round for PUB (model down) + SUB (gradients up).
 const COMM_S: f64 = 0.05;
 /// EWMA weight of the newest availability observation (telemetry).
-const AVAIL_EWMA_W: f64 = 0.2;
+/// Shared with the columnar fleet store's availability mirror, which
+/// must update parked devices' EWMAs bit-identically to
+/// [`DeviceSim::step_availability`].
+pub(crate) const AVAIL_EWMA_W: f64 = 0.2;
 /// EWMA weight of the newest per-round swap count (telemetry).
 const SWAP_EWMA_W: f64 = 0.3;
+/// Markov availability churn probabilities (see
+/// [`DeviceSim::step_availability`]) — shared with the columnar mirror.
+pub(crate) const P_DROP: f64 = 0.05;
+pub(crate) const P_JOIN: f64 = 0.5;
+
+/// The availability/training RNG stream of device `id` under the fleet
+/// builder's per-device `seed`. The columnar fleet store seeds its RNG
+/// column through this exact function so a device hydrated later draws
+/// the same stream it would have as an eager [`DeviceSim`].
+pub(crate) fn device_rng(id: usize, seed: u64) -> Rng {
+    Rng::new(seed ^ 0xDEAD_BEEF_u64.rotate_left(id as u32))
+}
 
 /// Outcome of one local training round.
 #[derive(Debug, Clone, Copy, Default)]
@@ -138,6 +153,31 @@ enum ItemState {
     Tombstoned,
 }
 
+/// The power/ledger half of one parked device, evicted from the
+/// columnar [`super::ledger::ParkLedger`] when the engine hydrates the
+/// device into a full [`DeviceSim`] (selection, SLO wake, or a targeted
+/// FORGET). Field-for-field these are the columns `step_one` folds;
+/// [`DeviceSim::adopt_parked`] copies them in bitwise.
+#[derive(Debug)]
+pub(crate) struct ParkedState {
+    /// Exact battery level (µAh) after the eviction settle.
+    pub(crate) level_uah: f64,
+    /// Park state the device currently sits in.
+    pub(crate) state: PowerState,
+    /// Pending wake latch (unconsumed by `step_idle`).
+    pub(crate) woke: bool,
+    /// Pending busy seconds (unconsumed by `step_idle`).
+    pub(crate) busy_s: f64,
+    /// Virtual ledger clock (s since experiment start).
+    pub(crate) clock_s: f64,
+    /// Window-log position up to which the device has billed.
+    pub(crate) window_ptr: usize,
+    /// Cumulative ledger account.
+    pub(crate) acc: LedgerRow,
+    /// Charging schedule (its own RNG stream travels with it).
+    pub(crate) plan: Option<ChargePlan>,
+}
+
 /// A simulated device.
 pub struct DeviceSim {
     pub id: usize,
@@ -228,10 +268,10 @@ impl DeviceSim {
             guard: ForgetGuard::new(0.05, f64::INFINITY),
             last_model_delta: 0.0,
             prev_signature: Vec::new(),
-            rng: Rng::new(seed ^ 0xDEAD_BEEF_u64.rotate_left(id as u32)),
+            rng: device_rng(id, seed),
             online: true,
-            p_drop: 0.05,
-            p_join: 0.5,
+            p_drop: P_DROP,
+            p_join: P_JOIN,
             power_state: PowerState::Awake,
             woke: false,
             ledger_clock_s: 0.0,
@@ -625,6 +665,38 @@ impl DeviceSim {
 
     pub fn set_window_ptr(&mut self, ptr: usize) {
         self.window_ptr = ptr;
+    }
+
+    /// Transplant a parked device's columnar ledger state into this
+    /// freshly built sim (columnar fleet hydration). `self` must have
+    /// been produced by the fleet's device factory for the same global
+    /// id — model, cache, governor and guard state are then already
+    /// exactly what an eager build would hold (construction and prefill
+    /// draw no RNG), and this call overwrites the power/availability
+    /// side with the columns the [`super::ledger::ParkLedger`] evicted.
+    /// Every field is copied bitwise — no fraction round-trips — so the
+    /// hydrated sim continues the exact eager trajectory.
+    #[allow(clippy::too_many_arguments)]
+    pub(crate) fn adopt_parked(
+        &mut self,
+        parked: ParkedState,
+        rng: Rng,
+        online: bool,
+        drained: bool,
+        avail_ewma: f64,
+    ) {
+        self.battery.set_level_uah(parked.level_uah);
+        self.power_state = parked.state;
+        self.woke = parked.woke;
+        self.last_busy_s = parked.busy_s;
+        self.ledger_clock_s = parked.clock_s;
+        self.window_ptr = parked.window_ptr;
+        self.acc = parked.acc;
+        self.charge_plan = parked.plan;
+        self.rng = rng;
+        self.online = online;
+        self.drained = drained;
+        self.avail_ewma = avail_ewma;
     }
 
     /// Lazy-ledger bound check: could settling the pending idle windows

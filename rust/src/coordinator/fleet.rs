@@ -3,12 +3,16 @@
 //! selector matched to the scheme. Every bench and example builds its
 //! experiment through this module.
 
+use std::sync::Arc;
+
 use super::device::DeviceSim;
 use super::scheme::{Aggregation, Scheme};
 use super::server::{Federation, FederationConfig};
 use super::shard::ShardedTransport;
+use super::store::{DeviceFactory, FleetSeed, FleetStoreKind};
 use super::transport::{
-    LedgerMode, SyncTransport, ThreadedTransport, Transport, TransportKind,
+    default_workers, LedgerMode, SyncTransport, ThreadedTransport, Transport,
+    TransportKind,
 };
 use super::unlearn::UnlearnConfig;
 use super::workload::{ModelKind, Workload};
@@ -103,6 +107,13 @@ pub struct FleetConfig {
     /// O(selected + woken). Settled per-device books are bit-identical
     /// either way.
     pub ledger: LedgerMode,
+    /// Fleet residency (`deal run --fleet sims|columnar`): dense
+    /// `DeviceSim`s (the reference path), or the columnar park-ledger
+    /// store that keeps parked devices as ~250 B of columns and
+    /// hydrates real simulators only for devices that train or forget —
+    /// the 10⁶-device path. Requires the lazy ledger; stats are
+    /// bit-identical either way.
+    pub fleet: FleetStoreKind,
 }
 
 impl Default for FleetConfig {
@@ -135,6 +146,7 @@ impl Default for FleetConfig {
             charging: false,
             round_period_s: 60.0,
             ledger: LedgerMode::Eager,
+            fleet: FleetStoreKind::Sims,
         }
     }
 }
@@ -154,14 +166,20 @@ pub fn default_model(ds: Dataset) -> ModelKind {
     }
 }
 
-/// Build the device simulators (without a server) — used directly by the
-/// per-device benches (Figs. 3/6) and by [`build`].
-pub fn build_devices(cfg: &FleetConfig) -> Vec<DeviceSim> {
+/// Build a [`DeviceFactory`] for the fleet: the eager construction
+/// loop packaged as an on-demand closure. `factory.build(i)` at any
+/// point equals eager device `i` at round 0 bit-for-bit — device
+/// construction (workload synthesis, prefill absorption, guard and
+/// charging setup) draws no RNG, so hydration timing cannot perturb
+/// any stream. The dataset and shard index tables are generated once
+/// and shared behind `Arc`s, so cloning the factory across shard
+/// leaders / worker threads is cheap.
+pub fn device_factory(cfg: &FleetConfig) -> DeviceFactory {
     let model = cfg.model.unwrap_or_else(|| default_model(cfg.dataset));
-    let data = synth::generate(cfg.dataset, cfg.seed, cfg.scale);
+    let data = Arc::new(synth::generate(cfg.dataset, cfg.seed, cfg.scale));
     let rows = data.rows();
-    let shards = synth::shard_indices(rows, cfg.n_devices);
-    let profiles = table1_profiles();
+    let shards = Arc::new(synth::shard_indices(rows, cfg.n_devices));
+    let profiles = Arc::new(table1_profiles());
     let policy = cfg.policy.unwrap_or(match (cfg.mode, cfg.scheme) {
         // kernel-forced powersave: the ladder floor is pinned fleet-wide
         // — the paper's "at the SLO's expense" configuration
@@ -173,35 +191,58 @@ pub fn build_devices(cfg: &FleetConfig) -> Vec<DeviceSim> {
         Scheme::Deal => Replacement::ThetaLru { theta: cfg.theta },
         _ => Replacement::Lru,
     };
-    shards
-        .into_iter()
-        .enumerate()
-        .map(|(i, idx)| {
-            let wl = make_workload(model, &data, &idx, cfg.seed + i as u64);
-            let prefill = (wl.len() as f64 * cfg.prefill_frac) as usize;
+    let shard_items: Arc<Vec<usize>> = Arc::new(shards.iter().map(Vec::len).collect());
+    let build = {
+        let data = Arc::clone(&data);
+        let shards = Arc::clone(&shards);
+        let profiles = Arc::clone(&profiles);
+        let seed = cfg.seed;
+        let prefill_frac = cfg.prefill_frac;
+        let guard_min_retained = cfg.guard_min_retained;
+        let guard_max_drift = cfg.guard_max_drift;
+        let charging = cfg.charging;
+        Arc::new(move |i: usize| {
+            let wl = make_workload(model, &data, &shards[i], seed + i as u64);
+            let prefill = (wl.len() as f64 * prefill_frac) as usize;
             let mut dev = DeviceSim::new(
                 i,
                 profiles[i % profiles.len()].clone(),
                 policy,
                 replacement,
                 wl,
-                cfg.seed.wrapping_mul(0x9E3779B9) + i as u64,
+                seed.wrapping_mul(0x9E3779B9) + i as u64,
             );
-            dev.configure_guard(cfg.guard_min_retained, cfg.guard_max_drift);
-            if cfg.charging {
+            dev.configure_guard(guard_min_retained, guard_max_drift);
+            if charging {
                 // per-device plug/unplug stream, derived from the fleet
                 // seed but independent of the training RNG streams
                 dev.enable_charging(
-                    cfg.seed
-                        .wrapping_mul(0xD1B5_4A32_D192_ED03)
-                        .wrapping_add(i as u64)
+                    seed.wrapping_mul(0xD1B5_4A32_D192_ED03).wrapping_add(i as u64)
                         ^ 0xC4A6_1ED6,
                 );
             }
             dev.prefill(prefill);
             dev
-        })
-        .collect()
+        }) as Arc<dyn Fn(usize) -> DeviceSim + Send + Sync>
+    };
+    DeviceFactory::new(build, profiles, policy, shard_items, cfg.charging, cfg.seed)
+}
+
+/// Build the device simulators (without a server) — used directly by the
+/// per-device benches (Figs. 3/6) and by [`build`].
+pub fn build_devices(cfg: &FleetConfig) -> Vec<DeviceSim> {
+    let factory = device_factory(cfg);
+    (0..factory.n()).map(|i| factory.build(i)).collect()
+}
+
+/// The devices a federation is stood up over, in the representation
+/// [`FleetConfig::fleet`] picked: a dense pre-built fleet or a factory
+/// the columnar store hydrates on demand.
+pub fn build_seed(cfg: &FleetConfig) -> FleetSeed {
+    match cfg.fleet {
+        FleetStoreKind::Sims => FleetSeed::Sims(build_devices(cfg)),
+        FleetStoreKind::Columnar => FleetSeed::columnar(device_factory(cfg)),
+    }
 }
 
 fn make_workload(model: ModelKind, data: &Data, idx: &[usize], seed: u64) -> Workload {
@@ -220,28 +261,56 @@ fn make_workload(model: ModelKind, data: &Data, idx: &[usize], seed: u64) -> Wor
     }
 }
 
-/// Build the worker fabric for a fleet: flat Sync/Threaded when
-/// `shards <= 1`, otherwise a [`ShardedTransport`] with `shards`
-/// leaders each driving an inner transport of `kind`.
+/// Past this many shard leaders the root's merge fold gets wide enough
+/// that two levels beat one; [`build_transport_seed`] auto-nests.
+const MAX_FLAT_LEADERS: usize = 16;
+
+/// Build the worker fabric for a pre-built dense fleet: flat
+/// Sync/Threaded when `shards <= 1`, otherwise a [`ShardedTransport`]
+/// with `shards` leaders each driving an inner transport of `kind`.
 pub fn build_transport(
     devices: Vec<DeviceSim>,
     kind: TransportKind,
     shards: usize,
 ) -> Box<dyn Transport> {
+    build_transport_seed(FleetSeed::Sims(devices), kind, shards)
+}
+
+/// Build the worker fabric over any [`FleetSeed`]. Shard counts past
+/// [`MAX_FLAT_LEADERS`] auto-nest into a two-level fabric (≈√K outer
+/// leaders over ⌈K/outer⌉ sub-leaders each) — bit-identical to the
+/// flat topology, but the root folds a narrow merge per level instead
+/// of one wide one.
+pub fn build_transport_seed(
+    seed: FleetSeed,
+    kind: TransportKind,
+    shards: usize,
+) -> Box<dyn Transport> {
+    if shards > MAX_FLAT_LEADERS {
+        let outer = (shards as f64).sqrt().ceil() as usize;
+        let inner = shards.div_ceil(outer);
+        return Box::new(ShardedTransport::two_level(seed, outer, inner, kind));
+    }
     if shards > 1 {
-        return Box::new(ShardedTransport::new(devices, shards, kind));
+        return Box::new(ShardedTransport::from_seed(seed, shards, kind));
     }
     match kind {
-        TransportKind::Sync => Box::new(SyncTransport::new(devices)),
-        TransportKind::Threaded => Box::new(ThreadedTransport::spawn(devices)),
+        TransportKind::Sync => Box::new(SyncTransport::from_seed(seed)),
+        TransportKind::Threaded => {
+            let workers = default_workers(seed.n());
+            Box::new(ThreadedTransport::spawn_seed(seed, workers))
+        }
     }
 }
 
 /// Build a full federation: devices + scheme-appropriate selector over
 /// the configured (possibly sharded) transport.
 pub fn build(cfg: &FleetConfig) -> Federation {
-    let devices = build_devices(cfg);
-    let transport = build_transport(devices, cfg.transport, cfg.shards);
+    assert!(
+        cfg.fleet != FleetStoreKind::Columnar || cfg.ledger == LedgerMode::Lazy,
+        "the columnar fleet store is lazy-only: pair --fleet columnar with --ledger lazy"
+    );
+    let transport = build_transport_seed(build_seed(cfg), cfg.transport, cfg.shards);
     let selector: Box<dyn ContextualSelector> = if cfg.scheme.uses_selection() {
         // Eq. 4 feasibility: the queues only stabilize when Σᵢ rᵢ ≤ m.
         // A fixed per-device fraction breaks that silently once the
@@ -388,6 +457,69 @@ mod tests {
         assert_eq!(fed.transport().shards(), 4);
         assert_eq!(fed.transport().describe(), "sharded×4(sync)");
         assert_eq!(fed.transport().shard_summaries().len(), 4);
+    }
+
+    #[test]
+    fn factory_builds_equal_eager_devices() {
+        let cfg = FleetConfig {
+            n_devices: 5,
+            scale: 0.03,
+            charging: true,
+            ..Default::default()
+        };
+        let eager = build_devices(&cfg);
+        let factory = device_factory(&cfg);
+        assert_eq!(factory.n(), 5);
+        // build out of order — construction draws no RNG, so order is
+        // irrelevant and each device equals its eager twin
+        for i in [3usize, 0, 4, 1, 2] {
+            let d = factory.build(i);
+            assert_eq!(d.profile().name, eager[i].profile().name);
+            assert_eq!(d.shard_len(), eager[i].shard_len());
+            assert_eq!(d.snapshot().battery_frac, eager[i].snapshot().battery_frac);
+        }
+    }
+
+    #[test]
+    fn columnar_fleet_matches_sims_fleet() {
+        let base = FleetConfig {
+            n_devices: 10,
+            scale: 0.05,
+            ledger: LedgerMode::Lazy,
+            ..Default::default()
+        };
+        let mut sims = build(&base);
+        let mut col = build(&FleetConfig {
+            fleet: FleetStoreKind::Columnar,
+            ..base.clone()
+        });
+        let a = sims.run(5);
+        let b = col.run(5);
+        assert_eq!(a.rounds, b.rounds);
+        assert_eq!(a.total_energy_uah.to_bits(), b.total_energy_uah.to_bits());
+    }
+
+    #[test]
+    #[should_panic(expected = "lazy-only")]
+    fn columnar_requires_lazy_ledger() {
+        build(&FleetConfig {
+            fleet: FleetStoreKind::Columnar,
+            ..Default::default()
+        });
+    }
+
+    #[test]
+    fn deep_shard_counts_auto_nest() {
+        let cfg = FleetConfig {
+            n_devices: 40,
+            scale: 0.02,
+            shards: 20,
+            ..Default::default()
+        };
+        let fed = build(&cfg);
+        // 20 > MAX_FLAT_LEADERS ⇒ √K nesting: 5 outer × 4 inner leaves
+        assert_eq!(fed.transport().shards(), 20);
+        assert_eq!(fed.transport().describe(), "sharded×5(sharded×4(sync))");
     }
 
     #[test]

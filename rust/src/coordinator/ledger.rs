@@ -29,8 +29,9 @@
 //! `benches/fleet_scaling.rs` uses both modes of this struct for the
 //! 10³→10⁶ round-throughput sweep.
 
-use super::device::LedgerRow;
+use super::device::{LedgerRow, ParkedState};
 use super::transport::{mode_ix, ClockTick, LedgerMode, WindowLog};
+use crate::power::battery::LOW_WATER_FRAC;
 use crate::power::state::{state_current_ua, wake_cost, ChargePlan, ALL_FLEET_MODES};
 use crate::power::{DeviceProfile, FleetMode, PowerState};
 
@@ -115,6 +116,24 @@ impl ParkLedger {
 
     pub fn power_state(&self, i: usize) -> PowerState {
         self.state[i]
+    }
+
+    /// The shared window log of deferred clock ticks (lazy bookkeeping).
+    pub(crate) fn log(&self) -> &WindowLog {
+        &self.log
+    }
+
+    /// First window-log tick device `i` has not billed yet.
+    pub(crate) fn window_ptr(&self, i: usize) -> usize {
+        self.window_ptr[i]
+    }
+
+    pub(crate) fn capacity_uah(&self, i: usize) -> f64 {
+        self.capacity_uah[i]
+    }
+
+    pub(crate) fn plan(&self, i: usize) -> Option<&ChargePlan> {
+        self.plan[i].as_ref()
     }
 
     /// Resident column bytes per device — what the fleet-scaling bench
@@ -207,6 +226,68 @@ impl ParkLedger {
     pub fn settle_all(&mut self) {
         for i in 0..self.n_devices() {
             self.settle(i);
+        }
+    }
+
+    /// Columnar mirror of `DeviceSim::needs_availability_settle`: could
+    /// settling device `i`'s pending windows (`pending`, seconds per
+    /// [`ALL_FLEET_MODES`] entry) change what an availability step
+    /// observes? `drained` is the caller's latch column (the ledger
+    /// itself does not track it — availability lives with whoever owns
+    /// the RNG streams). Expression-for-expression identical to the
+    /// `DeviceSim` bound — `floor_ua[i][j]` is the same
+    /// [`state_current_ua`] value the sim recomputes, and
+    /// `3.0 * LOW_WATER_FRAC * cap` associates exactly like
+    /// `Battery::rejoin_level_uah` — so a columnar fleet settles on
+    /// precisely the same rounds as a `DeviceSim` fleet, keeping the
+    /// RNG streams aligned fleet-wide.
+    pub(crate) fn needs_availability_settle(
+        &self,
+        i: usize,
+        pending: [f64; 3],
+        drained: bool,
+    ) -> bool {
+        let total: f64 = pending.iter().sum();
+        if total <= 0.0 {
+            return false;
+        }
+        const BOUND_SLACK: f64 = 1e-9;
+        let cap = self.capacity_uah[i];
+        if !drained {
+            let mut drain_uah = 0.0;
+            for (j, dt) in pending.iter().enumerate() {
+                if *dt > 0.0 {
+                    drain_uah += self.floor_ua[i][j] * dt / 3600.0;
+                }
+            }
+            self.level_uah[i] - drain_uah * (1.0 + BOUND_SLACK) <= LOW_WATER_FRAC * cap
+        } else if let Some(plan) = &self.plan[i] {
+            let ub = (self.level_uah[i]
+                + plan.rate_ua() * total / 3600.0 * (1.0 + BOUND_SLACK))
+                .min(cap);
+            ub > 3.0 * LOW_WATER_FRAC * cap
+        } else {
+            false
+        }
+    }
+
+    /// Evict device `i`'s power state for hydration into a full
+    /// `DeviceSim`: settle it to the log head, then hand over the
+    /// columns bitwise (taking the wake latch, busy credit and charge
+    /// plan with them). The caller must never route this slot through
+    /// the ledger again — the columnar fleet store tracks hydrated
+    /// devices and steps them as sims from here on.
+    pub(crate) fn evict(&mut self, i: usize) -> ParkedState {
+        self.settle(i);
+        ParkedState {
+            level_uah: self.level_uah[i],
+            state: self.state[i],
+            woke: std::mem::take(&mut self.woke[i]),
+            busy_s: std::mem::take(&mut self.busy_s[i]),
+            clock_s: self.clock_s[i],
+            window_ptr: self.window_ptr[i],
+            acc: self.acc[i],
+            plan: self.plan[i].take(),
         }
     }
 

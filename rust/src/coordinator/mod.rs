@@ -103,6 +103,35 @@
 //!   lazy ledger: `collect_ledger` rebuilds each shard's idle/sleep/
 //!   wake µAh from the settled cumulative rows, so eager and lazy
 //!   books are bit-identical per shard, not just fleet-wide
+//! - **The columnar fleet store** (PR 8): the lazy ledger removed the
+//!   per-round O(n) *billing*; [`store`] removes the per-device
+//!   *residency*. A [`store::FleetStore`] is the slice of the fleet a
+//!   transport (or worker thread, or shard leader) owns, in one of two
+//!   representations: `Sims` (dense `Vec<DeviceSim>` — the reference
+//!   path, whose probe/execute/clock bodies are the pre-store transport
+//!   code verbatim) or `Columnar` (~250 B of [`ParkLedger`] columns +
+//!   availability columns per device, with real `DeviceSim`s built on
+//!   demand by a [`store::DeviceFactory`] only for devices that train
+//!   or forget — **hydration**). Hydration is exact because device
+//!   construction draws no RNG and the availability/charging RNG
+//!   streams live in columns that transplant bitwise
+//!   (`DeviceSim::adopt_parked`); a hydrated device stays resident.
+//!   Which paths force a settle mirrors the lazy `DeviceSim` rules
+//!   exactly — train/forget always; a probe only when
+//!   `ParkLedger::needs_availability_settle` (an FP-exact mirror of the
+//!   sim's bound check) says the pending windows could flip the
+//!   outcome; stats reads settle everyone — so a columnar fleet settles
+//!   on precisely the same rounds and its RNG streams stay aligned.
+//!   `deal run --fleet columnar --ledger lazy` completes 10⁶-device
+//!   federations at O(selected + woken) ledger work per round. The
+//!   transports grew `_into` variants (probe/execute/forgets/clock/
+//!   ledger) so the engine's `RoundArena` owns those buffers too, and
+//!   [`ShardedTransport::two_level`] nests shards-of-shards so the root
+//!   merge scales past ~16 leaders — id-unique (time, id) sort keys
+//!   make the pairwise merge of merges equal the flat sort, so 2-level
+//!   equals 1-level equals flat to the bit (the id-order ledger fold is
+//!   likewise preserved because every leader emits rows ascending by
+//!   id and the root concatenates leader ranges in ascending order)
 //! - [`fleet`] — experiment builder used by benches and examples
 //!   (`FleetConfig::selector` / `FleetConfig::features` pick the
 //!   selection algorithm and gate the telemetry pipeline;
@@ -116,6 +145,7 @@ pub mod ledger;
 pub mod scheme;
 pub mod server;
 pub mod shard;
+pub mod store;
 pub mod transport;
 pub mod unlearn;
 pub mod workload;
@@ -126,6 +156,7 @@ pub use ledger::ParkLedger;
 pub use scheme::{Aggregation, Scheme};
 pub use server::{Federation, FederationConfig, FederationStats};
 pub use shard::ShardedTransport;
+pub use store::{ColumnarStore, DeviceFactory, FleetSeed, FleetStore, FleetStoreKind, SimStore};
 pub use transport::{
     ClockTick, LedgerCfg, LedgerMode, ProbeReport, RoundJob, ShardSummary,
     SyncTransport, ThreadedTransport, Transport, TransportKind, WorkerReply,

@@ -13,12 +13,13 @@
 //! and data volume, and feed the bandit — immediately for in-time
 //! replies, via `observe_delayed` for buffered ones.
 
-use super::device::{DeviceSim, LocalOutcome};
+use super::device::{DeviceSim, IdleOutcome, LedgerRow, LocalOutcome};
 use super::scheme::{Aggregation, Scheme};
 use super::transport::{
-    ClockTick, LedgerCfg, LedgerMode, RoundJob, ShardSummary, SyncTransport, Transport,
+    ClockTick, LedgerCfg, LedgerMode, ProbeReport, RoundJob, ShardSummary,
+    SyncTransport, Transport, WorkerReply,
 };
-use super::unlearn::{UnlearnConfig, UnlearnQueue, UnlearnStats};
+use super::unlearn::{ForgetAck, UnlearnConfig, UnlearnQueue, UnlearnStats};
 use crate::bandit::{ContextFree, ContextualSelector, Selector};
 use crate::power::{DeviceSnapshot, FleetEnergyBreakdown, FleetMode};
 use crate::util::stats::Summary;
@@ -207,6 +208,19 @@ struct RoundArena {
     snapshots: Vec<DeviceSnapshot>,
     /// buffered stragglers coming due this round
     due: Vec<PendingReply>,
+    /// availability probe reports (transport `probe_into`)
+    probes: Vec<ProbeReport>,
+    /// the selector's S(k) output (`ContextualSelector::select_into`)
+    chosen: Vec<usize>,
+    /// round replies (transport `execute_into`)
+    replies: Vec<WorkerReply>,
+    /// targeted-FORGET acks (transport `execute_forgets_into`)
+    acks: Vec<ForgetAck>,
+    /// idle outcomes from the round tick (transport `advance_clock_into`)
+    ledger: Vec<IdleOutcome>,
+    /// cumulative per-device rows (transport `collect_ledger_into`,
+    /// the settle/stats path)
+    rows: Vec<LedgerRow>,
 }
 
 /// Fleet-wide ledger totals folded device-major (flat ascending device
@@ -389,8 +403,15 @@ impl Federation {
         }
         // 1. availability G(k), probed through the transport — each
         // online device reports its telemetry snapshot, so the context
-        // table stays fresh even for idle-but-online devices
-        let probes = self.transport.probe();
+        // table stays fresh even for idle-but-online devices. The
+        // report buffer rides the arena; `probe_into` clears it first,
+        // so arena-off (a fresh Vec) is bit-identical.
+        let mut probes = if self.arena_enabled {
+            std::mem::take(&mut self.arena.probes)
+        } else {
+            Vec::new()
+        };
+        self.transport.probe_into(&mut probes);
         let n_available = probes.len();
         if self.cfg.features {
             for &(i, snap) in &probes {
@@ -409,8 +430,21 @@ impl Federation {
             Vec::new()
         };
         available.extend(probes.iter().map(|&(i, _)| i));
-        let selected: Vec<usize> = if self.cfg.scheme.uses_selection() {
-            let mut chosen = if self.selector.wants_context() {
+        // G(k) extracted — the probe buffer goes back to the arena
+        if self.arena_enabled {
+            probes.clear();
+            self.arena.probes = probes;
+        }
+        let uses_selection = self.cfg.scheme.uses_selection();
+        let selected: Vec<usize> = if uses_selection {
+            // S(k) lands in the arena's chosen buffer (`select_into`
+            // clears it first; arena-off hands a fresh Vec)
+            let mut chosen = if self.arena_enabled {
+                std::mem::take(&mut self.arena.chosen)
+            } else {
+                Vec::new()
+            };
+            if self.selector.wants_context() {
                 let mut snapshots = if self.arena_enabled {
                     let mut v = std::mem::take(&mut self.arena.snapshots);
                     v.clear();
@@ -419,16 +453,15 @@ impl Federation {
                     Vec::new()
                 };
                 snapshots.extend(available.iter().map(|&i| self.latest_snapshot[i]));
-                let c = self.selector.select(&available, &snapshots);
+                self.selector.select_into(&available, &snapshots, &mut chosen);
                 if self.arena_enabled {
                     self.arena.snapshots = snapshots;
                 }
-                c
             } else {
                 // context-free selector: skip the O(n_available)
                 // snapshot gather on the hot path
-                self.selector.select(&available, &[])
-            };
+                self.selector.select_into(&available, &[], &mut chosen);
+            }
             // 2b. deletion-SLO wake-override: a device holding a
             // request past its deadline joins S(k) even if the bandit
             // would let it sleep. This lives in the engine, not the
@@ -469,7 +502,12 @@ impl Federation {
         if self.unlearn.is_active() {
             let commands = self.unlearn.schedule(&selected);
             if !commands.is_empty() {
-                let acks = self.transport.execute_forgets(&commands);
+                let mut acks = if self.arena_enabled {
+                    std::mem::take(&mut self.arena.acks)
+                } else {
+                    Vec::new()
+                };
+                self.transport.execute_forgets_into(&commands, &mut acks);
                 for a in &acks {
                     self.device_energy_uah[a.device] += a.energy_uah;
                     forget_energy += a.energy_uah;
@@ -477,6 +515,10 @@ impl Federation {
                         forgets += 1;
                     }
                     self.unlearn.resolve(a, self.round);
+                }
+                if self.arena_enabled {
+                    acks.clear();
+                    self.arena.acks = acks;
                 }
             }
         }
@@ -488,7 +530,12 @@ impl Federation {
             arrivals: self.cfg.arrivals_per_round,
             theta: self.cfg.theta,
         };
-        let replies = self.transport.execute(&selected, job);
+        let mut replies = if self.arena_enabled {
+            std::mem::take(&mut self.arena.replies)
+        } else {
+            Vec::new()
+        };
+        self.transport.execute_into(&selected, job, &mut replies);
         let agg = self.aggregation();
         // 4. aggregation: when does the server close the round?
         let round_time = if replies.is_empty() {
@@ -609,6 +656,11 @@ impl Federation {
                 self.latest_snapshot[r.device] = r.snapshot;
             }
         }
+        // replies are fully credited — the buffer goes back to the arena
+        if self.arena_enabled {
+            replies.clear();
+            self.arena.replies = replies;
+        }
         self.clock_s += round_time;
         // 7. fleet ledger: advance every device's power-state clock
         // over the round period — selected devices bill only their idle
@@ -622,7 +674,12 @@ impl Federation {
             dt_s: self.cfg.round_period_s.max(round_time),
             mode: self.fleet_mode(),
         };
-        let ledger = self.transport.advance_clock(tick, &selected);
+        let mut ledger = if self.arena_enabled {
+            std::mem::take(&mut self.arena.ledger)
+        } else {
+            Vec::new()
+        };
+        self.transport.advance_clock_into(tick, &selected, &mut ledger);
         let (mut idle, mut sleep, mut wake) = (0.0f64, 0.0f64, 0.0f64);
         let (mut charged, mut awake_equiv) = (0.0f64, 0.0f64);
         let mut wakes = 0u64;
@@ -633,6 +690,10 @@ impl Federation {
             charged += r.charged_uah;
             awake_equiv += r.awake_equiv_uah;
             wakes += r.wakes;
+        }
+        if self.arena_enabled {
+            ledger.clear();
+            self.arena.ledger = ledger;
         }
         let rec = RoundRecord {
             round: self.round,
@@ -654,13 +715,17 @@ impl Federation {
             fleet_settled: self.cfg.ledger == LedgerMode::Eager,
         };
         self.rounds.push(rec.clone());
-        // reclaim the larger of the S(k)/G(k) buffers for next round
-        // (select-all moved G(k) into `selected`, so this is where that
-        // capacity comes back)
-        if self.arena_enabled && selected.capacity() > self.arena.ids.capacity() {
+        // reclaim S(k): under selection it is the selector's chosen
+        // buffer; under select-all it is the moved G(k) vector, whose
+        // capacity goes back to the ids slot if it grew
+        if self.arena_enabled {
             let mut s = selected;
             s.clear();
-            self.arena.ids = s;
+            if uses_selection {
+                self.arena.chosen = s;
+            } else if s.capacity() > self.arena.ids.capacity() {
+                self.arena.ids = s;
+            }
         }
         rec
     }
@@ -711,7 +776,12 @@ impl Federation {
     /// them. Valid (and a no-op beyond the fold) under the eager
     /// ledger too.
     pub fn settle_fleet(&mut self) {
-        let rows = self.transport.collect_ledger();
+        let mut rows = if self.arena_enabled {
+            std::mem::take(&mut self.arena.rows)
+        } else {
+            Vec::new()
+        };
+        self.transport.collect_ledger_into(&mut rows);
         let mut t = FleetLedgerTotals::default();
         for r in &rows {
             t.idle_uah += r.idle_uah;
@@ -722,6 +792,10 @@ impl Federation {
             t.awake_equiv_uah += r.awake_equiv_uah;
         }
         self.fleet_totals = Some(t);
+        if self.arena_enabled {
+            rows.clear();
+            self.arena.rows = rows;
+        }
     }
 
     /// Reward Xᵢ(k) ∈ [0,1]: the paper's objective blend — latency

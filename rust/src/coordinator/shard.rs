@@ -23,12 +23,28 @@
 //!   ids), and Eq. 4 fairness fractions are per-device, so each shard's
 //!   aggregate selection fraction meets Σᵢ∈shard rᵢ — enforced by
 //!   `rust/tests/prop_selector.rs`.
+//!
+//! # Two-level sharding (shards of shards)
+//!
+//! A leader can itself be a `ShardedTransport`
+//! ([`ShardedTransport::two_level`]): the root merges K₁ leaders, each
+//! of which merged K₂ sub-leaders. The root-merge cost per level drops
+//! from O(n·log K) over one wide fold to two narrow folds, which is
+//! what keeps the merge scaling past ~16 leaders. Nesting is
+//! semantics-free by the same argument as flat sharding: the merge keys
+//! ((time, id) for replies, (time, device, request) for acks) are
+//! tie-free total orders, so a pairwise merge of per-sub-shard sorted
+//! runs equals the flat sort of their concatenation — *merging merges
+//! is associative*. Ledger rows and probe reports concatenate in
+//! ascending id ranges at every level, so the flat id-order fold the
+//! bit-identity contract is stated on is preserved verbatim.
 
 use super::device::{DeviceSim, IdleOutcome, LedgerRow};
+use super::store::FleetSeed;
 use super::transport::{
-    default_workers, partition_bounds, partition_chunks, ClockTick, LedgerCfg,
-    ProbeReport, RoundJob, ShardSummary, SyncTransport, ThreadedTransport, Transport,
-    TransportKind, WorkerReply,
+    default_workers, partition_bounds, ClockTick, LedgerCfg, ProbeReport, RoundJob,
+    ShardSummary, SyncTransport, ThreadedTransport, Transport, TransportKind,
+    WorkerReply,
 };
 use super::unlearn::{ForgetAck, ForgetCommand};
 use crate::power::DeviceProfile;
@@ -182,10 +198,13 @@ struct ShardCounters {
 
 /// One shard leader. Held concretely (not as `Box<dyn Transport>`) so
 /// the root can use the threaded fabric's dispatch/collect split and
-/// overlap all leaders within a round.
+/// overlap all leaders within a round. A leader may itself be a
+/// `ShardedTransport` ([`ShardedTransport::two_level`]); the recursion
+/// is finite because the nested root holds its leaders behind a `Vec`.
 enum Leader {
     Sync(SyncTransport),
     Threaded(ThreadedTransport),
+    Sharded(ShardedTransport),
 }
 
 impl Leader {
@@ -193,6 +212,7 @@ impl Leader {
         match self {
             Leader::Sync(t) => t,
             Leader::Threaded(t) => t,
+            Leader::Sharded(t) => t,
         }
     }
 }
@@ -228,10 +248,20 @@ impl ShardedTransport {
     /// one inner transport of `inner` kind per shard. `shards` is
     /// clamped to `[1, n_devices]`.
     pub fn new(devices: Vec<DeviceSim>, shards: usize, inner: TransportKind) -> Self {
-        let n = devices.len();
+        Self::from_seed(FleetSeed::Sims(devices), shards, inner)
+    }
+
+    /// Partition any [`FleetSeed`] — a dense `Vec<DeviceSim>` or a
+    /// columnar [`DeviceFactory`](super::store::DeviceFactory) range —
+    /// into `shards` contiguous leaders. The seed split keeps each
+    /// chunk's global *origin* (device identities, profile rotation,
+    /// RNG seeds), while the leader's local id space starts at 0; the
+    /// root rebases with `bounds[s]` exactly as in the dense path.
+    pub fn from_seed(seed: FleetSeed, shards: usize, inner: TransportKind) -> Self {
+        let n = seed.n();
         let k = shards.clamp(1, n.max(1));
         let bounds = partition_bounds(n, k);
-        let chunks = partition_chunks(devices, &bounds);
+        let chunks = seed.split(&bounds);
         // threaded leaders share one machine and run concurrently:
         // split the fleet-wide worker budget across them instead of
         // letting each size itself at 4×cores (K-fold thread
@@ -240,12 +270,42 @@ impl ShardedTransport {
         let leaders: Vec<Leader> = chunks
             .into_iter()
             .map(|chunk| match inner {
-                TransportKind::Sync => Leader::Sync(SyncTransport::new(chunk)),
+                TransportKind::Sync => Leader::Sync(SyncTransport::from_seed(chunk)),
                 TransportKind::Threaded => Leader::Threaded(
-                    ThreadedTransport::spawn_batched(chunk, workers_per_leader),
+                    ThreadedTransport::spawn_seed(chunk, workers_per_leader),
                 ),
             })
             .collect();
+        Self::assemble(leaders, bounds, inner)
+    }
+
+    /// Two-level sharding: `outer` leaders, each itself a
+    /// `ShardedTransport` over `inner_shards` sub-leaders of `inner`
+    /// kind. Bit-identical to the flat and 1-level fabrics (see the
+    /// module docs: merging merges is associative under a tie-free
+    /// order); the win is root-merge scaling — each level folds a
+    /// narrow K instead of one wide one.
+    pub fn two_level(
+        seed: FleetSeed,
+        outer: usize,
+        inner_shards: usize,
+        inner: TransportKind,
+    ) -> Self {
+        let n = seed.n();
+        let k = outer.clamp(1, n.max(1));
+        let bounds = partition_bounds(n, k);
+        let chunks = seed.split(&bounds);
+        let leaders: Vec<Leader> = chunks
+            .into_iter()
+            .map(|chunk| {
+                Leader::Sharded(ShardedTransport::from_seed(chunk, inner_shards, inner))
+            })
+            .collect();
+        Self::assemble(leaders, bounds, inner)
+    }
+
+    fn assemble(leaders: Vec<Leader>, bounds: Vec<usize>, inner: TransportKind) -> Self {
+        let k = leaders.len();
         ShardedTransport {
             leaders,
             bounds,
@@ -264,25 +324,40 @@ impl ShardedTransport {
         // names the owning shard
         self.bounds.partition_point(|&b| b <= g) - 1
     }
-}
 
-impl Transport for ShardedTransport {
-    fn probe(&mut self) -> Vec<ProbeReport> {
-        // phase 1: fire probes at every threaded leader so their
-        // fleets step concurrently
+    // ------------------------------------------------------------------
+    // Dispatch/collect split. Each trait entry point is two phases over
+    // the leaders: phase 1 *dispatches* to every leader that can run
+    // asynchronously (threaded leaders, and nested sharded leaders,
+    // which recurse the dispatch down to their own threaded
+    // sub-leaders) so shards overlap; phase 2 walks shards in id order,
+    // running sync leaders inline and collecting the rest. The bucket
+    // scratch filled in phase 1 is left in `self.scratch_*` for phase 2
+    // and reused (cleared, capacity kept) on the next round.
+    // ------------------------------------------------------------------
+
+    fn dispatch_probe(&mut self) {
         for leader in &mut self.leaders {
-            if let Leader::Threaded(t) = leader {
-                t.dispatch_probe();
+            match leader {
+                Leader::Sync(_) => {}
+                Leader::Threaded(t) => t.dispatch_probe(),
+                Leader::Sharded(t) => t.dispatch_probe(),
             }
         }
-        // phase 2: walk shards in id order, stepping sync leaders
-        // inline and collecting threaded replies
+    }
+
+    fn collect_probe(&mut self) -> Vec<ProbeReport> {
         let mut online = Vec::new();
         for (s, leader) in self.leaders.iter_mut().enumerate() {
             let base = self.bounds[s];
             let local = match leader {
                 Leader::Sync(t) => t.probe(),
-                Leader::Threaded(t) => t.collect_probe(),
+                Leader::Threaded(t) => {
+                    let mut v = Vec::new();
+                    t.collect_probe_into(&mut v);
+                    v
+                }
+                Leader::Sharded(t) => t.collect_probe(),
             };
             online.extend(local.into_iter().map(|(i, snap)| (base + i, snap)));
         }
@@ -291,7 +366,7 @@ impl Transport for ShardedTransport {
         online
     }
 
-    fn execute(&mut self, selected: &[usize], job: RoundJob) -> Vec<WorkerReply> {
+    fn dispatch_jobs(&mut self, selected: &[usize], job: RoundJob) {
         // bucket the (weight-ordered) selection by owning shard,
         // preserving the server's dispatch order within each shard
         let mut per_shard = take_buckets(&mut self.scratch_ids, self.leaders.len());
@@ -299,22 +374,31 @@ impl Transport for ShardedTransport {
             let s = self.shard_of(g);
             per_shard[s].push(g - self.bounds[s]);
         }
-        // phase 1: dispatch to every threaded leader before awaiting
-        // anyone — shards overlap, round wall time = max over shards
+        // dispatch to every asynchronous leader before awaiting anyone
+        // — shards overlap, round wall time = max over shards
         let mut pinged = take_buckets(&mut self.scratch_pinged, self.leaders.len());
         for (s, locals) in per_shard.iter().enumerate() {
             if locals.is_empty() {
                 continue;
             }
-            if let Leader::Threaded(t) = &mut self.leaders[s] {
-                pinged[s] = t.dispatch_jobs(locals, job);
+            match &mut self.leaders[s] {
+                Leader::Sync(_) => {}
+                Leader::Threaded(t) => pinged[s] = t.dispatch_jobs(locals, job),
+                Leader::Sharded(t) => t.dispatch_jobs(locals, job),
             }
         }
-        // phase 2: run sync leaders / collect threaded replies; each
-        // leader's list is already (time, id)-sorted, so the root
-        // aggregation is a pairwise fold of sorted lists — identical
-        // order to the flat transport's concat-and-sort (the key is
-        // tie-free), at O(n·log K) instead of O(n·log n)
+        self.scratch_ids = per_shard;
+        self.scratch_pinged = pinged;
+    }
+
+    fn collect_jobs(&mut self, job: RoundJob) -> Vec<WorkerReply> {
+        // run sync leaders / collect the rest; each leader's list is
+        // already (time, id)-sorted, so the root aggregation is a
+        // pairwise fold of sorted lists — identical order to the flat
+        // transport's concat-and-sort (the key is tie-free), at
+        // O(n·log K) instead of O(n·log n)
+        let per_shard = std::mem::take(&mut self.scratch_ids);
+        let pinged = std::mem::take(&mut self.scratch_pinged);
         let mut sorted: Vec<Vec<WorkerReply>> =
             Vec::with_capacity(self.leaders.len());
         for (s, locals) in per_shard.iter().enumerate() {
@@ -324,7 +408,12 @@ impl Transport for ShardedTransport {
             let base = self.bounds[s];
             let mut replies = match &mut self.leaders[s] {
                 Leader::Sync(t) => t.execute(locals, job),
-                Leader::Threaded(t) => t.collect_jobs(&pinged[s]),
+                Leader::Threaded(t) => {
+                    let mut v = Vec::new();
+                    t.collect_jobs_into(&pinged[s], &mut v);
+                    v
+                }
+                Leader::Sharded(t) => t.collect_jobs(job),
             };
             let sum = &mut self.counters[s];
             sum.jobs += 1;
@@ -346,7 +435,7 @@ impl Transport for ShardedTransport {
         merge_sorted_pairwise(sorted, &reply_less)
     }
 
-    fn execute_forgets(&mut self, commands: &[ForgetCommand]) -> Vec<ForgetAck> {
+    fn dispatch_forgets(&mut self, commands: &[ForgetCommand]) {
         // bucket deletion traffic by owning shard, rebasing device ids
         // into each leader's local space
         let mut per_shard = take_buckets(&mut self.scratch_cmds, self.leaders.len());
@@ -358,20 +447,29 @@ impl Transport for ShardedTransport {
                 datum: c.datum,
             });
         }
-        // phase 1: dispatch to every threaded leader before awaiting
-        // anyone — deletion traffic overlaps across shards like rounds
+        // dispatch to every asynchronous leader before awaiting anyone
+        // — deletion traffic overlaps across shards like rounds
         let mut pinged = take_buckets(&mut self.scratch_pinged, self.leaders.len());
         for (s, cmds) in per_shard.iter().enumerate() {
             if cmds.is_empty() {
                 continue;
             }
-            if let Leader::Threaded(t) = &mut self.leaders[s] {
-                pinged[s] = t.dispatch_forgets(cmds);
+            match &mut self.leaders[s] {
+                Leader::Sync(_) => {}
+                Leader::Threaded(t) => pinged[s] = t.dispatch_forgets(cmds),
+                Leader::Sharded(t) => t.dispatch_forgets(cmds),
             }
         }
-        // phase 2: run sync leaders / collect threaded acks; pairwise
-        // fold of the per-shard (time, device, request)-sorted lists on
-        // the shared virtual clock — identical to concat + sort_acks
+        self.scratch_cmds = per_shard;
+        self.scratch_pinged = pinged;
+    }
+
+    fn collect_forgets(&mut self) -> Vec<ForgetAck> {
+        // run sync leaders / collect the rest; pairwise fold of the
+        // per-shard (time, device, request)-sorted lists on the shared
+        // virtual clock — identical to concat + sort_acks
+        let per_shard = std::mem::take(&mut self.scratch_cmds);
+        let pinged = std::mem::take(&mut self.scratch_pinged);
         let mut sorted: Vec<Vec<ForgetAck>> = Vec::with_capacity(self.leaders.len());
         for (s, cmds) in per_shard.iter().enumerate() {
             if cmds.is_empty() {
@@ -380,7 +478,12 @@ impl Transport for ShardedTransport {
             let base = self.bounds[s];
             let mut acks = match &mut self.leaders[s] {
                 Leader::Sync(t) => t.execute_forgets(cmds),
-                Leader::Threaded(t) => t.collect_forgets(&pinged[s]),
+                Leader::Threaded(t) => {
+                    let mut v = Vec::new();
+                    t.collect_forgets_into(&pinged[s], &mut v);
+                    v
+                }
+                Leader::Sharded(t) => t.collect_forgets(),
             };
             let sum = &mut self.counters[s];
             for a in &mut acks {
@@ -397,30 +500,42 @@ impl Transport for ShardedTransport {
         merge_sorted_pairwise(sorted, &ack_less)
     }
 
-    fn advance_clock(&mut self, tick: ClockTick, selected: &[usize]) -> Vec<IdleOutcome> {
-        // bucket the selected set by owning shard, rebased local
+    fn dispatch_clock(&mut self, tick: ClockTick, selected: &[usize]) {
+        // bucket the selected set by owning shard, rebased local; the
+        // tick itself goes to *every* asynchronous leader (all devices
+        // log the window), selected or not
         let mut per_shard = take_buckets(&mut self.scratch_ids, self.leaders.len());
         for &g in selected {
             let s = self.shard_of(g);
             per_shard[s].push(g - self.bounds[s]);
         }
-        // phase 1: tick every threaded leader before awaiting anyone —
-        // idle billing overlaps across shards like round jobs
         for (s, leader) in self.leaders.iter_mut().enumerate() {
-            if let Leader::Threaded(t) = leader {
-                t.dispatch_clock(tick, &per_shard[s]);
+            match leader {
+                Leader::Sync(_) => {}
+                Leader::Threaded(t) => t.dispatch_clock(tick, &per_shard[s]),
+                Leader::Sharded(t) => t.dispatch_clock(tick, &per_shard[s]),
             }
         }
-        // phase 2: run sync leaders / collect threaded rows, keeping
-        // per-shard idle/sleep/wake energy in the root's books; shard
-        // bases ascend and each leader reports ascending local ids, so
-        // the concatenation is already globally ascending
-        let mut merged: Vec<IdleOutcome> = Vec::with_capacity(self.n_devices());
+        self.scratch_ids = per_shard;
+    }
+
+    fn collect_clock(&mut self, tick: ClockTick) -> Vec<IdleOutcome> {
+        // run sync leaders / collect the rest, keeping per-shard
+        // idle/sleep/wake energy in the root's books; shard bases
+        // ascend and each leader reports ascending local ids, so the
+        // concatenation is already globally ascending
+        let per_shard = std::mem::take(&mut self.scratch_ids);
+        let mut merged: Vec<IdleOutcome> = Vec::new();
         for s in 0..self.leaders.len() {
             let base = self.bounds[s];
             let reports = match &mut self.leaders[s] {
                 Leader::Sync(t) => t.advance_clock(tick, &per_shard[s]),
-                Leader::Threaded(t) => t.collect_clock(),
+                Leader::Threaded(t) => {
+                    let mut v = Vec::new();
+                    t.collect_clock_into(&mut v);
+                    v
+                }
+                Leader::Sharded(t) => t.collect_clock(tick),
             };
             let sum = &mut self.counters[s];
             for r in &reports {
@@ -437,25 +552,19 @@ impl Transport for ShardedTransport {
         merged
     }
 
-    fn set_ledger(&mut self, cfg: LedgerCfg) {
+    fn dispatch_collect_ledger(&mut self) {
         for leader in &mut self.leaders {
             match leader {
-                Leader::Sync(t) => t.set_ledger(cfg),
-                Leader::Threaded(t) => t.set_ledger(cfg),
+                Leader::Sync(_) => {}
+                Leader::Threaded(t) => t.dispatch_collect_ledger(),
+                Leader::Sharded(t) => t.dispatch_collect_ledger(),
             }
         }
     }
 
-    fn collect_ledger(&mut self) -> Vec<LedgerRow> {
-        // phase 1: fire the settle-and-report at every threaded leader
-        // so shards drain their deferred windows concurrently
-        for leader in &mut self.leaders {
-            if let Leader::Threaded(t) = leader {
-                t.dispatch_collect_ledger();
-            }
-        }
-        // phase 2: walk shards in id order and rebase; each leader
-        // reports ascending local ids and shard bases ascend, so the
+    fn collect_ledger_rows(&mut self) -> Vec<LedgerRow> {
+        // walk shards in id order and rebase; each leader reports
+        // ascending local ids and shard bases ascend, so the
         // concatenation is already globally ascending — the flat
         // device-major fold order the bit-identity contract needs
         let mut merged: Vec<LedgerRow> = Vec::with_capacity(self.n_devices());
@@ -463,7 +572,12 @@ impl Transport for ShardedTransport {
             let base = self.bounds[s];
             let rows = match leader {
                 Leader::Sync(t) => t.collect_ledger(),
-                Leader::Threaded(t) => t.collect_ledger_rows(),
+                Leader::Threaded(t) => {
+                    let mut v = Vec::new();
+                    t.collect_ledger_rows_into(&mut v);
+                    v
+                }
+                Leader::Sharded(t) => t.collect_ledger_rows(),
             };
             // true up the root's per-shard power books: the rows are
             // cumulative and bit-identical in either ledger mode, so
@@ -487,6 +601,94 @@ impl Transport for ShardedTransport {
         }
         merged
     }
+}
+
+impl Transport for ShardedTransport {
+    fn probe(&mut self) -> Vec<ProbeReport> {
+        self.dispatch_probe();
+        self.collect_probe()
+    }
+
+    fn probe_into(&mut self, out: &mut Vec<ProbeReport>) {
+        out.clear();
+        self.dispatch_probe();
+        let online = self.collect_probe();
+        out.extend(online);
+    }
+
+    fn execute(&mut self, selected: &[usize], job: RoundJob) -> Vec<WorkerReply> {
+        self.dispatch_jobs(selected, job);
+        self.collect_jobs(job)
+    }
+
+    fn execute_into(
+        &mut self,
+        selected: &[usize],
+        job: RoundJob,
+        out: &mut Vec<WorkerReply>,
+    ) {
+        out.clear();
+        self.dispatch_jobs(selected, job);
+        let merged = self.collect_jobs(job);
+        out.extend(merged);
+    }
+
+    fn execute_forgets(&mut self, commands: &[ForgetCommand]) -> Vec<ForgetAck> {
+        self.dispatch_forgets(commands);
+        self.collect_forgets()
+    }
+
+    fn execute_forgets_into(
+        &mut self,
+        commands: &[ForgetCommand],
+        out: &mut Vec<ForgetAck>,
+    ) {
+        out.clear();
+        self.dispatch_forgets(commands);
+        let merged = self.collect_forgets();
+        out.extend(merged);
+    }
+
+    fn advance_clock(&mut self, tick: ClockTick, selected: &[usize]) -> Vec<IdleOutcome> {
+        self.dispatch_clock(tick, selected);
+        self.collect_clock(tick)
+    }
+
+    fn advance_clock_into(
+        &mut self,
+        tick: ClockTick,
+        selected: &[usize],
+        out: &mut Vec<IdleOutcome>,
+    ) {
+        out.clear();
+        self.dispatch_clock(tick, selected);
+        let merged = self.collect_clock(tick);
+        out.extend(merged);
+    }
+
+    fn set_ledger(&mut self, cfg: LedgerCfg) {
+        for leader in &mut self.leaders {
+            match leader {
+                Leader::Sync(t) => t.set_ledger(cfg),
+                Leader::Threaded(t) => t.set_ledger(cfg),
+                Leader::Sharded(t) => t.set_ledger(cfg),
+            }
+        }
+    }
+
+    fn collect_ledger(&mut self) -> Vec<LedgerRow> {
+        // phase 1 fires the settle-and-report at every asynchronous
+        // leader so shards drain their deferred windows concurrently
+        self.dispatch_collect_ledger();
+        self.collect_ledger_rows()
+    }
+
+    fn collect_ledger_into(&mut self, out: &mut Vec<LedgerRow>) {
+        out.clear();
+        self.dispatch_collect_ledger();
+        let merged = self.collect_ledger_rows();
+        out.extend(merged);
+    }
 
     fn n_devices(&self) -> usize {
         *self.bounds.last().unwrap()
@@ -507,14 +709,23 @@ impl Transport for ShardedTransport {
     }
 
     fn describe(&self) -> String {
-        format!("sharded×{}({})", self.leaders.len(), self.inner.name())
+        match self.leaders.first() {
+            Some(Leader::Sharded(t)) => {
+                format!("sharded×{}({})", self.leaders.len(), t.describe())
+            }
+            _ => format!("sharded×{}({})", self.leaders.len(), self.inner.name()),
+        }
     }
 
     fn shards(&self) -> usize {
-        self.leaders.len()
+        // leaf shard count: a flat fabric reports K (each leader counts
+        // 1), a two-level fabric K₁·K₂
+        self.leaders.iter().map(|l| l.as_transport().shards()).sum()
     }
 
     fn shard_summaries(&self) -> Vec<ShardSummary> {
+        // per top-level leader: under two-level sharding each summary
+        // aggregates a whole sub-fabric's contiguous device range
         self.counters
             .iter()
             .enumerate()
@@ -797,6 +1008,98 @@ mod tests {
                 assert_eq!(a.awake_equiv_uah.to_bits(), b.awake_equiv_uah.to_bits());
             }
         }
+    }
+
+    #[test]
+    fn two_level_matches_flat_to_the_bit() {
+        use crate::power::FleetMode;
+        let mut flat = SyncTransport::new(fleet(9));
+        let mut two =
+            ShardedTransport::two_level(FleetSeed::Sims(fleet(9)), 2, 2, TransportKind::Sync);
+        assert_eq!(two.describe(), "sharded×2(sharded×2(sync))");
+        assert_eq!(two.shards(), 4, "leaf shard count");
+        assert_eq!(two.n_devices(), 9);
+        let selected = [0usize, 2, 4, 6, 8];
+        let tick = ClockTick { dt_s: 90.0, mode: FleetMode::DealSleep };
+        for round in 1..=3u64 {
+            assert_eq!(flat.probe(), two.probe(), "round {round} probe");
+            let want = flat.execute(&selected, job(round));
+            let got = two.execute(&selected, job(round));
+            assert_eq!(want.len(), got.len());
+            for (ra, rb) in want.iter().zip(&got) {
+                assert_eq!(ra.device, rb.device, "round {round} merge order");
+                assert_eq!(ra.outcome.time_s.to_bits(), rb.outcome.time_s.to_bits());
+                assert_eq!(
+                    ra.outcome.energy_uah.to_bits(),
+                    rb.outcome.energy_uah.to_bits()
+                );
+            }
+            assert_eq!(
+                flat.advance_clock(tick, &selected),
+                two.advance_clock(tick, &selected),
+                "round {round} ledger"
+            );
+        }
+        // deletion traffic rebases through both levels
+        use crate::coordinator::unlearn::ForgetCommand;
+        let commands = [
+            ForgetCommand { request: 0, device: 8, datum: 3 },
+            ForgetCommand { request: 1, device: 0, datum: 4 },
+        ];
+        assert_eq!(flat.execute_forgets(&commands), two.execute_forgets(&commands));
+        // cumulative rows bit-identical through the nested concatenation
+        let want = flat.collect_ledger();
+        let got = two.collect_ledger();
+        assert_eq!(want.len(), got.len());
+        for (a, b) in want.iter().zip(&got) {
+            assert_eq!(a.device, b.device);
+            assert_eq!(a.sleep_uah.to_bits(), b.sleep_uah.to_bits());
+            assert_eq!(a.wake_uah.to_bits(), b.wake_uah.to_bits());
+        }
+    }
+
+    #[test]
+    fn two_level_threaded_leaves_match_sync_leaves() {
+        let mut a =
+            ShardedTransport::two_level(FleetSeed::Sims(fleet(8)), 2, 2, TransportKind::Sync);
+        let mut b = ShardedTransport::two_level(
+            FleetSeed::Sims(fleet(8)),
+            2,
+            2,
+            TransportKind::Threaded,
+        );
+        assert_eq!(b.describe(), "sharded×2(sharded×2(threaded))");
+        for round in 1..=3u64 {
+            let x = a.execute(&[0, 3, 6, 7], job(round));
+            let y = b.execute(&[0, 3, 6, 7], job(round));
+            assert_eq!(x.len(), y.len());
+            for (ra, rb) in x.iter().zip(&y) {
+                assert_eq!(ra.device, rb.device);
+                assert_eq!(ra.outcome.time_s.to_bits(), rb.outcome.time_s.to_bits());
+            }
+            assert_eq!(a.probe(), b.probe());
+        }
+    }
+
+    #[test]
+    fn into_variants_reuse_dirty_buffers() {
+        // the `_into` surface must clear stale contents and reproduce
+        // the by-value results exactly
+        let mut t = ShardedTransport::new(fleet(6), 2, TransportKind::Sync);
+        let mut t2 = ShardedTransport::new(fleet(6), 2, TransportKind::Sync);
+        let selected = [0usize, 2, 5];
+        let mut replies = t.execute(&[1], job(0)); // stale contents
+        t2.execute(&[1], job(0));
+        let want = t.execute(&selected, job(1));
+        t2.execute_into(&selected, job(1), &mut replies);
+        assert_eq!(want.len(), replies.len());
+        for (ra, rb) in want.iter().zip(&replies) {
+            assert_eq!(ra.device, rb.device);
+            assert_eq!(ra.outcome.time_s.to_bits(), rb.outcome.time_s.to_bits());
+        }
+        let mut probes = Vec::new();
+        t2.probe_into(&mut probes);
+        assert_eq!(t.probe(), probes);
     }
 
     #[test]

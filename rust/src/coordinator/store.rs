@@ -1,0 +1,824 @@
+//! Fleet stores: where a transport's devices actually live.
+//!
+//! PR 6 proved the columnar [`ParkLedger`] carries the fleet power
+//! ledger to 10⁵–10⁷ devices, but the full engine still stepped a
+//! `Vec<DeviceSim>` — kilobytes per device, built for 10¹–10³. This
+//! module closes that gap with a [`FleetStore`]: the slice of the fleet
+//! a transport (or one worker thread, or one shard leader) owns, in one
+//! of two representations.
+//!
+//! - [`SimStore`] — the classic dense fleet: every device is a full
+//!   [`DeviceSim`]. This is the reference path; its probe / execute /
+//!   clock bodies are the exact code the transports ran before the
+//!   store abstraction existed, so the golden and bit-identity suites
+//!   pin it by construction.
+//! - [`ColumnarStore`] — the million-device fleet: every device starts
+//!   as ~250 B of [`ParkLedger`] columns plus an availability column
+//!   set (RNG stream, online/drained latches, availability EWMA). Only
+//!   devices that *train or forget* — S(k), SLO-woken, deletion targets
+//!   — are **hydrated** into real `DeviceSim`s, built on demand by the
+//!   fleet's [`DeviceFactory`] and transplanted bitwise from their
+//!   columns ([`DeviceSim::adopt_parked`]). A hydrated device stays
+//!   resident and behaves exactly like a lazy `SimStore` device from
+//!   then on; everyone else is billed by the lazy fast-forward path.
+//!   A round costs O(selected + woken + hydrated) device work plus the
+//!   O(n) availability sweep that is inherent to probing.
+//!
+//! # Hydration rules (the bit-identity argument)
+//!
+//! Construction order is what makes lazy hydration exact:
+//! [`DeviceSim::new`] and `prefill` draw **no RNG**, so a device built
+//! at round k is bit-identical to one built at round 0. The
+//! availability stream lives in the store's own RNG column (seeded by
+//! [`device::device_rng`] with the fleet's per-device seed), and the
+//! charge plan's RNG travels inside the evicted [`ParkLedger`] columns
+//! — so on hydration the factory-fresh sim plus the transplanted
+//! columns *is* the device the eager path would hold, to the bit.
+//!
+//! Which paths force a settle mirrors the lazy `DeviceSim` ledger
+//! exactly: training/forgetting settles first (`run_round` reads the
+//! wake latch and drains the battery); a probe settles when the
+//! availability bound check ([`ParkLedger::needs_availability_settle`],
+//! an expression-for-expression mirror of
+//! [`DeviceSim::needs_availability_settle`]) says the pending windows
+//! could flip the outcome, or when a context-reading selector needs
+//! fresh telemetry; a stats read settles everyone. Because the mirror
+//! is FP-exact, a columnar fleet settles on *precisely the same rounds*
+//! as a `DeviceSim` fleet — which is what keeps the availability RNG
+//! streams aligned fleet-wide.
+//!
+//! The columnar store is **lazy-only**: its whole point is deferring
+//! parked devices, and the eager reference path already exists in
+//! `SimStore` (`FleetConfig { fleet: Columnar, ledger: Eager }` is
+//! rejected at build time).
+
+use std::sync::Arc;
+
+use super::device::{
+    self, DeviceSim, IdleOutcome, LedgerRow, AVAIL_EWMA_W, P_DROP, P_JOIN,
+};
+use super::ledger::ParkLedger;
+use super::transport::{
+    settle_device, ClockTick, LedgerCfg, LedgerMode, ProbeReport, RoundJob,
+    WindowLog, WorkerReply,
+};
+use super::unlearn::{ForgetAck, ForgetCommand};
+use super::workload;
+use crate::power::battery::LOW_WATER_FRAC;
+use crate::power::governor::Policy;
+use crate::power::state::ChargePlan;
+use crate::power::{DeviceProfile, DeviceSnapshot, Governor};
+use crate::util::rng::Rng;
+
+/// Which fleet store a federation is built over
+/// (`deal run --fleet sims|columnar`).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash, Default)]
+pub enum FleetStoreKind {
+    /// Dense `Vec<DeviceSim>` — the reference path and the default.
+    #[default]
+    Sims,
+    /// ParkLedger columns + on-demand hydration — the 10⁶-device path
+    /// (requires the lazy ledger).
+    Columnar,
+}
+
+impl FleetStoreKind {
+    pub fn name(&self) -> &'static str {
+        match self {
+            FleetStoreKind::Sims => "sims",
+            FleetStoreKind::Columnar => "columnar",
+        }
+    }
+
+    pub fn from_name(s: &str) -> Option<FleetStoreKind> {
+        match s.to_ascii_lowercase().as_str() {
+            "sims" | "dense" => Some(FleetStoreKind::Sims),
+            "columnar" | "ledger" => Some(FleetStoreKind::Columnar),
+            _ => None,
+        }
+    }
+}
+
+/// Builds any device of the fleet on demand — the columnar store's
+/// hydrator. The closure reproduces exactly one iteration of the
+/// fleet builder's eager construction loop (model, prefill, guard,
+/// charging), so `build(i)` at any later round equals eager device `i`
+/// at round 0 bit-for-bit (construction draws no RNG). Cheaply
+/// clonable: the dataset and shard index tables ride behind `Arc`s.
+#[derive(Clone)]
+pub struct DeviceFactory {
+    build: Arc<dyn Fn(usize) -> DeviceSim + Send + Sync>,
+    /// The fleet's profile rotation (`profiles[i % len]`).
+    profiles: Arc<Vec<DeviceProfile>>,
+    policy: Policy,
+    /// Raw per-device shard sizes (pre-holdout-split row counts).
+    shard_items: Arc<Vec<usize>>,
+    charging: bool,
+    /// The fleet config seed the per-device seed formulas derive from.
+    seed: u64,
+}
+
+impl DeviceFactory {
+    pub(crate) fn new(
+        build: Arc<dyn Fn(usize) -> DeviceSim + Send + Sync>,
+        profiles: Arc<Vec<DeviceProfile>>,
+        policy: Policy,
+        shard_items: Arc<Vec<usize>>,
+        charging: bool,
+        seed: u64,
+    ) -> Self {
+        DeviceFactory { build, profiles, policy, shard_items, charging, seed }
+    }
+
+    /// Fleet size.
+    pub fn n(&self) -> usize {
+        self.shard_items.len()
+    }
+
+    /// Build global device `i` exactly as the eager fleet builder would.
+    pub fn build(&self, i: usize) -> DeviceSim {
+        (self.build)(i)
+    }
+
+    pub(crate) fn profile(&self, i: usize) -> &DeviceProfile {
+        &self.profiles[i % self.profiles.len()]
+    }
+
+    /// Training items device `i` holds — the holdout split applied to
+    /// its raw shard size, without materialising the workload.
+    pub(crate) fn shard_len(&self, i: usize) -> usize {
+        workload::train_len(self.shard_items[i])
+    }
+
+    /// The per-device seed `DeviceSim::new` receives — must match the
+    /// fleet builder's formula verbatim.
+    fn device_seed(&self, i: usize) -> u64 {
+        self.seed.wrapping_mul(0x9E3779B9) + i as u64
+    }
+
+    /// The charging-plan seed — must match `fleet::build_devices`.
+    fn charge_seed(&self, i: usize) -> u64 {
+        self.seed.wrapping_mul(0xD1B5_4A32_D192_ED03).wrapping_add(i as u64)
+            ^ 0xC4A6_1ED6
+    }
+}
+
+/// The devices a transport is stood up over: either a pre-built dense
+/// fleet or a factory plus the global id range to cover. Threaded
+/// fabrics and shard roots [`FleetSeed::split`] this along partition
+/// bounds, so each worker/leader owns a contiguous slice in either
+/// representation.
+pub enum FleetSeed {
+    Sims(Vec<DeviceSim>),
+    Columnar {
+        factory: DeviceFactory,
+        /// Global device ids `[origin, origin + len)` this seed covers.
+        origin: usize,
+        len: usize,
+    },
+}
+
+impl FleetSeed {
+    /// Cover the whole fleet of a factory.
+    pub fn columnar(factory: DeviceFactory) -> Self {
+        let len = factory.n();
+        FleetSeed::Columnar { factory, origin: 0, len }
+    }
+
+    pub fn n(&self) -> usize {
+        match self {
+            FleetSeed::Sims(d) => d.len(),
+            FleetSeed::Columnar { len, .. } => *len,
+        }
+    }
+
+    /// Split along contiguous `bounds` (as from
+    /// [`super::transport::partition_bounds`]): chunk `i` covers local
+    /// ids `[bounds[i], bounds[i+1])`.
+    pub(crate) fn split(self, bounds: &[usize]) -> Vec<FleetSeed> {
+        match self {
+            FleetSeed::Sims(devices) => {
+                super::transport::partition_chunks(devices, bounds)
+                    .into_iter()
+                    .map(FleetSeed::Sims)
+                    .collect()
+            }
+            FleetSeed::Columnar { factory, origin, .. } => bounds
+                .windows(2)
+                .map(|w| FleetSeed::Columnar {
+                    factory: factory.clone(),
+                    origin: origin + w[0],
+                    len: w[1] - w[0],
+                })
+                .collect(),
+        }
+    }
+
+    /// Per-device metadata the root of a threaded fabric keeps after
+    /// the devices move into their worker threads.
+    pub(crate) fn meta(&self) -> FleetMeta {
+        match self {
+            FleetSeed::Sims(devices) => FleetMeta::PerDevice {
+                profiles: devices.iter().map(|d| d.profile().clone()).collect(),
+                shard_lens: devices.iter().map(DeviceSim::shard_len).collect(),
+                n: devices.len(),
+            },
+            FleetSeed::Columnar { factory, origin, len } => FleetMeta::Factory {
+                factory: factory.clone(),
+                origin: *origin,
+                n: *len,
+            },
+        }
+    }
+
+    /// Stand the store up. `base` is the *emission* offset: every id
+    /// the store reports (`WorkerReply::device`, probe ids, ledger
+    /// rows) is `base + local`, the store's position inside its own
+    /// transport's id space (a worker thread's slice start; 0 for a
+    /// flat or leader-local transport).
+    pub(crate) fn into_store(self, base: usize) -> FleetStore {
+        match self {
+            FleetSeed::Sims(devices) => {
+                FleetStore::Sims(SimStore::new(base, devices))
+            }
+            FleetSeed::Columnar { factory, origin, len } => {
+                FleetStore::Columnar(ColumnarStore::new(base, factory, origin, len))
+            }
+        }
+    }
+}
+
+/// Root-side metadata for device lookups ([`super::Transport::profile`],
+/// `shard_len`) once the devices themselves live elsewhere. The factory
+/// variant answers from the profile rotation and the shard-size table —
+/// no 10⁶-entry profile clone.
+pub(crate) enum FleetMeta {
+    PerDevice {
+        profiles: Vec<DeviceProfile>,
+        shard_lens: Vec<usize>,
+        n: usize,
+    },
+    Factory {
+        factory: DeviceFactory,
+        origin: usize,
+        n: usize,
+    },
+}
+
+impl FleetMeta {
+    pub(crate) fn n(&self) -> usize {
+        match self {
+            FleetMeta::PerDevice { n, .. } | FleetMeta::Factory { n, .. } => *n,
+        }
+    }
+
+    pub(crate) fn profile(&self, i: usize) -> &DeviceProfile {
+        match self {
+            FleetMeta::PerDevice { profiles, .. } => &profiles[i],
+            FleetMeta::Factory { factory, origin, .. } => factory.profile(origin + i),
+        }
+    }
+
+    pub(crate) fn shard_len(&self, i: usize) -> usize {
+        match self {
+            FleetMeta::PerDevice { shard_lens, .. } => shard_lens[i],
+            FleetMeta::Factory { factory, origin, .. } => factory.shard_len(origin + i),
+        }
+    }
+}
+
+/// One transport's (or worker's, or leader's) slice of the fleet.
+/// Methods that take device ids take them in the *transport's* id space
+/// (`base + local`); appended outputs carry the same space.
+pub enum FleetStore {
+    Sims(SimStore),
+    Columnar(ColumnarStore),
+}
+
+impl FleetStore {
+    pub fn n(&self) -> usize {
+        match self {
+            FleetStore::Sims(s) => s.devices.len(),
+            FleetStore::Columnar(s) => s.park.n_devices(),
+        }
+    }
+
+    pub fn set_ledger(&mut self, cfg: LedgerCfg) {
+        match self {
+            FleetStore::Sims(s) => s.ledger = cfg,
+            FleetStore::Columnar(s) => {
+                assert_eq!(
+                    cfg.mode,
+                    LedgerMode::Lazy,
+                    "the columnar fleet store is lazy-only"
+                );
+                s.fresh_telemetry = cfg.fresh_telemetry;
+            }
+        }
+    }
+
+    /// Availability sweep: appends the online devices ascending by id.
+    pub fn probe_into(&mut self, out: &mut Vec<ProbeReport>) {
+        match self {
+            FleetStore::Sims(s) => s.probe_into(out),
+            FleetStore::Columnar(s) => s.probe_into(out),
+        }
+    }
+
+    /// Run a round on `members` (transport id space), appending replies
+    /// in dispatch order — the caller sorts by (time, id).
+    pub fn execute_into(
+        &mut self,
+        members: &[usize],
+        job: RoundJob,
+        out: &mut Vec<WorkerReply>,
+    ) {
+        match self {
+            FleetStore::Sims(s) => s.execute_into(members, job, out),
+            FleetStore::Columnar(s) => s.execute_into(members, job, out),
+        }
+    }
+
+    /// Resolve targeted FORGETs, appending acks in command order — the
+    /// caller sorts on the virtual clock.
+    pub fn execute_forgets_into(
+        &mut self,
+        commands: &[ForgetCommand],
+        out: &mut Vec<ForgetAck>,
+    ) {
+        match self {
+            FleetStore::Sims(s) => s.execute_forgets_into(commands, out),
+            FleetStore::Columnar(s) => s.execute_forgets_into(commands, out),
+        }
+    }
+
+    /// Advance the fleet clock, appending billed rows ascending by id
+    /// (the whole slice when eager, the stepped set when lazy).
+    pub fn advance_clock_into(
+        &mut self,
+        tick: ClockTick,
+        selected: &[usize],
+        out: &mut Vec<IdleOutcome>,
+    ) {
+        match self {
+            FleetStore::Sims(s) => s.advance_clock_into(tick, selected, out),
+            FleetStore::Columnar(s) => s.advance_clock_into(tick, selected, out),
+        }
+    }
+
+    /// Settle everything and append cumulative rows ascending by id.
+    pub fn collect_ledger_into(&mut self, out: &mut Vec<LedgerRow>) {
+        match self {
+            FleetStore::Sims(s) => s.collect_ledger_into(out),
+            FleetStore::Columnar(s) => s.collect_ledger_into(out),
+        }
+    }
+
+    pub fn profile(&self, local: usize) -> &DeviceProfile {
+        match self {
+            FleetStore::Sims(s) => s.devices[local].profile(),
+            FleetStore::Columnar(s) => s.factory.profile(s.origin + local),
+        }
+    }
+
+    pub fn shard_len(&self, local: usize) -> usize {
+        match self {
+            FleetStore::Sims(s) => s.devices[local].shard_len(),
+            FleetStore::Columnar(s) => match &s.sims[local] {
+                Some(d) => d.shard_len(),
+                None => s.factory.shard_len(s.origin + local),
+            },
+        }
+    }
+
+    /// The dense device slice (tests and diagnostics). Panics for a
+    /// columnar store, whose parked devices have no sims to expose.
+    pub fn devices(&self) -> &[DeviceSim] {
+        match self {
+            FleetStore::Sims(s) => &s.devices,
+            FleetStore::Columnar(_) => {
+                panic!("columnar fleet store holds no dense device slice")
+            }
+        }
+    }
+}
+
+// ---------------------------------------------------------------------
+// SimStore
+// ---------------------------------------------------------------------
+
+/// Dense fleet slice: every device a full [`DeviceSim`]. The bodies
+/// below are the pre-store transport code verbatim (modulo `base`
+/// rebasing, which the worker loop used to do inline), preserving every
+/// operation order the bit-identity suites pin.
+pub struct SimStore {
+    base: usize,
+    devices: Vec<DeviceSim>,
+    ledger: LedgerCfg,
+    /// Deferred clock ticks (lazy ledger; stays empty when eager).
+    log: WindowLog,
+    /// Local indices trained/forgotten since the last clock tick — they
+    /// carry busy time and a possible wake latch, so the next clock
+    /// advance must step them eagerly.
+    touched: Vec<usize>,
+    /// Reusable advance-clock scratch (stepped-id list, sorted
+    /// selection, eager membership mask).
+    scratch_ids: Vec<usize>,
+    scratch_sel: Vec<usize>,
+    scratch_mask: Vec<bool>,
+}
+
+impl SimStore {
+    pub fn new(base: usize, devices: Vec<DeviceSim>) -> Self {
+        SimStore {
+            base,
+            devices,
+            ledger: LedgerCfg::default(),
+            log: WindowLog::new(),
+            touched: Vec::new(),
+            scratch_ids: Vec::new(),
+            scratch_sel: Vec::new(),
+            scratch_mask: Vec::new(),
+        }
+    }
+
+    fn lazy(&self) -> bool {
+        self.ledger.mode == LedgerMode::Lazy
+    }
+
+    fn probe_into(&mut self, out: &mut Vec<ProbeReport>) {
+        let base = self.base;
+        if self.lazy() {
+            // O(n) RNG stepping is inherent to the availability chain,
+            // but the *billing* stays O(1) per device: settle only when
+            // the pending windows could flip the availability outcome
+            // (or when a context-reading selector needs fresh telemetry)
+            let log = &self.log;
+            let fresh = self.ledger.fresh_telemetry;
+            out.extend(self.devices.iter_mut().enumerate().filter_map(|(j, d)| {
+                if fresh || d.needs_availability_settle(log.pending(d.window_ptr())) {
+                    settle_device(d, log);
+                }
+                d.step_availability().then(|| (base + j, d.snapshot()))
+            }));
+            return;
+        }
+        out.extend(
+            self.devices
+                .iter_mut()
+                .enumerate()
+                .filter_map(|(j, d)| d.step_availability().then(|| (base + j, d.snapshot()))),
+        );
+    }
+
+    fn execute_into(&mut self, members: &[usize], job: RoundJob, out: &mut Vec<WorkerReply>) {
+        if self.lazy() {
+            // settle before training: run_round reads power_state (the
+            // wake latch) and drains the battery, so stale windows must
+            // be replayed first — restoring the eager call order
+            for &i in members {
+                let j = i - self.base;
+                settle_device(&mut self.devices[j], &self.log);
+                self.touched.push(j);
+            }
+        }
+        out.extend(members.iter().map(|&i| {
+            let d = &mut self.devices[i - self.base];
+            let outcome = d.run_round(job.scheme, job.arrivals, job.theta);
+            WorkerReply { device: i, outcome, snapshot: d.snapshot() }
+        }));
+    }
+
+    fn execute_forgets_into(&mut self, commands: &[ForgetCommand], out: &mut Vec<ForgetAck>) {
+        out.extend(commands.iter().map(|c| {
+            let j = c.device - self.base;
+            let d = &mut self.devices[j];
+            if self.ledger.mode == LedgerMode::Lazy {
+                settle_device(d, &self.log);
+                self.touched.push(j);
+            }
+            let mut a = d.forget_datum(c.request, c.datum);
+            // acks ride in the *transport's* id space (like
+            // WorkerReply.device), so a shard root can rebase them
+            a.device = c.device;
+            a
+        }));
+    }
+
+    fn advance_clock_into(
+        &mut self,
+        tick: ClockTick,
+        selected: &[usize],
+        out: &mut Vec<IdleOutcome>,
+    ) {
+        let base = self.base;
+        if self.lazy() {
+            // step only the devices that trained/forgot this round —
+            // everyone else defers by a single shared log push, with
+            // zero per-device work. The id lists live in reusable
+            // scratch: taken out for the borrow, returned after.
+            let mut stepped = std::mem::take(&mut self.scratch_ids);
+            stepped.clear();
+            stepped.extend(selected.iter().map(|&g| g - base));
+            stepped.extend(self.touched.drain(..));
+            stepped.sort_unstable();
+            stepped.dedup();
+            let mut sel = std::mem::take(&mut self.scratch_sel);
+            sel.clear();
+            sel.extend(selected.iter().map(|&g| g - base));
+            sel.sort_unstable();
+            for &j in &stepped {
+                let d = &mut self.devices[j];
+                settle_device(d, &self.log);
+                let mut r =
+                    d.step_idle(tick.dt_s, tick.mode, sel.binary_search(&j).is_ok());
+                r.device = base + j; // transport id space
+                // the current tick is billed directly; point past it
+                d.set_window_ptr(self.log.len() + 1);
+                out.push(r);
+            }
+            self.log.push(tick);
+            self.scratch_ids = stepped;
+            self.scratch_sel = sel;
+            return;
+        }
+        let mut is_selected = std::mem::take(&mut self.scratch_mask);
+        is_selected.clear();
+        is_selected.resize(self.devices.len(), false);
+        for &g in selected {
+            is_selected[g - base] = true;
+        }
+        out.extend(self.devices.iter_mut().enumerate().map(|(j, d)| {
+            let mut r = d.step_idle(tick.dt_s, tick.mode, is_selected[j]);
+            r.device = base + j; // transport id space, like WorkerReply
+            r
+        }));
+        self.scratch_mask = is_selected;
+    }
+
+    fn collect_ledger_into(&mut self, out: &mut Vec<LedgerRow>) {
+        let base = self.base;
+        let log = &self.log;
+        out.extend(self.devices.iter_mut().enumerate().map(|(j, d)| {
+            settle_device(d, log);
+            let mut r = d.ledger_row();
+            r.device = base + j; // transport id space
+            r
+        }));
+    }
+}
+
+// ---------------------------------------------------------------------
+// ColumnarStore
+// ---------------------------------------------------------------------
+
+/// Snapshot statics of one profile-rotation slot: a parked device never
+/// trains, so its governor sits at the policy's initial ladder step and
+/// its cache/swap telemetry is identically zero — precomputed once per
+/// distinct profile, not per device.
+struct SlotStatics {
+    ladder_step: usize,
+    ladder_steps: usize,
+    cores: u32,
+    peak_gflops: f64,
+}
+
+/// Columnar fleet slice: [`ParkLedger`] columns + availability columns
+/// for everyone, real [`DeviceSim`]s only for devices that have trained
+/// or forgotten (hydrated on demand, resident from then on).
+pub struct ColumnarStore {
+    base: usize,
+    /// Global device id of local 0 — device *identity* (seeds, profile
+    /// rotation, shard sizes), as opposed to `base`, which is id
+    /// *emission* within the owning transport.
+    origin: usize,
+    factory: DeviceFactory,
+    /// Power/ledger columns for every local device (stale for hydrated
+    /// slots, whose truth moved into `sims`).
+    park: ParkLedger,
+    /// Availability columns (the parked mirror of
+    /// `DeviceSim::step_availability`'s state).
+    rng: Vec<Rng>,
+    online: Vec<bool>,
+    drained: Vec<bool>,
+    avail_ewma: Vec<f64>,
+    /// Hydrated devices (`None` = still parked in the columns).
+    sims: Vec<Option<Box<DeviceSim>>>,
+    /// Hydrated local indices trained/forgotten since the last tick.
+    touched: Vec<usize>,
+    fresh_telemetry: bool,
+    /// Per profile-rotation slot snapshot statics.
+    slots: Vec<SlotStatics>,
+    scratch_ids: Vec<usize>,
+    scratch_sel: Vec<usize>,
+}
+
+impl ColumnarStore {
+    fn new(base: usize, factory: DeviceFactory, origin: usize, len: usize) -> Self {
+        // rotate the fleet's profile cycle so local `i % P` reproduces
+        // the global assignment `profiles[(origin + i) % P]`
+        let p = factory.profiles.len();
+        let rotated: Vec<DeviceProfile> =
+            (0..p).map(|k| factory.profiles[(origin + k) % p].clone()).collect();
+        let slots: Vec<SlotStatics> = rotated
+            .iter()
+            .map(|prof| SlotStatics {
+                ladder_step: Governor::new(prof, factory.policy).step(),
+                ladder_steps: prof.n_freq_steps(),
+                cores: prof.cores,
+                peak_gflops: prof.max_freq_ghz() * prof.cores as f64,
+            })
+            .collect();
+        let mut park = ParkLedger::new(&rotated, len, LedgerMode::Lazy);
+        let mut rng = Vec::with_capacity(len);
+        for i in 0..len {
+            let g = origin + i;
+            rng.push(device::device_rng(g, factory.device_seed(g)));
+            if factory.charging {
+                park.enable_charging(i, factory.charge_seed(g));
+            }
+        }
+        ColumnarStore {
+            base,
+            origin,
+            factory,
+            park,
+            rng,
+            online: vec![true; len],
+            drained: vec![false; len],
+            avail_ewma: vec![1.0; len],
+            sims: (0..len).map(|_| None).collect(),
+            touched: Vec::new(),
+            fresh_telemetry: false,
+            slots,
+            scratch_ids: Vec::new(),
+            scratch_sel: Vec::new(),
+        }
+    }
+
+    /// Telemetry snapshot of a parked device — field-for-field what
+    /// `DeviceSim::snapshot` would report for a device that has never
+    /// trained (governor at its initial step, cache empty, swap EWMA
+    /// zero), with the battery/availability fields read from the
+    /// columns.
+    fn parked_snapshot(&self, i: usize) -> DeviceSnapshot {
+        let slot = &self.slots[i % self.slots.len()];
+        DeviceSnapshot {
+            battery_frac: self.park.level_uah(i) / self.park.capacity_uah(i),
+            ladder_step: slot.ladder_step,
+            ladder_steps: slot.ladder_steps,
+            cores: slot.cores,
+            peak_gflops: slot.peak_gflops,
+            cache_resident_frac: 0.0,
+            swap_ewma: 0.0,
+            avail_ewma: self.avail_ewma[i],
+            plugged: self.park.plan(i).is_some_and(ChargePlan::plugged),
+            state: self.park.power_state(i),
+        }
+    }
+
+    /// Hydrate local device `i`: build the sim from the factory
+    /// (bit-identical to an eager build — no RNG in construction),
+    /// evict its settled power columns, and transplant them plus the
+    /// availability columns bitwise. Idempotent; hydrated devices stay
+    /// resident and the columns left behind are never read again.
+    fn hydrate(&mut self, i: usize) {
+        if self.sims[i].is_some() {
+            return;
+        }
+        let mut d = self.factory.build(self.origin + i);
+        let parked = self.park.evict(i);
+        d.adopt_parked(
+            parked,
+            self.rng[i].clone(),
+            self.online[i],
+            self.drained[i],
+            self.avail_ewma[i],
+        );
+        self.sims[i] = Some(Box::new(d));
+    }
+
+    fn probe_into(&mut self, out: &mut Vec<ProbeReport>) {
+        let fresh = self.fresh_telemetry;
+        for i in 0..self.park.n_devices() {
+            if let Some(d) = self.sims[i].as_deref_mut() {
+                // hydrated: the exact lazy DeviceSim path
+                if fresh
+                    || d.needs_availability_settle(self.park.log().pending(d.window_ptr()))
+                {
+                    settle_device(d, self.park.log());
+                }
+                if d.step_availability() {
+                    out.push((self.base + i, d.snapshot()));
+                }
+                continue;
+            }
+            // parked: columnar mirror of step_availability. The settle
+            // decision must match the sim's exactly (same bound, same
+            // pending windows) or the RNG streams diverge — that is
+            // what ParkLedger::needs_availability_settle guarantees.
+            if fresh
+                || self.park.needs_availability_settle(
+                    i,
+                    self.park.log().pending(self.park.window_ptr(i)),
+                    self.drained[i],
+                )
+            {
+                self.park.settle(i);
+            }
+            let frac = self.park.level_uah(i) / self.park.capacity_uah(i);
+            if !(frac > LOW_WATER_FRAC) {
+                self.drained[i] = true;
+            } else if self.drained[i] && frac > 3.0 * LOW_WATER_FRAC {
+                self.drained[i] = false;
+            }
+            if self.drained[i] {
+                self.online[i] = false;
+            } else {
+                self.online[i] = if self.online[i] {
+                    !self.rng[i].chance(P_DROP)
+                } else {
+                    self.rng[i].chance(P_JOIN)
+                };
+            }
+            let observed = if self.online[i] { 1.0 } else { 0.0 };
+            self.avail_ewma[i] += AVAIL_EWMA_W * (observed - self.avail_ewma[i]);
+            if self.online[i] {
+                out.push((self.base + i, self.parked_snapshot(i)));
+            }
+        }
+    }
+
+    fn execute_into(&mut self, members: &[usize], job: RoundJob, out: &mut Vec<WorkerReply>) {
+        for &g in members {
+            let i = g - self.base;
+            self.hydrate(i);
+            let d = self.sims[i].as_deref_mut().expect("just hydrated");
+            settle_device(d, self.park.log());
+            self.touched.push(i);
+            let outcome = d.run_round(job.scheme, job.arrivals, job.theta);
+            out.push(WorkerReply { device: g, outcome, snapshot: d.snapshot() });
+        }
+    }
+
+    fn execute_forgets_into(&mut self, commands: &[ForgetCommand], out: &mut Vec<ForgetAck>) {
+        for c in commands {
+            let i = c.device - self.base;
+            self.hydrate(i);
+            let d = self.sims[i].as_deref_mut().expect("just hydrated");
+            settle_device(d, self.park.log());
+            self.touched.push(i);
+            let mut a = d.forget_datum(c.request, c.datum);
+            a.device = c.device; // transport id space, as replies
+            out.push(a);
+        }
+    }
+
+    fn advance_clock_into(
+        &mut self,
+        tick: ClockTick,
+        selected: &[usize],
+        out: &mut Vec<IdleOutcome>,
+    ) {
+        let base = self.base;
+        let mut stepped = std::mem::take(&mut self.scratch_ids);
+        stepped.clear();
+        stepped.extend(selected.iter().map(|&g| g - base));
+        stepped.extend(self.touched.drain(..));
+        stepped.sort_unstable();
+        stepped.dedup();
+        let mut sel = std::mem::take(&mut self.scratch_sel);
+        sel.clear();
+        sel.extend(selected.iter().map(|&g| g - base));
+        sel.sort_unstable();
+        for &j in &stepped {
+            // anything stepped this round trained or forgot, which
+            // hydrates — parked devices defer behind the log push
+            let d = self.sims[j].as_deref_mut().expect("stepped device is hydrated");
+            settle_device(d, self.park.log());
+            let mut r = d.step_idle(tick.dt_s, tick.mode, sel.binary_search(&j).is_ok());
+            r.device = base + j;
+            d.set_window_ptr(self.park.log().len() + 1);
+            out.push(r);
+        }
+        // park the tick for everyone else: one shared log push (the
+        // ledger's own lazy mode with an empty selected set)
+        self.park.advance_clock(tick, &[]);
+        self.scratch_ids = stepped;
+        self.scratch_sel = sel;
+    }
+
+    fn collect_ledger_into(&mut self, out: &mut Vec<LedgerRow>) {
+        for i in 0..self.park.n_devices() {
+            let mut r = if let Some(d) = self.sims[i].as_deref_mut() {
+                settle_device(d, self.park.log());
+                d.ledger_row()
+            } else {
+                self.park.settle(i);
+                self.park.rows()[i]
+            };
+            r.device = self.base + i;
+            out.push(r);
+        }
+    }
+}

@@ -61,6 +61,7 @@ use std::thread::JoinHandle;
 
 use super::device::{DeviceSim, IdleOutcome, LedgerRow, LocalOutcome};
 use super::scheme::Scheme;
+use super::store::{FleetMeta, FleetSeed, FleetStore};
 use super::unlearn::{sort_acks, ForgetAck, ForgetCommand};
 use crate::power::{DeviceProfile, DeviceSnapshot, FleetMode};
 
@@ -345,6 +346,50 @@ pub trait Transport {
         Vec::new()
     }
 
+    /// [`Self::probe`] into a caller-owned buffer: clears `out`, then
+    /// appends the online workers ascending by id. The engine's round
+    /// arena passes the same buffer every round, so steady-state probes
+    /// allocate nothing. Defaults delegate to the by-value method (and
+    /// every in-tree transport overrides with a native buffer-reusing
+    /// body, implementing the by-value method in terms of this one).
+    fn probe_into(&mut self, out: &mut Vec<ProbeReport>) {
+        out.clear();
+        out.extend(self.probe());
+    }
+
+    /// [`Self::execute`] into a caller-owned buffer: clears `out`, then
+    /// appends every reply sorted by (virtual reply time, worker id).
+    fn execute_into(&mut self, selected: &[usize], job: RoundJob, out: &mut Vec<WorkerReply>) {
+        out.clear();
+        out.extend(self.execute(selected, job));
+    }
+
+    /// [`Self::execute_forgets`] into a caller-owned buffer: clears
+    /// `out`, then appends every ack sorted on the virtual clock.
+    fn execute_forgets_into(&mut self, commands: &[ForgetCommand], out: &mut Vec<ForgetAck>) {
+        out.clear();
+        out.extend(self.execute_forgets(commands));
+    }
+
+    /// [`Self::advance_clock`] into a caller-owned buffer: clears
+    /// `out`, then appends the billed rows ascending by device id.
+    fn advance_clock_into(
+        &mut self,
+        tick: ClockTick,
+        selected: &[usize],
+        out: &mut Vec<IdleOutcome>,
+    ) {
+        out.clear();
+        out.extend(self.advance_clock(tick, selected));
+    }
+
+    /// [`Self::collect_ledger`] into a caller-owned buffer: clears
+    /// `out`, then appends the cumulative rows ascending by device id.
+    fn collect_ledger_into(&mut self, out: &mut Vec<LedgerRow>) {
+        out.clear();
+        out.extend(self.collect_ledger());
+    }
+
     /// Human-readable topology (e.g. `threaded`, `sharded×8(sync)`).
     fn describe(&self) -> String {
         self.kind().name().to_string()
@@ -402,200 +447,109 @@ pub(crate) fn partition_chunks(
 // SyncTransport
 // ---------------------------------------------------------------------
 
-/// In-place loop over the device simulators — no threads, fully
+/// In-place loop over its [`FleetStore`] — no threads, fully
 /// deterministic even under a debugger. Devices step in one contiguous
-/// pass per round (batched by construction).
+/// pass per round (batched by construction). Over a dense store this is
+/// the reference transport; over a columnar store it is the cheapest
+/// way to drive a 10⁶-device fleet from a single thread.
 pub struct SyncTransport {
-    devices: Vec<DeviceSim>,
-    ledger: LedgerCfg,
-    /// Deferred clock ticks (lazy ledger; stays empty when eager).
-    log: WindowLog,
-    /// Device ids trained/forgotten since the last clock tick — they
-    /// carry busy time and a possible wake latch, so the next
-    /// [`Transport::advance_clock`] must step them eagerly.
-    touched: Vec<usize>,
-    /// Reusable [`Transport::advance_clock`] scratch (stepped-id list,
-    /// sorted selection, eager membership mask): cleared per tick so
-    /// steady-state rounds reuse already-sized buffers instead of
-    /// allocating fresh ones.
-    scratch_ids: Vec<usize>,
-    scratch_sel: Vec<usize>,
-    scratch_mask: Vec<bool>,
+    store: FleetStore,
 }
 
 impl SyncTransport {
     pub fn new(devices: Vec<DeviceSim>) -> Self {
-        SyncTransport {
-            devices,
-            ledger: LedgerCfg::default(),
-            log: WindowLog::new(),
-            touched: Vec::new(),
-            scratch_ids: Vec::new(),
-            scratch_sel: Vec::new(),
-            scratch_mask: Vec::new(),
-        }
+        SyncTransport::from_seed(FleetSeed::Sims(devices))
     }
 
+    /// Stand up over any fleet representation (dense or columnar).
+    pub fn from_seed(seed: FleetSeed) -> Self {
+        SyncTransport { store: seed.into_store(0) }
+    }
+
+    /// The dense device slice (tests and diagnostics). Panics over a
+    /// columnar store, whose parked devices have no sims to expose.
     pub fn devices(&self) -> &[DeviceSim] {
-        &self.devices
-    }
-
-    fn lazy(&self) -> bool {
-        self.ledger.mode == LedgerMode::Lazy
+        self.store.devices()
     }
 }
 
 impl Transport for SyncTransport {
     fn probe(&mut self) -> Vec<ProbeReport> {
-        if self.lazy() {
-            // O(n) RNG stepping is inherent to the availability chain,
-            // but the *billing* stays O(1) per device: settle only when
-            // the pending windows could flip the availability outcome
-            // (or when a context-reading selector needs fresh telemetry)
-            let log = &self.log;
-            let fresh = self.ledger.fresh_telemetry;
-            return self
-                .devices
-                .iter_mut()
-                .enumerate()
-                .filter_map(|(i, d)| {
-                    if fresh || d.needs_availability_settle(log.pending(d.window_ptr())) {
-                        settle_device(d, log);
-                    }
-                    d.step_availability().then(|| (i, d.snapshot()))
-                })
-                .collect();
-        }
-        self.devices
-            .iter_mut()
-            .enumerate()
-            .filter_map(|(i, d)| d.step_availability().then(|| (i, d.snapshot())))
-            .collect()
+        let mut out = Vec::new();
+        self.probe_into(&mut out);
+        out
     }
 
     fn execute(&mut self, selected: &[usize], job: RoundJob) -> Vec<WorkerReply> {
-        if self.lazy() {
-            // settle before training: run_round reads power_state (the
-            // wake latch) and drains the battery, so stale windows must
-            // be replayed first — restoring the eager call order
-            for &i in selected {
-                settle_device(&mut self.devices[i], &self.log);
-                self.touched.push(i);
-            }
-        }
-        let mut replies: Vec<WorkerReply> = selected
-            .iter()
-            .map(|&i| {
-                let d = &mut self.devices[i];
-                let outcome = d.run_round(job.scheme, job.arrivals, job.theta);
-                WorkerReply { device: i, outcome, snapshot: d.snapshot() }
-            })
-            .collect();
-        sort_replies(&mut replies);
-        replies
+        let mut out = Vec::new();
+        self.execute_into(selected, job, &mut out);
+        out
     }
 
     fn execute_forgets(&mut self, commands: &[ForgetCommand]) -> Vec<ForgetAck> {
-        if self.lazy() {
-            for c in commands {
-                settle_device(&mut self.devices[c.device], &self.log);
-                self.touched.push(c.device);
-            }
-        }
-        let mut acks: Vec<ForgetAck> = commands
-            .iter()
-            .map(|c| {
-                let mut a = self.devices[c.device].forget_datum(c.request, c.datum);
-                // acks ride in the *transport's* id space (like
-                // WorkerReply.device), so a shard root can rebase them
-                a.device = c.device;
-                a
-            })
-            .collect();
-        sort_acks(&mut acks);
-        acks
+        let mut out = Vec::new();
+        self.execute_forgets_into(commands, &mut out);
+        out
     }
 
     fn advance_clock(&mut self, tick: ClockTick, selected: &[usize]) -> Vec<IdleOutcome> {
-        if self.lazy() {
-            // step only the devices that trained/forgot this round —
-            // everyone else defers by a single shared log push, with
-            // zero per-device work. The id lists live in reusable
-            // scratch: taken out for the borrow, returned after.
-            let mut stepped = std::mem::take(&mut self.scratch_ids);
-            stepped.clear();
-            stepped.extend_from_slice(selected);
-            stepped.extend(self.touched.drain(..));
-            stepped.sort_unstable();
-            stepped.dedup();
-            let mut sel = std::mem::take(&mut self.scratch_sel);
-            sel.clear();
-            sel.extend_from_slice(selected);
-            sel.sort_unstable();
-            let mut rows = Vec::with_capacity(stepped.len());
-            for &i in &stepped {
-                let d = &mut self.devices[i];
-                settle_device(d, &self.log);
-                let mut r =
-                    d.step_idle(tick.dt_s, tick.mode, sel.binary_search(&i).is_ok());
-                r.device = i;
-                // the current tick is billed directly; point past it
-                d.set_window_ptr(self.log.len() + 1);
-                rows.push(r);
-            }
-            self.log.push(tick);
-            self.scratch_ids = stepped;
-            self.scratch_sel = sel;
-            return rows;
-        }
-        let mut is_selected = std::mem::take(&mut self.scratch_mask);
-        is_selected.clear();
-        is_selected.resize(self.devices.len(), false);
-        for &i in selected {
-            is_selected[i] = true;
-        }
-        let rows: Vec<IdleOutcome> = self
-            .devices
-            .iter_mut()
-            .enumerate()
-            .map(|(i, d)| {
-                let mut r = d.step_idle(tick.dt_s, tick.mode, is_selected[i]);
-                r.device = i; // transport id space, like WorkerReply
-                r
-            })
-            .collect();
-        self.scratch_mask = is_selected;
-        rows
-    }
-
-    fn set_ledger(&mut self, cfg: LedgerCfg) {
-        self.ledger = cfg;
+        let mut out = Vec::new();
+        self.advance_clock_into(tick, selected, &mut out);
+        out
     }
 
     fn collect_ledger(&mut self) -> Vec<LedgerRow> {
-        let log = &self.log;
-        self.devices
-            .iter_mut()
-            .enumerate()
-            .map(|(i, d)| {
-                settle_device(d, log);
-                let mut r = d.ledger_row();
-                r.device = i; // transport id space, like WorkerReply
-                r
-            })
-            .collect()
+        let mut out = Vec::new();
+        self.collect_ledger_into(&mut out);
+        out
+    }
+
+    fn probe_into(&mut self, out: &mut Vec<ProbeReport>) {
+        out.clear();
+        self.store.probe_into(out); // store appends ascending by id
+    }
+
+    fn execute_into(&mut self, selected: &[usize], job: RoundJob, out: &mut Vec<WorkerReply>) {
+        out.clear();
+        self.store.execute_into(selected, job, out);
+        sort_replies(out);
+    }
+
+    fn execute_forgets_into(&mut self, commands: &[ForgetCommand], out: &mut Vec<ForgetAck>) {
+        out.clear();
+        self.store.execute_forgets_into(commands, out);
+        sort_acks(out);
+    }
+
+    fn advance_clock_into(
+        &mut self,
+        tick: ClockTick,
+        selected: &[usize],
+        out: &mut Vec<IdleOutcome>,
+    ) {
+        out.clear();
+        self.store.advance_clock_into(tick, selected, out);
+    }
+
+    fn collect_ledger_into(&mut self, out: &mut Vec<LedgerRow>) {
+        out.clear();
+        self.store.collect_ledger_into(out);
+    }
+
+    fn set_ledger(&mut self, cfg: LedgerCfg) {
+        self.store.set_ledger(cfg);
     }
 
     fn n_devices(&self) -> usize {
-        self.devices.len()
+        self.store.n()
     }
 
     fn profile(&self, i: usize) -> &DeviceProfile {
-        self.devices[i].profile()
+        self.store.profile(i)
     }
 
     fn shard_len(&self, i: usize) -> usize {
-        self.devices[i].shard_len()
+        self.store.shard_len(i)
     }
 
     fn kind(&self) -> TransportKind {
@@ -630,12 +584,16 @@ enum Ctl {
     Stop,
 }
 
-/// SUB reply from a worker thread — one message per batch.
+/// SUB reply from a worker thread — one message per batch. The `spent`
+/// fields hand the dispatch buffer that rode out in the matching
+/// [`Ctl`] message back to the root, which clears and pools it for the
+/// next dispatch — steady-state rounds move the same per-worker
+/// buffers back and forth instead of allocating fresh ones.
 enum Reply {
-    Outcomes { worker: usize, outcomes: Vec<WorkerReply> },
+    Outcomes { worker: usize, outcomes: Vec<WorkerReply>, spent: Vec<usize> },
     Online { worker: usize, online: Vec<ProbeReport> },
-    Acks { worker: usize, acks: Vec<ForgetAck> },
-    Ledger { worker: usize, reports: Vec<IdleOutcome> },
+    Acks { worker: usize, acks: Vec<ForgetAck>, spent: Vec<ForgetCommand> },
+    Ledger { worker: usize, reports: Vec<IdleOutcome>, spent: Vec<usize> },
     Rows { worker: usize, rows: Vec<LedgerRow> },
 }
 
@@ -654,12 +612,21 @@ struct Endpoint {
 pub struct ThreadedTransport {
     endpoints: Vec<Endpoint>,
     inbox: Receiver<Reply>,
-    /// Profiles captured before the devices move into their threads.
-    profiles: Vec<DeviceProfile>,
-    /// Shard sizes captured before the devices move into their threads.
-    shard_lens: Vec<usize>,
-    /// Owning worker per device id.
-    owner: Vec<usize>,
+    /// Root-side device metadata (profiles + shard sizes, or the
+    /// columnar factory) captured before the fleet moves into its
+    /// threads — answers `profile`/`shard_len` without a 10⁶-entry
+    /// clone in the columnar case.
+    meta: FleetMeta,
+    /// Worker-slice bounds (see [`partition_bounds`]): worker `w` owns
+    /// device ids `[bounds[w], bounds[w+1])`.
+    bounds: Vec<usize>,
+    /// Recycled per-worker dispatch buckets (job members, clock
+    /// selections / FORGET commands): moved into the [`Ctl`] message on
+    /// dispatch, handed back in the worker's reply (`Reply::*::spent`).
+    id_buckets: Vec<Vec<usize>>,
+    cmd_buckets: Vec<Vec<ForgetCommand>>,
+    /// All worker indices, precomputed for broadcast collects.
+    all_workers: Vec<usize>,
 }
 
 /// Default worker-thread count for a fleet: one per device up to 4× the
@@ -680,38 +647,56 @@ impl ThreadedTransport {
     /// Spawn exactly `workers` threads, each owning a contiguous,
     /// balanced slice of `devices`.
     pub fn spawn_batched(devices: Vec<DeviceSim>, workers: usize) -> Self {
-        let n = devices.len();
+        ThreadedTransport::spawn_seed(FleetSeed::Sims(devices), workers)
+    }
+
+    /// Spawn over any fleet representation: each worker thread owns a
+    /// contiguous, balanced slice of the seed as its own [`FleetStore`]
+    /// (dense sims or columnar slots).
+    pub fn spawn_seed(seed: FleetSeed, workers: usize) -> Self {
+        let n = seed.n();
         let workers = workers.clamp(1, n.max(1));
-        let profiles: Vec<DeviceProfile> =
-            devices.iter().map(|d| d.profile().clone()).collect();
-        let shard_lens: Vec<usize> = devices.iter().map(DeviceSim::shard_len).collect();
+        let meta = seed.meta();
         let bounds = partition_bounds(n, workers);
-        let mut owner = vec![0usize; n];
-        let chunks = partition_chunks(devices, &bounds);
+        let chunks = seed.split(&bounds);
         let (inbox_tx, inbox) = channel::<Reply>();
-        let endpoints = chunks
+        let endpoints: Vec<Endpoint> = chunks
             .into_iter()
             .enumerate()
-            .map(|(w, batch)| {
-                let start = bounds[w];
-                for d in start..start + batch.len() {
-                    owner[d] = w;
-                }
+            .map(|(w, chunk)| {
+                // the store emits ids rebased by its slice start, so
+                // worker replies land in this transport's id space
+                let store = chunk.into_store(bounds[w]);
                 let (tx, rx) = channel::<Ctl>();
                 let out = inbox_tx.clone();
                 let handle = std::thread::Builder::new()
                     .name(format!("deal-worker-{w}"))
-                    .spawn(move || worker_loop(w, start, batch, rx, out))
+                    .spawn(move || worker_loop(w, store, rx, out))
                     .expect("spawn worker thread");
                 Endpoint { tx, handle: Some(handle) }
             })
             .collect();
-        ThreadedTransport { endpoints, inbox, profiles, shard_lens, owner }
+        let k = endpoints.len();
+        ThreadedTransport {
+            endpoints,
+            inbox,
+            meta,
+            bounds,
+            id_buckets: (0..k).map(|_| Vec::new()).collect(),
+            cmd_buckets: (0..k).map(|_| Vec::new()).collect(),
+            all_workers: (0..k).collect(),
+        }
     }
 
     /// Worker-thread count (≤ n_devices).
     pub fn workers(&self) -> usize {
         self.endpoints.len()
+    }
+
+    /// Owning worker of device id `g` (bounds are sorted, so this is a
+    /// binary search — no O(n) owner table at 10⁶ devices).
+    fn owner_of(&self, g: usize) -> usize {
+        self.bounds.partition_point(|&b| b <= g) - 1
     }
 
     fn shutdown(&mut self) {
@@ -776,70 +761,83 @@ impl ThreadedTransport {
     /// of them blocks on replies (round wall time = max over shards,
     /// not sum).
     pub(crate) fn dispatch_jobs(&mut self, selected: &[usize], job: RoundJob) -> Vec<usize> {
-        let mut members: Vec<Vec<usize>> = vec![Vec::new(); self.endpoints.len()];
+        for b in &mut self.id_buckets {
+            b.clear();
+        }
         for &i in selected {
-            members[self.owner[i]].push(i);
+            let w = self.owner_of(i);
+            self.id_buckets[w].push(i);
         }
         let mut pinged = Vec::new();
-        for (w, m) in members.into_iter().enumerate() {
-            if m.is_empty() {
+        for w in 0..self.endpoints.len() {
+            if self.id_buckets[w].is_empty() {
                 continue;
             }
             pinged.push(w);
-            let _ = self.endpoints[w].tx.send(Ctl::Job { job, members: m });
+            // the bucket travels in the message; the worker returns it
+            // in its reply (`spent`) for the next dispatch
+            let members = std::mem::take(&mut self.id_buckets[w]);
+            let _ = self.endpoints[w].tx.send(Ctl::Job { job, members });
         }
         pinged
     }
 
-    /// Collect the replies owed by a prior [`Self::dispatch_jobs`],
-    /// sorted by (virtual time, id).
-    pub(crate) fn collect_jobs(&mut self, pinged: &[usize]) -> Vec<WorkerReply> {
-        let mut replies: Vec<WorkerReply> = self
-            .collect_from(pinged)
-            .into_iter()
-            .flat_map(|r| match r {
-                Reply::Outcomes { outcomes, .. } => outcomes,
+    /// Collect the replies owed by a prior [`Self::dispatch_jobs`] into
+    /// `out` (appended, then the whole buffer sorted by (virtual time,
+    /// id) — callers pass a cleared or coherently-ordered buffer).
+    pub(crate) fn collect_jobs_into(&mut self, pinged: &[usize], out: &mut Vec<WorkerReply>) {
+        for r in self.collect_from(pinged) {
+            match r {
+                Reply::Outcomes { worker, outcomes, mut spent } => {
+                    out.extend(outcomes);
+                    spent.clear();
+                    self.id_buckets[worker] = spent;
+                }
                 _ => unreachable!("non-job reply to a job"),
-            })
-            .collect();
-        sort_replies(&mut replies);
-        replies
+            }
+        }
+        sort_replies(out);
     }
 
     /// Fire targeted FORGET commands at the owning workers without
     /// waiting; returns the pinged worker ids for
-    /// [`Self::collect_forgets`]. Split out so a shard root can fan
-    /// deletion traffic across all its leaders before blocking.
+    /// [`Self::collect_forgets_into`]. Split out so a shard root can
+    /// fan deletion traffic across all its leaders before blocking.
     pub(crate) fn dispatch_forgets(&mut self, commands: &[ForgetCommand]) -> Vec<usize> {
-        let mut per_worker: Vec<Vec<ForgetCommand>> =
-            vec![Vec::new(); self.endpoints.len()];
+        for b in &mut self.cmd_buckets {
+            b.clear();
+        }
         for &c in commands {
-            per_worker[self.owner[c.device]].push(c);
+            let w = self.owner_of(c.device);
+            self.cmd_buckets[w].push(c);
         }
         let mut pinged = Vec::new();
-        for (w, cmds) in per_worker.into_iter().enumerate() {
-            if cmds.is_empty() {
+        for w in 0..self.endpoints.len() {
+            if self.cmd_buckets[w].is_empty() {
                 continue;
             }
             pinged.push(w);
-            let _ = self.endpoints[w].tx.send(Ctl::Forget { commands: cmds });
+            let commands = std::mem::take(&mut self.cmd_buckets[w]);
+            let _ = self.endpoints[w].tx.send(Ctl::Forget { commands });
         }
         pinged
     }
 
-    /// Collect the acks owed by a prior [`Self::dispatch_forgets`],
-    /// sorted on the virtual clock by (time, device, request).
-    pub(crate) fn collect_forgets(&mut self, pinged: &[usize]) -> Vec<ForgetAck> {
-        let mut acks: Vec<ForgetAck> = self
-            .collect_from(pinged)
-            .into_iter()
-            .flat_map(|r| match r {
-                Reply::Acks { acks, .. } => acks,
+    /// Collect the acks owed by a prior [`Self::dispatch_forgets`] into
+    /// `out` (appended, then the whole buffer sorted on the virtual
+    /// clock by (time, device, request)).
+    pub(crate) fn collect_forgets_into(&mut self, pinged: &[usize], out: &mut Vec<ForgetAck>) {
+        for r in self.collect_from(pinged) {
+            match r {
+                Reply::Acks { worker, acks, mut spent } => {
+                    out.extend(acks);
+                    spent.clear();
+                    self.cmd_buckets[worker] = spent;
+                }
                 _ => unreachable!("non-ack reply to a forget batch"),
-            })
-            .collect();
-        sort_acks(&mut acks);
-        acks
+            }
+        }
+        sort_acks(out);
     }
 
     /// Fire a fleet-clock advance at every worker without waiting —
@@ -847,29 +845,34 @@ impl ThreadedTransport {
     /// Split out so a shard root can tick all its leaders before any
     /// of them blocks on replies.
     pub(crate) fn dispatch_clock(&mut self, tick: ClockTick, selected: &[usize]) {
-        let mut members: Vec<Vec<usize>> = vec![Vec::new(); self.endpoints.len()];
-        for &i in selected {
-            members[self.owner[i]].push(i);
+        for b in &mut self.id_buckets {
+            b.clear();
         }
-        for (ep, m) in self.endpoints.iter().zip(members) {
-            let _ = ep.tx.send(Ctl::Clock { tick, selected: m });
+        for &i in selected {
+            let w = self.owner_of(i);
+            self.id_buckets[w].push(i);
+        }
+        for w in 0..self.endpoints.len() {
+            let selected = std::mem::take(&mut self.id_buckets[w]);
+            let _ = self.endpoints[w].tx.send(Ctl::Clock { tick, selected });
         }
     }
 
-    /// Collect the ledger rows owed by a prior [`Self::dispatch_clock`],
-    /// ascending by device id.
-    pub(crate) fn collect_clock(&mut self) -> Vec<IdleOutcome> {
-        let all: Vec<usize> = (0..self.endpoints.len()).collect();
-        let mut reports: Vec<IdleOutcome> = self
-            .collect_from(&all)
-            .into_iter()
-            .flat_map(|r| match r {
-                Reply::Ledger { reports, .. } => reports,
+    /// Collect the ledger rows owed by a prior [`Self::dispatch_clock`]
+    /// into `out`, appended, then the whole buffer sorted ascending by
+    /// device id.
+    pub(crate) fn collect_clock_into(&mut self, out: &mut Vec<IdleOutcome>) {
+        for r in self.collect_from(&self.all_workers) {
+            match r {
+                Reply::Ledger { worker, reports, mut spent } => {
+                    out.extend(reports);
+                    spent.clear();
+                    self.id_buckets[worker] = spent;
+                }
                 _ => unreachable!("non-ledger reply to a clock tick"),
-            })
-            .collect();
-        reports.sort_unstable_by_key(|r| r.device);
-        reports
+            }
+        }
+        out.sort_unstable_by_key(|r| r.device);
     }
 
     /// Fire a ledger collect at every worker without waiting. Split out
@@ -882,19 +885,16 @@ impl ThreadedTransport {
     }
 
     /// Collect the cumulative rows owed by a prior
-    /// [`Self::dispatch_collect_ledger`], ascending by device id.
-    pub(crate) fn collect_ledger_rows(&mut self) -> Vec<LedgerRow> {
-        let all: Vec<usize> = (0..self.endpoints.len()).collect();
-        let mut rows: Vec<LedgerRow> = self
-            .collect_from(&all)
-            .into_iter()
-            .flat_map(|r| match r {
-                Reply::Rows { rows, .. } => rows,
+    /// [`Self::dispatch_collect_ledger`] into `out`, appended, then
+    /// sorted ascending by device id.
+    pub(crate) fn collect_ledger_rows_into(&mut self, out: &mut Vec<LedgerRow>) {
+        for r in self.collect_from(&self.all_workers) {
+            match r {
+                Reply::Rows { rows, .. } => out.extend(rows),
                 _ => unreachable!("non-row reply to a ledger collect"),
-            })
-            .collect();
-        rows.sort_unstable_by_key(|r| r.device);
-        rows
+            }
+        }
+        out.sort_unstable_by_key(|r| r.device);
     }
 
     /// Fire an availability probe at every worker without waiting.
@@ -904,167 +904,62 @@ impl ThreadedTransport {
         }
     }
 
-    /// Collect the online set owed by a prior [`Self::dispatch_probe`],
-    /// ascending by device id.
-    pub(crate) fn collect_probe(&mut self) -> Vec<ProbeReport> {
-        let all: Vec<usize> = (0..self.endpoints.len()).collect();
-        let mut online: Vec<ProbeReport> = self
-            .collect_from(&all)
-            .into_iter()
-            .flat_map(|r| match r {
-                Reply::Online { online, .. } => online,
+    /// Collect the online set owed by a prior [`Self::dispatch_probe`]
+    /// into `out`, appended, then sorted ascending by device id.
+    pub(crate) fn collect_probe_into(&mut self, out: &mut Vec<ProbeReport>) {
+        for r in self.collect_from(&self.all_workers) {
+            match r {
+                Reply::Online { online, .. } => out.extend(online),
                 _ => unreachable!("non-probe reply to a probe"),
-            })
-            .collect();
-        online.sort_unstable_by_key(|&(i, _)| i);
-        online
+            }
+        }
+        out.sort_unstable_by_key(|&(i, _)| i);
     }
 }
 
-/// Body of one worker thread: owns devices `[start, start+len)` and
-/// steps them batch-at-a-time per control message.
-fn worker_loop(
-    worker: usize,
-    start: usize,
-    mut devices: Vec<DeviceSim>,
-    rx: Receiver<Ctl>,
-    out: Sender<Reply>,
-) {
-    // lazy-ledger state, one set per worker thread: the shared window
-    // log covers exactly this slice (the root broadcasts every tick to
-    // every worker), `touched` tracks local indices trained/forgotten
-    // since the last tick
-    let mut ledger = LedgerCfg::default();
-    let mut log = WindowLog::new();
-    let mut touched: Vec<usize> = Vec::new();
+/// Body of one worker thread: owns its contiguous fleet slice as a
+/// [`FleetStore`] (dense sims or columnar slots) and steps it
+/// batch-at-a-time per control message. All per-slice lazy-ledger state
+/// (window log, touched set) lives inside the store; dispatch buffers
+/// arriving in [`Ctl`] messages are handed back in the replies for the
+/// root to reuse.
+fn worker_loop(worker: usize, mut store: FleetStore, rx: Receiver<Ctl>, out: Sender<Reply>) {
     loop {
         match rx.recv() {
             Ok(Ctl::SetLedger(cfg)) => {
-                ledger = cfg;
+                store.set_ledger(cfg);
             }
             Ok(Ctl::Job { job, members }) => {
-                let outcomes: Vec<WorkerReply> = members
-                    .into_iter()
-                    .map(|i| {
-                        let d = &mut devices[i - start];
-                        if ledger.mode == LedgerMode::Lazy {
-                            // settle before training (eager call order)
-                            settle_device(d, &log);
-                            touched.push(i - start);
-                        }
-                        let outcome = d.run_round(job.scheme, job.arrivals, job.theta);
-                        WorkerReply { device: i, outcome, snapshot: d.snapshot() }
-                    })
-                    .collect();
-                if out.send(Reply::Outcomes { worker, outcomes }).is_err() {
+                let mut outcomes = Vec::new();
+                store.execute_into(&members, job, &mut outcomes);
+                if out.send(Reply::Outcomes { worker, outcomes, spent: members }).is_err() {
                     break;
                 }
             }
             Ok(Ctl::Probe) => {
-                let lazy = ledger.mode == LedgerMode::Lazy;
-                let fresh = ledger.fresh_telemetry;
-                let online: Vec<ProbeReport> = devices
-                    .iter_mut()
-                    .enumerate()
-                    .filter_map(|(j, d)| {
-                        if lazy
-                            && (fresh
-                                || d.needs_availability_settle(
-                                    log.pending(d.window_ptr()),
-                                ))
-                        {
-                            settle_device(d, &log);
-                        }
-                        d.step_availability().then(|| (start + j, d.snapshot()))
-                    })
-                    .collect();
+                let mut online = Vec::new();
+                store.probe_into(&mut online);
                 if out.send(Reply::Online { worker, online }).is_err() {
                     break;
                 }
             }
             Ok(Ctl::Forget { commands }) => {
-                let acks: Vec<ForgetAck> = commands
-                    .into_iter()
-                    .map(|c| {
-                        let d = &mut devices[c.device - start];
-                        if ledger.mode == LedgerMode::Lazy {
-                            settle_device(d, &log);
-                            touched.push(c.device - start);
-                        }
-                        let mut a = d.forget_datum(c.request, c.datum);
-                        a.device = c.device; // transport id space, as replies
-                        a
-                    })
-                    .collect();
-                if out.send(Reply::Acks { worker, acks }).is_err() {
+                let mut acks = Vec::new();
+                store.execute_forgets_into(&commands, &mut acks);
+                if out.send(Reply::Acks { worker, acks, spent: commands }).is_err() {
                     break;
                 }
             }
             Ok(Ctl::Clock { tick, selected }) => {
-                let reports: Vec<IdleOutcome> = if ledger.mode == LedgerMode::Lazy {
-                    // O(selected + touched) for this slice; the rest of
-                    // the slice defers by the single log push below
-                    let mut stepped: Vec<usize> = selected
-                        .iter()
-                        .map(|&g| g - start)
-                        .chain(touched.drain(..))
-                        .collect();
-                    stepped.sort_unstable();
-                    stepped.dedup();
-                    let mut sel: Vec<usize> =
-                        selected.iter().map(|&g| g - start).collect();
-                    sel.sort_unstable();
-                    let rows = stepped
-                        .iter()
-                        .map(|&j| {
-                            let d = &mut devices[j];
-                            settle_device(d, &log);
-                            let mut r = d.step_idle(
-                                tick.dt_s,
-                                tick.mode,
-                                sel.binary_search(&j).is_ok(),
-                            );
-                            r.device = start + j; // transport id space
-                            // the current tick is billed directly
-                            d.set_window_ptr(log.len() + 1);
-                            r
-                        })
-                        .collect();
-                    log.push(tick);
-                    rows
-                } else {
-                    // O(1) membership over the slice (select-all schemes
-                    // make |selected| ≈ slice_len — no linear scans here)
-                    let mut is_selected = vec![false; devices.len()];
-                    for &g in &selected {
-                        is_selected[g - start] = true;
-                    }
-                    devices
-                        .iter_mut()
-                        .enumerate()
-                        .map(|(j, d)| {
-                            let mut r =
-                                d.step_idle(tick.dt_s, tick.mode, is_selected[j]);
-                            r.device = start + j; // transport id space, as replies
-                            r
-                        })
-                        .collect()
-                };
-                if out.send(Reply::Ledger { worker, reports }).is_err() {
+                let mut reports = Vec::new();
+                store.advance_clock_into(tick, &selected, &mut reports);
+                if out.send(Reply::Ledger { worker, reports, spent: selected }).is_err() {
                     break;
                 }
             }
             Ok(Ctl::CollectLedger) => {
-                let rows: Vec<LedgerRow> = devices
-                    .iter_mut()
-                    .enumerate()
-                    .map(|(j, d)| {
-                        settle_device(d, &log);
-                        let mut r = d.ledger_row();
-                        r.device = start + j; // transport id space
-                        r
-                    })
-                    .collect();
+                let mut rows = Vec::new();
+                store.collect_ledger_into(&mut rows);
                 if out.send(Reply::Rows { worker, rows }).is_err() {
                     break;
                 }
@@ -1082,23 +977,68 @@ impl Drop for ThreadedTransport {
 
 impl Transport for ThreadedTransport {
     fn probe(&mut self) -> Vec<ProbeReport> {
-        self.dispatch_probe();
-        self.collect_probe()
+        let mut out = Vec::new();
+        self.probe_into(&mut out);
+        out
     }
 
     fn execute(&mut self, selected: &[usize], job: RoundJob) -> Vec<WorkerReply> {
-        let pinged = self.dispatch_jobs(selected, job);
-        self.collect_jobs(&pinged)
+        let mut out = Vec::new();
+        self.execute_into(selected, job, &mut out);
+        out
     }
 
     fn execute_forgets(&mut self, commands: &[ForgetCommand]) -> Vec<ForgetAck> {
-        let pinged = self.dispatch_forgets(commands);
-        self.collect_forgets(&pinged)
+        let mut out = Vec::new();
+        self.execute_forgets_into(commands, &mut out);
+        out
     }
 
     fn advance_clock(&mut self, tick: ClockTick, selected: &[usize]) -> Vec<IdleOutcome> {
+        let mut out = Vec::new();
+        self.advance_clock_into(tick, selected, &mut out);
+        out
+    }
+
+    fn collect_ledger(&mut self) -> Vec<LedgerRow> {
+        let mut out = Vec::new();
+        self.collect_ledger_into(&mut out);
+        out
+    }
+
+    fn probe_into(&mut self, out: &mut Vec<ProbeReport>) {
+        out.clear();
+        self.dispatch_probe();
+        self.collect_probe_into(out);
+    }
+
+    fn execute_into(&mut self, selected: &[usize], job: RoundJob, out: &mut Vec<WorkerReply>) {
+        out.clear();
+        let pinged = self.dispatch_jobs(selected, job);
+        self.collect_jobs_into(&pinged, out);
+    }
+
+    fn execute_forgets_into(&mut self, commands: &[ForgetCommand], out: &mut Vec<ForgetAck>) {
+        out.clear();
+        let pinged = self.dispatch_forgets(commands);
+        self.collect_forgets_into(&pinged, out);
+    }
+
+    fn advance_clock_into(
+        &mut self,
+        tick: ClockTick,
+        selected: &[usize],
+        out: &mut Vec<IdleOutcome>,
+    ) {
+        out.clear();
         self.dispatch_clock(tick, selected);
-        self.collect_clock()
+        self.collect_clock_into(out);
+    }
+
+    fn collect_ledger_into(&mut self, out: &mut Vec<LedgerRow>) {
+        out.clear();
+        self.dispatch_collect_ledger();
+        self.collect_ledger_rows_into(out);
     }
 
     fn set_ledger(&mut self, cfg: LedgerCfg) {
@@ -1109,21 +1049,16 @@ impl Transport for ThreadedTransport {
         }
     }
 
-    fn collect_ledger(&mut self) -> Vec<LedgerRow> {
-        self.dispatch_collect_ledger();
-        self.collect_ledger_rows()
-    }
-
     fn n_devices(&self) -> usize {
-        self.profiles.len()
+        self.meta.n()
     }
 
     fn profile(&self, i: usize) -> &DeviceProfile {
-        &self.profiles[i]
+        self.meta.profile(i)
     }
 
     fn shard_len(&self, i: usize) -> usize {
-        self.shard_lens[i]
+        self.meta.shard_len(i)
     }
 
     fn kind(&self) -> TransportKind {

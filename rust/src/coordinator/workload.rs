@@ -54,9 +54,18 @@ pub enum Workload {
 const HOLDOUT_FRAC: f64 = 0.2;
 
 fn split_at_frac<T>(mut items: Vec<T>) -> (Vec<T>, Vec<T>) {
-    let n_hold = ((items.len() as f64 * HOLDOUT_FRAC) as usize).max(1).min(items.len() / 2);
-    let hold = items.split_off(items.len() - n_hold);
+    let hold = items.split_off(train_len(items.len()));
     (items, hold)
+}
+
+/// Training-set size a shard of `shard_items` rows ends up with after
+/// the [`split_at_frac`] holdout split. Pure arithmetic — the columnar
+/// fleet store uses it to answer `Transport::shard_len` for parked
+/// devices without ever materialising their workloads.
+pub(crate) fn train_len(shard_items: usize) -> usize {
+    let n_hold =
+        ((shard_items as f64 * HOLDOUT_FRAC) as usize).max(1).min(shard_items / 2);
+    shard_items - n_hold
 }
 
 impl Workload {

@@ -8,7 +8,9 @@
 
 use deal::bandit::SelectorKind;
 use deal::coordinator::fleet::{self, FleetConfig};
-use deal::coordinator::{Aggregation, LedgerMode, ModelKind, Scheme, TransportKind};
+use deal::coordinator::{
+    Aggregation, FleetStoreKind, LedgerMode, ModelKind, Scheme, TransportKind,
+};
 use deal::data::events::generate_events;
 use deal::data::Dataset;
 use deal::learn::recovery;
@@ -62,6 +64,12 @@ fn cmd_run(args: Vec<String>) -> i32 {
             "ledger",
             "eager",
             "eager|lazy — fleet billing: lazy fast-forwards parked devices on observation",
+        )
+        .flag(
+            "fleet",
+            "sims",
+            "sims|columnar — device residency: columnar parks unselected devices as \
+             ledger columns (~250 B each; requires --ledger lazy)",
         )
         .flag("devices", "16", "fleet size")
         .flag("shards", "1", "shard-leader count (>1 = sharded multi-federation runtime)")
@@ -157,6 +165,20 @@ fn cmd_run(args: Vec<String>) -> i32 {
             return 2;
         }
     };
+    let fleet = match FleetStoreKind::from_name(a.get("fleet")) {
+        Some(f) => f,
+        None => {
+            eprintln!("unknown --fleet value {:?} (want sims|columnar)", a.get("fleet"));
+            return 2;
+        }
+    };
+    if fleet == FleetStoreKind::Columnar && ledger != LedgerMode::Lazy {
+        eprintln!(
+            "--fleet columnar requires --ledger lazy: parked columns are billed by the \
+             lazy fast-forward path"
+        );
+        return 2;
+    }
     let round_period_s = match a.get_f64("period") {
         Ok(p) if p >= 0.0 => p,
         Ok(p) => {
@@ -233,6 +255,7 @@ fn cmd_run(args: Vec<String>) -> i32 {
         charging,
         round_period_s,
         ledger,
+        fleet,
         ..FleetConfig::default()
     };
     let rounds = a.get_usize("rounds").unwrap();
@@ -241,7 +264,7 @@ fn cmd_run(args: Vec<String>) -> i32 {
     let mut fed = fleet::build(&cfg);
     println!(
         "federation: {} devices, {} on {}, scheme {}, transport {}, aggregation {}, \
-         selector {} (features {}), mode {} (period {:.0}s, charging {}, ledger {})",
+         selector {} (features {}), mode {} (period {:.0}s, charging {}, ledger {}, fleet {})",
         cfg.n_devices,
         cfg.model.map_or("auto", |m| m.name()),
         dataset.name(),
@@ -254,6 +277,7 @@ fn cmd_run(args: Vec<String>) -> i32 {
         cfg.round_period_s,
         if charging { "on" } else { "off" },
         ledger.name(),
+        fleet.name(),
     );
     for _ in 0..rounds {
         let rec = fed.run_round();

@@ -7,6 +7,11 @@
 //! past the [`Battery::can_rejoin`] hysteresis band — rejoins
 //! availability instead of being a dead end.
 
+/// The low-water fraction below which [`Battery::can_train`] refuses.
+/// Shared with the columnar fleet store, whose availability mirror must
+/// reproduce the threshold arithmetic bit-for-bit.
+pub(crate) const LOW_WATER_FRAC: f64 = 0.05;
+
 /// Battery state of one simulated device.
 #[derive(Debug, Clone)]
 pub struct Battery {
@@ -18,15 +23,27 @@ pub struct Battery {
 
 impl Battery {
     pub fn new(capacity_uah: f64) -> Self {
-        Battery { capacity_uah, level_uah: capacity_uah, low_water_frac: 0.05 }
+        Battery {
+            capacity_uah,
+            level_uah: capacity_uah,
+            low_water_frac: LOW_WATER_FRAC,
+        }
     }
 
     pub fn with_level(capacity_uah: f64, frac: f64) -> Self {
         Battery {
             capacity_uah,
             level_uah: capacity_uah * frac.clamp(0.0, 1.0),
-            low_water_frac: 0.05,
+            low_water_frac: LOW_WATER_FRAC,
         }
+    }
+
+    /// Overwrite the charge level with an exact µAh value. Used when a
+    /// columnar fleet slot is hydrated into a `DeviceSim`: the column's
+    /// level must transplant bitwise, which the fraction-based
+    /// [`Self::with_level`] cannot guarantee.
+    pub(crate) fn set_level_uah(&mut self, uah: f64) {
+        self.level_uah = uah;
     }
 
     pub fn capacity_uah(&self) -> f64 {

@@ -10,8 +10,9 @@ use deal::bandit::{SelectAll, SelectorConfig, SelectorKind, SleepingBandit};
 use deal::coordinator::fleet::{self, FleetConfig};
 use deal::coordinator::scheme::ALL_SCHEMES;
 use deal::coordinator::{
-    Aggregation, Federation, FederationConfig, FederationStats, LedgerMode, Scheme,
-    ShardedTransport, SyncTransport, TransportKind,
+    Aggregation, Federation, FederationConfig, FederationStats, FleetSeed,
+    FleetStoreKind, LedgerMode, Scheme, ShardedTransport, SyncTransport, Transport,
+    TransportKind,
 };
 use deal::data::Dataset;
 use deal::power::{FleetMode, ALL_FLEET_MODES};
@@ -770,6 +771,113 @@ fn lazy_linucb_fresh_telemetry_matches_eager() {
 }
 
 #[test]
+fn columnar_fleet_bit_identical_across_fabrics() {
+    // the PR 8 tentpole contract: parking the fleet as ~250 B/device
+    // ledger columns and hydrating DeviceSims only for S(k), SLO-woken
+    // and probe-flip devices may not move a single bit of the settled
+    // books vs the dense Vec<DeviceSim> path — on any fabric, any shard
+    // count, any fleet mode, with charging sessions and a live deletion
+    // stream exercising hydration-for-forget.
+    for mode in ALL_FLEET_MODES {
+        let mk = |store: FleetStoreKind, transport: TransportKind, shards: usize| {
+            fleet::build(&FleetConfig {
+                n_devices: 10,
+                dataset: Dataset::Housing,
+                scale: 0.4,
+                scheme: Scheme::Deal,
+                seed: 33,
+                transport,
+                shards,
+                mode: Some(mode),
+                charging: true,
+                round_period_s: 1200.0,
+                ledger: LedgerMode::Lazy,
+                deletion_rate: 0.5,
+                deletion_slo: 3,
+                fleet: store,
+                ..FleetConfig::default()
+            })
+        };
+        let mut dense = mk(FleetStoreKind::Sims, TransportKind::Sync, 1);
+        let base = settled(&mut dense, 12);
+        assert!(
+            base.unlearn.submitted > 0,
+            "{}: deletion stream never fired",
+            mode.name()
+        );
+        for (transport, shards) in [
+            (TransportKind::Sync, 1usize),
+            (TransportKind::Threaded, 1),
+            (TransportKind::Sync, 2),
+            (TransportKind::Sync, 4),
+            (TransportKind::Threaded, 2),
+        ] {
+            let mut fed = mk(FleetStoreKind::Columnar, transport, shards);
+            let stats = settled(&mut fed, 12);
+            let ctx = format!(
+                "columnar {} {} shards={shards}",
+                mode.name(),
+                transport.name()
+            );
+            assert_bit_identical(&base, &stats, &ctx);
+            assert_eq!(dense.rounds.len(), fed.rounds.len(), "{ctx}: record count");
+            for (a, b) in dense.rounds.iter().zip(&fed.rounds) {
+                assert_eq!(a.available, b.available, "{ctx}: availability probe");
+                assert_eq!(a.selected, b.selected, "{ctx}: selection");
+                assert_eq!(
+                    a.energy_uah.to_bits(),
+                    b.energy_uah.to_bits(),
+                    "{ctx}: round {} training energy",
+                    a.round
+                );
+                assert_eq!(a.forgets, b.forgets, "{ctx}: forgets");
+                assert_eq!(a.in_time, b.in_time, "{ctx}: in-time replies");
+            }
+        }
+    }
+}
+
+#[test]
+fn two_level_shards_bit_identical_to_one_level_and_flat() {
+    // merging merges is associative: the (time, id) reply keys and the
+    // ascending-id ledger ranges are tie-free, so nesting the shard
+    // tree ({2×2}) is bit-identical to one level of 4 leaders, which is
+    // bit-identical to the flat unsharded path — stats and per-round
+    // records alike.
+    let cfg = || FleetConfig {
+        n_devices: 10,
+        dataset: Dataset::Housing,
+        scale: 0.4,
+        scheme: Scheme::NewFl,
+        seed: 13,
+        ..FleetConfig::default()
+    };
+    let fed_cfg = || FederationConfig { scheme: Scheme::NewFl, ..Default::default() };
+    let mut flat =
+        Federation::new(fleet::build_devices(&cfg()), Box::new(SelectAll), fed_cfg());
+    let one_level =
+        ShardedTransport::new(fleet::build_devices(&cfg()), 4, TransportKind::Sync);
+    let nested = ShardedTransport::two_level(
+        FleetSeed::Sims(fleet::build_devices(&cfg())),
+        2,
+        2,
+        TransportKind::Sync,
+    );
+    assert_eq!(nested.describe(), "sharded×2(sharded×2(sync))");
+    assert_eq!(nested.shards(), 4, "leaf leader count");
+    let mut one =
+        Federation::with_transport(Box::new(one_level), Box::new(SelectAll), fed_cfg());
+    let mut two =
+        Federation::with_transport(Box::new(nested), Box::new(SelectAll), fed_cfg());
+    let a = flat.run(10);
+    let b = one.run(10);
+    let c = two.run(10);
+    assert_bit_identical(&a, &b, "one-level vs flat");
+    assert_bit_identical(&b, &c, "two-level vs one-level");
+    assert_eq!(one.rounds, two.rounds, "two-level per-round records");
+}
+
+#[test]
 fn transport_flags_parse() {
     assert_eq!(TransportKind::from_name("sync"), Some(TransportKind::Sync));
     assert_eq!(TransportKind::from_name("threaded"), Some(TransportKind::Threaded));
@@ -790,4 +898,9 @@ fn transport_flags_parse() {
     assert_eq!(LedgerMode::from_name("lazy"), Some(LedgerMode::Lazy));
     assert_eq!(LedgerMode::from_name("fastforward"), Some(LedgerMode::Lazy));
     assert_eq!(LedgerMode::from_name("clairvoyant"), None);
+    assert_eq!(FleetStoreKind::from_name("sims"), Some(FleetStoreKind::Sims));
+    assert_eq!(FleetStoreKind::from_name("dense"), Some(FleetStoreKind::Sims));
+    assert_eq!(FleetStoreKind::from_name("columnar"), Some(FleetStoreKind::Columnar));
+    assert_eq!(FleetStoreKind::from_name("ledger"), Some(FleetStoreKind::Columnar));
+    assert_eq!(FleetStoreKind::from_name("hologram"), None);
 }
