@@ -15,6 +15,14 @@
 //! and reports engine rounds/sec per fleet size (`engine_rps_1e6` in
 //! the JSON at the 10⁶-device point).
 //!
+//! A third sweep times the *settle* itself — the observation-time wall
+//! the lazy ledger defers to: after R pending rounds,
+//! `ParkLedger::par_settle(k)` fast-forwards the whole fleet on k
+//! scoped workers (k ∈ {1, 2, 4, 8}; devices settled per wall second,
+//! best worker count reported as `settle_rps_1e6` at the 10⁶-device
+//! point). Serial/parallel bit-identity is asserted in-bench before
+//! any timing.
+//!
 //!     cargo bench --bench fleet_scaling
 //!
 //! Env:
@@ -273,6 +281,71 @@ fn main() {
         });
     }
 
+    // --- settle-throughput sweep: after SETTLE_ROUNDS lazy rounds the
+    // fleet holds a pending window chain per parked device;
+    // `par_settle(k)` replays them on k scoped workers. k=1 is the
+    // serial baseline; any k must be bit-identical, so the win is pure
+    // wall clock. A twin-fleet spot check pins that before the timing.
+    const SETTLE_ROUNDS: usize = 12;
+    {
+        let mut a = build_ledger(1_000, LedgerMode::Lazy);
+        let mut b = build_ledger(1_000, LedgerMode::Lazy);
+        for r in 1..=SETTLE_ROUNDS {
+            run_round(&mut a, r, 4);
+            run_round(&mut b, r, 4);
+        }
+        a.settle_all();
+        b.par_settle(8);
+        for (x, y) in a.rows().iter().zip(b.rows()) {
+            assert_eq!(
+                x.sleep_uah.to_bits(),
+                y.sleep_uah.to_bits(),
+                "par_settle diverged from serial at device {} — benchmark void",
+                x.device
+            );
+            assert_eq!(x.idle_uah.to_bits(), y.idle_uah.to_bits());
+            assert_eq!(x.charged_uah.to_bits(), y.charged_uah.to_bits());
+            assert_eq!(x.awake_equiv_uah.to_bits(), y.awake_equiv_uah.to_bits());
+        }
+    }
+    let settle_n = *fleets.last().unwrap();
+    let settle_m = (settle_n / 1000).clamp(4, 64);
+    println!(
+        "\nparallel settle (lazy ledger, n={settle_n}, {SETTLE_ROUNDS} pending rounds; \
+         serial/parallel bit-identity: ok):"
+    );
+    println!("{:>9} {:>16} {:>9}", "workers", "settle dev/s", "speedup");
+    let mut settle_serial_rps = None;
+    let mut settle_rps_best: Option<f64> = None;
+    for &w in &[1usize, 2, 4, 8] {
+        let mut l = build_ledger(settle_n, LedgerMode::Lazy);
+        for r in 1..=SETTLE_ROUNDS {
+            run_round(&mut l, r, settle_m);
+        }
+        let t0 = Instant::now();
+        l.par_settle(w);
+        let dt = t0.elapsed().as_secs_f64();
+        let rps = settle_n as f64 / dt;
+        if w == 1 {
+            settle_serial_rps = Some(rps);
+        }
+        settle_rps_best = Some(settle_rps_best.map_or(rps, |b: f64| b.max(rps)));
+        println!(
+            "{:>9} {:>16} {:>9}",
+            w,
+            format!("{rps:.0}"),
+            settle_serial_rps.map_or("—".to_string(), |s| format!("{:.1}×", rps / s)),
+        );
+        results.push(BenchResult {
+            name: format!("settle/n={settle_n}/w={w}"),
+            median: dt,
+            mean: dt,
+            std: 0.0,
+            iters_per_sample: 1,
+            samples: 1,
+        });
+    }
+
     let mut extra: Vec<(&str, String)> = vec![
         ("measured", "true".to_string()),
         (
@@ -288,6 +361,11 @@ fn main() {
     }
     if let Some(rps) = engine_rps_1e6 {
         extra.push(("engine_rps_1e6", json_f64(rps)));
+    }
+    if settle_n == 1_000_000 {
+        if let Some(rps) = settle_rps_best {
+            extra.push(("settle_rps_1e6", json_f64(rps)));
+        }
     }
     write_results_json("fleet_scaling", &results, &extra);
 

@@ -12,7 +12,8 @@
 //! cache on an eager sweep.
 //!
 //! The FP contract is the same bit-identity the transports enforce:
-//! [`ParkLedger::step_one`] replicates
+//! `ParkChunk::step_one` (the single window-billing body every settle
+//! path runs through) replicates
 //! [`DeviceSim::step_idle`](super::device::DeviceSim::step_idle)
 //! operation for operation (same order, same operands — floors are
 //! precomputed but [`state_current_ua`] is deterministic per
@@ -28,9 +29,23 @@
 //! and lazy ledgers therefore produce bit-identical per-device rows —
 //! `benches/fleet_scaling.rs` uses both modes of this struct for the
 //! 10³→10⁶ round-throughput sweep.
+//!
+//! **Settles parallelize without touching a single float fold.** A
+//! device's settle math reads shared immutable columns (rates, wake
+//! costs, the window log) and writes only its own per-device cells, so
+//! [`ParkLedger::par_settle`] splits the columns into disjoint
+//! contiguous device chunks (a `ChunksMut`-style split borrow,
+//! `ParkChunk`) and replays each chunk's pending windows on scoped
+//! `std::thread` workers. Chunk boundaries follow
+//! [`partition_bounds`](super::transport::partition_bounds); every
+//! cross-device *fold* ([`ParkLedger::totals`], the shard books, the
+//! engine's fleet totals) stays serial at the root in ascending device
+//! order — parallelism moves per-device work, never re-associates a
+//! sum — so `par_settle(k)` equals `settle_all()` to the bit for any
+//! worker count (`par_settle_matches_serial_to_the_bit`).
 
 use super::device::{LedgerRow, ParkedState};
-use super::transport::{mode_ix, ClockTick, LedgerMode, WindowLog};
+use super::transport::{mode_ix, partition_bounds, ClockTick, LedgerMode, WindowLog};
 use crate::power::battery::LOW_WATER_FRAC;
 use crate::power::state::{state_current_ua, wake_cost, ChargePlan, ALL_FLEET_MODES};
 use crate::power::{DeviceProfile, FleetMode, PowerState};
@@ -188,20 +203,28 @@ impl ParkLedger {
     /// O(selected) work for the round.
     pub fn advance_clock(&mut self, tick: ClockTick, selected: &[usize]) {
         debug_assert!(selected.windows(2).all(|w| w[0] < w[1]));
+        let n = self.n_devices();
         match self.mode {
             LedgerMode::Eager => {
                 let mut sel = selected.iter().peekable();
-                for i in 0..self.n_devices() {
+                let mut c = self.chunk(0, n);
+                for i in 0..n {
                     let is_sel = sel.next_if(|&&s| s == i).is_some();
-                    self.step_one(i, tick.dt_s, tick.mode, is_sel);
+                    c.step_one(i, tick.dt_s, tick.mode, is_sel);
                 }
             }
             LedgerMode::Lazy => {
-                for &i in selected {
-                    self.settle(i);
-                    self.step_one(i, tick.dt_s, tick.mode, true);
-                    // past the tick about to be appended
-                    self.window_ptr[i] = self.log.len() + 1;
+                {
+                    // the chunk view holds the log shared; scope it so
+                    // the push below can take the log mutably
+                    let end = self.log.len();
+                    let mut c = self.chunk(0, n);
+                    for &i in selected {
+                        c.settle(i);
+                        c.step_one(i, tick.dt_s, tick.mode, true);
+                        // past the tick about to be appended
+                        c.window_ptr[i] = end + 1;
+                    }
                 }
                 self.log.push(tick);
             }
@@ -213,20 +236,151 @@ impl ParkLedger {
     /// Ticks are `Copy`, so the replay walks the log by index — no
     /// per-settle buffer (this runs once per parked device touched).
     pub fn settle(&mut self, i: usize) {
-        let end = self.log.len();
-        for k in self.window_ptr[i]..end {
-            let t = self.log.since(k)[0];
-            self.step_one(i, t.dt_s, t.mode, false);
+        let n = self.n_devices();
+        self.chunk(0, n).settle(i);
+    }
+
+    /// Serial settle of the contiguous device range `[lo, hi)` — the
+    /// per-chunk primitive [`Self::par_settle`] runs on worker threads;
+    /// `settle_range(0, n)` is exactly [`Self::settle_all`].
+    pub fn settle_range(&mut self, lo: usize, hi: usize) {
+        debug_assert!(lo <= hi && hi <= self.n_devices());
+        let mut c = self.chunk(lo, hi);
+        for j in 0..c.len() {
+            c.settle(j);
         }
-        self.window_ptr[i] = end;
     }
 
     /// Fast-forward every device to the log head (the stats-read
     /// trigger).
     pub fn settle_all(&mut self) {
-        for i in 0..self.n_devices() {
-            self.settle(i);
+        self.settle_range(0, self.n_devices());
+    }
+
+    /// [`Self::settle_all`] across `workers` scoped threads, each
+    /// replaying one disjoint contiguous device chunk. Per-device
+    /// settle math never reads or writes another device's columns and
+    /// every cross-device fold stays serial at the root, so this is
+    /// bit-identical to the serial settle for *any* worker count
+    /// (clamped to `[1, n]`; a worker count of 1 or an empty log runs
+    /// inline without spawning).
+    pub fn par_settle(&mut self, workers: usize) {
+        let n = self.n_devices();
+        let k = workers.clamp(1, n.max(1));
+        if k == 1 || self.log.len() == 0 {
+            self.settle_range(0, n);
+            return;
         }
+        let chunks = self.chunks(k);
+        std::thread::scope(|sc| {
+            let handles: Vec<_> = chunks
+                .into_iter()
+                .map(|mut c| {
+                    sc.spawn(move || {
+                        for j in 0..c.len() {
+                            c.settle(j);
+                        }
+                    })
+                })
+                .collect();
+            for h in handles {
+                h.join().unwrap();
+            }
+        });
+    }
+
+    /// Worker count the stats-path settles use when the caller has no
+    /// opinion: one per core (a settle is CPU-bound, unlike the
+    /// transport's 4×-oversubscribed message workers), capped by the
+    /// device count, and 1 below [`PAR_SETTLE_MIN`] devices where the
+    /// spawn overhead outweighs the replay. Any choice is bit-safe —
+    /// [`Self::par_settle`] is worker-count-invariant — so a
+    /// machine-dependent default never leaks into results.
+    pub fn default_settle_workers(n: usize) -> usize {
+        if n < PAR_SETTLE_MIN {
+            return 1;
+        }
+        std::thread::available_parallelism().map_or(1, |c| c.get()).min(n)
+    }
+
+    /// Split-borrow view over the device range `[lo, hi)` — the serial
+    /// paths borrow the whole column set through one chunk so the
+    /// billing body exists exactly once.
+    fn chunk(&mut self, lo: usize, hi: usize) -> ParkChunk<'_> {
+        ParkChunk {
+            floor_ua: &self.floor_ua[lo..hi],
+            awake_ua: &self.awake_ua[lo..hi],
+            wake: &self.wake[lo..hi],
+            capacity_uah: &self.capacity_uah[lo..hi],
+            level_uah: &mut self.level_uah[lo..hi],
+            plan: &mut self.plan[lo..hi],
+            clock_s: &mut self.clock_s[lo..hi],
+            busy_s: &mut self.busy_s[lo..hi],
+            woke: &mut self.woke[lo..hi],
+            state: &mut self.state[lo..hi],
+            window_ptr: &mut self.window_ptr[lo..hi],
+            acc: &mut self.acc[lo..hi],
+            log: &self.log,
+        }
+    }
+
+    /// Split every column into `k` disjoint contiguous chunks along
+    /// [`partition_bounds`] — the `ChunksMut`-style split borrow behind
+    /// [`Self::par_settle`]: each chunk owns its device range's mutable
+    /// cells and shares the immutable rate columns and the log.
+    fn chunks(&mut self, k: usize) -> Vec<ParkChunk<'_>> {
+        let n = self.n_devices();
+        let bounds = partition_bounds(n, k);
+        let log = &self.log;
+        let mut floor_ua = &self.floor_ua[..];
+        let mut awake_ua = &self.awake_ua[..];
+        let mut wake = &self.wake[..];
+        let mut capacity_uah = &self.capacity_uah[..];
+        let mut level_uah = &mut self.level_uah[..];
+        let mut plan = &mut self.plan[..];
+        let mut clock_s = &mut self.clock_s[..];
+        let mut busy_s = &mut self.busy_s[..];
+        let mut woke = &mut self.woke[..];
+        let mut state = &mut self.state[..];
+        let mut window_ptr = &mut self.window_ptr[..];
+        let mut acc = &mut self.acc[..];
+        // carve `take` devices off the front of every column per chunk;
+        // `mem::take` is the standard split-borrow idiom for advancing
+        // a `&mut` slice cursor (`&mut [T]: Default`)
+        macro_rules! carve {
+            ($col:ident, $take:expr) => {{
+                let (head, tail) = $col.split_at($take);
+                $col = tail;
+                head
+            }};
+        }
+        macro_rules! carve_mut {
+            ($col:ident, $take:expr) => {{
+                let (head, tail) = std::mem::take(&mut $col).split_at_mut($take);
+                $col = tail;
+                head
+            }};
+        }
+        let mut out = Vec::with_capacity(k);
+        for w in bounds.windows(2) {
+            let take = w[1] - w[0];
+            out.push(ParkChunk {
+                floor_ua: carve!(floor_ua, take),
+                awake_ua: carve!(awake_ua, take),
+                wake: carve!(wake, take),
+                capacity_uah: carve!(capacity_uah, take),
+                level_uah: carve_mut!(level_uah, take),
+                plan: carve_mut!(plan, take),
+                clock_s: carve_mut!(clock_s, take),
+                busy_s: carve_mut!(busy_s, take),
+                woke: carve_mut!(woke, take),
+                state: carve_mut!(state, take),
+                window_ptr: carve_mut!(window_ptr, take),
+                acc: carve_mut!(acc, take),
+                log,
+            });
+        }
+        out
     }
 
     /// Columnar mirror of `DeviceSim::needs_availability_settle`: could
@@ -312,43 +466,96 @@ impl ParkLedger {
         t
     }
 
-    /// One idle window for device `i` — a line-for-line FP mirror of
-    /// `DeviceSim::step_idle` (same operation order, same operands),
-    /// which is what makes the SoA books bit-identical to a fleet of
-    /// real simulators.
-    fn step_one(&mut self, i: usize, dt_s: f64, mode: FleetMode, selected: bool) {
-        let busy = std::mem::take(&mut self.busy_s[i]);
+}
+
+/// Below this many devices a settle runs inline: spawning scoped
+/// threads costs more than replaying a few thousand windows.
+const PAR_SETTLE_MIN: usize = 4096;
+
+/// Disjoint split-borrow view over one contiguous device chunk of the
+/// [`ParkLedger`] columns — indices are chunk-local. It carries exactly
+/// the columns the billing body mutates (battery, plan, clock, busy,
+/// wake latch, state, window pointer, accumulator) as `&mut` slices
+/// plus shared borrows of the immutable rate columns and the window
+/// log, so `k` chunks settle on `k` scoped threads with no
+/// synchronization: per-device settle math never touches another
+/// device's cells, and every cross-device fold stays serial at the
+/// root ([`ParkLedger::totals`], the shard books, the engine's fleet
+/// totals). All slices are plain data, so the view is `Send` by
+/// construction.
+struct ParkChunk<'a> {
+    floor_ua: &'a [[f64; 3]],
+    awake_ua: &'a [f64],
+    wake: &'a [(f64, f64)],
+    capacity_uah: &'a [f64],
+    level_uah: &'a mut [f64],
+    plan: &'a mut [Option<ChargePlan>],
+    clock_s: &'a mut [f64],
+    busy_s: &'a mut [f64],
+    woke: &'a mut [bool],
+    state: &'a mut [PowerState],
+    window_ptr: &'a mut [usize],
+    acc: &'a mut [LedgerRow],
+    log: &'a WindowLog,
+}
+
+impl ParkChunk<'_> {
+    fn len(&self) -> usize {
+        self.level_uah.len()
+    }
+
+    /// Replay chunk-local device `j`'s deferred windows to the log
+    /// head — the single replay loop behind [`ParkLedger::settle`],
+    /// [`ParkLedger::settle_range`] and [`ParkLedger::par_settle`], so
+    /// serial and parallel settles run the identical operation
+    /// sequence. Ticks are `Copy`: the loop reads one tick per window
+    /// via [`WindowLog::tick_at`], no per-window slice.
+    fn settle(&mut self, j: usize) {
+        let end = self.log.len();
+        for k in self.window_ptr[j]..end {
+            let t = self.log.tick_at(k);
+            self.step_one(j, t.dt_s, t.mode, false);
+        }
+        self.window_ptr[j] = end;
+    }
+
+    /// One idle window for chunk-local device `j` — a line-for-line FP
+    /// mirror of `DeviceSim::step_idle` (same operation order, same
+    /// operands), which is what makes the SoA books bit-identical to a
+    /// fleet of real simulators.
+    fn step_one(&mut self, j: usize, dt_s: f64, mode: FleetMode, selected: bool) {
+        let busy = std::mem::take(&mut self.busy_s[j]);
         let mut win = if selected { (dt_s - busy).max(0.0) } else { dt_s };
-        let awake_equiv = self.awake_ua[i] * win / 3600.0;
+        let awake_equiv = self.awake_ua[j] * win / 3600.0;
         let mut wake_uah = 0.0;
         let mut wakes = 0u64;
-        if std::mem::take(&mut self.woke[i]) {
-            let (lat, uah) = self.wake[i];
+        if std::mem::take(&mut self.woke[j]) {
+            let (lat, uah) = self.wake[j];
             wakes = 1;
             wake_uah = uah;
-            drain_level(&mut self.level_uah[i], uah);
+            drain_level(&mut self.level_uah[j], uah);
             win = (win - lat).max(0.0);
         }
         let park = mode.park_state();
-        self.state[i] = park;
-        let floor_uah = self.floor_ua[i][mode_ix(mode)] * win / 3600.0;
+        self.state[j] = park;
+        let floor_uah = self.floor_ua[j][mode_ix(mode)] * win / 3600.0;
         let (mut idle, mut sleep) = (0.0, 0.0);
         match park {
             PowerState::DeepSleep => sleep = floor_uah,
             _ => idle = floor_uah,
         }
-        drain_level(&mut self.level_uah[i], floor_uah);
+        drain_level(&mut self.level_uah[j], floor_uah);
         let mut charged = 0.0;
-        if let Some(plan) = &mut self.plan[i] {
+        if let Some(plan) = &mut self.plan[j] {
             charged = plan.advance_free(
-                self.clock_s[i],
+                self.clock_s[j],
                 dt_s,
-                &mut self.level_uah[i],
-                self.capacity_uah[i],
+                &mut self.level_uah[j],
+                self.capacity_uah[j],
             );
         }
-        self.clock_s[i] += dt_s;
-        let a = &mut self.acc[i];
+        self.clock_s[j] += dt_s;
+        let a = &mut self.acc[j];
         a.idle_uah += idle;
         a.sleep_uah += sleep;
         a.wake_uah += wake_uah;
@@ -493,6 +700,88 @@ mod tests {
         assert_eq!(te.idle_uah.to_bits(), tl.idle_uah.to_bits());
         assert!(te.wakes > 0, "no wake ever billed");
         assert!(te.charged_uah > 0.0, "no charge ever credited");
+    }
+
+    #[test]
+    fn par_settle_matches_serial_to_the_bit() {
+        // drive identical lazy ledgers through the same schedule, then
+        // settle one serially and the others with each worker count —
+        // every column must match bitwise, including a worker count
+        // exceeding the device count (chunks clamp to [1, n])
+        let profiles = table1_profiles();
+        let n = 13usize;
+        let build = || {
+            let mut l = ParkLedger::new(&profiles, n, LedgerMode::Lazy);
+            for i in (0..n).step_by(3) {
+                l.enable_charging(i, 0xBEEF ^ i as u64);
+            }
+            for round in 0..30usize {
+                let dt = 300.0 + 60.0 * (round % 4) as f64;
+                let mode = ALL_FLEET_MODES[(round / 5) % 3];
+                let sel = [round % n];
+                l.begin_training(sel[0]);
+                l.add_busy(sel[0], 1.5);
+                l.drain(sel[0], 250.0);
+                l.advance_clock(ClockTick { dt_s: dt, mode }, &sel);
+            }
+            l
+        };
+        let mut serial = build();
+        serial.settle_all();
+        for workers in [1usize, 2, 3, 8, n + 7] {
+            let mut par = build();
+            par.par_settle(workers);
+            for i in 0..n {
+                let (a, b) = (serial.rows()[i], par.rows()[i]);
+                assert_eq!(a.idle_uah.to_bits(), b.idle_uah.to_bits(), "w={workers} dev {i}");
+                assert_eq!(a.sleep_uah.to_bits(), b.sleep_uah.to_bits(), "w={workers} dev {i}");
+                assert_eq!(a.wake_uah.to_bits(), b.wake_uah.to_bits(), "w={workers} dev {i}");
+                assert_eq!(a.wakes, b.wakes, "w={workers} dev {i}");
+                assert_eq!(
+                    a.charged_uah.to_bits(),
+                    b.charged_uah.to_bits(),
+                    "w={workers} dev {i}"
+                );
+                assert_eq!(
+                    a.awake_equiv_uah.to_bits(),
+                    b.awake_equiv_uah.to_bits(),
+                    "w={workers} dev {i}"
+                );
+                assert_eq!(
+                    serial.level_uah(i).to_bits(),
+                    par.level_uah(i).to_bits(),
+                    "w={workers} battery {i}"
+                );
+                assert_eq!(serial.clock_s[i].to_bits(), par.clock_s[i].to_bits());
+                assert_eq!(serial.window_ptr(i), par.window_ptr(i));
+                assert_eq!(serial.power_state(i), par.power_state(i));
+            }
+            // the root fold over parallel-settled rows stays serial,
+            // so totals agree bitwise too
+            let (ts, tp) = (serial.totals(), par.totals());
+            assert_eq!(ts.sleep_uah.to_bits(), tp.sleep_uah.to_bits(), "w={workers} fold");
+            assert_eq!(ts.idle_uah.to_bits(), tp.idle_uah.to_bits(), "w={workers} fold");
+            assert_eq!(ts.charged_uah.to_bits(), tp.charged_uah.to_bits(), "w={workers} fold");
+        }
+    }
+
+    #[test]
+    fn settle_range_covers_exactly_its_chunk() {
+        let mut l = ParkLedger::new(&table1_profiles(), 9, LedgerMode::Lazy);
+        let tick = ClockTick { dt_s: 120.0, mode: FleetMode::DealSleep };
+        for _ in 0..4 {
+            l.advance_clock(tick, &[]);
+        }
+        l.settle_range(3, 6);
+        for i in 0..9 {
+            if (3..6).contains(&i) {
+                assert_eq!(l.window_ptr(i), 4, "device {i} not settled");
+                assert!(l.rows()[i].sleep_uah > 0.0);
+            } else {
+                assert_eq!(l.window_ptr(i), 0, "device {i} settled out of range");
+                assert_eq!(l.rows()[i].sleep_uah, 0.0);
+            }
+        }
     }
 
     #[test]

@@ -132,6 +132,31 @@
 //!   equals 1-level equals flat to the bit (the id-order ledger fold is
 //!   likewise preserved because every leader emits rows ascending by
 //!   id and the root concatenates leader ranges in ascending order)
+//! - **Parallel fleet settle + zero-copy ledger pipeline** (PR 9): the
+//!   observation-time O(n) wall — `settle_all` fast-forwarding 10⁶
+//!   parked devices on one thread, and stats round-tripping through
+//!   collected Vecs — parallelizes without touching a single float
+//!   fold. [`ledger::ParkLedger::par_settle`] splits the SoA columns
+//!   into disjoint contiguous device chunks (a `ChunksMut`-style
+//!   split-borrow view sharing one billing body with the serial paths)
+//!   and replays each chunk's pending windows on scoped `std::thread`
+//!   workers; chunk boundaries follow `transport::partition_bounds`.
+//!   The discipline: per-device settle math reads shared immutable
+//!   columns and writes only its own cells, so chunking moves work but
+//!   never re-associates a sum — **the root fold stays serial** in
+//!   ascending device id (`totals`, shard book truing,
+//!   `Federation::settle_fleet`), which is why `par_settle(k)` equals
+//!   `settle_all()` to the bit for any worker count (pinned in
+//!   `transport_equivalence` across workers × transports × shards ×
+//!   two-level × modes × charging). The collect path is zero-copy end
+//!   to end: threaded workers reply into recycled per-worker row
+//!   buffers (riding the `CollectLedger` message out and the `Rows`
+//!   reply back), shard leaders *append* into the caller's buffer and
+//!   rebase ids in place (sorting only their own region), and the
+//!   engine folds straight from the arena-owned row buffer — a
+//!   steady-state stats read at 10⁶ devices allocates nothing
+//!   (`benches/fleet_scaling.rs` records the settle throughput as
+//!   `settle_rps_1e6`)
 //! - [`fleet`] — experiment builder used by benches and examples
 //!   (`FleetConfig::selector` / `FleetConfig::features` pick the
 //!   selection algorithm and gate the telemetry pipeline;

@@ -775,6 +775,16 @@ impl Federation {
     /// fleet energy from these totals until the next round invalidates
     /// them. Valid (and a no-op beyond the fold) under the eager
     /// ledger too.
+    ///
+    /// The settle underneath is **parallel, the fold is not**: stores
+    /// fast-forward their device chunks on scoped threads
+    /// (`ParkLedger::par_settle`), threaded workers and shard leaders
+    /// settle concurrently behind `dispatch_collect_ledger`, and the
+    /// rows land directly in the arena's reused buffer (leaders append
+    /// and rebase in place — no intermediate collect). Only this
+    /// ascending-id fold touches cross-device sums, so worker and
+    /// shard counts never change a bit of the totals, and a
+    /// steady-state stats read allocates nothing.
     pub fn settle_fleet(&mut self) {
         let mut rows = if self.arena_enabled {
             std::mem::take(&mut self.arena.rows)

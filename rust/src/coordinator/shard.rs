@@ -562,23 +562,25 @@ impl ShardedTransport {
         }
     }
 
-    fn collect_ledger_rows(&mut self) -> Vec<LedgerRow> {
-        // walk shards in id order and rebase; each leader reports
+    fn collect_ledger_rows_into(&mut self, out: &mut Vec<LedgerRow>) {
+        // walk shards in id order, each leader *appending* its rows to
+        // `out[start..]` directly — no per-shard temporary and no merged
+        // Vec, so a stats read at 10⁶ devices moves each row exactly
+        // once into the caller's reused buffer. Each leader reports
         // ascending local ids and shard bases ascend, so the
         // concatenation is already globally ascending — the flat
-        // device-major fold order the bit-identity contract needs
-        let mut merged: Vec<LedgerRow> = Vec::with_capacity(self.n_devices());
+        // device-major fold order the bit-identity contract needs.
+        // Threaded/sharded leaders were already fired by
+        // `dispatch_collect_ledger`, so their slices par-settle while
+        // earlier shards drain here.
         for (s, leader) in self.leaders.iter_mut().enumerate() {
             let base = self.bounds[s];
-            let rows = match leader {
-                Leader::Sync(t) => t.collect_ledger(),
-                Leader::Threaded(t) => {
-                    let mut v = Vec::new();
-                    t.collect_ledger_rows_into(&mut v);
-                    v
-                }
-                Leader::Sharded(t) => t.collect_ledger_rows(),
-            };
+            let start = out.len();
+            match leader {
+                Leader::Sync(t) => t.collect_ledger_rows_into(out),
+                Leader::Threaded(t) => t.collect_ledger_rows_into(out),
+                Leader::Sharded(t) => t.collect_ledger_rows_into(out),
+            }
             // true up the root's per-shard power books: the rows are
             // cumulative and bit-identical in either ledger mode, so
             // overwriting with their device-major fold makes the books
@@ -586,7 +588,7 @@ impl ShardedTransport {
             // misses the settles that flow through probe/execute paths
             let sum = &mut self.counters[s];
             let (mut idle, mut sleep, mut wake) = (0.0f64, 0.0f64, 0.0f64);
-            for r in &rows {
+            for r in &out[start..] {
                 idle += r.idle_uah;
                 sleep += r.sleep_uah;
                 wake += r.wake_uah;
@@ -594,12 +596,11 @@ impl ShardedTransport {
             sum.idle_uah = idle;
             sum.sleep_uah = sleep;
             sum.wake_uah = wake;
-            merged.extend(rows.into_iter().map(|mut r| {
+            // rebase this shard's range into global id space in place
+            for r in &mut out[start..] {
                 r.device += base;
-                r
-            }));
+            }
         }
-        merged
     }
 }
 
@@ -679,15 +680,16 @@ impl Transport for ShardedTransport {
     fn collect_ledger(&mut self) -> Vec<LedgerRow> {
         // phase 1 fires the settle-and-report at every asynchronous
         // leader so shards drain their deferred windows concurrently
+        let mut out = Vec::with_capacity(self.n_devices());
         self.dispatch_collect_ledger();
-        self.collect_ledger_rows()
+        self.collect_ledger_rows_into(&mut out);
+        out
     }
 
     fn collect_ledger_into(&mut self, out: &mut Vec<LedgerRow>) {
         out.clear();
         self.dispatch_collect_ledger();
-        let merged = self.collect_ledger_rows();
-        out.extend(merged);
+        self.collect_ledger_rows_into(out);
     }
 
     fn n_devices(&self) -> usize {

@@ -59,8 +59,8 @@ use super::device::{
 };
 use super::ledger::ParkLedger;
 use super::transport::{
-    settle_device, ClockTick, LedgerCfg, LedgerMode, ProbeReport, RoundJob,
-    WindowLog, WorkerReply,
+    partition_bounds, settle_device, ClockTick, LedgerCfg, LedgerMode, ProbeReport,
+    RoundJob, WindowLog, WorkerReply,
 };
 use super::unlearn::{ForgetAck, ForgetCommand};
 use super::workload;
@@ -559,6 +559,31 @@ impl SimStore {
     fn collect_ledger_into(&mut self, out: &mut Vec<LedgerRow>) {
         let base = self.base;
         let log = &self.log;
+        // fast-forward the slice in parallel before the serial emission
+        // walk: `settle_device` touches only its own sim, so disjoint
+        // contiguous chunks on scoped threads replay the identical
+        // per-device window sequence — the ascending-id emission below
+        // stays serial, and the settle calls it makes are no-ops
+        let workers = ParkLedger::default_settle_workers(self.devices.len());
+        if workers > 1 && log.len() > 0 {
+            let bounds = partition_bounds(self.devices.len(), workers);
+            let mut rest = &mut self.devices[..];
+            std::thread::scope(|sc| {
+                let mut handles = Vec::with_capacity(workers);
+                for w in bounds.windows(2) {
+                    let (chunk, tail) = std::mem::take(&mut rest).split_at_mut(w[1] - w[0]);
+                    rest = tail;
+                    handles.push(sc.spawn(move || {
+                        for d in chunk {
+                            settle_device(d, log);
+                        }
+                    }));
+                }
+                for h in handles {
+                    h.join().unwrap();
+                }
+            });
+        }
         out.extend(self.devices.iter_mut().enumerate().map(|(j, d)| {
             settle_device(d, log);
             let mut r = d.ledger_row();
@@ -809,12 +834,22 @@ impl ColumnarStore {
     }
 
     fn collect_ledger_into(&mut self, out: &mut Vec<LedgerRow>) {
+        // fast-forward every park column in parallel first — the
+        // million-device wall this store exists to break. Evicted
+        // slots' stale columns get settled too, which is harmless:
+        // their wake latch, busy credit and plan were taken on
+        // eviction and their rows are never read again (hydrated
+        // devices emit from their sims below). The emission walk and
+        // the caller's id-order fold stay serial, so the rows are
+        // bit-identical to a per-device serial settle.
+        self.park
+            .par_settle(ParkLedger::default_settle_workers(self.park.n_devices()));
         for i in 0..self.park.n_devices() {
             let mut r = if let Some(d) = self.sims[i].as_deref_mut() {
                 settle_device(d, self.park.log());
                 d.ledger_row()
             } else {
-                self.park.settle(i);
+                // already settled by the parallel pass
                 self.park.rows()[i]
             };
             r.device = self.base + i;

@@ -181,6 +181,13 @@ impl WindowLog {
         &self.ticks[ptr..]
     }
 
+    /// The single tick at index `k` (ticks are `Copy`) — the settle
+    /// replay's per-window accessor, so walking the log by index needs
+    /// no per-window slice construction.
+    pub(crate) fn tick_at(&self, k: usize) -> ClockTick {
+        self.ticks[k]
+    }
+
     /// Pending idle seconds per mode for a device at `ptr` (an O(1)
     /// prefix-sum difference — approximate to a few ulps, which the
     /// bound check's guard band absorbs).
@@ -471,6 +478,14 @@ impl SyncTransport {
     pub fn devices(&self) -> &[DeviceSim] {
         self.store.devices()
     }
+
+    /// Settle and append this transport's cumulative rows *without*
+    /// clearing `out` — the shard root's zero-copy collect primitive
+    /// (the trait-level [`Transport::collect_ledger_into`] clears so
+    /// flat callers get a coherent buffer).
+    pub(crate) fn collect_ledger_rows_into(&mut self, out: &mut Vec<LedgerRow>) {
+        self.store.collect_ledger_into(out);
+    }
 }
 
 impl Transport for SyncTransport {
@@ -579,8 +594,9 @@ enum Ctl {
     /// any subsequent operation).
     SetLedger(LedgerCfg),
     /// Settle every deferred window and reply the worker slice's
-    /// cumulative [`LedgerRow`]s.
-    CollectLedger,
+    /// cumulative [`LedgerRow`]s into the recycled buffer riding the
+    /// message (handed back in `Reply::Rows` for the next collect).
+    CollectLedger { rows: Vec<LedgerRow> },
     Stop,
 }
 
@@ -625,6 +641,11 @@ pub struct ThreadedTransport {
     /// dispatch, handed back in the worker's reply (`Reply::*::spent`).
     id_buckets: Vec<Vec<usize>>,
     cmd_buckets: Vec<Vec<ForgetCommand>>,
+    /// Recycled per-worker row buffers for ledger collects: ride out in
+    /// `Ctl::CollectLedger`, come back filled in `Reply::Rows`, and are
+    /// re-pooled after draining into the caller's buffer — steady-state
+    /// stats reads allocate nothing.
+    row_buckets: Vec<Vec<LedgerRow>>,
     /// All worker indices, precomputed for broadcast collects.
     all_workers: Vec<usize>,
 }
@@ -684,6 +705,7 @@ impl ThreadedTransport {
             bounds,
             id_buckets: (0..k).map(|_| Vec::new()).collect(),
             cmd_buckets: (0..k).map(|_| Vec::new()).collect(),
+            row_buckets: (0..k).map(|_| Vec::new()).collect(),
             all_workers: (0..k).collect(),
         }
     }
@@ -875,26 +897,38 @@ impl ThreadedTransport {
         out.sort_unstable_by_key(|r| r.device);
     }
 
-    /// Fire a ledger collect at every worker without waiting. Split out
-    /// so a shard root can settle all its leaders before any of them
-    /// blocks on replies.
+    /// Fire a ledger collect at every worker without waiting, each
+    /// message carrying that worker's pooled row buffer. Split out so a
+    /// shard root can settle all its leaders before any of them blocks
+    /// on replies — the workers par-settle their slices while the root
+    /// merges earlier shards.
     pub(crate) fn dispatch_collect_ledger(&mut self) {
-        for ep in &self.endpoints {
-            let _ = ep.tx.send(Ctl::CollectLedger);
+        for w in 0..self.endpoints.len() {
+            let rows = std::mem::take(&mut self.row_buckets[w]);
+            let _ = self.endpoints[w].tx.send(Ctl::CollectLedger { rows });
         }
     }
 
     /// Collect the cumulative rows owed by a prior
-    /// [`Self::dispatch_collect_ledger`] into `out`, appended, then
-    /// sorted ascending by device id.
+    /// [`Self::dispatch_collect_ledger`], appended to `out` with only
+    /// the newly appended region sorted ascending by device id — a
+    /// shard root appends several leaders' row ranges into one buffer,
+    /// and earlier ranges are already rebased into global id space, so
+    /// a whole-buffer sort would interleave them. The per-worker
+    /// buffers riding the replies are drained and re-pooled for the
+    /// next collect.
     pub(crate) fn collect_ledger_rows_into(&mut self, out: &mut Vec<LedgerRow>) {
+        let start = out.len();
         for r in self.collect_from(&self.all_workers) {
             match r {
-                Reply::Rows { rows, .. } => out.extend(rows),
+                Reply::Rows { worker, mut rows } => {
+                    out.append(&mut rows);
+                    self.row_buckets[worker] = rows;
+                }
                 _ => unreachable!("non-row reply to a ledger collect"),
             }
         }
-        out.sort_unstable_by_key(|r| r.device);
+        out[start..].sort_unstable_by_key(|r| r.device);
     }
 
     /// Fire an availability probe at every worker without waiting.
@@ -957,8 +991,10 @@ fn worker_loop(worker: usize, mut store: FleetStore, rx: Receiver<Ctl>, out: Sen
                     break;
                 }
             }
-            Ok(Ctl::CollectLedger) => {
-                let mut rows = Vec::new();
+            Ok(Ctl::CollectLedger { mut rows }) => {
+                // the pooled buffer arrives dirty from the last collect;
+                // the store-level collect appends, so clear first
+                rows.clear();
                 store.collect_ledger_into(&mut rows);
                 if out.send(Reply::Rows { worker, rows }).is_err() {
                     break;
@@ -1346,6 +1382,10 @@ mod tests {
         assert_eq!(log.pending(4), [0.0; 3]);
         assert_eq!(log.since(2).len(), 2);
         assert_eq!(log.since(2)[0].dt_s, 30.0);
+        // the per-index accessor the settle replay walks
+        assert_eq!(log.tick_at(2).dt_s, 30.0);
+        assert_eq!(log.tick_at(3).dt_s, 10.0);
+        assert!(matches!(log.tick_at(1).mode, FleetMode::AllAwake));
     }
 
     #[test]

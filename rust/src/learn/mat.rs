@@ -21,6 +21,19 @@
 //! perf win. `matvec_into`/`tmatvec_into` are the allocation-free
 //! variants the round hot path (LinUCB scoring, Tikhonov solves) runs
 //! on.
+//!
+//! The `simd` cargo feature (nightly-only: `core::simd`) swaps the
+//! panel inner loops for explicit 4-wide `f64x4` lanes **without
+//! changing a single fold order**: the matvec panel's four per-row
+//! accumulators become the four lanes of one vector register (each
+//! lane still sums its row's products in sequential `k` order), and
+//! the tmatvec panel vectorizes across four `y` elements while each
+//! element still receives its row contributions as four separate
+//! ascending-row adds. `Simd` arithmetic is strict IEEE-754 with no
+//! implicit FMA contraction, so scalar and simd builds are
+//! bit-identical — `blocked_kernels_bit_match_scalar_reference`
+//! compares against in-test scalar loops and therefore pins the simd
+//! build too when run under `--features simd`.
 
 /// Dense row-major matrix.
 #[derive(Debug, Clone, PartialEq)]
@@ -108,14 +121,7 @@ impl Mat {
             let (r0, rest) = panel.split_at(self.cols);
             let (r1, rest) = rest.split_at(self.cols);
             let (r2, r3) = rest.split_at(self.cols);
-            let mut acc = [0.0f64; 4];
-            for (k, &xk) in x.iter().enumerate() {
-                acc[0] += r0[k] * xk;
-                acc[1] += r1[k] * xk;
-                acc[2] += r2[k] * xk;
-                acc[3] += r3[k] * xk;
-            }
-            y.extend_from_slice(&acc);
+            y.extend_from_slice(&matvec_panel(r0, r1, r2, r3, x));
             i += 4;
         }
         for r in i..self.rows {
@@ -146,15 +152,8 @@ impl Mat {
             let (r0, rest) = panel.split_at(self.cols);
             let (r1, rest) = rest.split_at(self.cols);
             let (r2, r3) = rest.split_at(self.cols);
-            let (x0, x1, x2, x3) = (x[i], x[i + 1], x[i + 2], x[i + 3]);
-            for (j, yj) in y.iter_mut().enumerate() {
-                let mut t = *yj;
-                t += x0 * r0[j];
-                t += x1 * r1[j];
-                t += x2 * r2[j];
-                t += x3 * r3[j];
-                *yj = t;
-            }
+            let xi = [x[i], x[i + 1], x[i + 2], x[i + 3]];
+            tmatvec_panel(r0, r1, r2, r3, xi, y);
             i += 4;
         }
         for r in i..self.rows {
@@ -258,6 +257,86 @@ impl std::ops::IndexMut<(usize, usize)> for Mat {
 pub fn dot(a: &[f64], b: &[f64]) -> f64 {
     debug_assert_eq!(a.len(), b.len());
     a.iter().zip(b).map(|(x, y)| x * y).sum()
+}
+
+/// 4-row matvec panel: four independent per-row accumulators fed in
+/// sequential `k` order — `[dot(r0,x), dot(r1,x), dot(r2,x), dot(r3,x)]`
+/// to the bit.
+#[cfg(not(feature = "simd"))]
+#[inline]
+fn matvec_panel(r0: &[f64], r1: &[f64], r2: &[f64], r3: &[f64], x: &[f64]) -> [f64; 4] {
+    let mut acc = [0.0f64; 4];
+    for (k, &xk) in x.iter().enumerate() {
+        acc[0] += r0[k] * xk;
+        acc[1] += r1[k] * xk;
+        acc[2] += r2[k] * xk;
+        acc[3] += r3[k] * xk;
+    }
+    acc
+}
+
+/// 4-row matvec panel, explicit lanes: lane `l` is row `l`'s
+/// accumulator, summed in the same sequential `k` order as the scalar
+/// panel — `Simd` mul/add are strict IEEE with no implicit FMA, so the
+/// result is bit-identical to the scalar build.
+#[cfg(feature = "simd")]
+#[inline]
+fn matvec_panel(r0: &[f64], r1: &[f64], r2: &[f64], r3: &[f64], x: &[f64]) -> [f64; 4] {
+    use core::simd::f64x4;
+    let mut acc = f64x4::splat(0.0);
+    for (k, &xk) in x.iter().enumerate() {
+        acc += f64x4::from_array([r0[k], r1[k], r2[k], r3[k]]) * f64x4::splat(xk);
+    }
+    acc.to_array()
+}
+
+/// 4-row tmatvec panel: every `y[j]` receives its four row
+/// contributions as separate ascending-row adds (never a fused sum).
+#[cfg(not(feature = "simd"))]
+#[inline]
+fn tmatvec_panel(r0: &[f64], r1: &[f64], r2: &[f64], r3: &[f64], xi: [f64; 4], y: &mut [f64]) {
+    let [x0, x1, x2, x3] = xi;
+    for (j, yj) in y.iter_mut().enumerate() {
+        let mut t = *yj;
+        t += x0 * r0[j];
+        t += x1 * r1[j];
+        t += x2 * r2[j];
+        t += x3 * r3[j];
+        *yj = t;
+    }
+}
+
+/// 4-row tmatvec panel, explicit lanes: vectorized across four `y`
+/// elements, while each element still receives its row contributions
+/// as four separate ascending-row adds — lanes never cross the
+/// per-element fold, so the result is bit-identical to the scalar
+/// build.
+#[cfg(feature = "simd")]
+#[inline]
+fn tmatvec_panel(r0: &[f64], r1: &[f64], r2: &[f64], r3: &[f64], xi: [f64; 4], y: &mut [f64]) {
+    use core::simd::f64x4;
+    let [x0, x1, x2, x3] = xi;
+    let (xv0, xv1, xv2, xv3) =
+        (f64x4::splat(x0), f64x4::splat(x1), f64x4::splat(x2), f64x4::splat(x3));
+    let n = y.len();
+    let mut j = 0;
+    while j + 4 <= n {
+        let mut t = f64x4::from_slice(&y[j..j + 4]);
+        t += xv0 * f64x4::from_slice(&r0[j..j + 4]);
+        t += xv1 * f64x4::from_slice(&r1[j..j + 4]);
+        t += xv2 * f64x4::from_slice(&r2[j..j + 4]);
+        t += xv3 * f64x4::from_slice(&r3[j..j + 4]);
+        t.copy_to_slice(&mut y[j..j + 4]);
+        j += 4;
+    }
+    for jj in j..n {
+        let mut t = y[jj];
+        t += x0 * r0[jj];
+        t += x1 * r1[jj];
+        t += x2 * r2[jj];
+        t += x3 * r3[jj];
+        y[jj] = t;
+    }
 }
 
 #[cfg(test)]
@@ -382,6 +461,49 @@ mod tests {
             assert_eq!(buf.len(), cols);
             for (a, b) in want_tmv.iter().zip(&buf) {
                 assert_eq!(a.to_bits(), b.to_bits());
+            }
+        }
+    }
+
+    /// Under `--features simd` the panel helpers are the `f64x4`
+    /// variants; pin them bitwise against the scalar panel loops
+    /// written out inline (including tail columns the 4-wide tmatvec
+    /// lanes don't cover).
+    #[cfg(feature = "simd")]
+    #[test]
+    fn simd_panels_bit_match_scalar_panel_order() {
+        use crate::util::rng::Rng;
+        let mut rng = Rng::new(97);
+        for cols in [1usize, 3, 4, 6, 8, 11] {
+            let rows: Vec<Vec<f64>> =
+                (0..4).map(|_| (0..cols).map(|_| rng.normal()).collect()).collect();
+            let x: Vec<f64> = (0..cols).map(|_| rng.normal()).collect();
+            let xi = [rng.normal(), rng.normal(), rng.normal(), rng.normal()];
+            let (r0, r1, r2, r3) = (&rows[0], &rows[1], &rows[2], &rows[3]);
+            let mut want_mv = [0.0f64; 4];
+            for (k, &xk) in x.iter().enumerate() {
+                want_mv[0] += r0[k] * xk;
+                want_mv[1] += r1[k] * xk;
+                want_mv[2] += r2[k] * xk;
+                want_mv[3] += r3[k] * xk;
+            }
+            let got_mv = matvec_panel(r0, r1, r2, r3, &x);
+            for (a, b) in want_mv.iter().zip(&got_mv) {
+                assert_eq!(a.to_bits(), b.to_bits(), "matvec panel cols={cols}");
+            }
+            let mut want_y: Vec<f64> = (0..cols).map(|_| rng.normal()).collect();
+            let mut got_y = want_y.clone();
+            for (j, yj) in want_y.iter_mut().enumerate() {
+                let mut t = *yj;
+                t += xi[0] * r0[j];
+                t += xi[1] * r1[j];
+                t += xi[2] * r2[j];
+                t += xi[3] * r3[j];
+                *yj = t;
+            }
+            tmatvec_panel(r0, r1, r2, r3, xi, &mut got_y);
+            for (a, b) in want_y.iter().zip(&got_y) {
+                assert_eq!(a.to_bits(), b.to_bits(), "tmatvec panel cols={cols}");
             }
         }
     }

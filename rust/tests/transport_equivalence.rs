@@ -878,6 +878,138 @@ fn two_level_shards_bit_identical_to_one_level_and_flat() {
 }
 
 #[test]
+fn parallel_settle_rows_bit_identical_across_workers_shards_and_two_level() {
+    // the PR 9 tentpole contract: the settle behind a ledger collect is
+    // parallel (ParkLedger::par_settle chunks, per-worker recycled row
+    // buffers, appending shard-root merge) but the per-device cumulative
+    // LedgerRows and their flat ascending-id fold may not move a single
+    // bit — across threaded worker counts {1,2,4,8}, shard counts
+    // {1,2,4} (sync and threaded leaves), two-level nesting, every
+    // FleetMode, with and without charging sessions. Also the
+    // dirty-buffer contract for the stats-path `_into`: collects into a
+    // stale buffer twice must leave no residue.
+    use deal::coordinator::{ClockTick, LedgerCfg, LedgerRow, ThreadedTransport};
+
+    let devices = |charging: bool| {
+        let mut v = fleet::build_devices(&FleetConfig {
+            n_devices: 10,
+            dataset: Dataset::Housing,
+            scale: 0.4,
+            scheme: Scheme::Deal,
+            seed: 33,
+            ..FleetConfig::default()
+        });
+        if charging {
+            for (i, d) in v.iter_mut().enumerate() {
+                if i % 2 == 0 {
+                    d.enable_charging(0x51D ^ i as u64);
+                }
+            }
+        }
+        v
+    };
+    let drive = |t: &mut dyn Transport, mode: FleetMode| -> Vec<LedgerRow> {
+        t.set_ledger(LedgerCfg { mode: LedgerMode::Lazy, fresh_telemetry: false });
+        for round in 0..8u64 {
+            let tick = ClockTick { dt_s: 900.0 + 150.0 * (round % 3) as f64, mode };
+            let _ = t.advance_clock(tick, &[1, 4, 7]);
+        }
+        // stale garbage in the reused buffer, then two collects: the
+        // `_into` contract clears, so no residue may survive either
+        let mut rows = vec![LedgerRow::default(); 3];
+        t.collect_ledger_into(&mut rows);
+        t.collect_ledger_into(&mut rows);
+        rows
+    };
+    let fold = |rows: &[LedgerRow]| -> [u64; 4] {
+        // flat ascending-id fold — the serial root fold the stats read
+        // performs; parallel settles may not perturb a bit of it
+        let (mut idle, mut sleep, mut wake, mut charged) = (0.0f64, 0.0f64, 0.0f64, 0.0f64);
+        for r in rows {
+            idle += r.idle_uah;
+            sleep += r.sleep_uah;
+            wake += r.wake_uah;
+            charged += r.charged_uah;
+        }
+        [idle.to_bits(), sleep.to_bits(), wake.to_bits(), charged.to_bits()]
+    };
+    for mode in ALL_FLEET_MODES {
+        for charging in [false, true] {
+            let mut reference = SyncTransport::new(devices(charging));
+            let base = drive(&mut reference, mode);
+            assert_eq!(base.len(), 10, "reference row count");
+            if charging {
+                assert!(
+                    base.iter().any(|r| r.charged_uah > 0.0),
+                    "{}: schedule never charged",
+                    mode.name()
+                );
+            }
+            let base_fold = fold(&base);
+            let fabrics: Vec<(String, Box<dyn Transport>)> = vec![
+                ("threaded w=1".into(), Box::new(ThreadedTransport::spawn_batched(devices(charging), 1))),
+                ("threaded w=2".into(), Box::new(ThreadedTransport::spawn_batched(devices(charging), 2))),
+                ("threaded w=4".into(), Box::new(ThreadedTransport::spawn_batched(devices(charging), 4))),
+                ("threaded w=8".into(), Box::new(ThreadedTransport::spawn_batched(devices(charging), 8))),
+                ("sharded 1 sync".into(), Box::new(ShardedTransport::new(devices(charging), 1, TransportKind::Sync))),
+                ("sharded 2 sync".into(), Box::new(ShardedTransport::new(devices(charging), 2, TransportKind::Sync))),
+                ("sharded 4 sync".into(), Box::new(ShardedTransport::new(devices(charging), 4, TransportKind::Sync))),
+                ("sharded 2 threaded".into(), Box::new(ShardedTransport::new(devices(charging), 2, TransportKind::Threaded))),
+                (
+                    "two-level 2x2 sync".into(),
+                    Box::new(ShardedTransport::two_level(
+                        FleetSeed::Sims(devices(charging)),
+                        2,
+                        2,
+                        TransportKind::Sync,
+                    )),
+                ),
+            ];
+            for (name, mut t) in fabrics {
+                let rows = drive(t.as_mut(), mode);
+                let ctx = format!("{} charging={charging} {name}", mode.name());
+                assert_eq!(rows.len(), base.len(), "{ctx}: row count");
+                for (a, b) in base.iter().zip(&rows) {
+                    assert_eq!(a.device, b.device, "{ctx}: id order");
+                    assert_eq!(
+                        a.idle_uah.to_bits(),
+                        b.idle_uah.to_bits(),
+                        "{ctx}: idle dev {}",
+                        a.device
+                    );
+                    assert_eq!(
+                        a.sleep_uah.to_bits(),
+                        b.sleep_uah.to_bits(),
+                        "{ctx}: sleep dev {}",
+                        a.device
+                    );
+                    assert_eq!(
+                        a.wake_uah.to_bits(),
+                        b.wake_uah.to_bits(),
+                        "{ctx}: wake dev {}",
+                        a.device
+                    );
+                    assert_eq!(a.wakes, b.wakes, "{ctx}: wakes dev {}", a.device);
+                    assert_eq!(
+                        a.charged_uah.to_bits(),
+                        b.charged_uah.to_bits(),
+                        "{ctx}: charged dev {}",
+                        a.device
+                    );
+                    assert_eq!(
+                        a.awake_equiv_uah.to_bits(),
+                        b.awake_equiv_uah.to_bits(),
+                        "{ctx}: awake-equiv dev {}",
+                        a.device
+                    );
+                }
+                assert_eq!(fold(&rows), base_fold, "{ctx}: root fold");
+            }
+        }
+    }
+}
+
+#[test]
 fn transport_flags_parse() {
     assert_eq!(TransportKind::from_name("sync"), Some(TransportKind::Sync));
     assert_eq!(TransportKind::from_name("threaded"), Some(TransportKind::Threaded));
