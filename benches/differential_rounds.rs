@@ -1,0 +1,174 @@
+//! Differential round engine bench — deletion rate × rounds-mode sweep
+//! (the PR 10 perf claim).
+//!
+//! `--rounds-mode differential` serves round probes and FORGET acks
+//! from arranged per-device traces, so a round's evaluation cost tracks
+//! the delta stream instead of O(model + holdout) per credited device.
+//! This bench times `Federation::run_round` for recompute vs
+//! differential across deletion-stream intensities on the PPR
+//! (movielens) workload — the arranged-sparse path — after first
+//! asserting the two modes agree to the bit on the bench config itself.
+//!
+//! Self-check: the deletion-heavy config must show ≥5× round
+//! throughput. Asserted only when the full-size bench ran —
+//! `DEAL_BENCH_FAST=1` shrinks the model below the regime the claim is
+//! about, so fast runs report the ratio without gating on it.
+//!
+//!     cargo bench --bench differential_rounds
+
+use deal::coordinator::fleet::{build, FleetConfig};
+use deal::coordinator::{Federation, LedgerMode, RoundsMode, Scheme};
+use deal::data::Dataset;
+use deal::util::bench::{from_env, json_f64, write_results_json};
+
+/// The tentpole's headline floor on the deletion-heavy config.
+const SPEEDUP_TARGET: f64 = 5.0;
+/// Allowed speedup shrink vs the committed baseline before the smoke fails.
+const REGRESSION_FRAC: f64 = 0.25;
+
+fn fast() -> bool {
+    std::env::var("DEAL_BENCH_FAST").as_deref() == Ok("1")
+}
+
+/// Pull `"key": <number>` out of a JSON document (hand-rolled — the
+/// crate is dependency-free, and the baseline schema is ours).
+fn json_number(doc: &str, key: &str) -> Option<f64> {
+    let pat = format!("\"{key}\":");
+    let at = doc.find(&pat)? + pat.len();
+    let rest = doc[at..].trim_start();
+    let end = rest
+        .find(|c: char| !(c.is_ascii_digit() || ".-+eE".contains(c)))
+        .unwrap_or(rest.len());
+    rest[..end].parse().ok()
+}
+
+fn cfg(rounds: RoundsMode, deletion_rate: f64, arrivals: usize, scale: f64) -> FleetConfig {
+    FleetConfig {
+        n_devices: 16,
+        dataset: Dataset::Movielens,
+        scale,
+        scheme: Scheme::Deal,
+        seed: 9,
+        arrivals_per_round: arrivals,
+        deletion_rate,
+        deletion_slo: 3,
+        ledger: LedgerMode::Lazy,
+        rounds,
+        ..FleetConfig::default()
+    }
+}
+
+/// Build and run a few rounds so steady-state timing sees warmed
+/// arenas, settled availability and (differential) arranged traces.
+fn prewarmed(c: &FleetConfig) -> Federation {
+    let mut fed = build(c);
+    for _ in 0..3 {
+        fed.run_round();
+    }
+    fed
+}
+
+fn main() {
+    println!("== differential round engine (deletion rate × rounds-mode) ==");
+    let b = from_env();
+    let scale = if fast() { 0.05 } else { 0.3 };
+
+    // bit-identity spot check before timing anything: on the bench
+    // config itself, differential must equal recompute to the bit
+    {
+        let mut rec = build(&cfg(RoundsMode::Recompute, 2.0, 0, scale));
+        let mut dif = build(&cfg(RoundsMode::Differential, 2.0, 0, scale));
+        let a = rec.run(8);
+        let d = dif.run(8);
+        assert!(
+            a == d,
+            "differential diverged from recompute on the bench config — \
+             timing a wrong computation is meaningless"
+        );
+        println!("bit-identity spot check ok (8 rounds, deletion-heavy)");
+    }
+
+    let mut results = Vec::new();
+    let mut speedups: Vec<(&str, f64)> = Vec::new();
+    // the sweep: idle probes (zero-delta cache reads), a mixed
+    // train+delete stream, and the deletion-heavy headline (no
+    // arrivals, the probe + forget-ack path is all evaluation)
+    for (key, del, arrivals) in [
+        ("differential_speedup_idle", 0.0, 0usize),
+        ("differential_speedup_mixed", 0.5, 10),
+        ("differential_speedup_deletion_heavy", 2.0, 0),
+    ] {
+        let mut rec = prewarmed(&cfg(RoundsMode::Recompute, del, arrivals, scale));
+        let r_rec = b.run(
+            &format!("round_recompute(del={del},arrivals={arrivals})"),
+            || rec.run_round(),
+        );
+        let mut dif = prewarmed(&cfg(RoundsMode::Differential, del, arrivals, scale));
+        let r_dif = b.run(
+            &format!("round_differential(del={del},arrivals={arrivals})"),
+            || dif.run_round(),
+        );
+        let speedup = r_rec.median / r_dif.median;
+        println!("  {key}: {speedup:.2}x");
+        results.push(r_rec);
+        results.push(r_dif);
+        speedups.push((key, speedup));
+    }
+
+    let headline = speedups
+        .iter()
+        .find(|(k, _)| *k == "differential_speedup_deletion_heavy")
+        .map(|(_, s)| *s)
+        .unwrap();
+    let mut extra: Vec<(&str, String)> = vec![("measured", "true".to_string())];
+    for (k, s) in &speedups {
+        extra.push((k, json_f64(*s)));
+    }
+    write_results_json("differential_rounds", &results, &extra);
+
+    if fast() {
+        println!(
+            "fast mode: ≥{SPEEDUP_TARGET}x self-check skipped \
+             (shrunk model is below the claim's regime)"
+        );
+    } else {
+        assert!(
+            headline >= SPEEDUP_TARGET,
+            "deletion-heavy round throughput: differential is only {headline:.2}x \
+             recompute (target ≥{SPEEDUP_TARGET}x)"
+        );
+        println!("self-check ok: {headline:.2}x ≥ {SPEEDUP_TARGET}x on deletion-heavy rounds");
+    }
+
+    // --- regression gate vs the committed BENCH_differential.json
+    // baseline (informational until the baseline carries "measured": true)
+    let Ok(path) = std::env::var("DEAL_BENCH_BASELINE") else {
+        return;
+    };
+    let Ok(doc) = std::fs::read_to_string(&path) else {
+        eprintln!("warning: baseline {path} unreadable — gate skipped");
+        return;
+    };
+    if !doc.contains("\"measured\":true") {
+        println!("baseline {path} is an unmeasured placeholder — gate informational only");
+        return;
+    }
+    let Some(base) = json_number(&doc, "differential_speedup_deletion_heavy") else {
+        eprintln!(
+            "warning: baseline {path} lacks differential_speedup_deletion_heavy — gate skipped"
+        );
+        return;
+    };
+    let floor = base * (1.0 - REGRESSION_FRAC);
+    if headline < floor {
+        eprintln!(
+            "FAIL: deletion-heavy differential speedup regressed: {headline:.2}x < \
+             {floor:.2}x (baseline {base:.2}x, tolerance {REGRESSION_FRAC})"
+        );
+        std::process::exit(1);
+    }
+    println!(
+        "regression gate ok: {headline:.2}x deletion-heavy speedup \
+         (baseline {base:.2}x, floor {floor:.2}x)"
+    );
+}

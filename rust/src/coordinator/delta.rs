@@ -1,0 +1,523 @@
+//! Differential round engine: arranged per-device traces that make the
+//! round probe and the FORGET ack path O(delta) instead of
+//! O(model + holdout).
+//!
+//! The shape follows the Amnesia/differential-dataflow playbook: model
+//! evaluation state lives in *arranged collections* keyed by what each
+//! cached entry reads, and an UPDATE or FORGET is a [`Change`] —
+//! `(datum, +1)` or `(datum, -1)` — that ripples through the
+//! arrangement by marking exactly the entries whose inputs it reached.
+//! A probe then refreshes only the dirty entries; everything else is a
+//! cache read. We stay dependency-free: the "dataflow" is a hand-rolled
+//! dirty-set per model family, not a generic operator graph.
+//!
+//! ## Arrangement layout (per workload)
+//!
+//! - **PPR** — the signature is the top similarity of L rows `0..32`,
+//!   cached per row; the accuracy probe is a per-holdout-user hit bit,
+//!   cached per user together with the sorted item set its `predict`
+//!   reads. [`Ppr::drain_touched`] reports the L rows each apply wrote
+//!   (a guaranteed superset of changed entries), so a delta dirties the
+//!   intersected rows/users only.
+//! - **kNN-LSH** — per holdout point: the per-table bucket keys (fixed
+//!   hyperplanes ⇒ computed once), the cached prediction/correctness,
+//!   and whether the candidate set was large enough to avoid the
+//!   linear-scan fallback. A delta dirties a point iff it shares a
+//!   bucket key in some table, or the point was on the fallback path
+//!   (which reads the whole store).
+//! - **NB / Tikhonov** ("dense") — NB's posterior reads the global
+//!   count total and Tikhonov's signature is the whole weight vector,
+//!   so any delta dirties the whole trace. The win is still real: a
+//!   zero-delta probe is a pure cache read, and the FORGET ack path's
+//!   repeated signature reads collapse to one refresh.
+//!
+//! ## Bit-identity contract
+//!
+//! Differential is a *cache*, never a different computation: every
+//! refresh evaluates the same expressions as `Workload::signature` /
+//! `Workload::accuracy` over the same model state, no float fold is
+//! re-associated, and integer hit counts divide exactly as in the
+//! recompute path. Hence `--rounds-mode differential` is bit-identical
+//! to the `recompute` reference — pinned per-step by the property test
+//! below and fleet-wide (stats + per-round records, across fabrics ×
+//! shards × fleet modes × a live deletion stream) in
+//! `rust/tests/{transport,unlearn}_equivalence.rs`.
+//!
+//! Retraction is *exact*, not approximate, because the models are count
+//! algebras (Eq. 1: `forget(update(m, d), d) == m` bit-exactly), so a
+//! `-1` change leaves the trace equal to one arranged over the data
+//! with the datum never present.
+
+use super::workload::Workload;
+use crate::learn::traits::{Middleware, OpCost};
+
+/// How the engine maintains per-device probe state across rounds
+/// (`deal run --rounds-mode recompute|differential`).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub enum RoundsMode {
+    /// Rebuild signature/accuracy from the full model + holdout at every
+    /// probe. The default and the bit-identity reference.
+    #[default]
+    Recompute,
+    /// Maintain arranged per-device traces and refresh only the entries
+    /// reached by the round's Add/Retract deltas (O(delta) probes).
+    Differential,
+}
+
+impl RoundsMode {
+    pub fn name(&self) -> &'static str {
+        match self {
+            RoundsMode::Recompute => "recompute",
+            RoundsMode::Differential => "differential",
+        }
+    }
+
+    pub fn from_name(s: &str) -> Option<Self> {
+        match s.to_ascii_lowercase().as_str() {
+            "recompute" => Some(RoundsMode::Recompute),
+            "differential" | "diff" => Some(RoundsMode::Differential),
+            _ => None,
+        }
+    }
+}
+
+/// One training-datum delta flowing through a device's trace.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Change {
+    /// Absorb training item `i` (UPDATE — multiplicity `+1`).
+    Add(usize),
+    /// Retract training item `i` (FORGET — multiplicity `-1`).
+    Retract(usize),
+}
+
+/// Per-holdout-user PPR probe state.
+#[derive(Debug, Clone)]
+struct PprUser {
+    /// index into the holdout
+    idx: u32,
+    /// sorted distinct items of `h[1..]` — the L rows its `predict`
+    /// reads (dirty test only; the refresh re-reads the holdout in
+    /// original order so the f32 score fold is unchanged)
+    rest: Vec<u32>,
+    hit: bool,
+    dirty: bool,
+}
+
+#[derive(Debug, Clone)]
+enum Kind {
+    Ppr {
+        /// cached signature entries, one per L row in `0..items.min(32)`
+        sig: Vec<f64>,
+        sig_dirty: Vec<bool>,
+        /// qualifying (`len >= 2`) users among `holdout.take(32)`
+        users: Vec<PprUser>,
+    },
+    Knn {
+        n_tables: usize,
+        /// flat per-point per-table bucket keys (`points × n_tables`);
+        /// hyperplanes are fixed at construction, so these never change
+        keys: Vec<u64>,
+        pred: Vec<Option<u32>>,
+        correct: Vec<bool>,
+        /// pre-fallback candidate count was ≥ k (point reads only its
+        /// shared buckets, not the whole store)
+        cand_ok: Vec<bool>,
+        dirty: Vec<bool>,
+    },
+    Dense {
+        sig: Vec<f64>,
+        acc: f64,
+        dirty: bool,
+    },
+}
+
+/// An arranged trace of one device's probe state. Owned by `DeviceSim`
+/// in differential mode; `None` (recompute) devices never build one.
+#[derive(Debug, Clone)]
+pub struct DeviceTrace {
+    kind: Kind,
+    /// ingest scratch: sorted distinct L rows of the last delta (PPR)
+    rows: Vec<u32>,
+    /// ingest scratch: per-table keys of the last delta example (kNN)
+    keys_scratch: Vec<u64>,
+}
+
+/// Two-pointer intersection test over sorted slices.
+fn intersects(a: &[u32], b: &[u32]) -> bool {
+    let (mut i, mut j) = (0usize, 0usize);
+    while i < a.len() && j < b.len() {
+        match a[i].cmp(&b[j]) {
+            std::cmp::Ordering::Less => i += 1,
+            std::cmp::Ordering::Greater => j += 1,
+            std::cmp::Ordering::Equal => return true,
+        }
+    }
+    false
+}
+
+impl DeviceTrace {
+    /// Arrange `w`'s trace: hydrate every cached entry from the current
+    /// model state (one full recompute) and enable the model-side delta
+    /// recording the ingest path needs. The result is a pure function of
+    /// the model + holdout, so hydrating a columnar twin later (the
+    /// device factory runs this after prefill) yields bit-identical
+    /// caches.
+    pub fn new(w: &mut Workload) -> DeviceTrace {
+        let kind = match w {
+            Workload::Ppr { model, holdout, .. } => {
+                model.set_track_touched(true);
+                let n = model.items().min(32);
+                let sig: Vec<f64> = (0..n)
+                    .map(|i| model.sim_row(i).first().map_or(0.0, |&(_, s)| s as f64))
+                    .collect();
+                let users: Vec<PprUser> = holdout
+                    .iter()
+                    .take(32)
+                    .enumerate()
+                    .filter(|(_, h)| h.len() >= 2)
+                    .map(|(idx, h)| {
+                        let mut rest: Vec<u32> = h[1..].to_vec();
+                        rest.sort_unstable();
+                        rest.dedup();
+                        let recs = model.predict(&h[1..], 10);
+                        PprUser {
+                            idx: idx as u32,
+                            rest,
+                            hit: recs.iter().any(|&(it, _)| it == h[0]),
+                            dirty: false,
+                        }
+                    })
+                    .collect();
+                Kind::Ppr { sig, sig_dirty: vec![false; n], users }
+            }
+            Workload::Knn { model, holdout, k, .. } => {
+                let n_tables = model.n_tables();
+                let mut keys = Vec::with_capacity(holdout.len() * n_tables);
+                let mut pred = Vec::with_capacity(holdout.len());
+                let mut correct = Vec::with_capacity(holdout.len());
+                let mut cand_ok = Vec::with_capacity(holdout.len());
+                for e in holdout.iter() {
+                    model.table_keys(&e.x, &mut keys);
+                    let (p, n_cands) = model.predict_counted(&e.x, *k);
+                    pred.push(p);
+                    correct.push(p == Some(e.y));
+                    cand_ok.push(n_cands >= *k);
+                }
+                let n = holdout.len();
+                Kind::Knn { n_tables, keys, pred, correct, cand_ok, dirty: vec![false; n] }
+            }
+            Workload::Nb { .. } | Workload::Tik { .. } => {
+                Kind::Dense { sig: w.signature(), acc: w.accuracy(), dirty: false }
+            }
+        };
+        DeviceTrace { kind, rows: Vec::new(), keys_scratch: Vec::new() }
+    }
+
+    /// Fold one already-applied delta on training item `datum` into the
+    /// trace: mark exactly the cached entries whose inputs the delta
+    /// reached. Must be called after every `update_at`/`forget_at` while
+    /// the trace is live. Over-marking only costs refresh work;
+    /// under-marking would break bit-identity — the dirty rules here are
+    /// supersets of each model's write/read dependence.
+    pub fn ingest(&mut self, w: &mut Workload, datum: usize) {
+        let DeviceTrace { kind, rows, keys_scratch } = self;
+        match (kind, w) {
+            (Kind::Ppr { sig_dirty, users, .. }, Workload::Ppr { model, .. }) => {
+                rows.clear();
+                model.drain_touched(rows);
+                rows.sort_unstable();
+                rows.dedup();
+                for &r in rows.iter() {
+                    if (r as usize) < sig_dirty.len() {
+                        sig_dirty[r as usize] = true;
+                    }
+                }
+                for u in users.iter_mut() {
+                    if !u.dirty && intersects(&u.rest, rows) {
+                        u.dirty = true;
+                    }
+                }
+            }
+            (
+                Kind::Knn { n_tables, keys, cand_ok, dirty, .. },
+                Workload::Knn { model, train, .. },
+            ) => {
+                keys_scratch.clear();
+                model.table_keys(&train[datum].x, keys_scratch);
+                let t = *n_tables;
+                for (j, d) in dirty.iter_mut().enumerate() {
+                    if *d {
+                        continue;
+                    }
+                    if !cand_ok[j]
+                        || keys[j * t..(j + 1) * t]
+                            .iter()
+                            .zip(keys_scratch.iter())
+                            .any(|(a, b)| a == b)
+                    {
+                        *d = true;
+                    }
+                }
+            }
+            (Kind::Dense { dirty, .. }, _) => *dirty = true,
+            _ => unreachable!("trace/workload kind mismatch"),
+        }
+    }
+
+    /// Apply one [`Change`] to the workload and fold it into the trace —
+    /// the arranged-collection view of UPDATE/FORGET. A retraction is
+    /// the same delta with multiplicity `-1`; Eq. 1 exactness
+    /// (`forget ∘ update = id` on the count state) is what makes the
+    /// maintained trace exact rather than approximate.
+    pub fn apply(
+        &mut self,
+        w: &mut Workload,
+        change: Change,
+        mw: &mut dyn Middleware,
+    ) -> OpCost {
+        let (i, cost) = match change {
+            Change::Add(i) => (i, w.update_at(i, mw)),
+            Change::Retract(i) => (i, w.forget_at(i, mw)),
+        };
+        self.ingest(w, i);
+        cost
+    }
+
+    /// Refresh every dirty entry (through the same expressions the
+    /// recompute path evaluates) and write the full signature into
+    /// `out`. Zero-delta steady state: a pure cache copy.
+    pub fn signature_into(&mut self, w: &Workload, out: &mut Vec<f64>) {
+        self.refresh(w);
+        out.clear();
+        match &self.kind {
+            Kind::Ppr { sig, .. } | Kind::Dense { sig, .. } => out.extend_from_slice(sig),
+            Kind::Knn { pred, .. } => {
+                out.extend(pred.iter().take(16).map(|p| p.map_or(-1.0, |y| y as f64)));
+            }
+        }
+    }
+
+    /// Owned-Vec variant of [`DeviceTrace::signature_into`] (FORGET acks
+    /// hand the signature to the coordinator by value).
+    pub fn signature(&mut self, w: &Workload) -> Vec<f64> {
+        let mut out = Vec::new();
+        self.signature_into(w, &mut out);
+        out
+    }
+
+    /// Holdout quality from the maintained trace — bit-identical to
+    /// `Workload::accuracy`: the folds below reproduce its integer hit
+    /// counts and final division exactly.
+    pub fn accuracy(&mut self, w: &Workload) -> f64 {
+        self.refresh(w);
+        match (&self.kind, w) {
+            (Kind::Ppr { users, .. }, Workload::Ppr { holdout, .. }) => {
+                if holdout.is_empty() || users.is_empty() {
+                    0.0
+                } else {
+                    let hits = users.iter().filter(|u| u.hit).count();
+                    hits as f64 / users.len() as f64
+                }
+            }
+            (Kind::Knn { correct, .. }, Workload::Knn { holdout, .. }) => {
+                if holdout.is_empty() {
+                    0.0
+                } else {
+                    correct.iter().filter(|&&c| c).count() as f64 / holdout.len() as f64
+                }
+            }
+            (Kind::Dense { acc, .. }, _) => *acc,
+            _ => unreachable!("trace/workload kind mismatch"),
+        }
+    }
+
+    fn refresh(&mut self, w: &Workload) {
+        match (&mut self.kind, w) {
+            (Kind::Ppr { sig, sig_dirty, users }, Workload::Ppr { model, holdout, .. }) => {
+                for (i, d) in sig_dirty.iter_mut().enumerate() {
+                    if *d {
+                        sig[i] =
+                            model.sim_row(i).first().map_or(0.0, |&(_, s)| s as f64);
+                        *d = false;
+                    }
+                }
+                for u in users.iter_mut() {
+                    if u.dirty {
+                        let h = &holdout[u.idx as usize];
+                        let recs = model.predict(&h[1..], 10);
+                        u.hit = recs.iter().any(|&(it, _)| it == h[0]);
+                        u.dirty = false;
+                    }
+                }
+            }
+            (
+                Kind::Knn { pred, correct, cand_ok, dirty, .. },
+                Workload::Knn { model, holdout, k, .. },
+            ) => {
+                for (j, d) in dirty.iter_mut().enumerate() {
+                    if *d {
+                        let e = &holdout[j];
+                        let (p, n_cands) = model.predict_counted(&e.x, *k);
+                        pred[j] = p;
+                        correct[j] = p == Some(e.y);
+                        cand_ok[j] = n_cands >= *k;
+                        *d = false;
+                    }
+                }
+            }
+            (Kind::Dense { sig, acc, dirty }, _) => {
+                if *dirty {
+                    w.signature_into(sig);
+                    *acc = w.accuracy();
+                    *dirty = false;
+                }
+            }
+            _ => unreachable!("trace/workload kind mismatch"),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::synth::{self, Dataset};
+    use crate::learn::NullMiddleware;
+
+    /// One small shard of each workload family.
+    fn workloads(seed: u64) -> Vec<Workload> {
+        let rank = match synth::generate(Dataset::Movielens, seed, 0.03) {
+            crate::data::Data::Ranking(d) => d,
+            _ => unreachable!(),
+        };
+        let class = match synth::generate(Dataset::Mushrooms, seed, 0.02) {
+            crate::data::Data::Classification(d) => d,
+            _ => unreachable!(),
+        };
+        let reg = match synth::generate(Dataset::Housing, seed, 0.5) {
+            crate::data::Data::Regression(d) => d,
+            _ => unreachable!(),
+        };
+        let ridx: Vec<usize> = (0..rank.users().min(60)).collect();
+        let cidx: Vec<usize> = (0..class.rows().min(80)).collect();
+        let gidx: Vec<usize> = (0..reg.x.len().min(60)).collect();
+        vec![
+            Workload::ppr_from(&rank, &ridx, 10),
+            Workload::knn_from(&class, &cidx, 5, 7),
+            Workload::nb_from(&class, &cidx),
+            Workload::tikhonov_from(&reg, &gidx, 1.0),
+        ]
+    }
+
+    /// The from-scratch rebuild reference: a full `Workload` recompute
+    /// over the same model state, compared to the bit.
+    fn trace_matches(w: &Workload, t: &mut DeviceTrace) -> Result<(), String> {
+        let want = w.signature();
+        let got = t.signature(w);
+        if want.len() != got.len()
+            || want.iter().zip(&got).any(|(a, b)| a.to_bits() != b.to_bits())
+        {
+            return Err(format!(
+                "{:?}: signature diverged from rebuild: {want:?} vs {got:?}",
+                w.kind()
+            ));
+        }
+        let (wa, ga) = (w.accuracy(), t.accuracy(w));
+        if wa.to_bits() != ga.to_bits() {
+            return Err(format!("{:?}: accuracy diverged: {wa} vs {ga}", w.kind()));
+        }
+        Ok(())
+    }
+
+    #[test]
+    fn rounds_mode_names_roundtrip() {
+        for m in [RoundsMode::Recompute, RoundsMode::Differential] {
+            assert_eq!(RoundsMode::from_name(m.name()), Some(m));
+        }
+        assert_eq!(RoundsMode::from_name("diff"), Some(RoundsMode::Differential));
+        assert_eq!(RoundsMode::from_name("nope"), None);
+        assert_eq!(RoundsMode::default(), RoundsMode::Recompute);
+    }
+
+    #[test]
+    fn retraction_reverses_addition_through_the_trace() {
+        let mut mw = NullMiddleware;
+        for mut w in workloads(11) {
+            let pre = w.len() / 2;
+            for i in 0..pre {
+                w.update_at(i, &mut mw);
+            }
+            let mut t = DeviceTrace::new(&mut w);
+            let before = t.signature(&w);
+            let acc_before = t.accuracy(&w);
+            t.apply(&mut w, Change::Add(pre), &mut mw);
+            t.apply(&mut w, Change::Retract(pre), &mut mw);
+            let after = t.signature(&w);
+            assert_eq!(before.len(), after.len());
+            for (a, b) in before.iter().zip(&after) {
+                assert_eq!(a.to_bits(), b.to_bits(), "{:?}", w.kind());
+            }
+            assert_eq!(
+                acc_before.to_bits(),
+                t.accuracy(&w).to_bits(),
+                "{:?}",
+                w.kind()
+            );
+        }
+    }
+
+    #[test]
+    fn property_any_interleaving_matches_rebuild() {
+        crate::util::prop::check(0xDE17A, 6, |g| {
+            let mut mw = NullMiddleware;
+            for mut w in workloads(3 + g.case as u64) {
+                let n = w.len();
+                let pre = g.usize_in(0, n / 2);
+                for i in 0..pre {
+                    w.update_at(i, &mut mw);
+                }
+                let mut t = DeviceTrace::new(&mut w);
+                let mut absorbed: Vec<usize> = (0..pre).collect();
+                let mut next = pre;
+                for step in 0..10usize {
+                    let retract =
+                        !absorbed.is_empty() && (next >= n || g.usize_in(0, 2) == 0);
+                    let change = if retract {
+                        let at = g.usize_in(0, absorbed.len() - 1);
+                        Change::Retract(absorbed.swap_remove(at))
+                    } else if next < n {
+                        next += 1;
+                        absorbed.push(next - 1);
+                        Change::Add(next - 1)
+                    } else {
+                        break;
+                    };
+                    t.apply(&mut w, change, &mut mw);
+                    // rebuild-compare every few deltas and at the end
+                    // (each check costs a full recompute)
+                    if step % 3 == 2 {
+                        trace_matches(&w, &mut t)?;
+                    }
+                }
+                trace_matches(&w, &mut t)?;
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn clean_trace_probe_is_a_cache_read() {
+        // after one refresh, a second probe with no deltas must serve
+        // from cache and still match the rebuild
+        let mut mw = NullMiddleware;
+        for mut w in workloads(17) {
+            for i in 0..w.len() / 2 {
+                w.update_at(i, &mut mw);
+            }
+            let mut t = DeviceTrace::new(&mut w);
+            let a = t.signature(&w);
+            let b = t.signature(&w);
+            assert_eq!(a, b);
+            trace_matches(&w, &mut t).unwrap();
+        }
+    }
+}

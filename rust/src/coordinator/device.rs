@@ -15,6 +15,7 @@
 //! [`ForgetGuard`] against over-aggressive deletion, and audited post-op
 //! with the §III-D recovery attack before the ack goes back up.
 
+use super::delta::DeviceTrace;
 use super::scheme::Scheme;
 use super::unlearn::{ForgetAck, ForgetStatus};
 use super::workload::Workload;
@@ -202,6 +203,15 @@ pub struct DeviceSim {
     /// most recent finite model delta — the guard's drift input
     last_model_delta: f64,
     prev_signature: Vec<f64>,
+    /// recycled signature buffer for the convergence probe (swapped with
+    /// `prev_signature` each round, so steady-state probes allocate
+    /// nothing in either rounds mode)
+    sig_scratch: Vec<f64>,
+    /// differential round engine (`--rounds-mode differential`): the
+    /// arranged probe trace, fed a delta per UPDATE/FORGET and serving
+    /// signature/accuracy reads bit-identically to recompute. `None`
+    /// (recompute, the default) pays nothing.
+    trace: Option<DeviceTrace>,
     rng: Rng,
     /// Markov availability state + transition probs (join/leave churn).
     online: bool,
@@ -268,6 +278,8 @@ impl DeviceSim {
             guard: ForgetGuard::new(0.05, f64::INFINITY),
             last_model_delta: 0.0,
             prev_signature: Vec::new(),
+            sig_scratch: Vec::new(),
+            trace: None,
             rng: device_rng(id, seed),
             online: true,
             p_drop: P_DROP,
@@ -282,6 +294,37 @@ impl DeviceSim {
             swap_ewma: 0.0,
             window_ptr: 0,
             acc: LedgerRow::default(),
+        }
+    }
+
+    /// Switch this device to the differential round engine: arrange a
+    /// [`DeviceTrace`] over the current model state and serve every
+    /// probe and FORGET-ack signature from it, refreshed O(delta) per
+    /// round. Call *after* [`Self::prefill`] (the fleet factory does) so
+    /// prefill pays no tracking overhead; the arranged trace is a pure
+    /// function of the post-prefill model + holdout, so a columnar twin
+    /// hydrated mid-run arranges bit-identical caches.
+    pub fn enable_differential(&mut self) {
+        self.trace = Some(DeviceTrace::new(&mut self.workload));
+    }
+
+    /// Differential mode: fold a just-applied UPDATE/FORGET on training
+    /// item `i` into the trace. No-op in recompute mode.
+    #[inline]
+    fn note_delta(&mut self, i: usize) {
+        if let Some(t) = self.trace.as_mut() {
+            t.ingest(&mut self.workload, i);
+        }
+    }
+
+    /// The current model signature as an owned Vec — trace-served in
+    /// differential mode (a pure cache read when no deltas are pending,
+    /// e.g. the ack for an already-gone FORGET), a full recompute
+    /// otherwise. Bit-identical either way.
+    fn signature_owned(&mut self) -> Vec<f64> {
+        match self.trace.as_mut() {
+            Some(t) => t.signature(&self.workload),
+            None => self.workload.signature(),
         }
     }
 
@@ -345,7 +388,7 @@ impl DeviceSim {
             self.guard.on_update();
             self.arrived += 1;
         }
-        self.prev_signature = self.workload.signature();
+        self.workload.signature_into(&mut self.prev_signature);
     }
 
     pub fn shard_len(&self) -> usize {
@@ -450,6 +493,7 @@ impl DeviceSim {
                     }
                     let i = self.oldest;
                     self.train_op(|w, mw| w.forget_at(i, mw), &mut out);
+                    self.note_delta(i);
                     self.items[i] = ItemState::Forgotten;
                     self.n_absorbed -= 1;
                     self.guard.on_forget();
@@ -491,11 +535,24 @@ impl DeviceSim {
         self.last_busy_s += out.time_s;
         self.swap_ewma += SWAP_EWMA_W * (out.swaps as f64 - self.swap_ewma);
 
-        // --- convergence probe
-        out.accuracy = self.workload.accuracy();
-        let sig = self.workload.signature();
+        // --- convergence probe (trace-served in differential mode: a
+        // zero-delta round is a pure cache read; the signature buffer is
+        // recycled via sig_scratch, so steady-state probes allocate
+        // nothing in either rounds mode)
+        let mut sig = std::mem::take(&mut self.sig_scratch);
+        match self.trace.as_mut() {
+            Some(t) => {
+                out.accuracy = t.accuracy(&self.workload);
+                t.signature_into(&self.workload, &mut sig);
+            }
+            None => {
+                out.accuracy = self.workload.accuracy();
+                self.workload.signature_into(&mut sig);
+            }
+        }
         out.model_delta = signature_delta(&self.prev_signature, &sig);
-        self.prev_signature = sig;
+        std::mem::swap(&mut self.prev_signature, &mut sig);
+        self.sig_scratch = sig; // last round's buffer, reused next round
         if out.model_delta.is_finite() {
             // drift input for the forget guard (the first round's ∞ —
             // no prior signature — is not numerical drift)
@@ -514,6 +571,7 @@ impl DeviceSim {
             return;
         }
         self.train_op(|w, mw| w.update_at(i, mw), out);
+        self.note_delta(i);
         self.items[i] = ItemState::Absorbed;
         self.n_absorbed += 1;
         self.guard.on_update();
@@ -552,8 +610,11 @@ impl DeviceSim {
                 ItemState::Absorbed => match self.guard.check_forget(self.last_model_delta) {
                     Err(denied) => ForgetStatus::Denied(denied),
                     Ok(()) => {
-                        // audit prologue: stale fingerprints of the live model
-                        let stale_sig = self.workload.signature();
+                        // audit prologue: stale fingerprints of the live
+                        // model (in differential mode the trace is clean
+                        // here, so this is a cache read — recompute pays
+                        // a full signature rebuild per served command)
+                        let stale_sig = self.signature_owned();
                         let stale_counts = self.workload.ppr_counts();
                         // billed decremental FORGET through the middleware;
                         // the command piggybacks the round's PUB/SUB window,
@@ -564,6 +625,7 @@ impl DeviceSim {
                         let mut op = LocalOutcome::default();
                         self.meter.set_component("mem_io", ComponentState::Active);
                         self.train_op(|w, mw| w.forget_at(datum, mw), &mut op);
+                        self.note_delta(datum);
                         let swaps = self.cache.stats().swaps - swaps_before;
                         let stall = self.bill_swap_stalls(swaps);
                         self.meter.set_component("mem_io", ComponentState::Idle);
@@ -577,7 +639,9 @@ impl DeviceSim {
                         // busy time for the fleet ledger all the same
                         self.last_busy_s += time_s;
                         // audit epilogue: stale-vs-fresh recovery attack
-                        let fresh_sig = self.workload.signature();
+                        // (one O(delta) trace refresh in differential
+                        // mode — the delta was just ingested)
+                        let fresh_sig = self.signature_owned();
                         model_delta = signature_delta(&stale_sig, &fresh_sig);
                         audit_pass = self.audit_forget(datum, stale_counts, model_delta);
                         ForgetStatus::Served
@@ -585,6 +649,7 @@ impl DeviceSim {
                 },
             }
         };
+        let signature = self.signature_owned();
         ForgetAck {
             request,
             device: self.id,
@@ -594,7 +659,7 @@ impl DeviceSim {
             energy_uah,
             model_delta,
             audit_pass,
-            signature: self.workload.signature(),
+            signature,
         }
     }
 
@@ -1253,6 +1318,31 @@ mod tests {
         for _ in 0..50 {
             a.step_idle(60.0, FleetMode::DealSleep, false);
             assert_eq!(a.step_availability(), b.step_availability());
+        }
+    }
+
+    #[test]
+    fn differential_device_matches_recompute_bitwise() {
+        // twin devices, one per rounds mode: every probe outcome and
+        // FORGET ack must agree to the bit — including acks for
+        // already-gone data, which differential serves from cache
+        let mut rec = device(Replacement::ThetaLru { theta: 0.3 }, Policy::DealAggressive);
+        let mut dif = device(Replacement::ThetaLru { theta: 0.3 }, Policy::DealAggressive);
+        rec.prefill(20);
+        dif.prefill(20);
+        dif.enable_differential();
+        for r in 0..4usize {
+            let a = rec.run_round(Scheme::Deal, 6, 0.3);
+            let b = dif.run_round(Scheme::Deal, 6, 0.3);
+            assert_eq!(a.accuracy.to_bits(), b.accuracy.to_bits(), "round {r}");
+            assert_eq!(a.model_delta.to_bits(), b.model_delta.to_bits(), "round {r}");
+            assert_eq!(a.energy_uah.to_bits(), b.energy_uah.to_bits(), "round {r}");
+            let ka = rec.forget_datum(r as u64, r + 1);
+            let kb = dif.forget_datum(r as u64, r + 1);
+            assert_eq!(ka.status, kb.status, "round {r}");
+            assert_eq!(ka.signature, kb.signature, "ack signature, round {r}");
+            assert_eq!(ka.model_delta.to_bits(), kb.model_delta.to_bits());
+            assert_eq!(ka.energy_uah.to_bits(), kb.energy_uah.to_bits());
         }
     }
 

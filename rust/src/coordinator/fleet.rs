@@ -5,6 +5,7 @@
 
 use std::sync::Arc;
 
+use super::delta::RoundsMode;
 use super::device::DeviceSim;
 use super::scheme::{Aggregation, Scheme};
 use super::server::{Federation, FederationConfig};
@@ -114,6 +115,15 @@ pub struct FleetConfig {
     /// the 10⁶-device path. Requires the lazy ledger; stats are
     /// bit-identical either way.
     pub fleet: FleetStoreKind,
+    /// Round-evaluation engine (`deal run --rounds-mode
+    /// recompute|differential`): recompute re-derives every credited
+    /// device's signature and accuracy from the model each round
+    /// (reference semantics); differential maintains an arranged
+    /// per-device trace that ingests each absorbed/forgotten datum as
+    /// a `Change` and refreshes only the entries the delta touched, so
+    /// a probe costs O(delta) instead of O(model + holdout). Stats and
+    /// per-round records are bit-identical either way.
+    pub rounds: RoundsMode,
 }
 
 impl Default for FleetConfig {
@@ -147,6 +157,7 @@ impl Default for FleetConfig {
             round_period_s: 60.0,
             ledger: LedgerMode::Eager,
             fleet: FleetStoreKind::Sims,
+            rounds: RoundsMode::Recompute,
         }
     }
 }
@@ -201,6 +212,7 @@ pub fn device_factory(cfg: &FleetConfig) -> DeviceFactory {
         let guard_min_retained = cfg.guard_min_retained;
         let guard_max_drift = cfg.guard_max_drift;
         let charging = cfg.charging;
+        let rounds = cfg.rounds;
         Arc::new(move |i: usize| {
             let wl = make_workload(model, &data, &shards[i], seed + i as u64);
             let prefill = (wl.len() as f64 * prefill_frac) as usize;
@@ -222,6 +234,12 @@ pub fn device_factory(cfg: &FleetConfig) -> DeviceFactory {
                 );
             }
             dev.prefill(prefill);
+            if rounds == RoundsMode::Differential {
+                // arrange the trace from post-prefill state: a pure
+                // function of the model + holdout, so a columnar
+                // hydration re-arranges it bit-identically
+                dev.enable_differential();
+            }
             dev
         }) as Arc<dyn Fn(usize) -> DeviceSim + Send + Sync>
     };

@@ -157,6 +157,33 @@
 //!   steady-state stats read at 10⁶ devices allocates nothing
 //!   (`benches/fleet_scaling.rs` records the settle throughput as
 //!   `settle_rps_1e6`)
+//! - **The differential round engine** (PR 10): recompute-mode rounds
+//!   re-derive every credited device's convergence signature and
+//!   holdout accuracy from the model — O(model + holdout) per probe
+//!   even when nothing changed. `deal run --rounds-mode differential`
+//!   ([`delta::RoundsMode`], `FleetConfig::rounds`) instead arranges a
+//!   per-device [`delta::DeviceTrace`] over the probe outputs: each
+//!   absorbed or forgotten datum is ingested as a
+//!   [`delta::Change`]-style delta that marks exactly the trace
+//!   entries whose inputs it touched (PPR: the L rows the update
+//!   wrote, reported by `Ppr::drain_touched`, intersected against
+//!   per-holdout-user item sets; kNN-LSH: holdout points sharing an
+//!   LSH bucket with the datum, plus any point whose candidate set
+//!   underflowed into the store-wide fallback; MNB/Tikhonov: the dense
+//!   global-statistics models dirty the whole trace, and win on
+//!   zero-delta reads), and a probe refreshes only dirty entries — an
+//!   unlearning FORGET ripples through as a `-1` retraction in
+//!   O(delta), not a full re-evaluation. The standing contract is
+//!   **bit-identity**: a trace refresh evaluates the *same
+//!   expressions* `Workload::signature`/`accuracy` evaluate, in the
+//!   same fold order, so differential stats, per-round records, and
+//!   forget acks equal recompute's to the bit (pinned across fabrics ×
+//!   shards × fleet stores in `tests/transport_equivalence.rs` and
+//!   against live deletion streams in `tests/unlearn_equivalence.rs`;
+//!   over-marking dirty only costs refresh work, never correctness).
+//!   Arranged traces are built by the device factory *after* prefill —
+//!   a pure function of post-prefill model + holdout — so columnar
+//!   hydration re-arranges them bit-identically for free
 //! - [`fleet`] — experiment builder used by benches and examples
 //!   (`FleetConfig::selector` / `FleetConfig::features` pick the
 //!   selection algorithm and gate the telemetry pipeline;
@@ -164,6 +191,7 @@
 //!   `FleetConfig::{mode, charging, round_period_s}` drive the ledger;
 //!   `FleetConfig::ledger` picks eager vs lazy billing)
 
+pub mod delta;
 pub mod device;
 pub mod fleet;
 pub mod ledger;
@@ -175,6 +203,7 @@ pub mod transport;
 pub mod unlearn;
 pub mod workload;
 
+pub use delta::{Change, DeviceTrace, RoundsMode};
 pub use device::{DeviceSim, IdleOutcome, LedgerRow, LocalOutcome};
 pub use fleet::FleetConfig;
 pub use ledger::ParkLedger;

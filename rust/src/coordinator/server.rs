@@ -178,6 +178,9 @@ pub struct Federation {
     /// stays [`DeviceSnapshot::NEUTRAL`] when `cfg.features` is off
     latest_snapshot: Vec<DeviceSnapshot>,
     pub rounds: Vec<RoundRecord>,
+    /// incremental sums over `rounds`, absorbed at push time (see
+    /// [`RoundAgg`]) — makes `stats()` O(1) in the round count
+    agg: RoundAgg,
     /// stragglers awaiting credit (AsyncBuffered only)
     pending: Vec<PendingReply>,
     /// GDPR deletion queue + SLO books (inert unless configured or fed)
@@ -235,6 +238,48 @@ struct FleetLedgerTotals {
     wakes: u64,
     charged_uah: f64,
     awake_equiv_uah: f64,
+}
+
+/// Running aggregates over the per-round records, absorbed as each
+/// record is pushed so [`Federation::stats`] reads O(1) totals instead
+/// of re-folding `rounds` on every call. Records are absorbed in push
+/// order — the same sequential left fold starting from `0.0` that
+/// `stats()` previously ran over the vector — so every accumulated
+/// total is bit-identical to the on-demand sum. `rounds` itself stays
+/// public and append-only; these are a cache over it, never a
+/// replacement.
+#[derive(Debug, Clone, Copy, Default)]
+struct RoundAgg {
+    train_energy_uah: f64,
+    forget_energy_uah: f64,
+    total_time_s: f64,
+    fleet_idle_uah: f64,
+    fleet_sleep_uah: f64,
+    fleet_wake_uah: f64,
+    wake_transitions: u64,
+    charged_uah: f64,
+    allawake_equiv_uah: f64,
+    /// mean accuracy of the latest round with `mean_accuracy > 0.0` —
+    /// the `final_accuracy` rule (`rev().find(..)` over the records)
+    /// maintained incrementally.
+    last_accuracy: f64,
+}
+
+impl RoundAgg {
+    fn absorb(&mut self, r: &RoundRecord) {
+        self.train_energy_uah += r.energy_uah;
+        self.forget_energy_uah += r.forget_energy_uah;
+        self.total_time_s += r.round_time_s;
+        self.fleet_idle_uah += r.fleet_idle_uah;
+        self.fleet_sleep_uah += r.fleet_sleep_uah;
+        self.fleet_wake_uah += r.fleet_wake_uah;
+        self.wake_transitions += r.wake_transitions;
+        self.charged_uah += r.charged_uah;
+        self.allawake_equiv_uah += r.allawake_equiv_uah;
+        if r.mean_accuracy > 0.0 {
+            self.last_accuracy = r.mean_accuracy;
+        }
+    }
 }
 
 impl Federation {
@@ -295,6 +340,7 @@ impl Federation {
             device_selected: vec![0; n],
             latest_snapshot: vec![DeviceSnapshot::NEUTRAL; n],
             rounds: Vec::new(),
+            agg: RoundAgg::default(),
             pending: Vec::new(),
             unlearn,
             fleet_totals: None,
@@ -714,6 +760,7 @@ impl Federation {
             allawake_equiv_uah: awake_equiv,
             fleet_settled: self.cfg.ledger == LedgerMode::Eager,
         };
+        self.agg.absorb(&rec);
         self.rounds.push(rec.clone());
         // reclaim S(k): under selection it is the selector's chosen
         // buffer; under select-all it is the moved G(k) vector, whose
@@ -824,17 +871,15 @@ impl Federation {
         (0.4 * lat + 0.4 * frugal + 0.2 * volume).clamp(0.0, 1.0)
     }
 
-    /// Aggregates over all completed rounds.
+    /// Aggregates over all completed rounds — O(1) in the round count:
+    /// the per-round sums were absorbed into [`RoundAgg`] as each
+    /// record was pushed, in the same left-fold order the old
+    /// `iter().map(..).sum()` used, so every total is bit-identical.
     pub fn stats(&self) -> FederationStats {
-        let train_energy: f64 = self.rounds.iter().map(|r| r.energy_uah).sum();
-        let forget_energy: f64 = self.rounds.iter().map(|r| r.forget_energy_uah).sum();
-        let total_time: f64 = self.rounds.iter().map(|r| r.round_time_s).sum();
-        let last_acc = self
-            .rounds
-            .iter()
-            .rev()
-            .find(|r| r.mean_accuracy > 0.0)
-            .map_or(0.0, |r| r.mean_accuracy);
+        let train_energy: f64 = self.agg.train_energy_uah;
+        let forget_energy: f64 = self.agg.forget_energy_uah;
+        let total_time: f64 = self.agg.total_time_s;
+        let last_acc = self.agg.last_accuracy;
         let conv: Vec<f64> = self.convergence_time_s.iter().copied().flatten().collect();
         // fleet energy ledger: the whole-fleet footprint by power state,
         // plus the emulated AllAwake baseline (same training, every idle
@@ -849,15 +894,15 @@ impl Federation {
             train_uah: train_energy,
             idle_uah: match &self.fleet_totals {
                 Some(t) => t.idle_uah,
-                None => self.rounds.iter().map(|r| r.fleet_idle_uah).sum(),
+                None => self.agg.fleet_idle_uah,
             },
             sleep_uah: match &self.fleet_totals {
                 Some(t) => t.sleep_uah,
-                None => self.rounds.iter().map(|r| r.fleet_sleep_uah).sum(),
+                None => self.agg.fleet_sleep_uah,
             },
             wake_uah: match &self.fleet_totals {
                 Some(t) => t.wake_uah,
-                None => self.rounds.iter().map(|r| r.fleet_wake_uah).sum(),
+                None => self.agg.fleet_wake_uah,
             },
             forget_uah: forget_energy,
         };
@@ -868,7 +913,7 @@ impl Federation {
         let allawake_baseline_uah = FleetEnergyBreakdown {
             idle_uah: match &self.fleet_totals {
                 Some(t) => t.awake_equiv_uah,
-                None => self.rounds.iter().map(|r| r.allawake_equiv_uah).sum(),
+                None => self.agg.allawake_equiv_uah,
             },
             sleep_uah: 0.0,
             wake_uah: 0.0,
@@ -896,11 +941,11 @@ impl Federation {
             savings_vs_allawake,
             wake_transitions: match &self.fleet_totals {
                 Some(t) => t.wakes,
-                None => self.rounds.iter().map(|r| r.wake_transitions).sum(),
+                None => self.agg.wake_transitions,
             },
             charged_uah: match &self.fleet_totals {
                 Some(t) => t.charged_uah,
-                None => self.rounds.iter().map(|r| r.charged_uah).sum(),
+                None => self.agg.charged_uah,
             },
         }
     }
@@ -968,6 +1013,43 @@ mod tests {
         for r in &f.rounds {
             assert!(r.selected <= r.available.max(1));
         }
+    }
+
+    #[test]
+    fn incremental_stats_match_refold() {
+        // the RoundAgg cache must equal the on-demand fold bit-for-bit
+        let mut f = small_federation(Scheme::Deal);
+        f.run(6);
+        let s = f.stats();
+        let train: f64 = f.rounds.iter().map(|r| r.energy_uah).sum();
+        let forget: f64 = f.rounds.iter().map(|r| r.forget_energy_uah).sum();
+        let time: f64 = f.rounds.iter().map(|r| r.round_time_s).sum();
+        let last = f
+            .rounds
+            .iter()
+            .rev()
+            .find(|r| r.mean_accuracy > 0.0)
+            .map_or(0.0, |r| r.mean_accuracy);
+        assert_eq!(s.total_energy_uah.to_bits(), (train + forget).to_bits());
+        assert_eq!(s.total_time_s.to_bits(), time.to_bits());
+        assert_eq!(s.final_accuracy.to_bits(), last.to_bits());
+    }
+
+    #[test]
+    fn differential_rounds_match_recompute_bitwise() {
+        use crate::coordinator::delta::RoundsMode;
+        let mk = |rounds| fleet::FleetConfig {
+            deletion_rate: 0.6,
+            deletion_slo: 2,
+            rounds,
+            ..small_cfg(Scheme::Deal)
+        };
+        let mut rec = fleet::build(&mk(RoundsMode::Recompute));
+        let mut dif = fleet::build(&mk(RoundsMode::Differential));
+        let a = rec.run(8);
+        let b = dif.run(8);
+        assert_eq!(a, b);
+        assert_eq!(rec.rounds, dif.rounds);
     }
 
     #[test]

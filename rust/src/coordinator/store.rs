@@ -34,6 +34,12 @@
 //! charge plan's RNG travels inside the evicted [`ParkLedger`] columns
 //! — so on hydration the factory-fresh sim plus the transplanted
 //! columns *is* the device the eager path would hold, to the bit.
+//! The differential round engine inherits this for free: the factory
+//! closure arranges a [`delta::DeviceTrace`](super::delta::DeviceTrace)
+//! *after* prefill, and the trace is a pure function of the
+//! post-prefill model + holdout (no RNG), so a device hydrated at
+//! round k carries a trace bit-identical to the one its eager twin
+//! arranged at round 0.
 //!
 //! Which paths force a settle mirrors the lazy `DeviceSim` ledger
 //! exactly: training/forgetting settles first (`run_round` reads the

@@ -34,6 +34,17 @@
 //! Asynchronous Learning…", PAPERS.md). Rounds are never stalled by
 //! deletion traffic; the SLO wake-override in the engine is what bounds
 //! deletion latency instead.
+//!
+//! Under the differential round engine
+//! ([`delta`](super::delta)), a served FORGET is exactly a **`-1`
+//! retraction**: the decremental model subtracts datum d's
+//! contribution in closed form (Eq. 1: `forget(update(m, d), d) == m`),
+//! so the same delta-ingest hook that marks trace entries dirty for an
+//! absorbed datum marks them for a forgotten one — deletion is a
+//! change with negative multiplicity, not a special case. The ack's
+//! stale/fresh signatures and model delta are then served from the
+//! arranged trace in O(delta) instead of three full model
+//! re-evaluations, bit-identically.
 
 use crate::learn::recovery::ForgetDenied;
 use crate::util::rng::Rng;

@@ -209,27 +209,41 @@ impl Workload {
     /// A low-dimensional fingerprint of the model state; round-over-round
     /// L2 delta of this drives convergence detection.
     pub fn signature(&self) -> Vec<f64> {
+        let mut out = Vec::new();
+        self.signature_into(&mut out);
+        out
+    }
+
+    /// Write the signature into `out` (cleared first) — the reusable-
+    /// buffer variant the convergence probe and the differential trace's
+    /// dense refresh use, so steady-state rounds allocate no signature
+    /// Vec. Same entries in the same order as [`Workload::signature`];
+    /// `coordinator::delta` caches these exact per-entry expressions.
+    pub fn signature_into(&self, out: &mut Vec<f64>) {
+        out.clear();
         match self {
             Workload::Ppr { model, .. } => {
                 // top similarity score of the first 32 rows
-                (0..model.items().min(32))
-                    .map(|i| model.sim_row(i).first().map_or(0.0, |&(_, s)| s as f64))
-                    .collect()
+                out.extend((0..model.items().min(32)).map(|i| {
+                    model.sim_row(i).first().map_or(0.0, |&(_, s)| s as f64)
+                }));
             }
             Workload::Knn { model, holdout, k, .. } => {
                 // predicted label pattern over (≤16) holdout points
+                out.extend(
+                    holdout
+                        .iter()
+                        .take(16)
+                        .map(|e| model.predict(&e.x, *k).map_or(-1.0, |y| y as f64)),
+                );
+            }
+            Workload::Nb { model, holdout, .. } => out.extend(
                 holdout
                     .iter()
                     .take(16)
-                    .map(|e| model.predict(&e.x, *k).map_or(-1.0, |y| y as f64))
-                    .collect()
-            }
-            Workload::Nb { model, holdout, .. } => holdout
-                .iter()
-                .take(16)
-                .map(|d| model.predict(&d.x).map_or(-1.0, |y| y as f64))
-                .collect(),
-            Workload::Tik { model, .. } => model.weights().to_vec(),
+                    .map(|d| model.predict(&d.x).map_or(-1.0, |y| y as f64)),
+            ),
+            Workload::Tik { model, .. } => out.extend_from_slice(model.weights()),
         }
     }
 
@@ -357,6 +371,20 @@ mod tests {
         w.update_at(0, &mut mw);
         w.forget_at(0, &mut mw);
         assert_eq!(w.signature(), sig);
+    }
+
+    #[test]
+    fn signature_into_clears_and_matches_signature() {
+        let data = ranking();
+        let idx: Vec<usize> = (0..40).collect();
+        let mut w = Workload::ppr_from(&data, &idx, 10);
+        let mut mw = NullMiddleware;
+        for i in 0..w.len() {
+            w.update_at(i, &mut mw);
+        }
+        let mut buf = vec![99.0; 3]; // stale content must be discarded
+        w.signature_into(&mut buf);
+        assert_eq!(buf, w.signature());
     }
 
     #[test]

@@ -95,10 +95,24 @@ impl KnnLsh {
     /// candidate set; falls back to a linear scan when the buckets are
     /// empty (tiny stores).
     pub fn query(&self, x: &[f32], k: usize) -> Vec<(u64, f32)> {
+        self.query_counted(x, k).0
+    }
+
+    /// [`KnnLsh::query`] plus the pre-fallback LSH candidate count. The
+    /// differential trace (`coordinator::delta`) keys its dirty rule on
+    /// the count: a point whose buckets held ≥ k candidates depends only
+    /// on examples sharing one of its bucket keys, while a point that
+    /// fell back to the linear scan depends on the whole store.
+    pub fn query_counted(&self, x: &[f32], k: usize) -> (Vec<(u64, f32)>, usize) {
         assert_eq!(x.len(), self.dim);
         let mut cands = self.candidates(x);
-        if cands.len() < k {
+        let n_cands = cands.len();
+        if n_cands < k {
             cands = self.store.keys().copied().collect();
+            // determinism: the stable sort below keys on distance alone,
+            // so equal-distance ties keep the input order — seed it by
+            // id, not HashMap iteration order
+            cands.sort_unstable();
         }
         let mut scored: Vec<(u64, f32)> = cands
             .into_iter()
@@ -111,21 +125,51 @@ impl KnnLsh {
             .collect();
         scored.sort_by(|a, b| a.1.partial_cmp(&b.1).unwrap());
         scored.truncate(k);
-        scored
+        (scored, n_cands)
     }
 
     /// Majority-vote classification over the k nearest.
     pub fn predict(&self, x: &[f32], k: usize) -> Option<u32> {
-        let nn = self.query(x, k);
+        self.predict_counted(x, k).0
+    }
+
+    /// [`KnnLsh::predict`] plus the pre-fallback candidate count (see
+    /// [`KnnLsh::query_counted`]). The vote is deterministic: highest
+    /// count wins, ties go to the smaller label — a HashMap fold here
+    /// would tie-break on iteration order and differ run to run.
+    pub fn predict_counted(&self, x: &[f32], k: usize) -> (Option<u32>, usize) {
+        let (nn, n_cands) = self.query_counted(x, k);
         if nn.is_empty() {
-            return None;
+            return (None, n_cands);
         }
-        let mut votes: HashMap<u32, usize> = HashMap::new();
+        let mut votes: Vec<(u32, usize)> = Vec::new();
         for (id, _) in nn {
             let y = self.store[&id].1;
-            *votes.entry(y).or_insert(0) += 1;
+            match votes.iter_mut().find(|(vy, _)| *vy == y) {
+                Some((_, n)) => *n += 1,
+                None => votes.push((y, 1)),
+            }
         }
-        votes.into_iter().max_by_key(|&(_, n)| n).map(|(y, _)| y)
+        let win = votes
+            .into_iter()
+            .max_by(|a, b| a.1.cmp(&b.1).then(b.0.cmp(&a.0)))
+            .map(|(y, _)| y);
+        (win, n_cands)
+    }
+
+    /// Number of hash tables.
+    pub fn n_tables(&self) -> usize {
+        self.tables.len()
+    }
+
+    /// Append each table's bucket key for `x` to `out` (table order).
+    /// Keys depend only on the fixed hyperplanes, never on the store, so
+    /// an arranged trace computes them once per holdout point and reuses
+    /// them to test whether a delta shares a bucket.
+    pub fn table_keys(&self, x: &[f32], out: &mut Vec<u64>) {
+        for t in &self.tables {
+            out.push(t.key(x));
+        }
     }
 
     /// Holdout accuracy (Fig. 5-style metric for the classifiers).
@@ -285,6 +329,33 @@ mod tests {
     fn predict_none_on_empty() {
         let idx = KnnLsh::new(4, 8, 4, 7);
         assert_eq!(idx.predict(&[0.0; 4], 3), None);
+    }
+
+    #[test]
+    fn predict_tie_breaks_to_smaller_label() {
+        // two equidistant neighbors with different labels: the vote is
+        // 1–1 and must deterministically pick the smaller label
+        let mut idx = KnnLsh::new(2, 4, 3, 9);
+        let mut mw = NullMiddleware;
+        idx.update(&Example { id: 0, x: vec![1.0, 0.0], y: 1 }, &mut mw);
+        idx.update(&Example { id: 1, x: vec![-1.0, 0.0], y: 0 }, &mut mw);
+        let (pred, n_cands) = idx.predict_counted(&[0.0, 0.0], 2);
+        assert_eq!(pred, Some(0));
+        assert!(n_cands <= 2);
+    }
+
+    #[test]
+    fn table_keys_are_stable_and_store_independent() {
+        let data = blobs(8, 30, 6);
+        let mut idx = index_of(&data);
+        let mut before = Vec::new();
+        idx.table_keys(&data[0].x, &mut before);
+        assert_eq!(before.len(), idx.n_tables());
+        let mut mw = NullMiddleware;
+        idx.forget(&data[5], &mut mw);
+        let mut after = Vec::new();
+        idx.table_keys(&data[0].x, &mut after);
+        assert_eq!(before, after, "keys must not depend on the store");
     }
 
     #[test]

@@ -5,6 +5,13 @@
 //! add/subtract — the cleanest possible decremental learner, and the
 //! reason the paper includes it: the energy win is entirely from not
 //! retraining.
+//!
+//! Under the differential round engine
+//! ([`coordinator::delta`](crate::coordinator::delta)) every prediction
+//! reads the *global* statistics (`class_counts`, `total n`), so any
+//! UPDATE/FORGET delta can shift every holdout verdict — the arranged
+//! trace treats NB as dense (one delta dirties the whole trace) and
+//! wins on the zero-delta rounds and cached forget-ack reads instead.
 
 use super::traits::{DecrementalModel, Middleware, OpCost};
 

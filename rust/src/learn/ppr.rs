@@ -34,6 +34,14 @@ pub struct Ppr {
     /// scratch for symmetric similarity writes (perf: reused, no alloc in
     /// the UPDATE/FORGET hot path — see EXPERIMENTS.md §Perf)
     scratch: Vec<(u32, f32)>,
+    /// when true, every L row written by `apply` is recorded into
+    /// `touched` so the differential round engine (`coordinator::delta`)
+    /// can refresh only the trace entries a delta reached; off by
+    /// default, so recompute-mode devices pay nothing for it
+    track_touched: bool,
+    /// rows recorded since the last [`Ppr::drain_touched`] (unsorted,
+    /// may repeat)
+    touched: Vec<u32>,
 }
 
 impl Ppr {
@@ -45,7 +53,26 @@ impl Ppr {
             c: vec![0; items * items],
             l: vec![0.0; items * items],
             scratch: Vec::new(),
+            track_touched: false,
+            touched: Vec::new(),
         }
+    }
+
+    /// Enable/disable touched-row recording for the differential trace.
+    pub fn set_track_touched(&mut self, on: bool) {
+        self.track_touched = on;
+        if !on {
+            self.touched.clear();
+        }
+    }
+
+    /// Drain the L rows written since the last drain into `out`
+    /// (appended unsorted, possibly with repeats — callers sort/dedup).
+    /// Superset guarantee: every L entry that changed since the last
+    /// drain lies in a recorded row, so marking exactly these rows dirty
+    /// in an arranged trace is conservative.
+    pub fn drain_touched(&mut self, out: &mut Vec<u32>) {
+        out.append(&mut self.touched);
     }
 
     /// Build from a set of user histories (sorted, deduped item lists).
@@ -215,6 +242,12 @@ impl Ppr {
                 self.l[j as usize * items + i] = s;
             }
             touched_entries += 2 * scratch.len() as u64;
+            // the write-set above is confined to row i and the mirror
+            // rows j — record them for the differential trace
+            if self.track_touched {
+                self.touched.push(it);
+                self.touched.extend(scratch.iter().map(|&(j, _)| j));
+            }
         }
         self.scratch = scratch;
         // ops: arithmetic only — |Yᵤ|² pair updates + v updates + one
@@ -410,6 +443,35 @@ mod tests {
         // update touching established neighbors costs more than the first
         let c_again = big.update(&h, &mut mw);
         assert!(c_again.giga_ops >= c_big.giga_ops);
+    }
+
+    #[test]
+    fn touched_rows_cover_all_l_changes() {
+        let hs = histories(13, 10, 20);
+        let mut m = Ppr::fit(20, 20, &hs);
+        m.set_track_touched(true);
+        let before = m.l.clone();
+        let mut mw = NullMiddleware;
+        m.update(&vec![1, 4, 9], &mut mw);
+        let mut rows: Vec<u32> = Vec::new();
+        m.drain_touched(&mut rows);
+        rows.sort_unstable();
+        rows.dedup();
+        assert!(rows.contains(&1) && rows.contains(&4) && rows.contains(&9));
+        for r in 0..20usize {
+            if rows.binary_search(&(r as u32)).is_ok() {
+                continue;
+            }
+            assert_eq!(
+                &before[r * 20..(r + 1) * 20],
+                &m.l[r * 20..(r + 1) * 20],
+                "row {r} changed but was not recorded"
+            );
+        }
+        // draining empties the log; disabling clears it
+        let mut again: Vec<u32> = Vec::new();
+        m.drain_touched(&mut again);
+        assert!(again.is_empty());
     }
 
     #[test]

@@ -4,6 +4,13 @@
 //! regularized gram matrix `G = MᵀM + λI`. UPDATE/FORGET are O(d²)
 //! (z axpy 2d + rank-one QR 26d² + solve 3d², per the paper's budget),
 //! against O(s·d²) for a full retrain.
+//!
+//! Under the differential round engine
+//! ([`coordinator::delta`](crate::coordinator::delta)) the convergence
+//! signature is the whole weight vector `h`, which every rank-one
+//! UPDATE/FORGET rewrites — the arranged trace treats Tikhonov as
+//! dense (one delta dirties the whole trace) and wins on the
+//! zero-delta rounds and cached forget-ack reads instead.
 
 use super::mat::{dot, Mat};
 use super::qr::QrFactor;

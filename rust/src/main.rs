@@ -9,7 +9,7 @@
 use deal::bandit::SelectorKind;
 use deal::coordinator::fleet::{self, FleetConfig};
 use deal::coordinator::{
-    Aggregation, FleetStoreKind, LedgerMode, ModelKind, Scheme, TransportKind,
+    Aggregation, FleetStoreKind, LedgerMode, ModelKind, RoundsMode, Scheme, TransportKind,
 };
 use deal::data::events::generate_events;
 use deal::data::Dataset;
@@ -70,6 +70,12 @@ fn cmd_run(args: Vec<String>) -> i32 {
             "sims",
             "sims|columnar — device residency: columnar parks unselected devices as \
              ledger columns (~250 B each; requires --ledger lazy)",
+        )
+        .flag(
+            "rounds-mode",
+            "recompute",
+            "recompute|differential — round evaluation: differential serves probes from \
+             arranged per-device traces updated in O(delta); bit-identical results",
         )
         .flag("devices", "16", "fleet size")
         .flag("shards", "1", "shard-leader count (>1 = sharded multi-federation runtime)")
@@ -172,6 +178,16 @@ fn cmd_run(args: Vec<String>) -> i32 {
             return 2;
         }
     };
+    let rounds_mode = match RoundsMode::from_name(a.get("rounds-mode")) {
+        Some(r) => r,
+        None => {
+            eprintln!(
+                "unknown --rounds-mode value {:?} (want recompute|differential)",
+                a.get("rounds-mode")
+            );
+            return 2;
+        }
+    };
     if fleet == FleetStoreKind::Columnar && ledger != LedgerMode::Lazy {
         eprintln!(
             "--fleet columnar requires --ledger lazy: parked columns are billed by the \
@@ -256,6 +272,7 @@ fn cmd_run(args: Vec<String>) -> i32 {
         round_period_s,
         ledger,
         fleet,
+        rounds: rounds_mode,
         ..FleetConfig::default()
     };
     let rounds = a.get_usize("rounds").unwrap();
@@ -264,7 +281,8 @@ fn cmd_run(args: Vec<String>) -> i32 {
     let mut fed = fleet::build(&cfg);
     println!(
         "federation: {} devices, {} on {}, scheme {}, transport {}, aggregation {}, \
-         selector {} (features {}), mode {} (period {:.0}s, charging {}, ledger {}, fleet {})",
+         selector {} (features {}), mode {} (period {:.0}s, charging {}, ledger {}, fleet {}, \
+         rounds {})",
         cfg.n_devices,
         cfg.model.map_or("auto", |m| m.name()),
         dataset.name(),
@@ -278,6 +296,7 @@ fn cmd_run(args: Vec<String>) -> i32 {
         if charging { "on" } else { "off" },
         ledger.name(),
         fleet.name(),
+        rounds_mode.name(),
     );
     for _ in 0..rounds {
         let rec = fed.run_round();

@@ -11,8 +11,8 @@ use deal::coordinator::fleet::{self, FleetConfig};
 use deal::coordinator::scheme::ALL_SCHEMES;
 use deal::coordinator::{
     Aggregation, Federation, FederationConfig, FederationStats, FleetSeed,
-    FleetStoreKind, LedgerMode, Scheme, ShardedTransport, SyncTransport, Transport,
-    TransportKind,
+    FleetStoreKind, LedgerMode, RoundsMode, Scheme, ShardedTransport, SyncTransport,
+    Transport, TransportKind,
 };
 use deal::data::Dataset;
 use deal::power::{FleetMode, ALL_FLEET_MODES};
@@ -1010,6 +1010,109 @@ fn parallel_settle_rows_bit_identical_across_workers_shards_and_two_level() {
 }
 
 #[test]
+fn differential_rounds_bit_identical_across_fabrics_shards_and_stores() {
+    // the PR 10 tentpole contract: serving round probes and FORGET acks
+    // from arranged per-device traces (O(delta) dirty-entry refreshes)
+    // may not move a single bit vs the recompute reference — on any
+    // fabric, any shard count, any fleet mode, both fleet stores, with
+    // charging sessions and a live deletion stream driving `-1`
+    // retractions through the traces (and hydration arranging traces
+    // mid-run on the columnar store).
+    for mode in ALL_FLEET_MODES {
+        let mk = |rounds: RoundsMode,
+                  store: FleetStoreKind,
+                  transport: TransportKind,
+                  shards: usize| {
+            fleet::build(&FleetConfig {
+                n_devices: 10,
+                dataset: Dataset::Housing,
+                scale: 0.4,
+                scheme: Scheme::Deal,
+                seed: 33,
+                transport,
+                shards,
+                mode: Some(mode),
+                charging: true,
+                round_period_s: 1200.0,
+                ledger: LedgerMode::Lazy,
+                deletion_rate: 0.5,
+                deletion_slo: 3,
+                fleet: store,
+                rounds,
+                ..FleetConfig::default()
+            })
+        };
+        let mut reference = mk(
+            RoundsMode::Recompute,
+            FleetStoreKind::Sims,
+            TransportKind::Sync,
+            1,
+        );
+        let base = settled(&mut reference, 12);
+        assert!(
+            base.unlearn.submitted > 0,
+            "{}: deletion stream never fired",
+            mode.name()
+        );
+        for (store, transport, shards) in [
+            (FleetStoreKind::Sims, TransportKind::Sync, 1usize),
+            (FleetStoreKind::Sims, TransportKind::Threaded, 1),
+            (FleetStoreKind::Sims, TransportKind::Sync, 2),
+            (FleetStoreKind::Sims, TransportKind::Sync, 4),
+            (FleetStoreKind::Sims, TransportKind::Threaded, 2),
+            (FleetStoreKind::Columnar, TransportKind::Sync, 1),
+            (FleetStoreKind::Columnar, TransportKind::Threaded, 2),
+        ] {
+            let mut fed = mk(RoundsMode::Differential, store, transport, shards);
+            let stats = settled(&mut fed, 12);
+            let ctx = format!(
+                "differential {} {} {} shards={shards}",
+                mode.name(),
+                store.name(),
+                transport.name()
+            );
+            assert_bit_identical(&base, &stats, &ctx);
+            assert_eq!(reference.rounds, fed.rounds, "{ctx}: per-round records");
+        }
+    }
+}
+
+#[test]
+fn differential_rounds_bit_identical_per_model_family() {
+    // the sparse trace arms — PPR's row/user arrangement (movielens)
+    // and kNN-LSH's bucket arrangement (mushrooms) — against their
+    // recompute twins under a deletion-heavy stream; housing covers the
+    // dense (Tikhonov) arm on the eager ledger for completeness
+    for (dataset, scale) in [
+        (Dataset::Movielens, 0.05),
+        (Dataset::Mushrooms, 0.03),
+        (Dataset::Housing, 0.4),
+    ] {
+        let mk = |rounds: RoundsMode| {
+            fleet::build(&FleetConfig {
+                n_devices: 10,
+                dataset,
+                scale,
+                scheme: Scheme::Deal,
+                seed: 33,
+                deletion_rate: 0.8,
+                deletion_slo: 2,
+                rounds,
+                ..FleetConfig::default()
+            })
+        };
+        let mut rec = mk(RoundsMode::Recompute);
+        let mut dif = mk(RoundsMode::Differential);
+        let a = rec.run(15);
+        let b = dif.run(15);
+        let ctx = format!("differential {}", dataset.name());
+        assert!(a.unlearn.submitted > 0, "{ctx}: deletion stream never fired");
+        assert_bit_identical(&a, &b, &ctx);
+        assert_eq!(rec.rounds, dif.rounds, "{ctx}: per-round records");
+    }
+}
+
+#[test]
 fn transport_flags_parse() {
     assert_eq!(TransportKind::from_name("sync"), Some(TransportKind::Sync));
     assert_eq!(TransportKind::from_name("threaded"), Some(TransportKind::Threaded));
@@ -1035,4 +1138,8 @@ fn transport_flags_parse() {
     assert_eq!(FleetStoreKind::from_name("columnar"), Some(FleetStoreKind::Columnar));
     assert_eq!(FleetStoreKind::from_name("ledger"), Some(FleetStoreKind::Columnar));
     assert_eq!(FleetStoreKind::from_name("hologram"), None);
+    assert_eq!(RoundsMode::from_name("recompute"), Some(RoundsMode::Recompute));
+    assert_eq!(RoundsMode::from_name("differential"), Some(RoundsMode::Differential));
+    assert_eq!(RoundsMode::from_name("diff"), Some(RoundsMode::Differential));
+    assert_eq!(RoundsMode::from_name("incremental"), None);
 }

@@ -16,8 +16,8 @@
 use deal::coordinator::fleet::{self, build_devices, FleetConfig};
 use deal::coordinator::unlearn::{ForgetCommand, ForgetStatus};
 use deal::coordinator::{
-    RoundJob, Scheme, ShardedTransport, SyncTransport, ThreadedTransport, Transport,
-    TransportKind,
+    RoundJob, RoundsMode, Scheme, ShardedTransport, SyncTransport, ThreadedTransport,
+    Transport, TransportKind,
 };
 use deal::data::Dataset;
 use deal::learn::recovery::{recover_deleted_items, ForgetDenied};
@@ -214,6 +214,60 @@ fn deletion_stream_bit_identical_across_transports_and_shards() {
             flat.unlearn().log(),
             fed.unlearn().log(),
             "resolution logs diverged on {} shards={shards}",
+            transport.name()
+        );
+    }
+}
+
+#[test]
+fn deletion_stream_bit_identical_under_differential_rounds() {
+    // the PR 10 unlearning pin: a served FORGET under `--rounds-mode
+    // differential` is a `-1` retraction through the arranged trace —
+    // the ack's stale/fresh signatures, model delta and energy, the
+    // per-round records, the resolution log and the SLO books must all
+    // equal the recompute reference bit-for-bit, across transports and
+    // shard counts, for a deletion-heavy stream.
+    let mk = |rounds: RoundsMode, transport: TransportKind, shards: usize| {
+        fleet::build(&FleetConfig {
+            n_devices: 8,
+            dataset: Dataset::Movielens,
+            scale: 0.05,
+            scheme: Scheme::Deal,
+            seed: 33,
+            transport,
+            shards,
+            deletion_rate: 0.8,
+            deletion_slo: 2,
+            rounds,
+            ..FleetConfig::default()
+        })
+    };
+    let mut reference = mk(RoundsMode::Recompute, TransportKind::Sync, 1);
+    let base = reference.run(15);
+    assert!(base.unlearn.served > 0, "stream must be served");
+    for (transport, shards) in [
+        (TransportKind::Sync, 1usize),
+        (TransportKind::Threaded, 1),
+        (TransportKind::Sync, 2),
+        (TransportKind::Sync, 4),
+        (TransportKind::Threaded, 2),
+    ] {
+        let mut fed = mk(RoundsMode::Differential, transport, shards);
+        let stats = fed.run(15);
+        assert_eq!(
+            base, stats,
+            "differential deletion-stream stats diverged on {} shards={shards}",
+            transport.name()
+        );
+        assert_eq!(
+            reference.rounds, fed.rounds,
+            "differential per-round records diverged on {} shards={shards}",
+            transport.name()
+        );
+        assert_eq!(
+            reference.unlearn().log(),
+            fed.unlearn().log(),
+            "differential resolution logs diverged on {} shards={shards}",
             transport.name()
         );
     }
